@@ -1,0 +1,59 @@
+//! Pruning + approximate multipliers (paper §VIII-C / Fig 11): pre-train
+//! the MNIST CNN, magnitude-prune to increasing sparsity with brief
+//! retraining, under both the exact FP32 and the approximate AFM16
+//! multiplier — demonstrating hardware/algorithm co-design through the
+//! framework.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example prune_train
+//! ```
+
+use std::path::Path;
+
+use approxtrain::coordinator::pruning::{prune_params, reapply_masks};
+use approxtrain::coordinator::trainer::{TrainConfig, Trainer};
+use approxtrain::data::synth::{mnist_like, SynthSpec};
+use approxtrain::data::Batcher;
+use approxtrain::runtime::executor::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    let mut engine = Engine::new(dir)?;
+    let ds = mnist_like(&SynthSpec { n: 512, ..SynthSpec::mnist_like_default() });
+    let (train, test) = ds.split(128);
+    let sparsities = [0.70, 0.80, 0.83, 0.90];
+
+    for (disp, mode, mult) in [("FP32", "custom", "fp32"), ("AFM16", "lut", "afm16")] {
+        let cfg = TrainConfig {
+            model: "lenet5".into(),
+            mode: mode.into(),
+            mult: mult.into(),
+            epochs: 4,
+            lr: 0.05,
+            seed: 42,
+            eval_every: usize::MAX,
+        };
+        let mut tr = Trainer::new(&mut engine, cfg.clone(), dir)?;
+        tr.fit(&train, &test)?;
+        let baseline = tr.evaluate(&test)? * 100.0;
+        let pretrained = tr.checkpoint()?;
+        println!("\n=== {disp}: dense baseline {baseline:.2}% ===");
+        for &s in &sparsities {
+            let mut tr = Trainer::new(&mut engine, cfg.clone(), dir)?;
+            tr.load_checkpoint(&pretrained)?;
+            let masks = prune_params(tr.params_mut(), s, 128);
+            // retrain 2 epochs with masks enforced after every step
+            for epoch in 0..2u64 {
+                for (images, labels) in Batcher::new(&train, tr.batch_size(), 42, 100 + epoch) {
+                    tr.step(&images, &labels)?;
+                    reapply_masks(tr.params_mut(), &masks);
+                }
+            }
+            let acc = tr.evaluate(&test)? * 100.0;
+            let delta = acc - baseline;
+            println!("  sparsity {:>3.0}% -> test acc {acc:.2}% ({delta:+.2} pp vs dense)",
+                     s * 100.0);
+        }
+    }
+    Ok(())
+}

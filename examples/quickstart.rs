@@ -1,0 +1,80 @@
+//! Quickstart: the whole ApproxTrain pipeline in one file.
+//!
+//! 1. take an approximate multiplier functional model (AFM16),
+//! 2. tabulate its mantissa products (paper Algorithm 1),
+//! 3. simulate multiplications through AMSim (Algorithm 2),
+//! 4. run an approximate GEMM on the CPU kernel path,
+//! 5. and — if `artifacts/` is built — run the same GEMM through the
+//!    compiled Pallas/XLA artifact and compare.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use approxtrain::amsim::AmSim;
+use approxtrain::kernels::gemm::gemm;
+use approxtrain::kernels::MulKernel;
+use approxtrain::lut::MantissaLut;
+use approxtrain::mult::fpbits::quantize_mantissa;
+use approxtrain::mult::registry;
+use approxtrain::runtime::executor::{Engine, Value};
+use approxtrain::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    // 1. the "C/C++ functional model" of the designer
+    let afm16 = registry::by_name("afm16").expect("registered multiplier");
+    println!("multiplier: {} (m = {} mantissa bits)", afm16.name(), afm16.mantissa_bits());
+
+    // 2. Algorithm 1 — mantissa-product LUT
+    let lut = MantissaLut::generate(afm16.as_ref());
+    println!("LUT: {} entries, {} bytes (paper quotes 65.53 kB for m=7)",
+             lut.len(), lut.payload_bytes());
+
+    // 3. Algorithm 2 — AMSim
+    let sim = AmSim::new(&lut);
+    for (a, b) in [(1.5f32, 2.25f32), (-3.0, 0.4375), (7.0, 0.125)] {
+        println!("  amsim({a} * {b}) = {} (exact {})", sim.mul(a, b), a * b);
+    }
+
+    // 4. approximate GEMM on the CPU kernel (ATxC path)
+    let n = 64;
+    let mut rng = Pcg32::seeded(1);
+    let a: Vec<f32> = (0..n * n).map(|_| quantize_mantissa(rng.range(-1.0, 1.0), 7)).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| quantize_mantissa(rng.range(-1.0, 1.0), 7)).collect();
+    let mut c_exact = vec![0.0f32; n * n];
+    let mut c_approx = vec![0.0f32; n * n];
+    gemm(&MulKernel::Native, &a, &b, &mut c_exact, n, n, n);
+    gemm(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c_approx, n, n, n);
+    let max_err = c_exact
+        .iter()
+        .zip(&c_approx)
+        .map(|(e, ap)| (e - ap).abs())
+        .fold(0.0f32, f32::max);
+    println!("CPU GEMM {n}x{n}: max |exact - approx| = {max_err:.4}");
+
+    // 5. same computation through the AOT-compiled artifact (ATxG path)
+    match Engine::new(std::path::Path::new("artifacts")) {
+        Ok(mut engine) if engine.manifest().find("gemm128", "gemm", "lut").is_some() => {
+            let n = 128;
+            let a: Vec<f32> =
+                (0..n * n).map(|_| quantize_mantissa(rng.range(-1.0, 1.0), 7)).collect();
+            let b: Vec<f32> =
+                (0..n * n).map(|_| quantize_mantissa(rng.range(-1.0, 1.0), 7)).collect();
+            let out = engine.run(
+                "gemm128_lut",
+                &[Value::F32(a.clone()), Value::F32(b.clone()), Value::U32(lut.entries.clone())],
+            )?;
+            let c_xla = out[0].as_f32()?;
+            let mut c_cpu = vec![0.0f32; n * n];
+            gemm(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c_cpu, n, n, n);
+            let diff = c_xla
+                .iter()
+                .zip(&c_cpu)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            println!("XLA artifact vs CPU kernel (same LUT): max diff = {diff:.2e}");
+        }
+        _ => println!("(artifacts/ not built — run `make artifacts` for the XLA half)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Serving example: batched approximate-multiplier inference behind a
+//! router/batcher, reporting latency percentiles and throughput — the
+//! deployment shape of ApproxTrain's inference support.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_infer
+//! ```
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use approxtrain::coordinator::server::with_server;
+use approxtrain::data::synth::{mnist_like, SynthSpec};
+use approxtrain::lut::MantissaLut;
+use approxtrain::nn::init::init_params;
+use approxtrain::runtime::artifact::Role;
+use approxtrain::runtime::executor::Engine;
+use approxtrain::util::json::Json;
+use approxtrain::util::stats::percentile;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    let mut engine = Engine::new(dir)?;
+    let art = engine
+        .manifest()
+        .find("lenet300", "fwd", "lut")
+        .expect("lenet300 lut fwd artifact (run `make artifacts`)")
+        .clone();
+    engine.prepare(&art.name)?; // compile before serving
+    let raw = Json::parse(&std::fs::read_to_string(dir.join("manifest.json"))?)?;
+    let params = init_params(&art, 42, &raw)?;
+    let lut = MantissaLut::load(&dir.join("luts/afm16.lut")).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let x_spec = &art.inputs[art.input_indices(Role::Input)[0]];
+    let batch = x_spec.shape[0];
+    let image_elems = x_spec.elements() / batch;
+    let classes = art.outputs[0].shape[1];
+
+    let n_requests = 256;
+    let n_clients = 8;
+    let ds = mnist_like(&SynthSpec { n: n_requests, ..SynthSpec::mnist_like_default() });
+    println!("serving lenet300 (AFM16 via AMSim LUT), batch {batch}, {n_clients} clients, {n_requests} requests");
+
+    let t0 = Instant::now();
+    let name = art.name.clone();
+    let stats = with_server(
+        engine,
+        &name,
+        params,
+        Some(lut.entries),
+        batch,
+        image_elems,
+        classes,
+        Duration::from_millis(4),
+        |client| {
+            std::thread::scope(|s| {
+                for t in 0..n_clients {
+                    let client = client.clone();
+                    let ds = &ds;
+                    s.spawn(move || {
+                        for i in (t..n_requests).step_by(n_clients) {
+                            client.infer(ds.image(i).to_vec()).expect("inference");
+                        }
+                    });
+                }
+            });
+        },
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+    let lats = &stats.latencies_s;
+    println!("served {} requests in {} batches over {:.2}s", stats.requests, stats.batches, wall);
+    println!("throughput: {:.0} req/s", stats.requests as f64 / wall);
+    println!(
+        "latency: p50 {:.1} ms | p90 {:.1} ms | p99 {:.1} ms",
+        percentile(lats, 50.0) * 1e3,
+        percentile(lats, 90.0) * 1e3,
+        percentile(lats, 99.0) * 1e3
+    );
+    println!(
+        "mean batch fill: {:.1}/{}",
+        stats.fills.iter().sum::<usize>() as f64 / stats.batches.max(1) as f64,
+        batch
+    );
+    Ok(())
+}

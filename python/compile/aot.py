@@ -1,0 +1,254 @@
+"""AOT artifact emitter — lowers every (model x phase x mode) computation
+plus the standalone GEMM/matvec benchmark kernels to HLO **text** under
+``artifacts/``, and writes ``manifest.json`` describing each artifact's
+positional signature (names, roles, shapes, dtypes, init metadata).
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Python never runs after that.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import lutgen, mults
+from .kernels.amsim_gemm import am_gemm
+from .kernels.amsim_matvec import am_matvec
+from .layers import MulCfg
+from .models import lenet, resnet
+from .train import make_forward, make_train_step
+
+LUT_LEN = 1 << 14  # m = 7
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def tensor_meta(name, role, shape, dtype="f32", **extra):
+    d = {"name": name, "role": role, "shape": list(shape), "dtype": dtype}
+    d.update(extra)
+    return d
+
+
+# The four system configurations of Tables V/VI:
+#   tf     -> TFnG analog (stock XLA ops, native multiplier)
+#   custom -> ATnG (custom Pallas kernels, native multiplier)
+#   lut    -> ATxG (custom Pallas kernels, AMSim LUT)
+#   direct:afm32 -> the non-tabulatable AFM32 design, in-graph bit math
+MODEL_MODES = ["tf", "custom", "lut", "direct:afm32"]
+
+
+def model_catalog(tiny: bool):
+    """(manifest_model_name, model, batch) triples. `tiny` shrinks batch
+    sizes for quick CI runs."""
+    b1 = 32 if tiny else 64
+    b2 = 16 if tiny else 32
+    b3 = 8 if tiny else 16
+    return [
+        ("lenet300", lenet.lenet300((28, 28, 1), 10), b1),
+        ("lenet5", lenet.lenet5((28, 28, 1), 10), b1),
+        ("resnet18", resnet.resnet18((16, 16, 3), 10, width=8), b2),
+        ("resnet34", resnet.resnet34((16, 16, 3), 10, width=8), b2),
+        ("resnet50", resnet.resnet50((16, 16, 3), 10, width=8), b2),
+        ("resnet50i", resnet.resnet50((32, 32, 3), 20, width=8), b3),
+    ]
+
+
+def emit(out_dir, name, lowered, meta, manifest):
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    meta = dict(meta)
+    meta.update({"name": name, "file": fname})
+    manifest["artifacts"].append(meta)
+    print(f"  wrote {fname} ({len(text)} chars)")
+
+
+def lower_model_artifacts(out_dir, manifest, model_name, model, batch, modes):
+    h, w, c = model.input_shape
+    param_meta = [
+        tensor_meta(s.name, "param", s.shape, init=s.init, fan_in=s.fan_in)
+        for s in model.params
+    ]
+    param_specs = [f32(*s.shape) for s in model.params]
+    for mode in modes:
+        cfg = MulCfg(mode=mode, m=7)
+        tag = mode.replace("direct:", "")
+        needs_lut = mode == "lut"
+        lut_spec = [u32(LUT_LEN)] if needs_lut else []
+        lut_meta = ([tensor_meta("lut", "lut", (LUT_LEN,), "u32")] if needs_lut else [])
+
+        # ---- forward (inference) artifact ----
+        fwd = make_forward(model, cfg)
+
+        def fwd_flat(*args, _fwd=fwd, _n=len(model.params), _needs_lut=needs_lut):
+            params = list(args[:_n])
+            x = args[_n]
+            lut = args[_n + 1] if _needs_lut else None
+            return _fwd(params, x, lut)
+
+        t0 = time.time()
+        lowered = jax.jit(fwd_flat).lower(*param_specs, f32(batch, h, w, c), *lut_spec)
+        emit(out_dir, f"{model_name}_fwd_{tag}", lowered, {
+            "model": model_name, "phase": "fwd", "mode": mode, "mantissa_bits": 7,
+            "batch": batch,
+            "inputs": param_meta
+                      + [tensor_meta("x", "input", (batch, h, w, c))] + lut_meta,
+            "outputs": [tensor_meta("logits", "logits", (batch, model.classes))],
+        }, manifest)
+
+        # ---- fused train-step artifact ----
+        step = make_train_step(model, cfg)
+
+        def step_flat(*args, _step=step, _n=len(model.params), _needs_lut=needs_lut):
+            params = list(args[:_n])
+            vels = list(args[_n:2 * _n])
+            x, y = args[2 * _n], args[2 * _n + 1]
+            lut = args[2 * _n + 2] if _needs_lut else None
+            lr = args[-1]
+            new_p, new_v, loss, acc = _step(params, vels, x, y, lut, lr)
+            return (*new_p, *new_v, loss, acc)
+
+        vel_meta = [
+            tensor_meta(f"vel:{s.name}", "velocity", s.shape) for s in model.params
+        ]
+        lowered = jax.jit(step_flat).lower(
+            *param_specs, *param_specs, f32(batch, h, w, c), i32(batch),
+            *lut_spec, f32())
+        emit(out_dir, f"{model_name}_train_{tag}", lowered, {
+            "model": model_name, "phase": "train", "mode": mode, "mantissa_bits": 7,
+            "batch": batch,
+            "inputs": param_meta + vel_meta
+                      + [tensor_meta("x", "input", (batch, h, w, c)),
+                         tensor_meta("y", "label", (batch,), "i32")]
+                      + lut_meta + [tensor_meta("lr", "hyper", ())],
+            "outputs": param_meta + vel_meta
+                       + [tensor_meta("loss", "metric", ()),
+                          tensor_meta("acc", "metric", ())],
+        }, manifest)
+        print(f"  [{model_name}/{mode}] lowered in {time.time() - t0:.1f}s")
+
+
+GEMM_MODES = ["tf", "native", "lut", "direct:afm16", "direct:mit16",
+              "direct:realm16", "direct:bfloat16"]
+
+
+def lower_gemm_artifacts(out_dir, manifest, sizes):
+    """Standalone GEMM artifacts for the Fig 6 benchmark."""
+    for n in sizes:
+        for mode in GEMM_MODES:
+            tag = mode.replace("direct:", "d_")
+            needs_lut = mode == "lut"
+
+            def gemm_fn(a, b, *rest, _mode=mode):
+                if _mode == "tf":
+                    return (jnp.dot(a, b),)
+                lut = rest[0] if rest else None
+                if _mode == "lut":
+                    return (am_gemm(a, b, "lut", lut, 7),)
+                return (am_gemm(a, b, _mode),)
+
+            specs = [f32(n, n), f32(n, n)] + ([u32(LUT_LEN)] if needs_lut else [])
+            lowered = jax.jit(gemm_fn).lower(*specs)
+            lut_meta = ([tensor_meta("lut", "lut", (LUT_LEN,), "u32")]
+                        if needs_lut else [])
+            emit(out_dir, f"gemm{n}_{tag}", lowered, {
+                "model": f"gemm{n}", "phase": "gemm", "mode": mode,
+                "mantissa_bits": 7,
+                "inputs": [tensor_meta("a", "input", (n, n)),
+                           tensor_meta("b", "input", (n, n))] + lut_meta,
+                "outputs": [tensor_meta("c", "logits", (n, n))],
+            }, manifest)
+
+
+def lower_matvec_artifact(out_dir, manifest, n_in=784, n_out=300):
+    """Matrix-vector kernel artifact (paper §VI-C dense-layer kernel),
+    used by the single-request path of the serving example."""
+    def mv(w, x, lut):
+        return (am_matvec(w, x, "lut", lut, 7),)
+
+    lowered = jax.jit(mv).lower(f32(n_out, n_in), f32(n_in), u32(LUT_LEN))
+    emit(out_dir, f"matvec{n_out}x{n_in}_lut", lowered, {
+        "model": f"matvec{n_out}x{n_in}", "phase": "matvec", "mode": "lut",
+        "mantissa_bits": 7,
+        "inputs": [tensor_meta("w", "input", (n_out, n_in)),
+                   tensor_meta("x", "input", (n_in,)),
+                   tensor_meta("lut", "lut", (LUT_LEN,), "u32")],
+        "outputs": [tensor_meta("y", "logits", (n_out,))],
+    }, manifest)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default="", help="substring filter on model names")
+    ap.add_argument("--tiny", action="store_true", help="smaller batches")
+    ap.add_argument("--gemm-sizes", nargs="*", type=int, default=[128, 256, 512])
+    ap.add_argument("--merge", action="store_true",
+                    help="update entries in an existing manifest instead of replacing it")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+    prior = []
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if args.merge and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            prior = json.load(f)["artifacts"]
+
+    # mantissa LUTs for every tabulatable multiplier
+    lut_dir = os.path.join(args.out, "luts")
+    os.makedirs(lut_dir, exist_ok=True)
+    for mname in mults.LUT_ABLE:
+        lutgen.write_lut(mults.by_name(mname), os.path.join(lut_dir, f"{mname}.lut"))
+    print(f"wrote {len(mults.LUT_ABLE)} LUTs to {lut_dir}")
+
+    if not args.only or "gemm" in args.only:
+        lower_gemm_artifacts(args.out, manifest, args.gemm_sizes)
+        lower_matvec_artifact(args.out, manifest)
+
+    for model_name, model, batch in model_catalog(args.tiny):
+        if args.only and args.only not in model_name and args.only != "models":
+            continue
+        print(f"lowering {model_name} (batch {batch}) ...")
+        lower_model_artifacts(args.out, manifest, model_name, model, batch,
+                              MODEL_MODES)
+
+    if prior:
+        fresh = {a["name"] for a in manifest["artifacts"]}
+        manifest["artifacts"] = [a for a in prior if a["name"] not in fresh] \
+            + manifest["artifacts"]
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

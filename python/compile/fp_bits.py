@@ -1,0 +1,75 @@
+"""IEEE-754 single-precision bit plumbing — Python mirror of
+``rust/src/mult/fpbits.rs``. Used at build time only (LUT generation, kernel
+oracles, pytest); never on the request path.
+
+All helpers operate on numpy ``uint32`` arrays (or scalars) so that the LUT
+generator and the jnp kernel reference share exact integer semantics with
+the Rust implementation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SIGN_MASK = np.uint32(0x8000_0000)
+EXP_MASK = np.uint32(0x7F80_0000)
+MANT_MASK = np.uint32(0x007F_FFFF)
+EXP_BIAS = 127
+MANT_BITS = 23
+
+
+def to_bits(x) -> np.ndarray:
+    """f32 -> u32 bit pattern."""
+    return np.asarray(x, dtype=np.float32).view(np.uint32)
+
+
+def from_bits(b) -> np.ndarray:
+    """u32 bit pattern -> f32."""
+    return np.asarray(b, dtype=np.uint32).view(np.float32)
+
+
+def decompose(x):
+    """Return (sign, biased_exp, mantissa23) as uint32 arrays."""
+    b = to_bits(x)
+    return b >> np.uint32(31), (b & EXP_MASK) >> np.uint32(MANT_BITS), b & MANT_MASK
+
+
+def compose(sign, exp, mant):
+    s = np.asarray(sign, dtype=np.uint32)
+    e = np.asarray(exp, dtype=np.uint32)
+    m = np.asarray(mant, dtype=np.uint32)
+    return from_bits((s << np.uint32(31)) | (e << np.uint32(MANT_BITS)) | m)
+
+
+def quantize_mantissa(x, m: int):
+    """Round-to-nearest-even quantization of the mantissa to ``m`` bits —
+    mirror of ``fpbits::quantize_mantissa`` (subnormals flush to zero,
+    rounding carry propagates into the exponent, overflow to inf)."""
+    assert 1 <= m <= MANT_BITS
+    x = np.asarray(x, dtype=np.float32)
+    if m == MANT_BITS:
+        # still flush subnormals for consistency
+        sign, exp, mant = decompose(x)
+        flush = (exp == 0) & np.isfinite(x)
+        out = np.where(flush, compose(sign, 0, 0), x)
+        return out.astype(np.float32)
+    sign, exp, mant = decompose(x)
+    drop = MANT_BITS - m
+    half = np.uint32(1 << (drop - 1))
+    low = mant & np.uint32((1 << drop) - 1)
+    kept = (mant >> np.uint32(drop)).astype(np.uint64)
+    round_up = (low > half) | ((low == half) & ((kept & 1) == 1))
+    kept = kept + round_up.astype(np.uint64)
+    overflow = (kept >> np.uint64(m)) != 0
+    kept = np.where(overflow, np.uint64(0), kept)
+    exp = exp.astype(np.int64) + overflow.astype(np.int64)
+    to_inf = exp >= 255
+    result = compose(sign, np.where(to_inf, 255, exp).astype(np.uint32),
+                     np.where(to_inf, 0, (kept << np.uint64(drop))).astype(np.uint32))
+    # zeros, subnormals -> signed zero; non-finite pass through
+    sign0, exp0, _ = decompose(x)
+    flush = exp0 == 0
+    result = np.where(flush, compose(sign0, 0, 0), result)
+    nonfinite = ~np.isfinite(x)
+    result = np.where(nonfinite, x, result)
+    return result.astype(np.float32)

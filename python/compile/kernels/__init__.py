@@ -1,0 +1,1 @@
+"""Layer-1 kernels: Pallas + jnp bit-math + oracle."""

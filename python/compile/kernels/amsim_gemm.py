@@ -1,0 +1,162 @@
+"""Layer-1 Pallas GEMM kernel with pluggable approximate multiplication —
+the reproduction of the paper's custom CUDA GEMM kernel (§VI-D) carrying
+the AMSim device function (§V-B).
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the CUDA version
+stages 16x16 operand tiles in shared memory and reads the LUT through the
+texture cache. Here the ``BlockSpec`` grid expresses the HBM<->VMEM
+schedule: the grid is (M/bm, N/bn, K/bk), operand blocks of (bm, bk) and
+(bk, bn) live in VMEM, the output block is revisited across the K grid
+dimension (sequential on TPU/interpret), and the whole mantissa LUT (64 KiB
+at m=7) is mapped into VMEM for every grid cell — the scratchpad analog of
+the texture cache. The approximate multiply is elementwise integer ALU
+work, so it targets the VPU; the ``native`` mode keeps ``jnp.dot`` in the
+same schedule so it can use the MXU (the paper's custom-kernel +
+native-multiplier midpoint, ATnG).
+
+``interpret=True`` everywhere: the CPU PJRT backend cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO, which is what
+the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import bitmath
+
+# Default VMEM tile sizes: (64 x 64) f32 blocks are 16 KiB each; with the
+# (bm, bk, bn) product tensor of the approximate path this stays ~1 MiB,
+# far under VMEM. Fig 6's ablation sweeps these.
+DEFAULT_BLOCK = (64, 64, 64)
+
+# Budget for the materialized (bm, bk, bn) product block of the elementwise
+# modes, in elements (~8 MiB of f32). On a real TPU this would be the VMEM
+# ceiling; in interpret mode it bounds working-set size while amortizing the
+# per-grid-step overhead of the interpreter (measured ~0.2 ms/step — §Perf).
+ELEMWISE_BLOCK_BUDGET = 1 << 21
+
+
+def pick_block(M: int, K: int, N: int, mode: str) -> tuple:
+    """Adaptive block sizes: use as few grid steps as the block-memory
+    budget allows. Native mode has no product tensor, so it can take whole
+    operands (single grid step) up to a generous cap."""
+    if mode in ("native", "custom"):
+        # cap operand blocks at ~32 Mi elements
+        bm = min(M, max(1, (1 << 25) // max(K, 1)))
+        return (_round8(bm), K, N)
+    bk = min(K, 512)
+    bn = min(N, 512)
+    bm = min(M, max(8, ELEMWISE_BLOCK_BUDGET // max(bk * bn, 1)))
+    return (_round8(bm), bk, bn)
+
+
+def _round8(v: int) -> int:
+    return max(8, (v // 8) * 8) if v >= 8 else v
+
+
+def _mul_block(a_blk, b_blk, mode: str, lut, m: int):
+    """One (bm, bk) x (bk, bn) block product with FP32 accumulation."""
+    if mode == "native":
+        return jnp.dot(a_blk, b_blk, preferred_element_type=jnp.float32)
+    if mode == "lut":
+        prod = bitmath.amsim_mul(a_blk[:, :, None], b_blk[None, :, :], lut, m)
+    elif mode.startswith("direct:"):
+        prod = bitmath.direct_mul(a_blk[:, :, None], b_blk[None, :, :],
+                                  mode.split(":", 1)[1])
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return jnp.sum(prod, axis=1, dtype=jnp.float32)
+
+
+def _kernel_lut(a_ref, b_ref, lut_ref, o_ref, *, mode: str, m: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    lut = lut_ref[...]
+    o_ref[...] += _mul_block(a_ref[...], b_ref[...], mode, lut, m)
+
+
+def _kernel_nolut(a_ref, b_ref, o_ref, *, mode: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += _mul_block(a_ref[...], b_ref[...], mode, None, 0)
+
+
+def _pad_to(x, rows, cols):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def am_gemm(a, b, mode: str = "native", lut=None, m: int = 7,
+            block: Optional[tuple] = None):
+    """``c[M, N] = a[M, K] @ b[K, N]`` with multiplies routed per ``mode``:
+
+    * ``"native"`` — hardware ``*`` (ATnG / TFnG custom-kernel analog)
+    * ``"lut"`` — AMSim with the mantissa LUT operand (ATxG)
+    * ``"direct:<mult>"`` — in-graph bit-manipulation model (Fig 6 direct)
+
+    Shapes are padded up to block multiples (zero padding is exact for all
+    modes: AMSim flushes any product with a zero operand to zero).
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, f"GEMM contraction mismatch {K} vs {K2}"
+    bm, bk, bn = block or pick_block(M, K, N, mode)
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    Mp = -(-M // bm) * bm
+    Kp = -(-K // bk) * bk
+    Np = -(-N // bn) * bn
+    a_p = _pad_to(a, Mp, Kp)
+    b_p = _pad_to(b, Kp, Np)
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+    out_shape = jax.ShapeDtypeStruct((Mp, Np), jnp.float32)
+    if mode == "lut":
+        assert lut is not None, "lut mode needs the mantissa LUT operand"
+        lut_spec = pl.BlockSpec((lut.shape[0],), lambda i, j, k: (0,))
+        out = pl.pallas_call(
+            functools.partial(_kernel_lut, mode=mode, m=m),
+            grid=grid,
+            in_specs=[a_spec, b_spec, lut_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(a_p, b_p, lut)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_kernel_nolut, mode=mode),
+            grid=grid,
+            in_specs=[a_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(a_p, b_p)
+    return out[:M, :N]
+
+
+def vmem_footprint_bytes(mode: str, m: int = 7, block: Optional[tuple] = None) -> int:
+    """Analytic VMEM footprint of one grid cell — used by the §Perf
+    real-TPU estimate in EXPERIMENTS.md (interpret mode has no real VMEM)."""
+    bm, bk, bn = block or DEFAULT_BLOCK
+    operands = 4 * (bm * bk + bk * bn + bm * bn)
+    lut = 4 * (1 << (2 * m)) if mode == "lut" else 0
+    # the elementwise path materializes a (bm, bk, bn) product block
+    product = 0 if mode == "native" else 4 * bm * bk * bn
+    return operands + lut + product

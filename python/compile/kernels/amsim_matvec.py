@@ -1,0 +1,82 @@
+"""Layer-1 Pallas matrix-vector kernel — the paper's dedicated dense-layer
+kernel (§VI-C: "shared-memory-based tiling is superfluous for a 1-D
+vector", §VI-D "Matrix-Vector Multiplication Kernel").
+
+Grid over output-row blocks only; each cell streams the full input vector
+(resident in VMEM) against its weight rows. Used by the single-request
+(batch = 1) serving path; batched training uses the GEMM kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import bitmath
+
+DEFAULT_BLOCK_OUT = 64
+
+
+def _kernel(w_ref, x_ref, lut_ref, o_ref, *, mode: str, m: int):
+    w = w_ref[...]  # (bo, n_in)
+    x = x_ref[...]  # (n_in,)
+    if mode == "native":
+        o_ref[...] = jnp.dot(w, x, preferred_element_type=jnp.float32)
+        return
+    if mode == "lut":
+        prod = bitmath.amsim_mul(w, x[None, :], lut_ref[...], m)
+    else:
+        prod = bitmath.direct_mul(w, x[None, :], mode.split(":", 1)[1])
+    o_ref[...] = jnp.sum(prod, axis=1, dtype=jnp.float32)
+
+
+def _kernel_nolut(w_ref, x_ref, o_ref, *, mode: str):
+    # duplicate of _kernel without the LUT ref (pallas kernels have a fixed
+    # ref arity per pallas_call)
+    w = w_ref[...]
+    x = x_ref[...]
+    if mode == "native":
+        o_ref[...] = jnp.dot(w, x, preferred_element_type=jnp.float32)
+    else:
+        prod = bitmath.direct_mul(w, x[None, :], mode.split(":", 1)[1])
+        o_ref[...] = jnp.sum(prod, axis=1, dtype=jnp.float32)
+
+
+def am_matvec(w, x, mode: str = "native", lut=None, m: int = 7,
+              block_out: Optional[int] = None):
+    """``y[o] = sum_i mul(w[o, i], x[i])`` for ``w[n_out, n_in]``."""
+    bo = block_out or DEFAULT_BLOCK_OUT
+    n_out, n_in = w.shape
+    assert x.shape == (n_in,)
+    pad_o = -(-n_out // bo) * bo - n_out
+    w_p = jnp.pad(w, ((0, pad_o), (0, 0))) if pad_o else w
+    grid = ((n_out + pad_o) // bo,)
+    w_spec = pl.BlockSpec((bo, n_in), lambda i: (i, 0))
+    x_spec = pl.BlockSpec((n_in,), lambda i: (0,))
+    o_spec = pl.BlockSpec((bo,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((n_out + pad_o,), jnp.float32)
+    if mode == "lut":
+        assert lut is not None
+        lut_spec = pl.BlockSpec((lut.shape[0],), lambda i: (0,))
+        y = pl.pallas_call(
+            functools.partial(_kernel, mode=mode, m=m),
+            grid=grid,
+            in_specs=[w_spec, x_spec, lut_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(w_p, x, lut)
+    else:
+        y = pl.pallas_call(
+            functools.partial(_kernel_nolut, mode=mode),
+            grid=grid,
+            in_specs=[w_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(w_p, x)
+    return y[:n_out]

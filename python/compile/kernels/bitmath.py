@@ -1,0 +1,182 @@
+"""Integer bit-math implementations of AMSim and the direct multiplier
+models in jnp — shared by the Pallas kernels (L1) and the pure-jnp oracle
+(``ref.py``). Everything stays inside int32/uint32 so the lowered HLO is
+plain integer ALU ops (the widest intermediate product is the k x k AFM
+partial product, < 2^12, and the 8x8-bit bfloat16 significand product,
+< 2^16).
+
+These mirror ``rust/src/mult/models.rs`` / ``rust/src/amsim`` bit-exactly;
+pytest asserts this against the numpy mirrors in ``compile.mults``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# numpy scalars: embedded as literals at trace time (pallas kernels must
+# not capture concrete *jax* arrays from the closure, and Python ints above
+# int32 max overflow jax's weak typing)
+import numpy as np
+
+SIGN_MASK = np.uint32(0x8000_0000)
+EXP_MASK = np.uint32(0x7F80_0000)
+MANT_MASK = np.uint32(0x007F_FFFF)
+MANT_BITS = 23
+EXP_BIAS = 127
+
+# REALM correction constants (identical to rust + numpy mirrors), already
+# scaled to the 23-bit mantissa field.
+REALM_LOG_CORR = (209403, 506903, 669557, 721940, 682465, 565287, 381522, 140059)
+REALM_ANTILOG_CORR = (-152893, -408621, -592590, -698305, -718684, -646004, -471841, -187011)
+
+
+def _bits(x):
+    return jax.lax.bitcast_convert_type(x, jnp.uint32)
+
+
+def _float(b):
+    return jax.lax.bitcast_convert_type(b, jnp.float32)
+
+
+def _fields(x):
+    b = _bits(x)
+    return b, (b & EXP_MASK) >> MANT_BITS, b & MANT_MASK
+
+
+def _assemble(sign, exp_pre, carry, mant):
+    """Common sign/exponent scaffolding (paper Alg. 2 lines 11-20):
+    flush-to-zero on the pre-carry exponent, overflow after the carry."""
+    zero = exp_pre <= 0
+    exp_c = exp_pre + carry.astype(jnp.int32)
+    inf = exp_c >= 255
+    exp_field = jnp.clip(exp_c, 1, 254).astype(jnp.uint32)
+    body = sign | (exp_field << MANT_BITS) | mant
+    out = jnp.where(zero, jnp.uint32(0), jnp.where(inf, sign | EXP_MASK, body))
+    return _float(out)
+
+
+def _exp_pre(ea, eb):
+    exp = ea.astype(jnp.int32) + eb.astype(jnp.int32) - EXP_BIAS
+    # operand zero/subnormal forces a flush
+    return jnp.where((ea == 0) | (eb == 0), jnp.int32(-1000), exp)
+
+
+# ---------------------------------------------------------------------------
+# AMSim: LUT-based simulation (paper Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def amsim_mul(a, b, lut, m: int):
+    """Elementwise LUT-based approximate multiply. ``lut`` is a uint32
+    vector of 2^(2m) entries ``(carry << 23) | mantissa23``."""
+    ab, ea, ma = _fields(a)
+    bb, eb, mb = _fields(b)
+    sh = jnp.uint32(MANT_BITS - m)
+    idx = ((ma >> sh) << jnp.uint32(m)) | (mb >> sh)
+    entry = jnp.take(lut, idx.astype(jnp.int32), axis=0)
+    carry = (entry >> jnp.uint32(MANT_BITS)) & jnp.uint32(1)
+    mant = entry & MANT_MASK
+    sign = (ab ^ bb) & SIGN_MASK
+    return _assemble(sign, _exp_pre(ea, eb), carry, mant)
+
+
+# ---------------------------------------------------------------------------
+# Direct bit-manipulation models (the Fig 6 "direct simulation" path)
+# ---------------------------------------------------------------------------
+
+def _trunc_m(mant, m: int):
+    keep = jnp.uint32((0x007F_FFFF >> (MANT_BITS - m)) << (MANT_BITS - m))
+    return mant & keep
+
+
+def afm_mantissa(ma, mb, m: int, k: int):
+    """AFM (minimally biased) mantissa product in int32-safe arithmetic:
+    ``x + y + topk(x)*topk(y) + (x + y) >> (k+1)`` with the k x k partial
+    product computed on the k-bit tops (shift 23-2k keeps it in range)."""
+    ma = _trunc_m(ma, m)
+    mb = _trunc_m(mb, m)
+    top = jnp.uint32(MANT_BITS - k)
+    ak = ma >> top  # k bits
+    bk_ = mb >> top
+    xy = (ak * bk_) << jnp.uint32(MANT_BITS - 2 * k)
+    comp = (ma + mb) >> jnp.uint32(k + 1)
+    t = ma + mb + xy + comp  # < 3 * 2^23, fits uint32
+    one = jnp.uint32(1 << MANT_BITS)
+    carry = (t >= one).astype(jnp.uint32)
+    frac = jnp.where(carry == 1, jnp.minimum((t - one) >> jnp.uint32(1), MANT_MASK), t)
+    return carry, _trunc_m(frac, m)
+
+
+def mitchell_mantissa(ma, mb, m: int):
+    s = _trunc_m(ma, m) + _trunc_m(mb, m)
+    one = jnp.uint32(1 << MANT_BITS)
+    carry = (s >= one).astype(jnp.uint32)
+    frac = jnp.where(carry == 1, s - one, s)
+    return carry, _trunc_m(frac, m)
+
+
+def _seg_lookup(seg, table):
+    """8-entry constant lookup as a select chain — pallas kernels may not
+    capture array constants, but scalar constants are fine (and on real
+    hardware this is exactly the 8-way constant mux REALM synthesizes)."""
+    out = jnp.full(seg.shape, np.int32(table[0]))
+    for i in range(1, 8):
+        out = jnp.where(seg == i, np.int32(table[i]), out)
+    return out
+
+
+def realm_mantissa(ma, mb, m: int):
+    ma = _trunc_m(ma, m).astype(jnp.int32)
+    mb = _trunc_m(mb, m).astype(jnp.int32)
+    seg = lambda v: v >> (MANT_BITS - 3)
+    s = (ma + mb + _seg_lookup(seg(ma), REALM_LOG_CORR)
+         + _seg_lookup(seg(mb), REALM_LOG_CORR))
+    one = jnp.int32(1 << MANT_BITS)
+    carry = (s >= one).astype(jnp.uint32)
+    s = jnp.where(carry == 1, s - one, s)
+    f = jnp.clip(s, 0, int(0x007F_FFFF))
+    g = jnp.clip(f + _seg_lookup(seg(f), REALM_ANTILOG_CORR), 0, int(0x007F_FFFF))
+    return carry, _trunc_m(g.astype(jnp.uint32), m)
+
+
+def exact_mantissa(ma, mb, m: int):
+    """Exact RNE product at m <= 11 bits (significand product fits int32)."""
+    assert m <= 11, "int32-safe exact product needs m <= 11"
+    sh = jnp.uint32(MANT_BITS - m)
+    sa = (jnp.uint32(1 << m) | (_trunc_m(ma, m) >> sh))  # m+1 bits
+    sb = (jnp.uint32(1 << m) | (_trunc_m(mb, m) >> sh))
+    p = sa * sb  # [2^2m, 2^(2m+2))
+    carry = (p >> jnp.uint32(2 * m + 1)).astype(jnp.uint32)
+    # variable drop keeps the carry-normalization shift-out bit as part of
+    # the rounding tail (no double rounding — matches the 46-bit mirrors)
+    drop = jnp.uint32(m) + carry
+    kept = (p >> drop) & jnp.uint32((1 << m) - 1)
+    low = p & ((jnp.uint32(1) << drop) - 1)
+    half = jnp.uint32(1) << (drop - 1)
+    kept = kept + ((low > half) | ((low == half) & ((kept & 1) == 1))).astype(jnp.uint32)
+    ovf = (kept >> jnp.uint32(m)) != 0
+    kept = jnp.where(ovf, jnp.uint32(0), kept)
+    carry = carry + ovf.astype(jnp.uint32)
+    return carry, (kept << sh) & MANT_MASK
+
+
+_DIRECT = {
+    "afm32": lambda ma, mb: afm_mantissa(ma, mb, 23, 6),
+    "afm16": lambda ma, mb: afm_mantissa(ma, mb, 7, 4),
+    "mit16": lambda ma, mb: mitchell_mantissa(ma, mb, 7),
+    "realm16": lambda ma, mb: realm_mantissa(ma, mb, 7),
+    "bfloat16": lambda ma, mb: exact_mantissa(ma, mb, 7),
+    "fp16": lambda ma, mb: exact_mantissa(ma, mb, 10),
+}
+
+DIRECT_NAMES = tuple(_DIRECT)
+
+
+def direct_mul(a, b, mult_name: str):
+    """Elementwise direct (bit-manipulation) approximate multiply for the
+    in-graph simulable designs."""
+    ab, ea, ma = _fields(a)
+    bb, eb, mb = _fields(b)
+    carry, mant = _DIRECT[mult_name](ma, mb)
+    sign = (ab ^ bb) & SIGN_MASK
+    return _assemble(sign, _exp_pre(ea, eb), carry, mant)

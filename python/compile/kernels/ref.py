@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+``gemm_ref``/``matvec_ref`` materialize the full (M, K, N) elementwise
+approximate-product tensor and reduce it — trivially correct, memory-hungry,
+test-only. The Pallas kernels must match these closely (identical multiply
+semantics and FP32 accumulation; only the reduction order differs, so the
+pytest tolerance is a few ULPs of the accumulated magnitude).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import bitmath
+
+
+def elementwise_mul(a, b, mode: str, lut=None, m: int = 7):
+    """Dispatch one elementwise multiply batch by mode:
+    ``native`` | ``lut`` | ``direct:<mult>``."""
+    if mode == "native":
+        return a * b
+    if mode == "lut":
+        assert lut is not None
+        return bitmath.amsim_mul(a, b, lut, m)
+    if mode.startswith("direct:"):
+        return bitmath.direct_mul(a, b, mode.split(":", 1)[1])
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def gemm_ref(a, b, mode: str, lut=None, m: int = 7):
+    """``c[i, j] = sum_k mul(a[i, k], b[k, j])`` with FP32 accumulation."""
+    prod = elementwise_mul(a[:, :, None], b[None, :, :], mode, lut, m)
+    return jnp.sum(prod, axis=1, dtype=jnp.float32)
+
+
+def matvec_ref(w, x, mode: str, lut=None, m: int = 7):
+    """``y[o] = sum_i mul(w[o, i], x[i])``."""
+    prod = elementwise_mul(w, x[None, :], mode, lut, m)
+    return jnp.sum(prod, axis=1, dtype=jnp.float32)

@@ -1,0 +1,205 @@
+"""Layer-2 approximate layers: ``amdense`` and ``amconv2d`` with full custom
+backward passes (paper §VI-B/C) — the JAX equivalents of the paper's custom
+TF ops AMDENSE / AMCONV2D.
+
+All multiplications — forward *and* both backward gradients — go through
+the L1 Pallas GEMM kernel with the selected multiplication mode (Fig 4 of
+the paper). Structural data movement mirrors the CUDA implementation:
+
+* forward: im2col + GEMM (Alg. 3);
+* weight gradient: patch matrix of the *activation* at stride-spaced
+  positions (the fused dilation of §VI-B.1) x errors;
+* preceding-layer gradient: pad+dilate the errors (lax.pad with interior
+  padding = the fused IM2COL_PLG), im2col stride 1, GEMM against the
+  transpose-reversed weights (§VI-B.2).
+
+The ``mode``/``lut``/``m`` selection is threaded through a ``MulCfg`` so a
+whole model lowers into one HLO module per configuration.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.amsim_gemm import am_gemm
+
+
+@dataclass(frozen=True)
+class MulCfg:
+    """Multiplication configuration baked into an artifact. ``lut`` is a
+    traced operand (swappable at runtime); ``mode``/``m`` are static."""
+    mode: str = "native"  # native | custom | lut | direct:<mult>
+    m: int = 7
+
+    def gemm(self, a, b, lut):
+        # "custom" = the paper's ATnG: custom kernel path, native multiplier
+        mode = "native" if self.mode == "custom" else self.mode
+        if mode == "lut":
+            assert lut is not None, "lut mode requires a LUT operand"
+            return am_gemm(a, b, "lut", lut, self.m)
+        return am_gemm(a, b, mode)
+
+    @property
+    def needs_lut(self) -> bool:
+        return self.mode == "lut"
+
+    @property
+    def uses_pallas(self) -> bool:
+        """False only for the pure-jnp TFnG baseline (`native` mode uses the
+        Pallas kernel with jnp.dot; `tf` bypasses the custom kernels)."""
+        return self.mode != "tf"
+
+
+# ---------------------------------------------------------------------------
+# AMDENSE
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def amdense(cfg: MulCfg, x, w, b, lut):
+    """y[batch, out] = x[batch, in] @ w[in, out] + b (bias add exact)."""
+    return _amdense_fwd(cfg, x, w, b, lut)[0]
+
+
+def _amdense_fwd(cfg, x, w, b, lut):
+    if cfg.mode == "tf":
+        y = jnp.dot(x, w) + b
+    else:
+        y = cfg.gemm(x, w, lut) + b
+    return y, (x, w, lut)
+
+
+def _amdense_bwd(cfg, res, dy):
+    x, w, lut = res
+    if cfg.mode == "tf":
+        dw = jnp.dot(x.T, dy)
+        dx = jnp.dot(dy, w.T)
+    else:
+        dw = cfg.gemm(x.T, dy, lut)  # paper §VI-C.1
+        dx = cfg.gemm(dy, w.T, lut)  # paper §VI-C.2
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db, None
+
+
+amdense.defvjp(_amdense_fwd, _amdense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# AMCONV2D
+# ---------------------------------------------------------------------------
+
+def im2col(x, kh: int, kw: int, stride: int, pad: int):
+    """Patch extraction: NHWC ``x`` -> ``[b*oh*ow, kh*kw*c]`` with (ky, kx,
+    c) minor ordering — identical to ``rust/src/kernels/im2col.rs``."""
+    b, h, w, c = x.shape
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    patches = []
+    for ky in range(kh):
+        for kx in range(kw):
+            sl = xp[:, ky:ky + (oh - 1) * stride + 1:stride,
+                    kx:kx + (ow - 1) * stride + 1:stride, :]
+            patches.append(sl)
+    cols = jnp.concatenate(patches, axis=-1)  # [b, oh, ow, kh*kw*c]
+    return cols.reshape(b * oh * ow, kh * kw * c), (oh, ow)
+
+
+def _dilate_pad(dy, stride: int, pad: int, kh: int, kw: int, out_pad_h: int,
+                out_pad_w: int):
+    """Fused pad+dilate of the errors (paper IM2COL_PLG): interior padding
+    of ``stride - 1`` zeros plus full-correlation edge padding."""
+    cfg = [
+        (0, 0, 0),
+        (kh - 1 - pad, kh - 1 - pad + out_pad_h, stride - 1),
+        (kw - 1 - pad, kw - 1 - pad + out_pad_w, stride - 1),
+        (0, 0, 0),
+    ]
+    return jax.lax.pad(dy, jnp.float32(0), cfg)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 3, 4))
+def amconv2d(cfg: MulCfg, x, w, stride: int, pad: int, lut):
+    """NHWC conv: x[b,h,w,c] * w[kh,kw,c,oc] -> y[b,oh,ow,oc]."""
+    return _amconv2d_fwd(cfg, x, w, stride, pad, lut)[0]
+
+
+def _amconv2d_fwd(cfg, x, w, stride, pad, lut):
+    # note: custom_vjp fwd rules take the *primal* argument order; only the
+    # bwd rule gets the nondiff args prepended
+    b = x.shape[0]
+    kh, kw, c, oc = w.shape
+    if cfg.mode == "tf":
+        y = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), [(pad, pad), (pad, pad)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return y, (x, w, lut)
+    cols, (oh, ow) = im2col(x, kh, kw, stride, pad)
+    y = cfg.gemm(cols, w.reshape(kh * kw * c, oc), lut)
+    return y.reshape(b, oh, ow, oc), (x, w, lut)
+
+
+def _amconv2d_bwd(cfg, stride, pad, res, dy):
+    x, w, lut = res
+    b, h, wd, c = x.shape
+    kh, kw, _, oc = w.shape
+    _, oh, ow, _ = dy.shape
+    if cfg.mode == "tf":
+        # stock XLA gradients (TFnG baseline)
+        _, vjp = jax.vjp(
+            lambda x_, w_: jax.lax.conv_general_dilated(
+                x_, w_, (stride, stride), [(pad, pad), (pad, pad)],
+                dimension_numbers=("NHWC", "HWIO", "NHWC")), x, w)
+        dx, dw = vjp(dy)
+        return dx, dw, None
+
+    # -- weight gradient (paper §VI-B.1, fused dilation by strided reads) --
+    # cols_wg[q, r]: activation patches at stride-spaced positions
+    cols_wg, _ = im2col(x, kh, kw, stride, pad)  # [b*oh*ow, kh*kw*c]
+    dy_mat = dy.reshape(b * oh * ow, oc)
+    # dw[r, oc] = sum_q cols_wg[q, r] * dy[q, oc]
+    dw = cfg.gemm(cols_wg.T, dy_mat, lut).reshape(kh, kw, c, oc)
+
+    # -- preceding-layer gradient (paper §VI-B.2) --
+    out_pad_h = (h + 2 * pad - kh) % stride
+    out_pad_w = (wd + 2 * pad - kw) % stride
+    pd = _dilate_pad(dy, stride, pad, kh, kw, out_pad_h, out_pad_w)
+    cols_plg, (gh, gw) = im2col(pd, kh, kw, 1, 0)
+    assert (gh, gw) == (h, wd), f"plg geometry {(gh, gw)} != {(h, wd)}"
+    # transpose-and-reverse of the weights (separate pass, §VI-D)
+    wrt = w[::-1, ::-1, :, :].transpose(0, 1, 3, 2).reshape(kh * kw * oc, c)
+    dx = cfg.gemm(cols_plg, wrt, lut).reshape(b, h, wd, c)
+    return dx, dw, None
+
+
+amconv2d.defvjp(_amconv2d_fwd, _amconv2d_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Exact helper layers (no multiplies approximated, paper Table I / §III-A)
+# ---------------------------------------------------------------------------
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2x2(x):
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return jnp.max(x, axis=(2, 4))
+
+
+def global_avgpool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def batchnorm(x, gamma, beta, eps: float = 1e-5):
+    """Batch-statistics BN over NHWC channels (see rust layers/batchnorm.rs
+    for the rationale of using batch stats in both phases)."""
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta

@@ -1,0 +1,72 @@
+"""Mantissa-product LUT generation — paper §V-A Algorithm 1, Python mirror
+of ``rust/src/lut``. Writes the identical binary format (magic, header,
+little-endian u32 payload, CRC-32) so Rust↔Python bit-exactness can be
+asserted on the files themselves.
+
+Run as a module to regenerate all tabulatable LUTs::
+
+    python -m compile.lutgen --out ../artifacts/luts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import zlib
+
+import numpy as np
+
+from . import mults
+from .fp_bits import EXP_BIAS, MANT_BITS, compose, decompose
+
+MAGIC = b"AMLUT\x01\x00\x00"
+MAX_LUT_M = 12
+
+
+def generate(mult: mults.Mult) -> np.ndarray:
+    """Algorithm 1, vectorized: probe the black-box ``mul`` over the full
+    mantissa grid with fixed non-special exponents and recover carry bits
+    from the result exponents."""
+    m = mult.m
+    assert m <= MAX_LUT_M, f"mantissa width {m} not tabulatable"
+    exp_a = exp_b = 127  # N = K = 127 (same choice as the Rust generator)
+    k = np.arange(1 << m, dtype=np.uint32)
+    kk, jj = np.meshgrid(k, k, indexing="ij")
+    a = compose(0, exp_a, (kk << np.uint32(MANT_BITS - m)).ravel())
+    b = compose(0, exp_b, (jj << np.uint32(MANT_BITS - m)).ravel())
+    c = mult.mul(a, b)
+    _, ec, mc = decompose(c)
+    un_normalized = exp_a + exp_b - EXP_BIAS
+    carry = (ec.astype(np.int64) > un_normalized).astype(np.uint32)
+    return ((carry << np.uint32(MANT_BITS)) | mc).astype(np.uint32)
+
+
+def to_bytes(name: str, m: int, entries: np.ndarray) -> bytes:
+    header = MAGIC + np.uint32(m).tobytes() + np.uint32(len(name)).tobytes()
+    header += name.encode()
+    payload = entries.astype("<u4").tobytes()
+    crc = np.uint32(zlib.crc32(payload) & 0xFFFFFFFF).tobytes()
+    return header + payload + crc
+
+
+def write_lut(mult: mults.Mult, path: str) -> None:
+    entries = generate(mult)
+    with open(path, "wb") as f:
+        f.write(to_bytes(mult.name, mult.m, entries))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/luts")
+    ap.add_argument("--mults", nargs="*", default=mults.LUT_ABLE)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.mults:
+        mult = mults.by_name(name)
+        path = os.path.join(args.out, f"{name}.lut")
+        write_lut(mult, path)
+        print(f"wrote {path} (m={mult.m}, {4 << (2 * mult.m)} bytes payload)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-2 model definitions (functional JAX, params as flat name->array
+dicts so the artifact manifest can enumerate them deterministically)."""
+
+from . import lenet, resnet  # noqa: F401
+
+MODELS = {
+    "lenet300": lenet.lenet300,
+    "lenet5": lenet.lenet5,
+    "resnet18": resnet.resnet18,
+    "resnet34": resnet.resnet34,
+    "resnet50": resnet.resnet50,
+}
+
+
+def by_name(name: str):
+    if name not in MODELS:
+        raise KeyError(f"unknown model {name!r}")
+    return MODELS[name]

@@ -1,0 +1,52 @@
+"""Model abstraction shared by LeNet and ResNet definitions.
+
+A model is a list of named parameter specs plus an ``apply`` function.
+Parameter *initialization metadata* (init kind + fan-in) is exported into
+the artifact manifest so the Rust coordinator can initialize weights
+without any knowledge of the model internals — the same split the paper
+has between TensorFlow variable initializers and the CUDA kernels.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # he_normal | zeros | ones
+    fan_in: int = 0
+
+
+@dataclass
+class Model:
+    name: str
+    input_shape: Tuple[int, ...]  # (h, w, c)
+    classes: int
+    params: List[ParamSpec] = field(default_factory=list)
+    # apply(cfg, params_dict, x, lut) -> logits
+    apply: Callable = None
+
+    def param_dict_template(self):
+        return {p.name: p for p in self.params}
+
+
+def conv_spec(name: str, kh: int, kw: int, c: int, oc: int) -> ParamSpec:
+    return ParamSpec(name, (kh, kw, c, oc), "he_normal", fan_in=kh * kw * c)
+
+
+def dense_specs(name: str, n_in: int, n_out: int) -> List[ParamSpec]:
+    return [
+        ParamSpec(f"{name}/w", (n_in, n_out), "he_normal", fan_in=n_in),
+        ParamSpec(f"{name}/b", (n_out,), "zeros"),
+    ]
+
+
+def bn_specs(name: str, c: int) -> List[ParamSpec]:
+    return [
+        ParamSpec(f"{name}/gamma", (1, 1, 1, c), "ones"),
+        ParamSpec(f"{name}/beta", (1, 1, 1, c), "zeros"),
+    ]

@@ -1,0 +1,49 @@
+"""LeNet-300-100 (MLP) and LeNet-5 (CNN) — paper §VII *Neural Network
+Architectures*. Dense layers use AMDENSE, convolutions AMCONV2D; pooling
+and activations are exact (no multiplies, paper Table I)."""
+
+from __future__ import annotations
+
+from .. import layers
+from .base import Model, conv_spec, dense_specs
+
+
+def lenet300(input_shape=(28, 28, 1), classes=10) -> Model:
+    """784-300-100-10 multi-layer perceptron."""
+    h, w, c = input_shape
+    n_in = h * w * c
+    params = (dense_specs("fc1", n_in, 300)
+              + dense_specs("fc2", 300, 100)
+              + dense_specs("fc3", 100, classes))
+
+    def apply(cfg, p, x, lut):
+        x = x.reshape(x.shape[0], -1)
+        x = layers.relu(layers.amdense(cfg, x, p["fc1/w"], p["fc1/b"], lut))
+        x = layers.relu(layers.amdense(cfg, x, p["fc2/w"], p["fc2/b"], lut))
+        return layers.amdense(cfg, x, p["fc3/w"], p["fc3/b"], lut)
+
+    return Model("lenet300", input_shape, classes, params, apply)
+
+
+def lenet5(input_shape=(28, 28, 1), classes=10) -> Model:
+    """Two conv layers (6@5x5, 16@5x5) + three dense layers (120, 84, out).
+    28x28 input with pad-2 first conv, 2x2 max-pools after each conv."""
+    h, w, c = input_shape
+    assert h % 4 == 0 and w % 4 == 0, "lenet5 needs /4 spatial dims"
+    flat = (h // 4 - 2) * (w // 4 - 2) * 16  # 5x5 valid conv shrinks by 4
+    params = ([conv_spec("conv1/w", 5, 5, c, 6), conv_spec("conv2/w", 5, 5, 6, 16)]
+              + dense_specs("fc1", flat, 120)
+              + dense_specs("fc2", 120, 84)
+              + dense_specs("fc3", 84, classes))
+
+    def apply(cfg, p, x, lut):
+        x = layers.relu(layers.amconv2d(cfg, x, p["conv1/w"], 1, 2, lut))
+        x = layers.maxpool2x2(x)
+        x = layers.relu(layers.amconv2d(cfg, x, p["conv2/w"], 1, 0, lut))
+        x = layers.maxpool2x2(x)
+        x = x.reshape(x.shape[0], -1)
+        x = layers.relu(layers.amdense(cfg, x, p["fc1/w"], p["fc1/b"], lut))
+        x = layers.relu(layers.amdense(cfg, x, p["fc2/w"], p["fc2/b"], lut))
+        return layers.amdense(cfg, x, p["fc3/w"], p["fc3/b"], lut)
+
+    return Model("lenet5", input_shape, classes, params, apply)

@@ -1,0 +1,114 @@
+"""ResNet-18/34/50 (He et al. [16]) with AMCONV2D/AMDENSE layers.
+
+Faithful block structure (basic blocks for 18/34, bottlenecks for 50) with
+a `width` scaling knob: the paper trains full-width ResNets on a V100
+cluster; this reproduction defaults to width=8 ("tiny") so the interpret-
+mode Pallas stack trains in CPU-feasible time (DESIGN.md §Substitutions #3).
+Depth ordering and block topology are unchanged.
+"""
+
+from __future__ import annotations
+
+from .. import layers
+from .base import Model, bn_specs, conv_spec, dense_specs
+
+
+def _basic_block(specs, prefix, c_in, c_out, stride):
+    specs += [conv_spec(f"{prefix}/conv1/w", 3, 3, c_in, c_out)]
+    specs += bn_specs(f"{prefix}/bn1", c_out)
+    specs += [conv_spec(f"{prefix}/conv2/w", 3, 3, c_out, c_out)]
+    specs += bn_specs(f"{prefix}/bn2", c_out)
+    if stride != 1 or c_in != c_out:
+        specs += [conv_spec(f"{prefix}/down/w", 1, 1, c_in, c_out)]
+        specs += bn_specs(f"{prefix}/downbn", c_out)
+
+
+def _bottleneck_block(specs, prefix, c_in, c_mid, stride):
+    c_out = 4 * c_mid
+    specs += [conv_spec(f"{prefix}/conv1/w", 1, 1, c_in, c_mid)]
+    specs += bn_specs(f"{prefix}/bn1", c_mid)
+    specs += [conv_spec(f"{prefix}/conv2/w", 3, 3, c_mid, c_mid)]
+    specs += bn_specs(f"{prefix}/bn2", c_mid)
+    specs += [conv_spec(f"{prefix}/conv3/w", 1, 1, c_mid, c_out)]
+    specs += bn_specs(f"{prefix}/bn3", c_out)
+    if stride != 1 or c_in != c_out:
+        specs += [conv_spec(f"{prefix}/down/w", 1, 1, c_in, c_out)]
+        specs += bn_specs(f"{prefix}/downbn", c_out)
+
+
+def _apply_basic(cfg, p, x, lut, prefix, c_in, c_out, stride):
+    y = layers.amconv2d(cfg, x, p[f"{prefix}/conv1/w"], stride, 1, lut)
+    y = layers.relu(layers.batchnorm(y, p[f"{prefix}/bn1/gamma"], p[f"{prefix}/bn1/beta"]))
+    y = layers.amconv2d(cfg, y, p[f"{prefix}/conv2/w"], 1, 1, lut)
+    y = layers.batchnorm(y, p[f"{prefix}/bn2/gamma"], p[f"{prefix}/bn2/beta"])
+    if stride != 1 or c_in != c_out:
+        x = layers.amconv2d(cfg, x, p[f"{prefix}/down/w"], stride, 0, lut)
+        x = layers.batchnorm(x, p[f"{prefix}/downbn/gamma"], p[f"{prefix}/downbn/beta"])
+    return layers.relu(x + y)
+
+
+def _apply_bottleneck(cfg, p, x, lut, prefix, c_in, c_mid, stride):
+    c_out = 4 * c_mid
+    y = layers.amconv2d(cfg, x, p[f"{prefix}/conv1/w"], 1, 0, lut)
+    y = layers.relu(layers.batchnorm(y, p[f"{prefix}/bn1/gamma"], p[f"{prefix}/bn1/beta"]))
+    y = layers.amconv2d(cfg, y, p[f"{prefix}/conv2/w"], stride, 1, lut)
+    y = layers.relu(layers.batchnorm(y, p[f"{prefix}/bn2/gamma"], p[f"{prefix}/bn2/beta"]))
+    y = layers.amconv2d(cfg, y, p[f"{prefix}/conv3/w"], 1, 0, lut)
+    y = layers.batchnorm(y, p[f"{prefix}/bn3/gamma"], p[f"{prefix}/bn3/beta"])
+    if stride != 1 or c_in != c_out:
+        x = layers.amconv2d(cfg, x, p[f"{prefix}/down/w"], stride, 0, lut)
+        x = layers.batchnorm(x, p[f"{prefix}/downbn/gamma"], p[f"{prefix}/downbn/beta"])
+    return layers.relu(x + y)
+
+
+def _resnet(name, stages, bottleneck, input_shape, classes, width):
+    h, w, c = input_shape
+    specs = [conv_spec("stem/w", 3, 3, c, width)]
+    specs += bn_specs("stembn", width)
+    plan = []  # (prefix, c_in, c_mid_or_out, stride)
+    c_in = width
+    for si, n_blocks in enumerate(stages):
+        c_stage = width * (2 ** si)
+        for bi in range(n_blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            prefix = f"s{si}b{bi}"
+            if bottleneck:
+                _bottleneck_block(specs, prefix, c_in, c_stage, stride)
+                c_in = 4 * c_stage
+            else:
+                _basic_block(specs, prefix, c_in, c_stage, stride)
+                c_in = c_stage
+            plan.append((prefix, stride))
+    specs += dense_specs("fc", c_in, classes)
+
+    def apply(cfg, p, x, lut):
+        x = layers.amconv2d(cfg, x, p["stem/w"], 1, 1, lut)
+        x = layers.relu(layers.batchnorm(x, p["stembn/gamma"], p["stembn/beta"]))
+        ci = width
+        for si, n_blocks in enumerate(stages):
+            c_stage = width * (2 ** si)
+            for bi in range(n_blocks):
+                stride = 2 if (si > 0 and bi == 0) else 1
+                prefix = f"s{si}b{bi}"
+                if bottleneck:
+                    x = _apply_bottleneck(cfg, p, x, lut, prefix, ci, c_stage, stride)
+                    ci = 4 * c_stage
+                else:
+                    x = _apply_basic(cfg, p, x, lut, prefix, ci, c_stage, stride)
+                    ci = c_stage
+        x = layers.global_avgpool(x)
+        return layers.amdense(cfg, x, p["fc/w"], p["fc/b"], lut)
+
+    return Model(name, input_shape, classes, specs, apply)
+
+
+def resnet18(input_shape=(16, 16, 3), classes=10, width=8) -> Model:
+    return _resnet("resnet18", [2, 2, 2, 2], False, input_shape, classes, width)
+
+
+def resnet34(input_shape=(16, 16, 3), classes=10, width=8) -> Model:
+    return _resnet("resnet34", [3, 4, 6, 3], False, input_shape, classes, width)
+
+
+def resnet50(input_shape=(16, 16, 3), classes=10, width=8) -> Model:
+    return _resnet("resnet50", [3, 4, 6, 3], True, input_shape, classes, width)

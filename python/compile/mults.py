@@ -1,0 +1,169 @@
+"""Approximate-multiplier functional models — bit-exact Python mirrors of
+``rust/src/mult/models.rs``. They exist so that
+
+* LUT generation can be cross-checked between the two implementations
+  (golden-file tests assert identical binary output), and
+* the pure-jnp kernel oracle (``kernels/ref.py``) has a trusted scalar
+  reference.
+
+All ``mantissa_product`` functions are vectorized over numpy uint32 arrays
+of 23-bit mantissa fields and return ``(carry, mantissa23)`` uint32 arrays.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from .fp_bits import (EXP_BIAS, EXP_MASK, MANT_BITS, MANT_MASK, SIGN_MASK,
+                      compose, decompose, from_bits, to_bits)
+
+# REALM correction constants — identical to rust/src/mult/models.rs
+REALM_LOG_CORR = np.array(
+    [209403, 506903, 669557, 721940, 682465, 565287, 381522, 140059], dtype=np.int64)
+REALM_ANTILOG_CORR = np.array(
+    [-152893, -408621, -592590, -698305, -718684, -646004, -471841, -187011], dtype=np.int64)
+
+
+def _trunc_m(mant, m: int):
+    keep = np.uint32((MANT_MASK << (MANT_BITS - m)) & MANT_MASK)
+    return np.asarray(mant, dtype=np.uint32) & keep
+
+
+@dataclass(frozen=True)
+class Mult:
+    """A multiplier functional model."""
+    name: str
+    m: int  # mantissa bits
+    mantissa_product: Callable  # (ma23, mb23) -> (carry, mant23)
+
+    def mul(self, a, b):
+        """Full approximate FP multiply — mirror of ``mul_via_mantissa``."""
+        a = np.asarray(a, dtype=np.float32)
+        b = np.asarray(b, dtype=np.float32)
+        sa, ea, ma = decompose(a)
+        sb, eb, mb = decompose(b)
+        sign = sa ^ sb
+        carry, mant = self.mantissa_product(ma, mb)
+        exp = ea.astype(np.int64) + eb.astype(np.int64) - EXP_BIAS
+        flush = (exp <= 0) | (ea == 0) | (eb == 0)
+        exp_c = exp + carry.astype(np.int64)
+        inf = exp_c >= 255
+        out = compose(sign, np.clip(exp_c, 1, 254).astype(np.uint32), mant)
+        out = np.where(inf, compose(sign, 255, 0), out)
+        out = np.where(flush, compose(sign, 0, 0), out)
+        # delegate IEEE specials to hardware semantics like the Rust mirror
+        special = ~(np.isfinite(a) & np.isfinite(b))
+        out = np.where(special, a * b, out)
+        return out.astype(np.float32)
+
+
+def exact_fp(name: str, m: int, rne: bool = True) -> Mult:
+    def mantissa_product(ma, mb):
+        ma = _trunc_m(ma, m).astype(np.uint64)
+        mb = _trunc_m(mb, m).astype(np.uint64)
+        hidden = np.uint64(1 << MANT_BITS)
+        p = (hidden | ma) * (hidden | mb)  # [2^46, 2^48)
+        carry = (p >> np.uint64(47)).astype(np.uint32)
+        s = np.where(carry == 1, p >> np.uint64(1), p)
+        frac46 = s & np.uint64((1 << 46) - 1)
+        drop = 46 - m
+        kept = (frac46 >> np.uint64(drop)).astype(np.uint64)
+        if rne:
+            half = np.uint64(1 << (drop - 1))
+            low = frac46 & np.uint64((1 << drop) - 1)
+            kept = kept + ((low > half) | ((low == half) & ((kept & 1) == 1)))
+        ovf = (kept >> np.uint64(m)) != 0
+        kept = np.where(ovf, np.uint64(0), kept)
+        carry = carry + ovf.astype(np.uint32)
+        return carry, ((kept << np.uint64(MANT_BITS - m)).astype(np.uint32) & MANT_MASK)
+
+    return Mult(name, m, mantissa_product)
+
+
+def mitchell(name: str, m: int) -> Mult:
+    def mantissa_product(ma, mb):
+        s = _trunc_m(ma, m).astype(np.uint32) + _trunc_m(mb, m)
+        top = np.uint32(1 << MANT_BITS)
+        carry = (s >= top).astype(np.uint32)
+        frac = np.where(carry == 1, s - top, s)
+        return carry, _trunc_m(frac, m)
+
+    return Mult(name, m, mantissa_product)
+
+
+def afm(name: str, m: int, k: int) -> Mult:
+    def mantissa_product(ma, mb):
+        ma64 = _trunc_m(ma, m).astype(np.uint64)
+        mb64 = _trunc_m(mb, m).astype(np.uint64)
+        sh = np.uint64(MANT_BITS - k)
+        ha = (ma64 >> sh) << sh
+        hb = (mb64 >> sh) << sh
+        xy = (ha * hb) >> np.uint64(MANT_BITS)
+        comp = (ma64 + mb64) >> np.uint64(k + 1)
+        t = ma64 + mb64 + xy + comp
+        top = np.uint64(1 << MANT_BITS)
+        carry = (t >= top).astype(np.uint32)
+        frac = np.where(carry == 1, np.minimum((t - top) >> np.uint64(1),
+                                               np.uint64(MANT_MASK)), t)
+        return carry, _trunc_m(frac.astype(np.uint32), m)
+
+    return Mult(name, m, mantissa_product)
+
+
+def realm(name: str, m: int) -> Mult:
+    def mantissa_product(ma, mb):
+        ma = _trunc_m(ma, m)
+        mb = _trunc_m(mb, m)
+        seg_a = (ma >> np.uint32(MANT_BITS - 3)).astype(np.int64)
+        seg_b = (mb >> np.uint32(MANT_BITS - 3)).astype(np.int64)
+        s = (ma.astype(np.int64) + mb.astype(np.int64)
+             + REALM_LOG_CORR[seg_a] + REALM_LOG_CORR[seg_b])
+        top = np.int64(1 << MANT_BITS)
+        carry = (s >= top).astype(np.uint32)
+        s = np.where(carry == 1, s - top, s)
+        f = np.clip(s, 0, int(MANT_MASK))
+        seg_f = (f >> np.int64(MANT_BITS - 3)).astype(np.int64)
+        g = np.clip(f + REALM_ANTILOG_CORR[seg_f], 0, int(MANT_MASK))
+        return carry, _trunc_m(g.astype(np.uint32), m)
+
+    return Mult(name, m, mantissa_product)
+
+
+def and_comp(name: str, m: int) -> Mult:
+    def mantissa_product(ma, mb):
+        ma64 = _trunc_m(ma, m).astype(np.uint64)
+        mb64 = _trunc_m(mb, m).astype(np.uint64)
+        t = ma64 + mb64 + (ma64 & mb64)
+        top = np.uint64(1 << MANT_BITS)
+        carry = (t >= top).astype(np.uint32)
+        frac = np.where(carry == 1, np.minimum((t - top) >> np.uint64(1),
+                                               np.uint64(MANT_MASK)), t)
+        return carry, _trunc_m(frac.astype(np.uint32), m)
+
+    return Mult(name, m, mantissa_product)
+
+
+def by_name(name: str) -> Mult:
+    """Mirror of ``rust::mult::registry::by_name``."""
+    reg = {
+        "fp32": lambda: exact_fp("fp32", 23, True),
+        "bfloat16": lambda: exact_fp("bfloat16", 7, True),
+        "fp16": lambda: exact_fp("fp16", 10, True),
+        "afm32": lambda: afm("afm32", 23, 6),
+        "afm16": lambda: afm("afm16", 7, 4),
+        "mit16": lambda: mitchell("mit16", 7),
+        "realm16": lambda: realm("realm16", 7),
+        "trunc16": lambda: exact_fp("trunc16", 7, False),
+        "comp16": lambda: and_comp("comp16", 7),
+    }
+    if name not in reg:
+        raise KeyError(f"unknown multiplier {name!r}")
+    return reg[name]()
+
+
+NAMES = ["fp32", "bfloat16", "fp16", "afm32", "afm16", "mit16", "realm16",
+         "trunc16", "comp16"]
+LUT_ABLE = [n for n in NAMES if by_name(n).m <= 12]

@@ -1,0 +1,76 @@
+"""Training-step construction (Layer-2).
+
+One artifact = one fused train step: forward + backward + SGD-momentum
+update, all lowered into a single HLO module so the Rust coordinator makes
+exactly one PJRT call per batch (no per-layer round trips — the §Perf L2
+requirement). Accumulation and the optimizer run in FP32 (the paper's
+mixed-precision rule, §VII *Datatype*); only Conv2D/Dense multiplies are
+approximate.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+MOMENTUM = 0.9
+
+
+def cross_entropy(logits, labels, classes: int):
+    """Mean softmax cross-entropy against int labels + accuracy."""
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, classes, dtype=jnp.float32)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+def make_forward(model, cfg):
+    """(params..., x, [lut]) -> (logits,)"""
+
+    def forward(param_list, x, lut):
+        p = dict(zip([s.name for s in model.params], param_list))
+        return (model.apply(cfg, p, x, lut),)
+
+    return forward
+
+
+def make_train_step(model, cfg):
+    """(params..., velocities..., x, y, [lut], lr) ->
+    (new_params..., new_velocities..., loss, acc)."""
+    names = [s.name for s in model.params]
+
+    def train_step(param_list, vel_list, x, y, lut, lr):
+        def loss_fn(param_list):
+            p = dict(zip(names, param_list))
+            logits = model.apply(cfg, p, x, lut)
+            loss, acc = cross_entropy(logits, y, model.classes)
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(param_list)
+        new_vels = [MOMENTUM * v + g for v, g in zip(vel_list, grads)]
+        new_params = [p - lr * v for p, v in zip(param_list, new_vels)]
+        return new_params, new_vels, loss, acc
+
+    return train_step
+
+
+def init_params(model, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """He-normal initialization — used by pytest only; the Rust coordinator
+    has its own initializer driven by the manifest init metadata."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for spec in model.params:
+        key, sub = jax.random.split(key)
+        if spec.init == "he_normal":
+            std = (2.0 / max(spec.fan_in, 1)) ** 0.5
+            out[spec.name] = std * jax.random.normal(sub, spec.shape, jnp.float32)
+        elif spec.init == "zeros":
+            out[spec.name] = jnp.zeros(spec.shape, jnp.float32)
+        elif spec.init == "ones":
+            out[spec.name] = jnp.ones(spec.shape, jnp.float32)
+        else:
+            raise ValueError(f"unknown init {spec.init!r}")
+    return out

@@ -1,0 +1,95 @@
+"""Artifact manifest consistency: every artifact file exists, signatures
+are well-formed, and the Rust-side contract (roles, dtypes, ordering) is
+honored. Skipped when artifacts/ has not been built."""
+
+import json
+import os
+
+import pytest
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_every_artifact_file_exists(manifest):
+    for art in manifest["artifacts"]:
+        path = os.path.join(ART_DIR, art["file"])
+        assert os.path.exists(path), art["name"]
+        assert os.path.getsize(path) > 100, art["name"]
+
+
+def test_roles_and_dtypes_valid(manifest):
+    roles = {"param", "velocity", "input", "label", "lut", "hyper", "metric",
+             "logits"}
+    dtypes = {"f32", "i32", "u32"}
+    for art in manifest["artifacts"]:
+        for t in art["inputs"] + art["outputs"]:
+            assert t["role"] in roles, (art["name"], t)
+            assert t["dtype"] in dtypes, (art["name"], t)
+            assert all(isinstance(d, int) and d > 0 for d in t["shape"]) or \
+                t["shape"] == [], (art["name"], t)
+
+
+def test_train_signature_convention(manifest):
+    """Inputs: params, velocities, x, y, [lut], lr; outputs: params,
+    velocities, loss, acc — the order the Rust trainer assumes."""
+    for art in manifest["artifacts"]:
+        if art["phase"] != "train":
+            continue
+        roles = [t["role"] for t in art["inputs"]]
+        n_params = roles.count("param")
+        assert roles[:n_params] == ["param"] * n_params, art["name"]
+        assert roles[n_params:2 * n_params] == ["velocity"] * n_params, art["name"]
+        rest = roles[2 * n_params:]
+        assert rest[0] == "input" and rest[1] == "label", art["name"]
+        assert rest[-1] == "hyper", art["name"]
+        if art["mode"] == "lut":
+            assert "lut" in rest, art["name"]
+        else:
+            assert "lut" not in rest, art["name"]
+        out_roles = [t["role"] for t in art["outputs"]]
+        assert out_roles[-2:] == ["metric", "metric"], art["name"]
+        assert out_roles[:n_params] == ["param"] * n_params, art["name"]
+
+        # params and velocities pair up shape-wise and round-trip to outputs
+        for i in range(n_params):
+            assert art["inputs"][i]["shape"] == art["inputs"][n_params + i]["shape"]
+            assert art["inputs"][i]["shape"] == art["outputs"][i]["shape"]
+
+
+def test_params_carry_init_metadata(manifest):
+    for art in manifest["artifacts"]:
+        for t in art["inputs"]:
+            if t["role"] == "param":
+                assert t.get("init") in ("he_normal", "zeros", "ones"), \
+                    (art["name"], t["name"])
+                if t["init"] == "he_normal":
+                    assert t.get("fan_in", 0) > 0, (art["name"], t["name"])
+
+
+def test_all_modes_present_per_model(manifest):
+    models = {a["model"] for a in manifest["artifacts"] if a["phase"] == "train"}
+    for model in models:
+        modes = {a["mode"] for a in manifest["artifacts"]
+                 if a["model"] == model and a["phase"] == "train"}
+        assert modes == {"tf", "custom", "lut", "direct:afm32"}, (model, modes)
+
+
+def test_lut_files_exist_for_tabulatable_mults(manifest):
+    from compile import mults
+    lut_dir = os.path.join(ART_DIR, "luts")
+    for name in mults.LUT_ABLE:
+        path = os.path.join(lut_dir, f"{name}.lut")
+        assert os.path.exists(path), name
+        m = mults.by_name(name)
+        expected = 16 + len(name) + 4 * (1 << (2 * m.m)) + 4
+        assert os.path.getsize(path) == expected, name

@@ -1,0 +1,59 @@
+"""fp_bits: quantization semantics (mirrors rust fpbits tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.fp_bits import (MANT_BITS, compose, decompose, from_bits,
+                             quantize_mantissa, to_bits)
+
+
+def test_roundtrip_bits():
+    xs = np.array([0.0, 1.0, -1.0, 1.5, -3.375, 1e-20, 1e20], dtype=np.float32)
+    assert np.array_equal(from_bits(to_bits(xs)), xs)
+
+
+def test_decompose_known():
+    s, e, m = decompose(np.float32(-1.5))
+    assert (s, e, m) == (1, 127, 1 << 22)
+
+
+def test_quantize_examples():
+    assert quantize_mantissa(np.float32(1 + 2**-7), 7) == np.float32(1 + 2**-7)
+    assert quantize_mantissa(np.float32(1 + 2**-8), 7) == np.float32(1.0)
+    # carry into exponent
+    assert quantize_mantissa(np.float32(2.0 - 2**-9), 7) == np.float32(2.0)
+
+
+def test_quantize_flushes_subnormals():
+    tiny = np.float32(1e-44)  # subnormal
+    assert quantize_mantissa(tiny, 7) == 0.0
+
+
+finite_f32 = st.floats(width=32, allow_nan=False, allow_infinity=False,
+                       allow_subnormal=False)
+
+
+@settings(max_examples=300, deadline=None)
+@given(finite_f32, st.integers(1, 23))
+def test_quantize_idempotent(v, m):
+    q = quantize_mantissa(np.float32(v), m)
+    qq = quantize_mantissa(q, m)
+    assert to_bits(q) == to_bits(qq) or (q == 0.0 and qq == 0.0)
+
+
+@settings(max_examples=300, deadline=None)
+@given(finite_f32, st.integers(1, 22))
+def test_quantized_mantissa_has_no_low_bits(v, m):
+    q = quantize_mantissa(np.float32(v), m)
+    if not np.isfinite(q) or q == 0.0:
+        return
+    _, _, mant = decompose(q)
+    assert int(mant) & ((1 << (MANT_BITS - m)) - 1) == 0
+
+
+def test_compose_decompose_consistency():
+    for v in [0.25, 7.0, -128.5]:
+        s, e, m = decompose(np.float32(v))
+        assert compose(s, e, m) == np.float32(v)

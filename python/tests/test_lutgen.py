@@ -1,0 +1,59 @@
+"""LUT generation: structure, carry recovery, binary format."""
+
+import io
+import zlib
+
+import numpy as np
+import pytest
+
+from compile import lutgen, mults
+
+
+@pytest.mark.parametrize("name", ["bfloat16", "afm16", "mit16", "realm16",
+                                  "trunc16", "comp16"])
+def test_lut_matches_mantissa_product(name):
+    """Black-box probing (Alg 1) must recover mantissa_product exactly."""
+    m = mults.by_name(name)
+    lut = lutgen.generate(m)
+    assert lut.shape == (1 << (2 * m.m),)
+    k = np.arange(1 << m.m, dtype=np.uint32)
+    kk, jj = np.meshgrid(k, k, indexing="ij")
+    carry, mant = m.mantissa_product((kk << np.uint32(23 - m.m)).ravel(),
+                                     (jj << np.uint32(23 - m.m)).ravel())
+    want = (carry << np.uint32(23)) | mant
+    assert np.array_equal(lut, want)
+
+
+def test_lut_size_matches_paper():
+    # paper: m=7 -> 2^7 * 2^7 * 4 bytes = 65.53 kB
+    lut = lutgen.generate(mults.by_name("bfloat16"))
+    assert lut.nbytes == 65536
+
+
+def test_binary_format_roundtrip():
+    m = mults.by_name("afm16")
+    lut = lutgen.generate(m)
+    blob = lutgen.to_bytes(m.name, m.m, lut)
+    assert blob[:8] == lutgen.MAGIC
+    mm = int.from_bytes(blob[8:12], "little")
+    nlen = int.from_bytes(blob[12:16], "little")
+    assert mm == 7
+    assert blob[16:16 + nlen].decode() == "afm16"
+    payload = blob[16 + nlen:-4]
+    assert np.array_equal(np.frombuffer(payload, "<u4"), lut)
+    crc = int.from_bytes(blob[-4:], "little")
+    assert crc == (zlib.crc32(payload) & 0xFFFFFFFF)
+
+
+def test_wide_mantissa_rejected():
+    with pytest.raises(AssertionError):
+        lutgen.generate(mults.by_name("afm32"))
+
+
+def test_entries_have_valid_structure():
+    for name in mults.LUT_ABLE:
+        m = mults.by_name(name)
+        lut = lutgen.generate(m)
+        assert np.all(lut >> 24 == 0), name  # nothing above carry bit
+        low_mask = (1 << (23 - m.m)) - 1
+        assert np.all(lut & low_mask == 0), name  # no sub-m mantissa bits

@@ -1,0 +1,89 @@
+"""Model definitions: shapes, parameter inventories, and one-batch
+training sanity for every model at tiny scale."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import lutgen, mults
+from compile.layers import MulCfg
+from compile.models import by_name, lenet, resnet
+from compile.train import cross_entropy, init_params, make_train_step
+
+LUT = jnp.asarray(lutgen.generate(mults.by_name("afm16")))
+
+
+@pytest.mark.parametrize("name", ["lenet300", "lenet5", "resnet18", "resnet34",
+                                  "resnet50"])
+def test_forward_shapes(name):
+    model = by_name(name)()
+    p = init_params(model, 0)
+    h, w, c = model.input_shape
+    x = jnp.zeros((2, h, w, c), jnp.float32)
+    logits = model.apply(MulCfg("tf"), p, x, None)
+    assert logits.shape == (2, model.classes)
+
+
+def test_lenet300_parameter_count():
+    m = lenet.lenet300()
+    n = sum(int(np.prod(s.shape)) for s in m.params)
+    # 784*300+300 + 300*100+100 + 100*10+10 = 266610 (the classic MLP)
+    assert n == 266610
+
+
+def test_lenet5_flatten_geometry():
+    m = lenet.lenet5()
+    fc1 = next(s for s in m.params if s.name == "fc1/w")
+    assert fc1.shape == (400, 120)  # 5*5*16
+
+
+def test_resnet_depth_ordering():
+    n18 = len(resnet.resnet18().params)
+    n34 = len(resnet.resnet34().params)
+    n50 = len(resnet.resnet50().params)
+    assert n18 < n34 < n50
+
+
+def test_resnet_strided_downsampling_params_exist():
+    m = resnet.resnet18()
+    names = {s.name for s in m.params}
+    assert "s1b0/down/w" in names  # stage transition needs projection
+    assert "s0b0/down/w" not in names  # same-shape block has none
+
+
+@pytest.mark.parametrize("name,mode", [("lenet300", "lut"), ("lenet5", "lut"),
+                                       ("resnet18", "direct:afm32")])
+def test_one_batch_overfits(name, mode):
+    """A few steps on one batch must reduce the loss — for approximate
+    modes too (the paper's core trainability claim in miniature)."""
+    model = by_name(name)()
+    p = init_params(model, 0)
+    plist = [p[s.name] for s in model.params]
+    vlist = [jnp.zeros_like(v) for v in plist]
+    h, w, c = model.input_shape
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(0, 1, (8, h, w, c)).astype(np.float32))
+    y = jnp.asarray(np.arange(8) % model.classes, dtype=jnp.int32)
+    step = jax.jit(make_train_step(model, MulCfg(mode, 7)))
+    losses = []
+    for _ in range(6):
+        plist, vlist, loss, acc = step(plist, vlist, x, y, LUT, 0.05)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_cross_entropy_at_uniform():
+    logits = jnp.zeros((4, 10), jnp.float32)
+    y = jnp.asarray([0, 1, 2, 3], dtype=jnp.int32)
+    loss, acc = cross_entropy(logits, y, 10)
+    assert abs(float(loss) - np.log(10)) < 1e-5
+
+
+def test_init_metadata_complete():
+    for name in ["lenet300", "lenet5", "resnet50"]:
+        model = by_name(name)()
+        for s in model.params:
+            assert s.init in ("he_normal", "zeros", "ones"), s
+            if s.init == "he_normal":
+                assert s.fan_in > 0, s

@@ -1,0 +1,103 @@
+"""Multiplier functional models: plausibility + bit-exactness of the
+jnp (bitmath) implementations against the numpy mirrors."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import mults
+from compile.fp_bits import quantize_mantissa, to_bits
+from compile.kernels import bitmath
+
+
+@pytest.mark.parametrize("name", mults.NAMES)
+def test_models_are_plausible_multipliers(name):
+    m = mults.by_name(name)
+    rng = np.random.default_rng(99)
+    a = quantize_mantissa(rng.uniform(-100, 100, 4000).astype(np.float32), m.m)
+    b = quantize_mantissa(rng.uniform(-100, 100, 4000).astype(np.float32), m.m)
+    c = m.mul(a, b)
+    exact = a * b
+    nz = exact != 0
+    re = np.abs((c[nz] - exact[nz]) / exact[nz])
+    assert np.all(re < 0.125), f"{name}: max rel err {re.max()}"
+    assert np.all(c[~nz] == 0.0)
+
+
+def test_fp32_is_exact():
+    m = mults.by_name("fp32")
+    rng = np.random.default_rng(5)
+    a = rng.uniform(-1e10, 1e10, 5000).astype(np.float32)
+    b = rng.uniform(-1e3, 1e3, 5000).astype(np.float32)
+    assert np.array_equal(to_bits(m.mul(a, b)), to_bits(a * b))
+
+
+def test_bfloat16_matches_quantized_product():
+    m = mults.by_name("bfloat16")
+    rng = np.random.default_rng(6)
+    a = quantize_mantissa(rng.uniform(-100, 100, 5000).astype(np.float32), 7)
+    b = quantize_mantissa(rng.uniform(-100, 100, 5000).astype(np.float32), 7)
+    got = m.mul(a, b)
+    want = quantize_mantissa(a * b, 7)
+    assert np.array_equal(to_bits(got), to_bits(want))
+
+
+def test_error_profile_ordering():
+    rng = np.random.default_rng(7)
+    a = quantize_mantissa(rng.uniform(1, 2, 20000).astype(np.float32), 7)
+    b = quantize_mantissa(rng.uniform(1, 2, 20000).astype(np.float32), 7)
+    exact = a.astype(np.float64) * b.astype(np.float64)
+
+    def profile(name):
+        c = mults.by_name(name).mul(a, b).astype(np.float64)
+        re = (c - exact) / exact
+        return np.abs(re).mean(), re.mean()
+
+    mred_mit, bias_mit = profile("mit16")
+    mred_afm, bias_afm = profile("afm16")
+    mred_realm, _ = profile("realm16")
+    assert mred_afm < mred_mit
+    assert mred_realm < mred_mit
+    assert abs(bias_afm) < 0.01
+    assert bias_mit < -0.02  # Mitchell under-estimates
+
+
+DIRECT_JNP = ["afm32", "afm16", "mit16", "realm16", "bfloat16", "fp16"]
+
+
+@pytest.mark.parametrize("name", DIRECT_JNP)
+def test_jnp_direct_matches_numpy_mirror(name):
+    """The in-graph (Pallas-able) bit math must be bit-exact with the numpy
+    functional model — this is what ties L1 to the Rust oracle."""
+    m = mults.by_name(name)
+    rng = np.random.default_rng(11)
+    a = quantize_mantissa((rng.uniform(-50, 50, 8000)).astype(np.float32), m.m)
+    b = quantize_mantissa((rng.uniform(-50, 50, 8000)).astype(np.float32), m.m)
+    got = np.asarray(bitmath.direct_mul(jnp.asarray(a), jnp.asarray(b), name))
+    want = m.mul(a, b)
+    # jnp path returns unsigned zero where numpy mirror keeps the sign
+    eq = (to_bits(got) == to_bits(want)) | ((got == 0) & (want == 0))
+    bad = np.flatnonzero(~eq)
+    assert bad.size == 0, f"{name}: first mismatch {a[bad[0]]} * {b[bad[0]]}: " \
+                          f"{got[bad[0]]} vs {want[bad[0]]}"
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(width=32, allow_nan=False, allow_infinity=False,
+                 allow_subnormal=False, min_value=-2.0**96, max_value=2.0**96),
+       st.floats(width=32, allow_nan=False, allow_infinity=False,
+                 allow_subnormal=False, min_value=-2.0**96, max_value=2.0**96))
+def test_afm16_hypothesis_scalar(x, y):
+    a = quantize_mantissa(np.float32(x), 7)
+    b = quantize_mantissa(np.float32(y), 7)
+    m = mults.by_name("afm16")
+    got = np.asarray(bitmath.direct_mul(jnp.asarray(a), jnp.asarray(b), "afm16"))
+    want = m.mul(a, b)
+    assert to_bits(got) == to_bits(want) or (got == 0 and want == 0)
+
+
+def test_unknown_multiplier_raises():
+    with pytest.raises(KeyError):
+        mults.by_name("nope")

@@ -1,0 +1,158 @@
+//! Benchmark harness — regenerates every table and figure of the paper's
+//! evaluation (criterion is unavailable offline; this is a custom harness
+//! over `approxtrain::util::timer` + the experiment functions).
+//!
+//! ```sh
+//! cargo bench                 # quick settings, all experiments
+//! cargo bench -- fig6         # one experiment
+//! cargo bench -- all --full   # full (slow) settings
+//! ```
+//!
+//! Results are printed and written under `results/`.
+
+use std::path::Path;
+
+use approxtrain::coordinator::experiments as exp;
+use approxtrain::runtime::executor::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let which = args.iter().find(|a| !a.starts_with("--")).cloned().unwrap_or("all".into());
+    let quick = !args.iter().any(|a| a == "--full");
+    let artifacts = Path::new("artifacts");
+    let results = Path::new("results");
+
+    let mut out = String::new();
+    let wants = |name: &str| which == name || which == "all";
+
+    if wants("fig1") {
+        out.push_str(&exp::fig1(results)?);
+    }
+
+    if !artifacts.join("manifest.json").exists() {
+        println!("artifacts/ not built — only fig1 available. Run `make artifacts`.");
+        print!("{out}");
+        return Ok(());
+    }
+    let mut engine = Engine::new(artifacts)?;
+
+    if wants("fig6") {
+        out.push_str(&exp::fig6(&mut engine, results, if quick { 128 } else { 256 }, quick)?);
+    }
+    if wants("fig10") || wants("table3") {
+        out.push_str(&exp::fig10_table3(&mut engine, artifacts, results, quick)?);
+    }
+    if wants("table4") {
+        out.push_str(&exp::table4(&mut engine, artifacts, results, quick)?);
+    }
+    if wants("fig11") {
+        out.push_str(&exp::fig11(&mut engine, artifacts, results, quick)?);
+    }
+    if wants("table5") {
+        out.push_str(&exp::table5_6(&mut engine, artifacts, results, true, quick)?);
+    }
+    if wants("table6") {
+        out.push_str(&exp::table5_6(&mut engine, artifacts, results, false, quick)?);
+    }
+    if wants("fig12") {
+        out.push_str(&exp::fig12(&mut engine, results, quick)?);
+    }
+    if wants("ablation") {
+        out.push_str(&ablations(&mut engine, quick)?);
+    }
+
+    println!("{out}");
+    approxtrain::coordinator::report::write_result(results, "bench_report.md", &out)?;
+    Ok(())
+}
+
+/// Design-choice ablations called out in DESIGN.md.
+fn ablations(engine: &mut Engine, quick: bool) -> anyhow::Result<String> {
+    use approxtrain::coordinator::report::{fmt_ratio, fmt_time, Table};
+    use approxtrain::kernels::im2col::{dilate_explicit, im2col_forward, im2col_weight_grad};
+    use approxtrain::kernels::Conv2dGeom;
+    use approxtrain::util::rng::Pcg32;
+    use approxtrain::util::timer::bench_budget;
+    let _ = engine;
+    let budget = if quick { 0.3 } else { 2.0 };
+
+    // Ablation 1: fused dilation (paper §VI-B.1) vs explicit dilation
+    let g = Conv2dGeom {
+        batch: 16,
+        in_h: 28,
+        in_w: 28,
+        in_c: 8,
+        k_h: 3,
+        k_w: 3,
+        out_c: 16,
+        stride: 2,
+        pad: 1,
+    };
+    let mut rng = Pcg32::seeded(9);
+    let act: Vec<f32> =
+        (0..g.batch * g.in_h * g.in_w * g.in_c).map(|_| rng.range(-1.0, 1.0)).collect();
+    let q = g.batch * g.out_h() * g.out_w();
+    let mut cols = vec![0.0f32; g.col_cols() * q];
+    let fused = bench_budget("fused", 1, 3, budget, || {
+        im2col_weight_grad(&g, &act, &mut cols);
+    });
+    // explicit (the naive method the paper §VI-B.1 rejects): materialize
+    // the dilated error map, then extract activation patches at *every*
+    // stride-1 position — a larger column matrix plus an extra buffer.
+    let errors: Vec<f32> = (0..q * g.out_c).map(|_| rng.range(-1.0, 1.0)).collect();
+    let g1 = Conv2dGeom { stride: 1, ..g }; // stride-1 (dilated) geometry
+    let q1 = g1.batch * g1.out_h() * g1.out_w();
+    let mut cols1 = vec![0.0f32; g1.col_cols() * q1];
+    let explicit = bench_budget("explicit", 1, 3, budget, || {
+        let (_dilated, _dh, _dw) = dilate_explicit(&g, &errors); // extra buffer
+        im2col_weight_grad(&g1, &act, &mut cols1); // stride-1 patch pass
+    });
+    let _ = im2col_forward as fn(&Conv2dGeom, &[f32], &mut [f32]); // (re-exported use)
+    let mut t = Table::new(
+        "Ablation — fused dilation (weight grad) vs explicit dilated pass",
+        &["variant", "time", "ratio"],
+    );
+    t.row(vec!["fused skip-read im2col (paper)".into(), fmt_time(fused.median_s()),
+               fmt_ratio(1.0)]);
+    t.row(vec![
+        "explicit dilation + stride-1 pass".into(),
+        fmt_time(explicit.median_s()),
+        fmt_ratio(explicit.median_s() / fused.median_s()),
+    ]);
+
+    // Ablation 2: LUT entry width — 4-byte pre-shifted entries (paper
+    // footnote 1) vs 2-byte packed entries needing a shift on every fetch
+    use approxtrain::lut::MantissaLut;
+    use approxtrain::mult::registry;
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    let packed: Vec<u16> =
+        lut.entries.iter().map(|&e| (((e >> 23) << 7) | ((e & 0x7FFFFF) >> 16)) as u16).collect();
+    let mut rng = Pcg32::seeded(10);
+    let n = 1 << 18;
+    let xs: Vec<u32> = (0..n).map(|_| rng.next_u32() & 0x3FFF).collect();
+    let mut acc = 0u32;
+    let four = bench_budget("4B", 1, 3, budget, || {
+        acc = 0;
+        for &i in &xs {
+            acc = acc.wrapping_add(lut.entries[i as usize]);
+        }
+    });
+    let two = bench_budget("2B", 1, 3, budget, || {
+        acc = 0;
+        for &i in &xs {
+            let e = packed[i as usize] as u32;
+            // unpack: shift mantissa back into FP32 position + carry
+            acc = acc.wrapping_add(((e >> 7) << 23) | ((e & 0x7F) << 16));
+        }
+    });
+    std::hint::black_box(acc);
+    t.row(vec!["4-byte pre-shifted LUT entries (paper)".into(), fmt_time(four.median_s()),
+               fmt_ratio(1.0)]);
+    t.row(vec![
+        "2-byte packed entries (+unpack shifts)".into(),
+        fmt_time(two.median_s()),
+        fmt_ratio(two.median_s() / four.median_s()),
+    ]);
+    Ok(t.to_markdown())
+}

@@ -1,0 +1,203 @@
+//! AMSim — the LUT-based approximate FP multiplication simulator.
+//! Paper §V-B, Algorithm 2.
+//!
+//! Given two FP32 operands and a mantissa-product LUT:
+//! 1. fetch `(carry, mantissa)` from the LUT at the concatenated operand
+//!    mantissas;
+//! 2. compute sign (XOR) and exponent (sum − bias) exactly;
+//! 3. re-assemble, with flush-to-zero for `exp <= 0` / zero operands and
+//!    overflow-to-infinity for `exp >= 255`.
+//!
+//! One deliberate deviation from the paper's pseudo-code: Algorithm 2
+//! checks `Exp >= 255` *before* adding the carry, so `Exp == 254, carry ==
+//! 1` would assemble the biased exponent 255 and silently produce
+//! Inf/NaN bit patterns. We apply the overflow check after the carry (the
+//! behaviour real hardware would implement); `tests::alg2_edge_case_fixed`
+//! documents the difference. The same post-carry semantics are used in the
+//! Pallas kernel and in `mult::models::mul_via_mantissa`, so all three
+//! simulation paths are bit-identical.
+
+use crate::lut::MantissaLut;
+use crate::mult::fpbits::{EXP_BIAS, EXP_MASK, MANT_BITS, MANT_MASK, SIGN_MASK};
+
+/// The simulator: a LUT plus the derived masks/shifts of Algorithm 2's
+/// "global variables".
+pub struct AmSim<'a> {
+    lut: &'a [u32],
+    m: u32,
+    /// shift that brings a 23-bit mantissa field down to its top `m` bits
+    shift: u32,
+}
+
+impl<'a> AmSim<'a> {
+    pub fn new(lut: &'a MantissaLut) -> AmSim<'a> {
+        AmSim { lut: &lut.entries, m: lut.m, shift: MANT_BITS - lut.m }
+    }
+
+    /// Algorithm 2 over raw FP32 bit patterns.
+    #[inline]
+    pub fn mul_bits(&self, a: u32, b: u32) -> u32 {
+        // line 7-8: mantissa extraction and LUT index (A in the high half,
+        // B in the low half — equivalent to the paper's fused shifts but
+        // valid for the full m = 1..=12 range)
+        let amnt = (a & MANT_MASK) >> self.shift;
+        let bmnt = (b & MANT_MASK) >> self.shift;
+        let entry = self.lut[((amnt << self.m) | bmnt) as usize];
+        // lines 9-10: decouple carry and mantissa
+        let carry = (entry >> MANT_BITS) & 1;
+        let mnt = entry & MANT_MASK;
+        // line 11: sign
+        let sign = (a ^ b) & SIGN_MASK;
+        // line 12: unnormalized exponent
+        let ea = (a & EXP_MASK) >> MANT_BITS;
+        let eb = (b & EXP_MASK) >> MANT_BITS;
+        let exp = ea as i32 + eb as i32 - EXP_BIAS;
+        // lines 13-20 (overflow checked after carry, see module docs)
+        if exp <= 0 || ea == 0 || eb == 0 {
+            return 0;
+        }
+        let exp = exp + carry as i32;
+        if exp >= 255 {
+            return sign | EXP_MASK; // +-inf
+        }
+        sign | ((exp as u32) << MANT_BITS) | mnt
+    }
+
+    /// Algorithm 2 over f32 values.
+    #[inline]
+    pub fn mul(&self, a: f32, b: f32) -> f32 {
+        f32::from_bits(self.mul_bits(a.to_bits(), b.to_bits()))
+    }
+
+    /// Vectorized front-end: `out[i] = amsim(a[i], b[i])`.
+    pub fn mul_slice(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
+        assert!(a.len() == b.len() && a.len() == out.len());
+        for i in 0..a.len() {
+            out[i] = self.mul(a[i], b[i]);
+        }
+    }
+
+    /// Multiply-accumulate over two slices with FP32 accumulation — the
+    /// paper's mixed-precision rule (§VII *Datatype*: "all accumulation
+    /// operations are performed in FP32").
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        let mut acc = 0.0f32;
+        for i in 0..a.len() {
+            acc += self.mul(a[i], b[i]);
+        }
+        acc
+    }
+
+    pub fn mantissa_bits(&self) -> u32 {
+        self.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::MantissaLut;
+    use crate::mult::fpbits::quantize_mantissa;
+    use crate::mult::registry;
+    use crate::util::prop::for_all;
+
+    /// The core contract (paper §VI footnote 2 validates GPU against CPU the
+    /// same way): AMSim through the LUT must be bit-identical to the direct
+    /// functional model for operands representable in m bits.
+    #[test]
+    fn amsim_equals_direct_model_for_all_m7_designs() {
+        for name in ["bfloat16", "afm16", "mit16", "realm16", "trunc16", "comp16"] {
+            let model = registry::by_name(name).unwrap();
+            let lut = MantissaLut::generate(model.as_ref());
+            let sim = AmSim::new(&lut);
+            for_all(
+                &format!("amsim-eq-direct-{name}"),
+                42,
+                20_000,
+                |r| {
+                    (
+                        quantize_mantissa(r.finite_f32(), 7),
+                        quantize_mantissa(r.finite_f32(), 7),
+                    )
+                },
+                |&(a, b)| {
+                    let via_lut = sim.mul(a, b);
+                    let direct = model.mul(a, b);
+                    // AMSim returns unsigned 0 (Alg 2 line 14) where the
+                    // direct model keeps the sign; compare through bits
+                    // modulo the zero sign.
+                    let eq = via_lut.to_bits() == direct.to_bits()
+                        || (via_lut == 0.0 && direct == 0.0);
+                    if eq {
+                        Ok(())
+                    } else {
+                        Err(format!("{a} * {b}: lut {via_lut} != direct {direct}"))
+                    }
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn zero_inputs_give_zero() {
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let sim = AmSim::new(&lut);
+        assert_eq!(sim.mul(0.0, 123.5).to_bits(), 0);
+        assert_eq!(sim.mul(-4.0, 0.0).to_bits(), 0);
+        assert_eq!(sim.mul(f32::MIN_POSITIVE / 4.0, 2.0).to_bits(), 0); // subnormal
+    }
+
+    #[test]
+    fn underflow_flushes_overflow_saturates() {
+        let model = registry::by_name("bfloat16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let sim = AmSim::new(&lut);
+        assert_eq!(sim.mul(1e-30, 1e-30), 0.0);
+        assert_eq!(sim.mul(1e30, 1e30), f32::INFINITY);
+        assert_eq!(sim.mul(-1e30, 1e30), f32::NEG_INFINITY);
+    }
+
+    /// Exp == 254 with a mantissa carry must overflow to infinity, not
+    /// assemble a NaN pattern (the Algorithm-2 edge case, see module docs).
+    #[test]
+    fn alg2_edge_case_fixed() {
+        let model = registry::by_name("bfloat16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let sim = AmSim::new(&lut);
+        // exponent sum 190 + 191 - 127 = 254; mantissa product of
+        // 1.984375^2 ~ 3.94 carries -> post-carry exponent 255 -> +inf
+        let a = 1.984375f32 * 2f32.powi(63);
+        let b = 1.984375f32 * 2f32.powi(64);
+        let c = sim.mul(a, b);
+        assert!(c.is_infinite() && c > 0.0, "got {c}");
+        assert!(!c.is_nan());
+    }
+
+    #[test]
+    fn dot_accumulates_in_fp32() {
+        let model = registry::by_name("bfloat16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let sim = AmSim::new(&lut);
+        let a: Vec<f32> = (0..100).map(|i| quantize_mantissa(0.01 * i as f32, 7)).collect();
+        let b = vec![1.0f32; 100];
+        let got = sim.dot(&a, &b);
+        let want: f32 = a.iter().sum();
+        assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+    }
+
+    #[test]
+    fn mul_slice_matches_scalar() {
+        let model = registry::by_name("mit16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let sim = AmSim::new(&lut);
+        let a: Vec<f32> = (1..64).map(|i| quantize_mantissa(i as f32 * 0.37, 7)).collect();
+        let b: Vec<f32> = (1..64).map(|i| quantize_mantissa(i as f32 * -1.91, 7)).collect();
+        let mut out = vec![0.0f32; a.len()];
+        sim.mul_slice(&a, &b, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i].to_bits(), sim.mul(a[i], b[i]).to_bits());
+        }
+    }
+}

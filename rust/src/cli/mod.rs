@@ -1,0 +1,105 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline dependency
+//! set). Supports `--flag`, `--key value`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, positional args, options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        if let Some(cmd) = iter.peek() {
+            if !cmd.starts_with("--") {
+                out.command = iter.next().unwrap();
+            }
+        }
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                // --key=value | --key value | --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f32(&self, key: &str, default: f32) -> f32 {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // note: a bare flag followed by a positional would be parsed as
+        // `--key value`; flags therefore go last (documented limitation)
+        let a = parse("train --model lenet5 --lr 0.05 pos1 --quick");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.opt("model"), Some("lenet5"));
+        assert_eq!(a.opt_f32("lr", 0.0), 0.05);
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = parse("bench --size=256");
+        assert_eq!(a.opt_usize("size", 0), 256);
+        assert_eq!(a.opt_usize("missing", 7), 7);
+        assert_eq!(a.opt_or("mode", "lut"), "lut");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("x --verbose");
+        assert!(a.has_flag("verbose"));
+        assert!(a.opt("verbose").is_none());
+    }
+}

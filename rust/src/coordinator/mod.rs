@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the pieces that turn compiled artifacts + LUTs +
+//! datasets into the paper's experiments.
+//!
+//! * [`trainer`] — the training/evaluation driver over the PJRT engine
+//!   (one fused train-step call per batch; Python never runs here).
+//! * [`pruning`] — magnitude pruning with a polynomial-decay schedule
+//!   (Fig 11).
+//! * [`server`] — a threaded batching inference server (router/batcher) to
+//!   exercise the inference path the way a deployment would.
+//! * [`experiments`] — the harness that regenerates every paper
+//!   table/figure (also callable from `cargo bench`).
+//! * [`report`] — markdown/CSV emitters for EXPERIMENTS.md.
+pub mod experiments;
+pub mod pruning;
+pub mod report;
+pub mod server;
+pub mod trainer;

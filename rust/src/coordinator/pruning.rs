@@ -1,0 +1,153 @@
+//! Magnitude pruning with a polynomial-decay sparsity schedule — the
+//! substrate for Fig 11 ("Approximate Multiplier on top of Pruning").
+//!
+//! The paper follows the standard TensorFlow model-optimization recipe:
+//! pre-train, then prune to increasing sparsity levels with brief retraining
+//! after each level. We implement the same schedule: sparsity(t) =
+//! final + (initial - final) * (1 - t/T)^3.
+
+use crate::runtime::executor::Value;
+
+/// Polynomial-decay sparsity schedule (TF model-optimization semantics).
+#[derive(Clone, Copy, Debug)]
+pub struct PolynomialDecay {
+    pub initial_sparsity: f32,
+    pub final_sparsity: f32,
+    pub steps: usize,
+}
+
+impl PolynomialDecay {
+    pub fn sparsity_at(&self, step: usize) -> f32 {
+        if self.steps == 0 || step >= self.steps {
+            return self.final_sparsity;
+        }
+        let frac = 1.0 - step as f32 / self.steps as f32;
+        self.final_sparsity + (self.initial_sparsity - self.final_sparsity) * frac.powi(3)
+    }
+}
+
+/// A pruning mask over one tensor.
+#[derive(Clone, Debug)]
+pub struct Mask {
+    pub keep: Vec<bool>,
+}
+
+impl Mask {
+    pub fn sparsity(&self) -> f32 {
+        let pruned = self.keep.iter().filter(|&&k| !k).count();
+        pruned as f32 / self.keep.len().max(1) as f32
+    }
+}
+
+/// Build a magnitude mask pruning the smallest-|w| fraction of `weights`.
+pub fn magnitude_mask(weights: &[f32], sparsity: f32) -> Mask {
+    let n = weights.len();
+    let k = ((n as f32) * sparsity.clamp(0.0, 1.0)).round() as usize;
+    if k == 0 {
+        return Mask { keep: vec![true; n] };
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| weights[a].abs().partial_cmp(&weights[b].abs()).unwrap());
+    let mut keep = vec![true; n];
+    for &i in &idx[..k.min(n)] {
+        keep[i] = false;
+    }
+    Mask { keep }
+}
+
+/// Apply a mask in place.
+pub fn apply_mask(weights: &mut [f32], mask: &Mask) {
+    assert_eq!(weights.len(), mask.keep.len());
+    for (w, &k) in weights.iter_mut().zip(&mask.keep) {
+        if !k {
+            *w = 0.0;
+        }
+    }
+}
+
+/// Prune a set of parameter values (only tensors with >= `min_elems`
+/// elements — biases and BN scales are conventionally left dense) to the
+/// given sparsity. Returns the masks so retraining can re-apply them after
+/// each optimizer step.
+pub fn prune_params(params: &mut [Value], sparsity: f32, min_elems: usize) -> Vec<Option<Mask>> {
+    params
+        .iter_mut()
+        .map(|v| match v {
+            Value::F32(data) if data.len() >= min_elems => {
+                let mask = magnitude_mask(data, sparsity);
+                apply_mask(data, &mask);
+                Some(mask)
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+/// Re-apply masks after a training step (pruned weights stay zero).
+pub fn reapply_masks(params: &mut [Value], masks: &[Option<Mask>]) {
+    for (v, m) in params.iter_mut().zip(masks) {
+        if let (Value::F32(data), Some(mask)) = (v, m) {
+            apply_mask(data, mask);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_decays_to_final() {
+        let s = PolynomialDecay { initial_sparsity: 0.7, final_sparsity: 0.9, steps: 100 };
+        assert!((s.sparsity_at(0) - 0.7).abs() < 1e-6);
+        assert!((s.sparsity_at(100) - 0.9).abs() < 1e-6);
+        assert!((s.sparsity_at(1000) - 0.9).abs() < 1e-6);
+        // monotone non-decreasing
+        let mut prev = 0.0;
+        for t in 0..=100 {
+            let v = s.sparsity_at(t);
+            assert!(v >= prev - 1e-6, "step {t}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn magnitude_mask_prunes_smallest() {
+        let w = vec![0.1, -5.0, 0.01, 3.0, -0.2];
+        let mask = magnitude_mask(&w, 0.4);
+        assert_eq!(mask.keep, vec![false, true, false, true, true]);
+        assert!((mask.sparsity() - 0.4).abs() < 1e-6);
+        let mut w2 = w.clone();
+        apply_mask(&mut w2, &mask);
+        assert_eq!(w2, vec![0.0, -5.0, 0.0, 3.0, -0.2]);
+    }
+
+    #[test]
+    fn prune_params_skips_small_tensors() {
+        let mut params = vec![
+            Value::F32(vec![1.0, 0.001, 2.0, 0.002, 3.0, 0.003, 4.0, 0.004]),
+            Value::F32(vec![0.5, 0.5]), // bias-like, untouched
+        ];
+        let masks = prune_params(&mut params, 0.5, 4);
+        assert!(masks[0].is_some());
+        assert!(masks[1].is_none());
+        let pruned = params[0].as_f32().unwrap().iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(pruned, 4);
+        assert_eq!(params[1].as_f32().unwrap(), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn masks_persist_through_reapply() {
+        let mut params = vec![Value::F32(vec![1.0, 0.01, 2.0, 0.02])];
+        let masks = prune_params(&mut params, 0.5, 2);
+        // simulate a training step reviving pruned weights
+        if let Value::F32(d) = &mut params[0] {
+            for v in d.iter_mut() {
+                *v += 1.0;
+            }
+        }
+        reapply_masks(&mut params, &masks);
+        let d = params[0].as_f32().unwrap();
+        assert_eq!(d.iter().filter(|&&v| v == 0.0).count(), 2);
+    }
+}

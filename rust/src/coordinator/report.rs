@@ -1,0 +1,89 @@
+//! Report emitters: markdown tables + CSV files under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A simple markdown table builder.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "### {}\n", self.title).unwrap();
+        writeln!(out, "| {} |", self.header.join(" | ")).unwrap();
+        writeln!(out, "|{}|", vec!["---"; self.header.len()].join("|")).unwrap();
+        for r in &self.rows {
+            writeln!(out, "| {} |", r.join(" | ")).unwrap();
+        }
+        out.push('\n');
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write a string to `results/<name>` (creating the directory).
+pub fn write_result(results_dir: &Path, name: &str, content: &str) -> Result<()> {
+    std::fs::create_dir_all(results_dir)?;
+    std::fs::write(results_dir.join(name), content)?;
+    Ok(())
+}
+
+/// Format a seconds value the way the paper's tables do.
+pub fn fmt_time(s: f64) -> String {
+    crate::util::fmt_duration(s)
+}
+
+/// Format a ratio like "4.2x".
+pub fn fmt_ratio(r: f64) -> String {
+    format!("{r:.1}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "table row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Batching inference server — the deployment-shaped consumer of the
+//! inference path (ApproxTrain "also supports inference using approximate
+//! multipliers", §I).
+//!
+//! Architecture (vLLM-router-like, scaled to this crate): client threads
+//! submit single requests to a queue; a batcher thread collects up to
+//! `batch` requests (padding with zero rows when the timeout fires), runs
+//! the forward artifact once, and distributes per-request results. The
+//! tokio crate is not available offline, so the event loop is
+//! std::sync::mpsc + threads — same topology.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::nn::metrics::accuracy_from_logits;
+use crate::runtime::executor::{Engine, Value};
+
+/// One inference request: an image and a oneshot-style reply channel.
+/// (fields used by the serve loop)
+pub struct Request {
+    image: Vec<f32>,
+    reply: Sender<Reply>,
+    submitted: Instant,
+}
+
+/// The server's answer.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    /// how many real requests shared the batch (for metrics)
+    pub batch_fill: usize,
+}
+
+/// Server handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<Request>,
+    image_elems: usize,
+}
+
+impl Client {
+    /// Blocking inference call.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Reply> {
+        assert_eq!(image.len(), self.image_elems, "image size");
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let submitted = Instant::now();
+        self.tx
+            .send(Request { image, reply: reply_tx, submitted })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+    }
+}
+
+/// Server statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub requests: usize,
+    pub batches: usize,
+    pub latencies_s: Vec<f64>,
+    pub fills: Vec<usize>,
+}
+
+/// Run the batching server loop until the request channel closes.
+/// `fwd_artifact` must be a forward artifact; `fixed_inputs` are the
+/// params (+ optional LUT) in positional order around the image input.
+pub fn serve(
+    engine: &mut Engine,
+    fwd_artifact: &str,
+    params: Vec<Value>,
+    lut: Option<Vec<u32>>,
+    rx: Receiver<Request>,
+    batch: usize,
+    image_elems: usize,
+    classes: usize,
+    max_wait: Duration,
+) -> Result<Stats> {
+    let mut stats = Stats::default();
+    loop {
+        // collect up to `batch` requests, waiting at most max_wait after
+        // the first arrives (the paper-world "dynamic batching" policy)
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // all clients done
+        };
+        let deadline = Instant::now() + max_wait;
+        let mut pending = vec![first];
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // assemble the fixed-shape batch (zero padding for empty slots)
+        let fill = pending.len();
+        let mut images = vec![0.0f32; batch * image_elems];
+        for (i, r) in pending.iter().enumerate() {
+            images[i * image_elems..(i + 1) * image_elems].copy_from_slice(&r.image);
+        }
+        let mut inputs = params.clone();
+        inputs.push(Value::F32(images));
+        if let Some(l) = &lut {
+            inputs.push(Value::U32(l.clone()));
+        }
+        let out = engine.run(fwd_artifact, &inputs)?;
+        let logits = out[0].as_f32()?;
+        for (i, r) in pending.into_iter().enumerate() {
+            let latency = r.submitted.elapsed();
+            stats.requests += 1;
+            stats.latencies_s.push(latency.as_secs_f64());
+            let _ = r.reply.send(Reply {
+                logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                latency,
+                batch_fill: fill,
+            });
+        }
+        stats.batches += 1;
+        stats.fills.push(fill);
+    }
+    Ok(stats)
+}
+
+/// Convenience: run the batcher/executor loop on the *current* thread (the
+/// PJRT client is not `Send`) while the `load` closure drives traffic from
+/// a spawned thread. When `load` returns and drops its `Client`, the
+/// request channel closes and the server loop exits.
+pub fn with_server<F>(
+    mut engine: Engine,
+    fwd_artifact: &str,
+    params: Vec<Value>,
+    lut: Option<Vec<u32>>,
+    batch: usize,
+    image_elems: usize,
+    classes: usize,
+    max_wait: Duration,
+    load: F,
+) -> Result<Stats>
+where
+    F: FnOnce(Client) + Send,
+{
+    let (tx, rx) = mpsc::channel::<Request>();
+    let client = Client { tx, image_elems };
+    std::thread::scope(|s| -> Result<Stats> {
+        let loader = s.spawn(move || load(client));
+        let stats =
+            serve(&mut engine, fwd_artifact, params, lut, rx, batch, image_elems, classes, max_wait)?;
+        loader.join().expect("load thread panicked");
+        Ok(stats)
+    })
+}
+
+/// Classify a reply against a label (test helper + example metric).
+pub fn reply_correct(reply: &Reply, label: u32) -> bool {
+    accuracy_from_logits(&reply.logits, &[label], reply.logits.len()) > 0.5
+}

@@ -1,0 +1,224 @@
+//! Training driver: runs a (model x mode x multiplier) configuration by
+//! repeatedly executing the fused train-step artifact and periodically the
+//! forward artifact for test accuracy.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::{Batcher, Dataset};
+use crate::lut::MantissaLut;
+use crate::mult::registry;
+use crate::nn::checkpoint::Checkpoint;
+use crate::nn::init::{init_params, init_velocities};
+use crate::nn::metrics::{accuracy_from_logits, EpochRecord, RunLog};
+use crate::runtime::artifact::Role;
+use crate::runtime::executor::{Engine, Value};
+use crate::util::json::Json;
+
+/// Configuration of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    /// artifact mode: `tf` | `custom` | `lut` | `direct:afm32`
+    pub mode: String,
+    /// multiplier name (selects the LUT for `lut` mode; informational
+    /// otherwise)
+    pub mult: String,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// evaluate test accuracy every N epochs (always on the last)
+    pub eval_every: usize,
+}
+
+impl TrainConfig {
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.model, self.mult)
+    }
+}
+
+/// A live training session holding parameter state host-side.
+pub struct Trainer<'e> {
+    engine: &'e mut Engine,
+    pub cfg: TrainConfig,
+    train_art: String,
+    fwd_art: String,
+    pub params: Vec<Value>,
+    pub vels: Vec<Value>,
+    lut: Option<Vec<u32>>,
+    batch: usize,
+    pub classes: usize,
+    input_elems: usize,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e mut Engine, cfg: TrainConfig, artifacts_dir: &Path) -> Result<Trainer<'e>> {
+        let train_art = engine
+            .manifest()
+            .find(&cfg.model, "train", &cfg.mode)
+            .ok_or_else(|| anyhow!("no train artifact for {}/{}", cfg.model, cfg.mode))?
+            .clone();
+        let fwd_art = engine
+            .manifest()
+            .find(&cfg.model, "fwd", &cfg.mode)
+            .ok_or_else(|| anyhow!("no fwd artifact for {}/{}", cfg.model, cfg.mode))?
+            .name
+            .clone();
+
+        // parameter init from manifest metadata (same seed across modes)
+        let raw = Json::parse(
+            &std::fs::read_to_string(artifacts_dir.join("manifest.json"))
+                .context("reading manifest for init metadata")?,
+        )?;
+        let params = init_params(&train_art, cfg.seed, &raw)?;
+        let vels = init_velocities(&train_art);
+
+        // LUT: required iff the artifact takes one
+        let lut = if !train_art.input_indices(Role::Lut).is_empty() {
+            let model = registry::by_name(&cfg.mult)
+                .ok_or_else(|| anyhow!("unknown multiplier {}", cfg.mult))?;
+            if !registry::lut_able(&cfg.mult) {
+                bail!("multiplier {} is not tabulatable; use a direct-mode artifact", cfg.mult);
+            }
+            // prefer the Python-generated golden file; fall back to Rust gen
+            let path = artifacts_dir.join("luts").join(format!("{}.lut", cfg.mult));
+            let table = if path.exists() {
+                MantissaLut::load(&path).map_err(|e| anyhow!("{e}"))?
+            } else {
+                MantissaLut::generate(model.as_ref())
+            };
+            Some(table.entries)
+        } else {
+            None
+        };
+
+        let x_idx = train_art.input_indices(Role::Input);
+        let input_spec = &train_art.inputs[x_idx[0]];
+        let batch = input_spec.shape[0];
+        let input_elems = input_spec.elements();
+        let fwd = engine.manifest().get(&fwd_art)?.clone();
+        let classes = fwd.outputs[0].shape[1];
+        Ok(Trainer {
+            engine,
+            cfg,
+            train_art: train_art.name.clone(),
+            fwd_art,
+            params,
+            vels,
+            lut,
+            batch,
+            classes,
+            input_elems,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// One train step; returns (loss, train-batch accuracy).
+    pub fn step(&mut self, images: &[f32], labels: &[u32]) -> Result<(f32, f32)> {
+        assert_eq!(images.len(), self.input_elems, "batch image size");
+        assert_eq!(labels.len(), self.batch);
+        let mut inputs: Vec<Value> = Vec::with_capacity(self.params.len() * 2 + 4);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.vels.iter().cloned());
+        inputs.push(Value::F32(images.to_vec()));
+        inputs.push(Value::I32(labels.iter().map(|&l| l as i32).collect()));
+        if let Some(lut) = &self.lut {
+            inputs.push(Value::U32(lut.clone()));
+        }
+        inputs.push(Value::F32(vec![self.cfg.lr]));
+        let mut out = self.engine.run(&self.train_art, &inputs)?;
+        let n = self.params.len();
+        let acc = out.pop().unwrap().scalar_f32()?;
+        let loss = out.pop().unwrap().scalar_f32()?;
+        self.vels = out.split_off(n);
+        self.params = out;
+        Ok((loss, acc))
+    }
+
+    /// Test-set accuracy via the forward artifact (full batches only).
+    pub fn evaluate(&mut self, ds: &Dataset) -> Result<f32> {
+        let mut correct_weighted = 0.0f32;
+        let mut batches = 0usize;
+        for (images, labels) in Batcher::new(ds, self.batch, self.cfg.seed, 0) {
+            let mut inputs: Vec<Value> = self.params.clone();
+            inputs.push(Value::F32(images));
+            if let Some(lut) = &self.lut {
+                inputs.push(Value::U32(lut.clone()));
+            }
+            let out = self.engine.run(&self.fwd_art, &inputs)?;
+            let logits = out[0].as_f32()?;
+            correct_weighted += accuracy_from_logits(logits, &labels, self.classes);
+            batches += 1;
+        }
+        if batches == 0 {
+            bail!("test set smaller than one batch");
+        }
+        Ok(correct_weighted / batches as f32)
+    }
+
+    /// Full training loop over `train`/`test`; returns the per-epoch log.
+    pub fn fit(&mut self, train: &Dataset, test: &Dataset) -> Result<RunLog> {
+        let mut log = RunLog::new(&self.cfg.label());
+        for epoch in 0..self.cfg.epochs {
+            let t0 = Instant::now();
+            let mut loss_sum = 0.0;
+            let mut acc_sum = 0.0;
+            let mut n = 0;
+            for (images, labels) in Batcher::new(train, self.batch, self.cfg.seed, epoch as u64) {
+                let (loss, acc) = self.step(&images, &labels)?;
+                loss_sum += loss;
+                acc_sum += acc;
+                n += 1;
+            }
+            let eval_due = (epoch + 1) % self.cfg.eval_every.max(1) == 0
+                || epoch + 1 == self.cfg.epochs;
+            let test_acc = if eval_due { self.evaluate(test)? } else { f32::NAN };
+            log.epochs.push(EpochRecord {
+                epoch,
+                train_loss: loss_sum / n.max(1) as f32,
+                train_acc: acc_sum / n.max(1) as f32,
+                test_acc,
+                seconds: t0.elapsed().as_secs_f64(),
+            });
+        }
+        Ok(log)
+    }
+
+    /// Export parameters as a named checkpoint (names from the manifest).
+    pub fn checkpoint(&mut self) -> Result<Checkpoint> {
+        let art = self.engine.manifest().get(&self.train_art)?.clone();
+        let mut ckpt = Checkpoint::default();
+        for (value, idx) in self.params.iter().zip(art.input_indices(Role::Param)) {
+            let spec = &art.inputs[idx];
+            ckpt.insert(&spec.name, &spec.shape, value.as_f32()?.to_vec());
+        }
+        Ok(ckpt)
+    }
+
+    /// Load parameters from a checkpoint (e.g. trained under a different
+    /// multiplier — the Table IV cross-format experiment).
+    pub fn load_checkpoint(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        let art = self.engine.manifest().get(&self.train_art)?.clone();
+        for (value, idx) in self.params.iter_mut().zip(art.input_indices(Role::Param)) {
+            let spec = &art.inputs[idx];
+            let (shape, data) = ckpt
+                .get(&spec.name)
+                .ok_or_else(|| anyhow!("checkpoint missing {}", spec.name))?;
+            if *shape != spec.shape {
+                bail!("checkpoint shape mismatch for {}", spec.name);
+            }
+            *value = Value::F32(data.clone());
+        }
+        Ok(())
+    }
+
+    /// Mutable access to parameters (pruning applies masks in place).
+    pub fn params_mut(&mut self) -> &mut Vec<Value> {
+        &mut self.params
+    }
+}

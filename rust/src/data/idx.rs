@@ -1,0 +1,133 @@
+//! Loader for the MNIST IDX file format (big-endian magic + dims). If real
+//! MNIST files are placed under `data/mnist/`, the coordinator prefers them
+//! over the synthetic generator.
+
+use std::io::Read;
+use std::path::Path;
+
+use super::Dataset;
+
+#[derive(Debug)]
+pub enum IdxError {
+    Io(std::io::Error),
+    BadMagic(u32),
+    Shape(String),
+}
+
+impl std::fmt::Display for IdxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IdxError::Io(e) => write!(f, "idx io: {e}"),
+            IdxError::BadMagic(m) => write!(f, "idx bad magic {m:#x}"),
+            IdxError::Shape(s) => write!(f, "idx shape: {s}"),
+        }
+    }
+}
+impl std::error::Error for IdxError {}
+impl From<std::io::Error> for IdxError {
+    fn from(e: std::io::Error) -> Self {
+        IdxError::Io(e)
+    }
+}
+
+fn read_u32(data: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes(data[off..off + 4].try_into().unwrap())
+}
+
+/// Parse an IDX byte buffer into `(dims, payload)`.
+pub fn parse_idx(data: &[u8]) -> Result<(Vec<usize>, &[u8]), IdxError> {
+    if data.len() < 4 {
+        return Err(IdxError::Shape("truncated header".into()));
+    }
+    let magic = read_u32(data, 0);
+    // 0x0000 08 <ndims>: unsigned byte data
+    if magic >> 8 != 0x8 {
+        return Err(IdxError::BadMagic(magic));
+    }
+    let ndims = (magic & 0xFF) as usize;
+    let header = 4 + 4 * ndims;
+    if data.len() < header {
+        return Err(IdxError::Shape("truncated dims".into()));
+    }
+    let dims: Vec<usize> = (0..ndims).map(|i| read_u32(data, 4 + 4 * i) as usize).collect();
+    let expect: usize = dims.iter().product();
+    if data.len() != header + expect {
+        return Err(IdxError::Shape(format!(
+            "payload {} != product(dims) {}",
+            data.len() - header,
+            expect
+        )));
+    }
+    Ok((dims, &data[header..]))
+}
+
+/// Load an images + labels IDX pair as a [`Dataset`] (pixels scaled to
+/// [0, 1]).
+pub fn load_pair(images_path: &Path, labels_path: &Path, name: &str) -> Result<Dataset, IdxError> {
+    let mut img_bytes = Vec::new();
+    std::fs::File::open(images_path)?.read_to_end(&mut img_bytes)?;
+    let mut lbl_bytes = Vec::new();
+    std::fs::File::open(labels_path)?.read_to_end(&mut lbl_bytes)?;
+    let (idims, ipay) = parse_idx(&img_bytes)?;
+    let (ldims, lpay) = parse_idx(&lbl_bytes)?;
+    if idims.len() != 3 || ldims.len() != 1 || idims[0] != ldims[0] {
+        return Err(IdxError::Shape(format!("dims {:?} / {:?}", idims, ldims)));
+    }
+    let (n, h, w) = (idims[0], idims[1], idims[2]);
+    Ok(Dataset {
+        name: name.to_string(),
+        images: ipay.iter().map(|&b| b as f32 / 255.0).collect(),
+        labels: lpay.iter().map(|&b| b as u32).collect(),
+        n,
+        h,
+        w,
+        c: 1,
+        classes: 10,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_idx(dims: &[u32], payload: &[u8]) -> Vec<u8> {
+        let mut out = vec![0u8, 0, 8, dims.len() as u8];
+        for &d in dims {
+            out.extend_from_slice(&d.to_be_bytes());
+        }
+        out.extend_from_slice(payload);
+        out
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let data = make_idx(&[2, 2, 2], &[0, 64, 128, 255, 1, 2, 3, 4]);
+        let (dims, payload) = parse_idx(&data).unwrap();
+        assert_eq!(dims, vec![2, 2, 2]);
+        assert_eq!(payload.len(), 8);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_size() {
+        assert!(parse_idx(&[1, 2, 3, 4, 5]).is_err());
+        let mut data = make_idx(&[2], &[1, 2]);
+        data.push(99); // extra byte
+        assert!(parse_idx(&data).is_err());
+    }
+
+    #[test]
+    fn load_pair_via_tempfiles() {
+        let dir = std::env::temp_dir().join("approxtrain_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let imgs = make_idx(&[2, 2, 2], &[0, 255, 0, 255, 255, 0, 255, 0]);
+        let lbls = make_idx(&[2], &[3, 7]);
+        let ip = dir.join("imgs.idx");
+        let lp = dir.join("lbls.idx");
+        std::fs::write(&ip, &imgs).unwrap();
+        std::fs::write(&lp, &lbls).unwrap();
+        let ds = load_pair(&ip, &lp, "mnist").unwrap();
+        assert_eq!((ds.n, ds.h, ds.w, ds.c), (2, 2, 2, 1));
+        assert_eq!(ds.labels, vec![3, 7]);
+        assert_eq!(ds.images[1], 1.0);
+    }
+}

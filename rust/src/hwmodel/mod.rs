@@ -1,0 +1,137 @@
+//! Analytic hardware cost model for FP multiplier datapaths — the substrate
+//! for reproducing Fig 1 (area/power efficiency of FP32/FP16/bfloat16/
+//! AFM32/AFM16, normalized to FP32).
+//!
+//! The paper synthesizes RTL with Cadence RC on a TSMC 45nm library; that
+//! toolchain is unavailable here, so we use a classical *unit-gate* model
+//! (see DESIGN.md §Substitutions #8): every 2-input NAND/NOR counts 1 gate
+//! of area and 1 unit of switching energy, a full adder 7 gates, a half
+//! adder 3, XOR 2. Area and dynamic power are both proportional to the
+//! gate count in this model (activity factor assumed uniform), which is
+//! enough to recover the *relative ordering and rough factors* of Fig 1.
+//!
+//! Datapath inventory per multiplier (mantissa width m, exponent width e):
+//!
+//! * exact FP: (m+1)x(m+1) partial-product array (AND gates) + Dadda
+//!   reduction (~(m+1)^2 - (m+1) full adders) + final (2m+2)-bit adder +
+//!   e-bit exponent adder + rounding incrementer + sign XOR.
+//! * log-based (Mitchell): one m-bit adder for the mantissas + exponent
+//!   adder + sign XOR — no partial products at all.
+//! * AFM (minimally biased): Mitchell core + k x k partial-product array +
+//!   two m-bit compensation adders.
+//! * REALM: Mitchell core + two 8-entry constant-LUT correction stages.
+
+/// Unit-gate costs.
+const FA: f64 = 7.0; // full adder
+const AND: f64 = 1.0;
+const XOR: f64 = 2.0;
+
+/// Cost estimate for one multiplier design.
+#[derive(Clone, Debug)]
+pub struct HwCost {
+    pub name: String,
+    /// unit-gate count (proportional to area)
+    pub gates: f64,
+    /// switching energy per multiply (proportional to power at fixed clock)
+    pub energy: f64,
+}
+
+fn ripple_adder(bits: f64) -> f64 {
+    bits * FA
+}
+
+/// Exact FP multiplier with `m` mantissa and `e` exponent bits.
+pub fn exact_fp(name: &str, m: u32, e: u32) -> HwCost {
+    let mm = (m + 1) as f64; // significand width incl. hidden bit
+    let partial_products = mm * mm * AND;
+    let reduction = (mm * mm - mm) * FA; // Dadda/Wallace tree, depth-summed
+    let final_add = ripple_adder(2.0 * mm);
+    let exponent = ripple_adder(e as f64 + 1.0);
+    let rounding = ripple_adder(mm); // incrementer
+    let gates = partial_products + reduction + final_add + exponent + rounding + XOR;
+    // the mantissa stage dominates switching (paper §V: 91%/93% of
+    // area/power); uniform activity makes energy proportional to gates
+    HwCost { name: name.into(), gates, energy: gates }
+}
+
+/// Mitchell-style log multiplier (mantissa adder only).
+pub fn log_mult(name: &str, m: u32, e: u32) -> HwCost {
+    let gates = ripple_adder(m as f64) + ripple_adder(e as f64 + 1.0) + XOR;
+    HwCost { name: name.into(), gates, energy: gates }
+}
+
+/// AFM: Mitchell core + k x k truncated partial-product array + two small
+/// compensation adders.
+pub fn afm(name: &str, m: u32, e: u32, k: u32) -> HwCost {
+    let base = log_mult(name, m, e);
+    let kk = k as f64;
+    let pp = kk * kk * AND + (kk * kk - kk) * FA;
+    // compensation operands are k+2 bits wide (the xy partial product and
+    // the shifted (x+y) term only carry into the top bits)
+    let comp = 2.0 * ripple_adder(kk + 2.0);
+    HwCost { name: name.into(), gates: base.gates + pp + comp, energy: base.energy + pp + comp }
+}
+
+/// REALM: Mitchell core + two constant-LUT correction stages (8-entry
+/// decoder + m-bit correction adder each).
+pub fn realm(name: &str, m: u32, e: u32) -> HwCost {
+    let base = log_mult(name, m, e);
+    let lut_stage = 2.0 * (8.0 * 3.0 + ripple_adder(m as f64));
+    HwCost { name: name.into(), gates: base.gates + lut_stage, energy: base.energy + lut_stage }
+}
+
+/// The Fig 1 series: efficiency (1/area, 1/power) of each design
+/// normalized to FP32 (higher is better). Rows are
+/// `(name, area_efficiency, power_efficiency)` in the figure's order.
+pub fn fig1_series() -> Vec<(String, f64, f64)> {
+    let designs = vec![
+        exact_fp("FP32", 23, 8),
+        exact_fp("FP16", 10, 5),
+        exact_fp("bfloat16", 7, 8),
+        afm("AFM32", 23, 8, 6),
+        afm("AFM16", 7, 8, 4),
+        log_mult("MIT16", 7, 8),
+        realm("REALM16", 7, 8),
+    ];
+    let base = designs[0].clone();
+    designs
+        .into_iter()
+        .map(|d| (d.name.clone(), base.gates / d.gates, base.energy / d.energy))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig 1's qualitative claims: AFM32 ~12x smaller than FP32; AFM16 well
+    /// above bfloat16; ordering FP32 < FP16 < bfloat16 < AFM designs.
+    #[test]
+    fn fig1_ordering_holds() {
+        let rows = fig1_series();
+        let eff = |name: &str| rows.iter().find(|r| r.0 == name).unwrap().1;
+        assert!((eff("FP32") - 1.0).abs() < 1e-12);
+        assert!(eff("FP16") > eff("FP32"));
+        assert!(eff("bfloat16") > eff("FP16"));
+        assert!(eff("AFM32") > eff("bfloat16"), "Fig 1 ordering: AFM32 {} vs bf16 {}",
+                eff("AFM32"), eff("bfloat16"));
+        assert!(eff("AFM32") > 5.0, "AFM32 area eff {}", eff("AFM32"));
+        assert!(eff("AFM16") > eff("bfloat16") * 2.0);
+        assert!(eff("MIT16") > eff("AFM16")); // strictly simpler datapath
+    }
+
+    #[test]
+    fn exact_costs_grow_quadratically_in_mantissa() {
+        let c7 = exact_fp("a", 7, 8).gates;
+        let c23 = exact_fp("b", 23, 8).gates;
+        let ratio = c23 / c7;
+        assert!(ratio > 6.0 && ratio < 12.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn log_mult_is_cheapest() {
+        assert!(log_mult("m", 7, 8).gates < realm("r", 7, 8).gates);
+        assert!(realm("r", 7, 8).gates < afm("a", 7, 8, 4).gates);
+        assert!(afm("a", 7, 8, 4).gates < exact_fp("e", 7, 8).gates);
+    }
+}

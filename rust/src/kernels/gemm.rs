@@ -1,0 +1,205 @@
+//! GEMM kernel — the paper's workhorse (§VI-D "GEMM kernel").
+//!
+//! The CUDA version fetches 16x16 tiles of both operands into on-chip
+//! shared memory; the CPU analog is cache blocking: pack a `BK x BN` panel
+//! of `B` once per tile row and walk `A` rows through it, accumulating in
+//! FP32. The multiply itself is pluggable ([`MulKernel`]) so the same
+//! kernel body serves the native / direct-simulation / AMSim comparisons of
+//! Fig 6.
+
+use super::MulKernel;
+
+/// Cache-block sizes. 64x64 f32 panels are 16 KiB — two fit in a typical
+/// 32 KiB L1D the way two 16x16 tiles fit in a CUDA SM's shared memory.
+pub const BM: usize = 64;
+pub const BN: usize = 64;
+pub const BK: usize = 64;
+
+/// `c[M,N] = a[M,K] * b[K,N]` (row-major, C overwritten), multiplications
+/// routed through `mul`, accumulation in FP32.
+pub fn gemm(mul: &MulKernel, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_threaded(mul, a, b, c, m, k, n, 1);
+}
+
+/// Threaded variant: output row-blocks are distributed over `threads`
+/// workers (the coarse-grained parallelism axis of the CUDA grid).
+pub fn gemm_threaded(
+    mul: &MulKernel,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    c.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(m);
+    if threads == 1 {
+        gemm_block_range(mul, a, b, c, 0, m, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, c_block) in c.chunks_mut(rows_per * n).enumerate() {
+            let m0 = t * rows_per;
+            let m1 = (m0 + c_block.len() / n).min(m);
+            s.spawn(move || {
+                // re-base the row indices onto the thread's sub-slice of C
+                gemm_rows_into(mul, a, b, c_block, m0, m1, k, n);
+            });
+        }
+    });
+}
+
+/// Blocked GEMM of global rows `[m0, m1)` written into a C sub-slice that
+/// starts at row `m0`.
+fn gemm_rows_into(
+    mul: &MulKernel,
+    a: &[f32],
+    b: &[f32],
+    c_block: &mut [f32],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut b_panel = vec![0.0f32; BK * BN];
+    for j0 in (0..n).step_by(BN) {
+        let jn = (j0 + BN).min(n);
+        for k0 in (0..k).step_by(BK) {
+            let kn = (k0 + BK).min(k);
+            let kw = kn - k0;
+            for j in j0..jn {
+                for kk in k0..kn {
+                    b_panel[(j - j0) * kw + (kk - k0)] = b[kk * n + j];
+                }
+            }
+            for i in m0..m1 {
+                let a_row = &a[i * k + k0..i * k + kn];
+                let c_row = &mut c_block[(i - m0) * n + j0..(i - m0) * n + jn];
+                for (jj, c_val) in c_row.iter_mut().enumerate() {
+                    let b_col = &b_panel[jj * kw..jj * kw + kw];
+                    *c_val += mul.dot(a_row, b_col);
+                }
+            }
+        }
+    }
+}
+
+/// Internal: single-threaded blocked GEMM over a row range `[m0, m1)`.
+/// The B panel `[k0..kn, j0..jn]` is packed contiguously (the CUDA
+/// "shared-memory fetch") and transposed so the inner dot walks both
+/// operands with stride 1.
+fn gemm_block_range(
+    mul: &MulKernel,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m0: usize,
+    m1: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm_rows_into(mul, a, b, &mut c[m0 * n..m1 * n], m0, m1, k, n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amsim::AmSim;
+    use crate::lut::MantissaLut;
+    use crate::mult::fpbits::quantize_mantissa;
+    use crate::mult::registry;
+    use crate::util::rng::Pcg32;
+
+    fn naive_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn native_matches_naive() {
+        let mut rng = Pcg32::seeded(21);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 64, 64), (65, 70, 130)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.range(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.range(-1.0, 1.0)).collect();
+            let mut c = vec![0.0f32; m * n];
+            gemm(&MulKernel::Native, &a, &b, &mut c, m, k, n);
+            let want = naive_gemm(&a, &b, m, k, n);
+            for i in 0..m * n {
+                assert!(
+                    (c[i] - want[i]).abs() <= 1e-4 * want[i].abs().max(1.0),
+                    "({m},{k},{n}) idx {i}: {} vs {}",
+                    c[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lut_and_direct_agree_bitwise() {
+        // ATxG and ATxC must produce identical numbers — the paper's own
+        // validation methodology (§VI footnote 2).
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let mut rng = Pcg32::seeded(22);
+        let (m, k, n) = (19, 31, 23);
+        let a: Vec<f32> =
+            (0..m * k).map(|_| quantize_mantissa(rng.range(-2.0, 2.0), 7)).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|_| quantize_mantissa(rng.range(-2.0, 2.0), 7)).collect();
+        let mut c_direct = vec![0.0f32; m * n];
+        let mut c_lut = vec![0.0f32; m * n];
+        gemm(&MulKernel::Direct(model.as_ref()), &a, &b, &mut c_direct, m, k, n);
+        gemm(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c_lut, m, k, n);
+        for i in 0..m * n {
+            assert_eq!(c_direct[i].to_bits(), c_lut[i].to_bits(), "idx {i}");
+        }
+    }
+
+    #[test]
+    fn approx_gemm_is_close_to_exact() {
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let mut rng = Pcg32::seeded(23);
+        let (m, k, n) = (16, 64, 16);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.range(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let mut c_exact = vec![0.0f32; m * n];
+        let mut c_approx = vec![0.0f32; m * n];
+        gemm(&MulKernel::Native, &a, &b, &mut c_exact, m, k, n);
+        gemm(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c_approx, m, k, n);
+        let scale = (k as f32).sqrt();
+        for i in 0..m * n {
+            assert!(
+                (c_exact[i] - c_approx[i]).abs() < 0.05 * scale,
+                "idx {i}: {} vs {}",
+                c_exact[i],
+                c_approx[i]
+            );
+        }
+    }
+
+    #[test]
+    fn empty_dims() {
+        let mut c = vec![0.0f32; 0];
+        gemm(&MulKernel::Native, &[], &[], &mut c, 0, 5, 0);
+    }
+}

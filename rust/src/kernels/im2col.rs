@@ -1,0 +1,363 @@
+//! The three IM2COL kernels (paper §VI-D).
+//!
+//! * [`im2col_forward`] — standard patch extraction for the forward pass.
+//! * [`im2col_weight_grad`] — patch extraction for the weight gradient with
+//!   the paper's key optimization: the dilation of `Errors^{l+1}` implied by
+//!   stride > 1 is **fused** by *skipping* input elements instead of
+//!   materializing a dilated array (§VI-B.1).
+//! * [`im2col_plg`] — patch extraction over the *logical*
+//!   `PaddedDilatedErrors^{l+1}` for the preceding-layer gradient: each
+//!   element checks whether its position is a dilated (zero) position and
+//!   reads the undilated error array otherwise (§VI-B.2).
+//! * [`dilate_explicit`] — the naive separate-dilation baseline the paper
+//!   argues against; kept for the ablation benchmark.
+
+use super::Conv2dGeom;
+
+/// Forward im2col: `cols[b*oh*ow, kh*kw*c]`, NHWC input, zero padding.
+pub fn im2col_forward(g: &Conv2dGeom, input: &[f32], cols: &mut [f32]) {
+    assert_eq!(input.len(), g.batch * g.in_h * g.in_w * g.in_c);
+    assert_eq!(cols.len(), g.col_rows() * g.col_cols());
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let mut idx = 0;
+    for b in 0..g.batch {
+        let in_base = b * g.in_h * g.in_w * g.in_c;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..g.k_h {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    for kx in 0..g.k_w {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        if iy < 0 || iy >= g.in_h as isize || ix < 0 || ix >= g.in_w as isize {
+                            for _ in 0..g.in_c {
+                                cols[idx] = 0.0;
+                                idx += 1;
+                            }
+                        } else {
+                            let src =
+                                in_base + (iy as usize * g.in_w + ix as usize) * g.in_c;
+                            cols[idx..idx + g.in_c]
+                                .copy_from_slice(&input[src..src + g.in_c]);
+                            idx += g.in_c;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Weight-gradient im2col with fused dilation (paper §VI-B.1).
+///
+/// Produces `cols[kh*kw*c, b*oh*ow]` such that
+/// `dW[kh*kw*c, oc] = cols x dY[b*oh*ow, oc]`.
+/// The stride-induced dilation of the error map is realized by *reading the
+/// activation at strided positions* — no dilated array is ever built.
+pub fn im2col_weight_grad(g: &Conv2dGeom, activation: &[f32], cols: &mut [f32]) {
+    assert_eq!(activation.len(), g.batch * g.in_h * g.in_w * g.in_c);
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let q_len = g.batch * oh * ow;
+    assert_eq!(cols.len(), g.col_cols() * q_len);
+    for ky in 0..g.k_h {
+        for kx in 0..g.k_w {
+            for c in 0..g.in_c {
+                let r = (ky * g.k_w + kx) * g.in_c + c;
+                let row = &mut cols[r * q_len..(r + 1) * q_len];
+                let mut q = 0;
+                for b in 0..g.batch {
+                    let in_base = b * g.in_h * g.in_w * g.in_c;
+                    for oy in 0..oh {
+                        // fused dilation: stride positions are *skipped
+                        // reads* of the activation, exactly the paper's
+                        // IM2COL_Weight_Kernel element skipping
+                        let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                        for ox in 0..ow {
+                            let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                            row[q] = if iy < 0
+                                || iy >= g.in_h as isize
+                                || ix < 0
+                                || ix >= g.in_w as isize
+                            {
+                                0.0
+                            } else {
+                                activation
+                                    [in_base + (iy as usize * g.in_w + ix as usize) * g.in_c + c]
+                            };
+                            q += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Preceding-layer-gradient im2col (paper §VI-B.2 / IM2COL_PLG_Kernel).
+///
+/// Logically: pad and dilate `errors[b, oh, ow, oc]` to
+/// `PD[b, (oh-1)*s+1 + 2*(kh-1-pad), ...]`, then im2col with stride 1 and a
+/// `kh x kw` window, yielding `cols[b*in_h*in_w, kh*kw*oc]` so that
+/// `dX = cols x TransposedReversedW[kh*kw*oc, c]`.
+///
+/// Physically: each output element computes its position inside the logical
+/// padded-dilated array and either copies a zero (dilated/padded position)
+/// or reads the original `errors` — the fused pad+dilate of the paper.
+pub fn im2col_plg(g: &Conv2dGeom, errors: &[f32], cols: &mut [f32]) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    assert_eq!(errors.len(), g.batch * oh * ow * g.out_c);
+    let rows = g.batch * g.in_h * g.in_w;
+    let rlen = g.k_h * g.k_w * g.out_c;
+    assert_eq!(cols.len(), rows * rlen);
+    // full-correlation padding of the dilated map
+    let pad_h = g.k_h as isize - 1 - g.pad as isize;
+    let pad_w = g.k_w as isize - 1 - g.pad as isize;
+    let mut idx = 0;
+    for b in 0..g.batch {
+        let e_base = b * oh * ow * g.out_c;
+        for y in 0..g.in_h as isize {
+            for x in 0..g.in_w as isize {
+                for ky in 0..g.k_h as isize {
+                    // position inside the logical dilated (stride-spaced) map
+                    let dy = y + ky - pad_h;
+                    for kx in 0..g.k_w as isize {
+                        let dx = x + kx - pad_w;
+                        // a real error element sits at dilated position
+                        // (oy*s, ox*s); everything else is a fused zero
+                        let s = g.stride as isize;
+                        let valid = dy >= 0
+                            && dx >= 0
+                            && dy % s == 0
+                            && dx % s == 0
+                            && dy / s < oh as isize
+                            && dx / s < ow as isize;
+                        if valid {
+                            let src = e_base
+                                + ((dy / s) as usize * ow + (dx / s) as usize) * g.out_c;
+                            cols[idx..idx + g.out_c]
+                                .copy_from_slice(&errors[src..src + g.out_c]);
+                        } else {
+                            cols[idx..idx + g.out_c].fill(0.0);
+                        }
+                        idx += g.out_c;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Naive explicit dilation (the baseline the paper's fused approach
+/// replaces): insert `stride-1` zeros between error elements. Returns the
+/// dilated map of shape `[batch, (oh-1)*s+1, (ow-1)*s+1, oc]`.
+pub fn dilate_explicit(g: &Conv2dGeom, errors: &[f32]) -> (Vec<f32>, usize, usize) {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    assert_eq!(errors.len(), g.batch * oh * ow * g.out_c);
+    let dh = (oh - 1) * g.stride + 1;
+    let dw = (ow - 1) * g.stride + 1;
+    let mut out = vec![0.0f32; g.batch * dh * dw * g.out_c];
+    for b in 0..g.batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let src = ((b * oh + oy) * ow + ox) * g.out_c;
+                let dst = ((b * dh + oy * g.stride) * dw + ox * g.stride) * g.out_c;
+                out[dst..dst + g.out_c].copy_from_slice(&errors[src..src + g.out_c]);
+            }
+        }
+    }
+    (out, dh, dw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn geom(stride: usize, pad: usize) -> Conv2dGeom {
+        Conv2dGeom {
+            batch: 2,
+            in_h: 6,
+            in_w: 6,
+            in_c: 3,
+            k_h: 3,
+            k_w: 3,
+            out_c: 4,
+            stride,
+            pad,
+        }
+    }
+
+    #[test]
+    fn forward_identity_kernel() {
+        // 1x1 kernel, stride 1, no pad: cols == input
+        let g = Conv2dGeom { k_h: 1, k_w: 1, ..geom(1, 0) };
+        let n = g.batch * g.in_h * g.in_w * g.in_c;
+        let input: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut cols = vec![0.0f32; g.col_rows() * g.col_cols()];
+        im2col_forward(&g, &input, &mut cols);
+        assert_eq!(cols, input);
+    }
+
+    #[test]
+    fn forward_padding_zeros_at_border() {
+        let g = geom(1, 1);
+        let n = g.batch * g.in_h * g.in_w * g.in_c;
+        let input = vec![1.0f32; n];
+        let mut cols = vec![-1.0f32; g.col_rows() * g.col_cols()];
+        im2col_forward(&g, &input, &mut cols);
+        // first output position (0,0): top-left 3x3 patch has 5 padded
+        // positions (first row + first col) of 3 channels each
+        let first_patch = &cols[0..g.col_cols()];
+        let zeros = first_patch.iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros, 5 * 3);
+        assert_eq!(first_patch.iter().filter(|&&v| v == 1.0).count(), 4 * 3);
+    }
+
+    /// Fused-dilation weight-grad columns must equal the explicit route:
+    /// dilate errors, then compute the stride-1 weight-grad columns.
+    #[test]
+    fn weight_grad_fusion_equals_explicit_dilation() {
+        for stride in [1, 2, 3] {
+            let g = geom(stride, 1);
+            let mut rng = Pcg32::seeded(31);
+            let act: Vec<f32> =
+                (0..g.batch * g.in_h * g.in_w * g.in_c).map(|_| rng.range(-1.0, 1.0)).collect();
+            let (oh, ow) = (g.out_h(), g.out_w());
+            let q = g.batch * oh * ow;
+            let mut cols = vec![0.0f32; g.col_cols() * q];
+            im2col_weight_grad(&g, &act, &mut cols);
+            // reference: dW[r, oc] via direct convolution definition
+            let errors: Vec<f32> = (0..q * g.out_c).map(|_| rng.range(-1.0, 1.0)).collect();
+            // dW from cols x errors
+            let mut dw_fused = vec![0.0f32; g.col_cols() * g.out_c];
+            for r in 0..g.col_cols() {
+                for oc in 0..g.out_c {
+                    let mut acc = 0.0;
+                    for qq in 0..q {
+                        acc += cols[r * q + qq] * errors[qq * g.out_c + oc];
+                    }
+                    dw_fused[r * g.out_c + oc] = acc;
+                }
+            }
+            // dW from the convolution definition
+            let mut dw_ref = vec![0.0f32; g.col_cols() * g.out_c];
+            for ky in 0..g.k_h {
+                for kx in 0..g.k_w {
+                    for c in 0..g.in_c {
+                        for oc in 0..g.out_c {
+                            let mut acc = 0.0;
+                            for b in 0..g.batch {
+                                for oy in 0..oh {
+                                    for ox in 0..ow {
+                                        let iy =
+                                            (oy * g.stride + ky) as isize - g.pad as isize;
+                                        let ix =
+                                            (ox * g.stride + kx) as isize - g.pad as isize;
+                                        if iy < 0
+                                            || ix < 0
+                                            || iy >= g.in_h as isize
+                                            || ix >= g.in_w as isize
+                                        {
+                                            continue;
+                                        }
+                                        let a = act[((b * g.in_h + iy as usize) * g.in_w
+                                            + ix as usize)
+                                            * g.in_c
+                                            + c];
+                                        let e = errors
+                                            [((b * oh + oy) * ow + ox) * g.out_c + oc];
+                                        acc += a * e;
+                                    }
+                                }
+                            }
+                            dw_ref[((ky * g.k_w + kx) * g.in_c + c) * g.out_c + oc] = acc;
+                        }
+                    }
+                }
+            }
+            for i in 0..dw_ref.len() {
+                assert!(
+                    (dw_fused[i] - dw_ref[i]).abs() < 1e-4,
+                    "stride {stride} idx {i}: {} vs {}",
+                    dw_fused[i],
+                    dw_ref[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_dilation_shape_and_content() {
+        let g = geom(2, 0);
+        let (oh, ow) = (g.out_h(), g.out_w());
+        let errors: Vec<f32> = (0..g.batch * oh * ow * g.out_c).map(|i| i as f32 + 1.0).collect();
+        let (d, dh, dw) = dilate_explicit(&g, &errors);
+        assert_eq!((dh, dw), ((oh - 1) * 2 + 1, (ow - 1) * 2 + 1));
+        // non-zero exactly at even positions
+        for b in 0..g.batch {
+            for y in 0..dh {
+                for x in 0..dw {
+                    let v = d[((b * dh + y) * dw + x) * g.out_c];
+                    if y % 2 == 0 && x % 2 == 0 {
+                        assert_ne!(v, 0.0);
+                    } else {
+                        assert_eq!(v, 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    /// PLG columns must reproduce the logical pad+dilate+im2col composition.
+    #[test]
+    fn plg_fusion_equals_explicit_composition() {
+        for (stride, pad) in [(1, 0), (1, 1), (2, 1), (2, 0)] {
+            let g = geom(stride, pad);
+            let (oh, ow) = (g.out_h(), g.out_w());
+            let mut rng = Pcg32::seeded(32);
+            let errors: Vec<f32> =
+                (0..g.batch * oh * ow * g.out_c).map(|_| rng.range(-1.0, 1.0)).collect();
+            let rows = g.batch * g.in_h * g.in_w;
+            let rlen = g.k_h * g.k_w * g.out_c;
+            let mut cols = vec![0.0f32; rows * rlen];
+            im2col_plg(&g, &errors, &mut cols);
+
+            // explicit: dilate, add the asymmetric output padding
+            // ((in + 2p - k) % s extra zero rows/cols at bottom-right, the
+            // standard conv-transpose correction), then pad, then stride-1
+            // im2col
+            let (d, dh, dw) = dilate_explicit(&g, &errors);
+            let opad_h = (g.in_h + 2 * g.pad - g.k_h) % g.stride;
+            let opad_w = (g.in_w + 2 * g.pad - g.k_w) % g.stride;
+            let (eh, ew) = (dh + opad_h, dw + opad_w);
+            let mut d_ext = vec![0.0f32; g.batch * eh * ew * g.out_c];
+            for b in 0..g.batch {
+                for y in 0..dh {
+                    for x in 0..dw {
+                        for ch in 0..g.out_c {
+                            d_ext[((b * eh + y) * ew + x) * g.out_c + ch] =
+                                d[((b * dh + y) * dw + x) * g.out_c + ch];
+                        }
+                    }
+                }
+            }
+            let gd = Conv2dGeom {
+                batch: g.batch,
+                in_h: eh,
+                in_w: ew,
+                in_c: g.out_c,
+                k_h: g.k_h,
+                k_w: g.k_w,
+                out_c: 1,
+                stride: 1,
+                pad: (g.k_h as isize - 1 - g.pad as isize) as usize,
+            };
+            assert_eq!((gd.out_h(), gd.out_w()), (g.in_h, g.in_w), "stride {stride} pad {pad}");
+            let mut cols_ref = vec![0.0f32; gd.col_rows() * gd.col_cols()];
+            im2col_forward(&gd, &d_ext, &mut cols_ref);
+            assert_eq!(cols.len(), cols_ref.len());
+            for i in 0..cols.len() {
+                assert_eq!(cols[i], cols_ref[i], "stride {stride} pad {pad} idx {i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Matrix–vector multiplication kernel for the dense layer (paper §VI-C):
+//! "shared-memory-based tiling is superfluous for a 1-D vector", so the
+//! dense layer gets its own simpler kernel instead of the GEMM kernel.
+//! Batched over samples because the coordinator feeds mini-batches.
+
+use super::MulKernel;
+
+/// `y[o] = sum_i w[o, i] * x[i]` — one sample. `w` is row-major `[out, in]`.
+pub fn matvec(mul: &MulKernel, w: &[f32], x: &[f32], y: &mut [f32]) {
+    let n_in = x.len();
+    let n_out = y.len();
+    assert_eq!(w.len(), n_in * n_out, "W shape");
+    for (o, y_val) in y.iter_mut().enumerate() {
+        *y_val = mul.dot(&w[o * n_in..(o + 1) * n_in], x);
+    }
+}
+
+/// Batched forward: `y[b, o] = sum_i x[b, i] * w[i, o]` with `w` stored
+/// `[in, out]` (the L2 JAX convention). Internally transposes `w` once so
+/// the inner loop is the contiguous [`matvec`].
+pub fn dense_forward(
+    mul: &MulKernel,
+    x: &[f32],
+    w: &[f32],
+    y: &mut [f32],
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    assert_eq!(x.len(), batch * n_in);
+    assert_eq!(w.len(), n_in * n_out);
+    assert_eq!(y.len(), batch * n_out);
+    // transpose to [out, in] for unit-stride dots (the "memory coalescing"
+    // concern of the paper, CPU edition)
+    let mut wt = vec![0.0f32; w.len()];
+    for i in 0..n_in {
+        for o in 0..n_out {
+            wt[o * n_in + i] = w[i * n_out + o];
+        }
+    }
+    for b in 0..batch {
+        matvec(mul, &wt, &x[b * n_in..(b + 1) * n_in], &mut y[b * n_out..(b + 1) * n_out]);
+    }
+}
+
+/// Dense weight gradient: `dw[i, o] = sum_b x[b, i] * dy[b, o]`
+/// (paper §VI-C.1: outer product accumulated over the batch).
+pub fn dense_weight_grad(
+    mul: &MulKernel,
+    x: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    assert_eq!(x.len(), batch * n_in);
+    assert_eq!(dy.len(), batch * n_out);
+    assert_eq!(dw.len(), n_in * n_out);
+    dw.fill(0.0);
+    for b in 0..batch {
+        let xb = &x[b * n_in..(b + 1) * n_in];
+        let dyb = &dy[b * n_out..(b + 1) * n_out];
+        for i in 0..n_in {
+            let xi = xb[i];
+            let row = &mut dw[i * n_out..(i + 1) * n_out];
+            for o in 0..n_out {
+                row[o] += mul.mul(xi, dyb[o]);
+            }
+        }
+    }
+}
+
+/// Dense input gradient: `dx[b, i] = sum_o dy[b, o] * w[i, o]`
+/// (paper §VI-C.2: the transposition is implicit in the indexing).
+pub fn dense_input_grad(
+    mul: &MulKernel,
+    dy: &[f32],
+    w: &[f32],
+    dx: &mut [f32],
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+) {
+    assert_eq!(dy.len(), batch * n_out);
+    assert_eq!(w.len(), n_in * n_out);
+    assert_eq!(dx.len(), batch * n_in);
+    for b in 0..batch {
+        let dyb = &dy[b * n_out..(b + 1) * n_out];
+        let dxb = &mut dx[b * n_in..(b + 1) * n_in];
+        for (i, dx_val) in dxb.iter_mut().enumerate() {
+            *dx_val = mul.dot(&w[i * n_out..(i + 1) * n_out], dyb);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn matvec_example_from_paper_fig9() {
+        // o = W x with W = [[w11 w12 w13], [w21 w22 w23]]
+        let w = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let x = [1.0, 1.0, 2.0];
+        let mut y = [0.0f32; 2];
+        matvec(&MulKernel::Native, &w, &x, &mut y);
+        assert_eq!(y, [1.0 + 2.0 + 6.0, 4.0 + 5.0 + 12.0]);
+    }
+
+    #[test]
+    fn forward_grad_consistency() {
+        // numerical gradient check of dense_forward against the two
+        // gradient kernels (native multiplier)
+        let mut rng = Pcg32::seeded(41);
+        let (batch, n_in, n_out) = (3, 5, 4);
+        let x: Vec<f32> = (0..batch * n_in).map(|_| rng.range(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..n_in * n_out).map(|_| rng.range(-1.0, 1.0)).collect();
+        let dy: Vec<f32> = (0..batch * n_out).map(|_| rng.range(-1.0, 1.0)).collect();
+        // loss = sum(y * dy); analytic grads:
+        let mut dw = vec![0.0f32; n_in * n_out];
+        dense_weight_grad(&MulKernel::Native, &x, &dy, &mut dw, batch, n_in, n_out);
+        let mut dx = vec![0.0f32; batch * n_in];
+        dense_input_grad(&MulKernel::Native, &dy, &w, &mut dx, batch, n_in, n_out);
+
+        let loss = |w: &[f32], x: &[f32]| -> f32 {
+            let mut y = vec![0.0f32; batch * n_out];
+            dense_forward(&MulKernel::Native, x, w, &mut y, batch, n_in, n_out);
+            y.iter().zip(&dy).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-2;
+        for i in 0..n_in * n_out {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let num = (loss(&wp, &x) - loss(&wm, &x)) / (2.0 * eps);
+            assert!((num - dw[i]).abs() < 1e-2, "dw[{i}]: {num} vs {}", dw[i]);
+        }
+        for i in 0..batch * n_in {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (loss(&w, &xp) - loss(&w, &xm)) / (2.0 * eps);
+            assert!((num - dx[i]).abs() < 1e-2, "dx[{i}]: {num} vs {}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn dense_forward_matches_gemm() {
+        let mut rng = Pcg32::seeded(42);
+        let (batch, n_in, n_out) = (4, 7, 6);
+        let x: Vec<f32> = (0..batch * n_in).map(|_| rng.range(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..n_in * n_out).map(|_| rng.range(-1.0, 1.0)).collect();
+        let mut y = vec![0.0f32; batch * n_out];
+        dense_forward(&MulKernel::Native, &x, &w, &mut y, batch, n_in, n_out);
+        let mut y_gemm = vec![0.0f32; batch * n_out];
+        crate::kernels::gemm::gemm(&MulKernel::Native, &x, &w, &mut y_gemm, batch, n_in, n_out);
+        for i in 0..y.len() {
+            assert!((y[i] - y_gemm[i]).abs() < 1e-5);
+        }
+    }
+}

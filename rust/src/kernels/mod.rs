@@ -1,0 +1,163 @@
+//! CPU compute kernels mirroring the paper's custom CUDA kernels (§VI-D):
+//! GEMM, three IM2COL variants, transpose-and-reverse, matrix-vector and
+//! pooling. Every multiplication goes through a [`MulKernel`], which selects
+//! between the native hardware `*`, a direct functional-model call (the
+//! paper's "direct C simulation"), or the LUT-based AMSim — the three
+//! simulation strategies compared in Fig 6 and Tables V/VI.
+pub mod gemm;
+pub mod im2col;
+pub mod matvec;
+pub mod pool;
+pub mod transpose_reverse;
+
+use crate::amsim::AmSim;
+use crate::mult::ApproxMul;
+
+/// Multiplication strategy threaded through every kernel.
+pub enum MulKernel<'a> {
+    /// Native hardware multiplier (`*` operator) — the ATnG configuration.
+    Native,
+    /// Direct call into the multiplier functional model (bit manipulation
+    /// per multiply) — the ATxC configuration / Fig 6 "C simulation".
+    Direct(&'a dyn ApproxMul),
+    /// LUT-based AMSim — the ATxG configuration.
+    Lut(AmSim<'a>),
+}
+
+impl<'a> MulKernel<'a> {
+    #[inline(always)]
+    pub fn mul(&self, a: f32, b: f32) -> f32 {
+        match self {
+            MulKernel::Native => a * b,
+            MulKernel::Direct(m) => m.mul(a, b),
+            MulKernel::Lut(sim) => sim.mul(a, b),
+        }
+    }
+
+    /// Dot product with FP32 accumulation (the paper's mixed-precision
+    /// accumulation rule).
+    #[inline]
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            // keep the native path free of per-element dispatch: this is
+            // the baseline every slowdown ratio is measured against
+            MulKernel::Native => {
+                let mut acc = 0.0;
+                for i in 0..a.len() {
+                    acc += a[i] * b[i];
+                }
+                acc
+            }
+            MulKernel::Direct(m) => {
+                let mut acc = 0.0;
+                for i in 0..a.len() {
+                    acc += m.mul(a[i], b[i]);
+                }
+                acc
+            }
+            MulKernel::Lut(sim) => sim.dot(a, b),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            MulKernel::Native => "native".into(),
+            MulKernel::Direct(m) => format!("direct:{}", m.name()),
+            MulKernel::Lut(sim) => format!("lut:m{}", sim.mantissa_bits()),
+        }
+    }
+}
+
+/// Convolution geometry shared by the kernels: `same`-style explicit
+/// padding, square stride.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dGeom {
+    pub batch: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub k_h: usize,
+    pub k_w: usize,
+    pub out_c: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dGeom {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.k_h) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.k_w) / self.stride + 1
+    }
+    /// rows of the forward im2col matrix
+    pub fn col_rows(&self) -> usize {
+        self.batch * self.out_h() * self.out_w()
+    }
+    /// columns of the forward im2col matrix (= GEMM contraction dim)
+    pub fn col_cols(&self) -> usize {
+        self.k_h * self.k_w * self.in_c
+    }
+    /// MACs of one forward pass (for roofline estimates)
+    pub fn forward_macs(&self) -> usize {
+        self.col_rows() * self.col_cols() * self.out_c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::MantissaLut;
+    use crate::mult::registry;
+
+    #[test]
+    fn geometry() {
+        let g = Conv2dGeom {
+            batch: 2,
+            in_h: 28,
+            in_w: 28,
+            in_c: 1,
+            k_h: 5,
+            k_w: 5,
+            out_c: 6,
+            stride: 1,
+            pad: 0,
+        };
+        assert_eq!((g.out_h(), g.out_w()), (24, 24));
+        assert_eq!(g.col_rows(), 2 * 24 * 24);
+        assert_eq!(g.col_cols(), 25);
+        assert_eq!(g.forward_macs(), 2 * 24 * 24 * 25 * 6);
+    }
+
+    #[test]
+    fn strided_geometry() {
+        let g = Conv2dGeom {
+            batch: 1,
+            in_h: 8,
+            in_w: 8,
+            in_c: 3,
+            k_h: 3,
+            k_w: 3,
+            out_c: 4,
+            stride: 2,
+            pad: 1,
+        };
+        assert_eq!((g.out_h(), g.out_w()), (4, 4));
+    }
+
+    #[test]
+    fn mul_kernel_dispatch() {
+        let model = registry::by_name("bfloat16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let native = MulKernel::Native;
+        let direct = MulKernel::Direct(model.as_ref());
+        let lut_k = MulKernel::Lut(crate::amsim::AmSim::new(&lut));
+        assert_eq!(native.mul(1.5, 2.0), 3.0);
+        assert_eq!(direct.mul(1.5, 2.0), 3.0);
+        assert_eq!(lut_k.mul(1.5, 2.0), 3.0);
+        assert_eq!(native.describe(), "native");
+        assert_eq!(direct.describe(), "direct:bfloat16");
+        assert_eq!(lut_k.describe(), "lut:m7");
+    }
+}

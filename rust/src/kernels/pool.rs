@@ -1,0 +1,135 @@
+//! Pooling kernels. The paper notes pooling layers involve no
+//! multiplications (§III-A, Table I) — they run exactly in every
+//! configuration; they exist here so the CPU (ATxC) path can execute
+//! complete LeNet/ResNet models.
+
+/// 2x2 max-pool, stride 2, NHWC. Returns `(output, argmax_indices)`;
+/// the indices feed the backward pass.
+pub fn maxpool2x2(
+    input: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> (Vec<f32>, Vec<usize>) {
+    assert_eq!(input.len(), batch * h * w * c);
+    assert!(h % 2 == 0 && w % 2 == 0, "maxpool2x2 needs even spatial dims");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![0.0f32; batch * oh * ow * c];
+    let mut arg = vec![0usize; out.len()];
+    for b in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let idx =
+                                ((b * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch;
+                            if input[idx] > best {
+                                best = input[idx];
+                                best_idx = idx;
+                            }
+                        }
+                    }
+                    let o = ((b * oh + oy) * ow + ox) * c + ch;
+                    out[o] = best;
+                    arg[o] = best_idx;
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+/// Backward of [`maxpool2x2`]: routes each output gradient to its argmax.
+pub fn maxpool2x2_backward(dy: &[f32], argmax: &[usize], input_len: usize) -> Vec<f32> {
+    assert_eq!(dy.len(), argmax.len());
+    let mut dx = vec![0.0f32; input_len];
+    for (g, &idx) in dy.iter().zip(argmax) {
+        dx[idx] += g;
+    }
+    dx
+}
+
+/// Global average pool over the spatial dims: `[b, h, w, c] -> [b, c]`.
+pub fn global_avgpool(input: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+    assert_eq!(input.len(), batch * h * w * c);
+    let mut out = vec![0.0f32; batch * c];
+    let inv = 1.0 / (h * w) as f32;
+    for b in 0..batch {
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    out[b * c + ch] += input[((b * h + y) * w + x) * c + ch];
+                }
+            }
+        }
+    }
+    for v in &mut out {
+        *v *= inv;
+    }
+    out
+}
+
+/// Backward of [`global_avgpool`].
+pub fn global_avgpool_backward(
+    dy: &[f32],
+    batch: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> Vec<f32> {
+    assert_eq!(dy.len(), batch * c);
+    let inv = 1.0 / (h * w) as f32;
+    let mut dx = vec![0.0f32; batch * h * w * c];
+    for b in 0..batch {
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    dx[((b * h + y) * w + x) * c + ch] = dy[b * c + ch] * inv;
+                }
+            }
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_picks_max_and_routes_grad() {
+        // single 2x2 image, one channel
+        let input = vec![1.0, 4.0, 2.0, 3.0];
+        let (out, arg) = maxpool2x2(&input, 1, 2, 2, 1);
+        assert_eq!(out, vec![4.0]);
+        assert_eq!(arg, vec![1]);
+        let dx = maxpool2x2_backward(&[5.0], &arg, 4);
+        assert_eq!(dx, vec![0.0, 5.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn avgpool_and_backward() {
+        let input = vec![1.0, 2.0, 3.0, 4.0]; // 1x2x2x1
+        let out = global_avgpool(&input, 1, 2, 2, 1);
+        assert_eq!(out, vec![2.5]);
+        let dx = global_avgpool_backward(&out, 1, 2, 2, 1);
+        assert_eq!(dx, vec![0.625; 4]);
+    }
+
+    #[test]
+    fn maxpool_channels_independent() {
+        // 2x2, 2 channels interleaved
+        let input = vec![
+            1.0, 40.0, //
+            2.0, 30.0, //
+            3.0, 20.0, //
+            4.0, 10.0,
+        ];
+        let (out, _) = maxpool2x2(&input, 1, 2, 2, 2);
+        assert_eq!(out, vec![4.0, 40.0]);
+    }
+}

@@ -1,0 +1,65 @@
+//! Transpose-And-Reverse kernel (paper §VI-D).
+//!
+//! For the preceding-layer gradient, `QuantizedWeights^l` must be both
+//! transposed (swap input/output channel dims) and spatially reversed.
+//! Doing this inside the GEMM via index manipulation would destroy memory
+//! coalescing, so the paper — and we — spend a separate pass that
+//! rearranges the data once; the GEMM then streams it contiguously.
+
+/// `w[kh, kw, c, oc]` -> `wrt[kh, kw, oc, c]` with both spatial dims
+/// reversed: `wrt[ky, kx, oc, c] = w[kh-1-ky, kw-1-kx, c, oc]`.
+pub fn transpose_reverse(
+    w: &[f32],
+    k_h: usize,
+    k_w: usize,
+    in_c: usize,
+    out_c: usize,
+) -> Vec<f32> {
+    assert_eq!(w.len(), k_h * k_w * in_c * out_c);
+    let mut out = vec![0.0f32; w.len()];
+    for ky in 0..k_h {
+        for kx in 0..k_w {
+            let src_spatial = ((k_h - 1 - ky) * k_w + (k_w - 1 - kx)) * in_c * out_c;
+            let dst_spatial = (ky * k_w + kx) * out_c * in_c;
+            for c in 0..in_c {
+                for oc in 0..out_c {
+                    out[dst_spatial + oc * in_c + c] = w[src_spatial + c * out_c + oc];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn involution_on_symmetric_dims() {
+        // applying twice with swapped channel dims restores the original
+        let mut rng = Pcg32::seeded(51);
+        let (kh, kw, c, oc) = (3, 3, 4, 5);
+        let w: Vec<f32> = (0..kh * kw * c * oc).map(|_| rng.range(-1.0, 1.0)).collect();
+        let once = transpose_reverse(&w, kh, kw, c, oc);
+        let twice = transpose_reverse(&once, kh, kw, oc, c);
+        assert_eq!(w, twice);
+    }
+
+    #[test]
+    fn explicit_small_case() {
+        // 2x1 kernel, 1 in channel, 2 out channels
+        // w[ky][kx][c][oc]: w[0,0,0,:] = [1,2]; w[1,0,0,:] = [3,4]
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        let wrt = transpose_reverse(&w, 2, 1, 1, 2);
+        // wrt[0,0,oc,c] = w[1,0,c,oc] -> [3,4]; wrt[1,0,oc,c] = w[0,0] -> [1,2]
+        assert_eq!(wrt, vec![3.0, 4.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn identity_for_1x1_single_channels() {
+        let w = vec![7.0];
+        assert_eq!(transpose_reverse(&w, 1, 1, 1, 1), vec![7.0]);
+    }
+}

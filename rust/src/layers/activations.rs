@@ -1,0 +1,37 @@
+//! Activation functions (exact — no multiplications are approximated in
+//! them; the paper only approximates Conv2D/Dense multiplies).
+
+use crate::tensor::Tensor;
+
+pub fn relu(x: &Tensor) -> Tensor {
+    let mut y = x.clone();
+    y.map_inplace(|v| v.max(0.0));
+    y
+}
+
+/// ReLU backward: pass gradient where the *input* was positive.
+pub fn relu_backward(dy: &Tensor, x: &Tensor) -> Tensor {
+    assert_eq!(dy.shape, x.shape);
+    let mut dx = dy.clone();
+    for (d, &xv) in dx.data.iter_mut().zip(&x.data) {
+        if xv <= 0.0 {
+            *d = 0.0;
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_and_backward() {
+        let x = Tensor::from_vec(&[4], vec![-1.0, 0.0, 2.0, -3.0]);
+        let y = relu(&x);
+        assert_eq!(y.data, vec![0.0, 0.0, 2.0, 0.0]);
+        let dy = Tensor::from_vec(&[4], vec![1.0, 1.0, 1.0, 1.0]);
+        let dx = relu_backward(&dy, &x);
+        assert_eq!(dx.data, vec![0.0, 0.0, 1.0, 0.0]);
+    }
+}

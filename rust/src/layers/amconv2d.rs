@@ -1,0 +1,252 @@
+//! AMCONV2D — the approximate Conv2D op (paper §VI-B): forward and both
+//! backward gradients via the IM2COL+GEMM restructuring, with fused
+//! dilation in the weight gradient and fused pad+dilate plus a
+//! transpose-and-reverse pre-pass in the preceding-layer gradient.
+
+use crate::kernels::gemm::gemm;
+use crate::kernels::im2col::{im2col_forward, im2col_plg, im2col_weight_grad};
+use crate::kernels::transpose_reverse::transpose_reverse;
+use crate::kernels::{Conv2dGeom, MulKernel};
+use crate::tensor::Tensor;
+
+/// Forward propagation (paper Alg. 3): `y = conv2d(x, w)` with NHWC input
+/// `[b, h, w, c]` and HWIO filter `[kh, kw, c, oc]`.
+pub fn forward(mul: &MulKernel, x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
+    let g = geom(x, w, stride, pad);
+    let mut cols = vec![0.0f32; g.col_rows() * g.col_cols()];
+    im2col_forward(&g, &x.data, &mut cols);
+    let mut y = Tensor::zeros(&[g.batch, g.out_h(), g.out_w(), g.out_c]);
+    gemm(mul, &cols, &w.data, &mut y.data, g.col_rows(), g.col_cols(), g.out_c);
+    y
+}
+
+/// Weight gradient (paper Alg. 4 lines 4-5): `dw[kh, kw, c, oc]` from the
+/// layer input `x` and the back-propagated error `dy`, with the dilation of
+/// `dy` fused into the im2col indexing.
+pub fn weight_grad(
+    mul: &MulKernel,
+    x: &Tensor,
+    dy: &Tensor,
+    w_shape: &[usize],
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let g = Conv2dGeom {
+        batch: x.shape[0],
+        in_h: x.shape[1],
+        in_w: x.shape[2],
+        in_c: x.shape[3],
+        k_h: w_shape[0],
+        k_w: w_shape[1],
+        out_c: w_shape[3],
+        stride,
+        pad,
+    };
+    debug_assert_eq!(dy.shape, vec![g.batch, g.out_h(), g.out_w(), g.out_c]);
+    let q = g.batch * g.out_h() * g.out_w();
+    let mut cols = vec![0.0f32; g.col_cols() * q];
+    im2col_weight_grad(&g, &x.data, &mut cols);
+    let mut dw = Tensor::zeros(w_shape);
+    gemm(mul, &cols, &dy.data, &mut dw.data, g.col_cols(), q, g.out_c);
+    dw
+}
+
+/// Preceding-layer gradient (paper Alg. 4 lines 6-8): `dx[b, h, w, c]` via
+/// fused pad+dilate im2col of `dy` and a GEMM against the
+/// transposed-and-reversed weights.
+pub fn input_grad(
+    mul: &MulKernel,
+    dy: &Tensor,
+    w: &Tensor,
+    x_shape: &[usize],
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let g = Conv2dGeom {
+        batch: x_shape[0],
+        in_h: x_shape[1],
+        in_w: x_shape[2],
+        in_c: x_shape[3],
+        k_h: w.shape[0],
+        k_w: w.shape[1],
+        out_c: w.shape[3],
+        stride,
+        pad,
+    };
+    debug_assert_eq!(dy.shape, vec![g.batch, g.out_h(), g.out_w(), g.out_c]);
+    let rows = g.batch * g.in_h * g.in_w;
+    let rlen = g.k_h * g.k_w * g.out_c;
+    let mut cols = vec![0.0f32; rows * rlen];
+    im2col_plg(&g, &dy.data, &mut cols);
+    // paper §VI-B.2: a separate kernel invocation is worth it for coalesced
+    // GEMM reads
+    let wrt = transpose_reverse(&w.data, g.k_h, g.k_w, g.in_c, g.out_c);
+    let mut dx = Tensor::zeros(x_shape);
+    gemm(mul, &cols, &wrt, &mut dx.data, rows, rlen, g.in_c);
+    dx
+}
+
+fn geom(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Conv2dGeom {
+    assert_eq!(x.rank(), 4, "input must be NHWC");
+    assert_eq!(w.rank(), 4, "filter must be HWIO");
+    assert_eq!(x.shape[3], w.shape[2], "channel mismatch");
+    Conv2dGeom {
+        batch: x.shape[0],
+        in_h: x.shape[1],
+        in_w: x.shape[2],
+        in_c: x.shape[3],
+        k_h: w.shape[0],
+        k_w: w.shape[1],
+        out_c: w.shape[3],
+        stride,
+        pad,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_tensor(shape: &[usize], rng: &mut Pcg32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.range(-1.0, 1.0)).collect())
+    }
+
+    /// Direct (definition-based) convolution for validation.
+    fn conv_ref(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
+        let g = geom(x, w, stride, pad);
+        let (oh, ow) = (g.out_h(), g.out_w());
+        let mut y = Tensor::zeros(&[g.batch, oh, ow, g.out_c]);
+        for b in 0..g.batch {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for oc in 0..g.out_c {
+                        let mut acc = 0.0;
+                        for ky in 0..g.k_h {
+                            for kx in 0..g.k_w {
+                                let iy = (oy * stride + ky) as isize - pad as isize;
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if iy < 0
+                                    || ix < 0
+                                    || iy >= g.in_h as isize
+                                    || ix >= g.in_w as isize
+                                {
+                                    continue;
+                                }
+                                for c in 0..g.in_c {
+                                    acc += x.at4(b, iy as usize, ix as usize, c)
+                                        * w.data[((ky * g.k_w + kx) * g.in_c + c) * g.out_c
+                                            + oc];
+                                }
+                            }
+                        }
+                        y.data[((b * oh + oy) * ow + ox) * g.out_c + oc] = acc;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn forward_matches_definition() {
+        let mut rng = Pcg32::seeded(61);
+        for (stride, pad) in [(1, 0), (1, 1), (2, 1), (2, 0)] {
+            let x = rand_tensor(&[2, 8, 8, 3], &mut rng);
+            let w = rand_tensor(&[3, 3, 3, 5], &mut rng);
+            let y = forward(&MulKernel::Native, &x, &w, stride, pad);
+            let y_ref = conv_ref(&x, &w, stride, pad);
+            assert_eq!(y.shape, y_ref.shape);
+            assert!(
+                y.max_abs_diff(&y_ref) < 1e-4,
+                "stride {stride} pad {pad}: diff {}",
+                y.max_abs_diff(&y_ref)
+            );
+        }
+    }
+
+    /// Finite-difference gradient check of both backward kernels.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Pcg32::seeded(62);
+        for (stride, pad) in [(1, 1), (2, 1)] {
+            let x = rand_tensor(&[1, 6, 6, 2], &mut rng);
+            let w = rand_tensor(&[3, 3, 2, 3], &mut rng);
+            let y = forward(&MulKernel::Native, &x, &w, stride, pad);
+            let dy = rand_tensor(&y.shape, &mut rng);
+            let dw = weight_grad(&MulKernel::Native, &x, &dy, &w.shape, stride, pad);
+            let dx = input_grad(&MulKernel::Native, &dy, &w, &x.shape, stride, pad);
+
+            let loss = |x: &Tensor, w: &Tensor| -> f32 {
+                let y = forward(&MulKernel::Native, x, w, stride, pad);
+                y.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum()
+            };
+            let eps = 1e-2;
+            for i in (0..w.len()).step_by(7) {
+                let mut wp = w.clone();
+                wp.data[i] += eps;
+                let mut wm = w.clone();
+                wm.data[i] -= eps;
+                let num = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps);
+                assert!(
+                    (num - dw.data[i]).abs() < 2e-2,
+                    "stride {stride}: dw[{i}] {num} vs {}",
+                    dw.data[i]
+                );
+            }
+            for i in (0..x.len()).step_by(5) {
+                let mut xp = x.clone();
+                xp.data[i] += eps;
+                let mut xm = x.clone();
+                xm.data[i] -= eps;
+                let num = (loss(&xp, &w) - loss(&xm, &w)) / (2.0 * eps);
+                assert!(
+                    (num - dx.data[i]).abs() < 2e-2,
+                    "stride {stride}: dx[{i}] {num} vs {}",
+                    dx.data[i]
+                );
+            }
+        }
+    }
+
+    /// LUT path and direct path must agree bit-for-bit through a whole conv
+    /// layer (forward + both gradients).
+    #[test]
+    fn lut_equals_direct_through_layer() {
+        use crate::amsim::AmSim;
+        use crate::lut::MantissaLut;
+        use crate::mult::fpbits::quantize_mantissa;
+        use crate::mult::registry;
+        let model = registry::by_name("mit16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let mut rng = Pcg32::seeded(63);
+        let mut q = |shape: &[usize]| {
+            let n: usize = shape.iter().product();
+            Tensor::from_vec(
+                shape,
+                (0..n).map(|_| quantize_mantissa(rng.range(-1.0, 1.0), 7)).collect(),
+            )
+        };
+        let x = q(&[1, 6, 6, 2]);
+        let w = q(&[3, 3, 2, 3]);
+        let direct = MulKernel::Direct(model.as_ref());
+        let lut_k = MulKernel::Lut(AmSim::new(&lut));
+        let y_d = forward(&direct, &x, &w, 1, 1);
+        let y_l = forward(&lut_k, &x, &w, 1, 1);
+        for i in 0..y_d.len() {
+            assert_eq!(y_d.data[i].to_bits(), y_l.data[i].to_bits(), "fwd idx {i}");
+        }
+        let dy = q(&y_d.shape);
+        let dw_d = weight_grad(&direct, &x, &dy, &w.shape, 1, 1);
+        let dw_l = weight_grad(&lut_k, &x, &dy, &w.shape, 1, 1);
+        for i in 0..dw_d.len() {
+            assert_eq!(dw_d.data[i].to_bits(), dw_l.data[i].to_bits(), "dw idx {i}");
+        }
+        let dx_d = input_grad(&direct, &dy, &w, &x.shape, 1, 1);
+        let dx_l = input_grad(&lut_k, &dy, &w, &x.shape, 1, 1);
+        for i in 0..dx_d.len() {
+            assert_eq!(dx_d.data[i].to_bits(), dx_l.data[i].to_bits(), "dx idx {i}");
+        }
+    }
+}

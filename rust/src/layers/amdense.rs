@@ -1,0 +1,120 @@
+//! AMDENSE — the approximate Dense (fully-connected) op (paper §VI-C),
+//! built on the matrix-vector kernel rather than the GEMM kernel.
+
+use crate::kernels::matvec::{dense_forward, dense_input_grad, dense_weight_grad};
+use crate::kernels::MulKernel;
+use crate::tensor::Tensor;
+
+/// Forward: `y[b, o] = x[b, :] . w[:, o] + bias[o]` (bias addition is
+/// exact — only multiplies are approximated).
+pub fn forward(mul: &MulKernel, x: &Tensor, w: &Tensor, bias: Option<&Tensor>) -> Tensor {
+    assert_eq!(x.rank(), 2);
+    assert_eq!(w.rank(), 2);
+    let (batch, n_in) = (x.shape[0], x.shape[1]);
+    let n_out = w.shape[1];
+    assert_eq!(w.shape[0], n_in);
+    let mut y = Tensor::zeros(&[batch, n_out]);
+    dense_forward(mul, &x.data, &w.data, &mut y.data, batch, n_in, n_out);
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n_out);
+        for r in 0..batch {
+            for o in 0..n_out {
+                y.data[r * n_out + o] += b.data[o];
+            }
+        }
+    }
+    y
+}
+
+/// Weight gradient `dw = x^T dy` (paper §VI-C.1).
+pub fn weight_grad(mul: &MulKernel, x: &Tensor, dy: &Tensor) -> Tensor {
+    let (batch, n_in) = (x.shape[0], x.shape[1]);
+    let n_out = dy.shape[1];
+    assert_eq!(dy.shape[0], batch);
+    let mut dw = Tensor::zeros(&[n_in, n_out]);
+    dense_weight_grad(mul, &x.data, &dy.data, &mut dw.data, batch, n_in, n_out);
+    dw
+}
+
+/// Bias gradient: column sums of `dy` (exact — additions only).
+pub fn bias_grad(dy: &Tensor) -> Tensor {
+    let (batch, n_out) = (dy.shape[0], dy.shape[1]);
+    let mut db = Tensor::zeros(&[n_out]);
+    for b in 0..batch {
+        for o in 0..n_out {
+            db.data[o] += dy.data[b * n_out + o];
+        }
+    }
+    db
+}
+
+/// Input gradient `dx = dy w^T` (paper §VI-C.2; transposition implicit).
+pub fn input_grad(mul: &MulKernel, dy: &Tensor, w: &Tensor) -> Tensor {
+    let (batch, n_out) = (dy.shape[0], dy.shape[1]);
+    let n_in = w.shape[0];
+    assert_eq!(w.shape[1], n_out);
+    let mut dx = Tensor::zeros(&[batch, n_in]);
+    dense_input_grad(mul, &dy.data, &w.data, &mut dx.data, batch, n_in, n_out);
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rand_tensor(shape: &[usize], rng: &mut Pcg32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::from_vec(shape, (0..n).map(|_| rng.range(-1.0, 1.0)).collect())
+    }
+
+    #[test]
+    fn forward_with_bias() {
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let b = Tensor::from_vec(&[2], vec![10.0, 20.0]);
+        let y = forward(&MulKernel::Native, &x, &w, Some(&b));
+        assert_eq!(y.data, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn grads_match_finite_differences() {
+        let mut rng = Pcg32::seeded(71);
+        let x = rand_tensor(&[3, 4], &mut rng);
+        let w = rand_tensor(&[4, 5], &mut rng);
+        let dy = rand_tensor(&[3, 5], &mut rng);
+        let dw = weight_grad(&MulKernel::Native, &x, &dy);
+        let dx = input_grad(&MulKernel::Native, &dy, &w);
+        let db = bias_grad(&dy);
+        let bias = Tensor::zeros(&[5]);
+        let loss = |x: &Tensor, w: &Tensor, b: &Tensor| -> f32 {
+            let y = forward(&MulKernel::Native, x, w, Some(b));
+            y.data.iter().zip(&dy.data).map(|(a, g)| a * g).sum()
+        };
+        let eps = 1e-2;
+        for i in 0..w.len() {
+            let mut wp = w.clone();
+            wp.data[i] += eps;
+            let mut wm = w.clone();
+            wm.data[i] -= eps;
+            let num = (loss(&x, &wp, &bias) - loss(&x, &wm, &bias)) / (2.0 * eps);
+            assert!((num - dw.data[i]).abs() < 1e-2, "dw[{i}]");
+        }
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let num = (loss(&xp, &w, &bias) - loss(&xm, &w, &bias)) / (2.0 * eps);
+            assert!((num - dx.data[i]).abs() < 1e-2, "dx[{i}]");
+        }
+        for o in 0..5 {
+            let mut bp = bias.clone();
+            bp.data[o] += eps;
+            let mut bm = bias.clone();
+            bm.data[o] -= eps;
+            let num = (loss(&x, &w, &bp) - loss(&x, &w, &bm)) / (2.0 * eps);
+            assert!((num - db.data[o]).abs() < 1e-2, "db[{o}]");
+        }
+    }
+}

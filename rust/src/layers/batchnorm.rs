@@ -1,0 +1,133 @@
+//! Batch normalization over the channel axis of NHWC tensors (exact: BN's
+//! multiplies are not routed through AMSim — the paper approximates only
+//! the Conv2D/Dense ops; see DESIGN.md). Uses batch statistics in both
+//! training and evaluation, which is adequate at the reproduction's batch
+//! sizes and keeps the train-step artifact state-free.
+
+use crate::tensor::Tensor;
+
+pub const BN_EPS: f32 = 1e-5;
+
+/// Forward. `gamma`/`beta` are `[c]`. Returns `(y, saved_mean, saved_inv_std)`.
+pub fn forward(x: &Tensor, gamma: &Tensor, beta: &Tensor) -> (Tensor, Vec<f32>, Vec<f32>) {
+    assert_eq!(x.rank(), 4);
+    let c = x.shape[3];
+    assert_eq!(gamma.len(), c);
+    assert_eq!(beta.len(), c);
+    let n = x.len() / c;
+    let mut mean = vec![0.0f32; c];
+    for (i, &v) in x.data.iter().enumerate() {
+        mean[i % c] += v;
+    }
+    for m in &mut mean {
+        *m /= n as f32;
+    }
+    let mut var = vec![0.0f32; c];
+    for (i, &v) in x.data.iter().enumerate() {
+        let d = v - mean[i % c];
+        var[i % c] += d * d;
+    }
+    let inv_std: Vec<f32> = var.iter().map(|v| 1.0 / (v / n as f32 + BN_EPS).sqrt()).collect();
+    let mut y = Tensor::zeros(&x.shape);
+    for (i, &v) in x.data.iter().enumerate() {
+        let ch = i % c;
+        y.data[i] = (v - mean[ch]) * inv_std[ch] * gamma.data[ch] + beta.data[ch];
+    }
+    (y, mean, inv_std)
+}
+
+/// Backward: returns `(dx, dgamma, dbeta)` given saved statistics.
+pub fn backward(
+    dy: &Tensor,
+    x: &Tensor,
+    gamma: &Tensor,
+    mean: &[f32],
+    inv_std: &[f32],
+) -> (Tensor, Tensor, Tensor) {
+    let c = x.shape[3];
+    let n = (x.len() / c) as f32;
+    let mut dgamma = Tensor::zeros(&[c]);
+    let mut dbeta = Tensor::zeros(&[c]);
+    let mut sum_dy = vec![0.0f32; c];
+    let mut sum_dy_xhat = vec![0.0f32; c];
+    for (i, (&g, &xv)) in dy.data.iter().zip(&x.data).enumerate() {
+        let ch = i % c;
+        let xhat = (xv - mean[ch]) * inv_std[ch];
+        dgamma.data[ch] += g * xhat;
+        dbeta.data[ch] += g;
+        sum_dy[ch] += g;
+        sum_dy_xhat[ch] += g * xhat;
+    }
+    let mut dx = Tensor::zeros(&x.shape);
+    for (i, (&g, &xv)) in dy.data.iter().zip(&x.data).enumerate() {
+        let ch = i % c;
+        let xhat = (xv - mean[ch]) * inv_std[ch];
+        dx.data[i] = gamma.data[ch] * inv_std[ch] / n
+            * (n * g - sum_dy[ch] - xhat * sum_dy_xhat[ch]);
+    }
+    (dx, dgamma, dbeta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn normalizes_per_channel() {
+        let mut rng = Pcg32::seeded(81);
+        let x = Tensor::from_vec(
+            &[2, 3, 3, 2],
+            (0..36).map(|_| rng.range(-5.0, 5.0)).collect(),
+        );
+        let gamma = Tensor::filled(&[2], 1.0);
+        let beta = Tensor::zeros(&[2]);
+        let (y, _, _) = forward(&x, &gamma, &beta);
+        for ch in 0..2 {
+            let vals: Vec<f32> = y.data.iter().skip(ch).step_by(2).cloned().collect();
+            let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let var: f32 =
+                vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / vals.len() as f32;
+            assert!(mean.abs() < 1e-5, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Pcg32::seeded(82);
+        let x = Tensor::from_vec(&[2, 2, 2, 2], (0..16).map(|_| rng.range(-2.0, 2.0)).collect());
+        let gamma = Tensor::from_vec(&[2], vec![1.3, 0.7]);
+        let beta = Tensor::from_vec(&[2], vec![0.1, -0.2]);
+        let dy = Tensor::from_vec(&x.shape, (0..16).map(|_| rng.range(-1.0, 1.0)).collect());
+        let (_, mean, inv_std) = forward(&x, &gamma, &beta);
+        let (dx, dgamma, dbeta) = backward(&dy, &x, &gamma, &mean, &inv_std);
+        let loss = |x: &Tensor, g: &Tensor, b: &Tensor| -> f32 {
+            let (y, _, _) = forward(x, g, b);
+            y.data.iter().zip(&dy.data).map(|(a, d)| a * d).sum()
+        };
+        let eps = 1e-3;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let num = (loss(&xp, &gamma, &beta) - loss(&xm, &gamma, &beta)) / (2.0 * eps);
+            assert!((num - dx.data[i]).abs() < 2e-2, "dx[{i}]: {num} vs {}", dx.data[i]);
+        }
+        for i in 0..2 {
+            let mut gp = gamma.clone();
+            gp.data[i] += eps;
+            let mut gm = gamma.clone();
+            gm.data[i] -= eps;
+            let num = (loss(&x, &gp, &beta) - loss(&x, &gm, &beta)) / (2.0 * eps);
+            assert!((num - dgamma.data[i]).abs() < 2e-2, "dgamma[{i}]");
+            let mut bp = beta.clone();
+            bp.data[i] += eps;
+            let mut bm = beta.clone();
+            bm.data[i] -= eps;
+            let num = (loss(&x, &gamma, &bp) - loss(&x, &gamma, &bm)) / (2.0 * eps);
+            assert!((num - dbeta.data[i]).abs() < 2e-2, "dbeta[{i}]");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Pure-Rust reference layers: the ATxC ("CPU direct simulation") execution
+//! path of the paper's Tables V/VI and the numeric oracle that the compiled
+//! artifacts are validated against (mirroring the paper's own methodology,
+//! §VI footnote 2: "The CPU implementation was used for validating our GPU
+//! implementation").
+//!
+//! Each layer is built from the kernels in [`crate::kernels`], with every
+//! multiplication routed through a [`MulKernel`](crate::kernels::MulKernel).
+pub mod activations;
+pub mod amconv2d;
+pub mod amdense;
+pub mod batchnorm;
+pub mod softmax;

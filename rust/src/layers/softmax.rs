@@ -1,0 +1,109 @@
+//! Softmax + cross-entropy head (exact). Combined forward/backward because
+//! the fused gradient `softmax(x) - onehot(y)` is what every framework
+//! implements.
+
+use crate::tensor::Tensor;
+
+/// Row-wise softmax of logits `[batch, classes]`, numerically stabilized.
+pub fn softmax(logits: &Tensor) -> Tensor {
+    assert_eq!(logits.rank(), 2);
+    let (b, c) = (logits.shape[0], logits.shape[1]);
+    let mut out = Tensor::zeros(&[b, c]);
+    for r in 0..b {
+        let row = &logits.data[r * c..(r + 1) * c];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (o, &v) in out.data[r * c..(r + 1) * c].iter_mut().zip(row) {
+            *o = (v - max).exp();
+            sum += *o;
+        }
+        for o in &mut out.data[r * c..(r + 1) * c] {
+            *o /= sum;
+        }
+    }
+    out
+}
+
+/// Mean cross-entropy loss of logits against integer labels; returns
+/// `(loss, accuracy, dlogits)`.
+pub fn cross_entropy_with_grad(logits: &Tensor, labels: &[u32]) -> (f32, f32, Tensor) {
+    let (b, c) = (logits.shape[0], logits.shape[1]);
+    assert_eq!(labels.len(), b);
+    let probs = softmax(logits);
+    let mut loss = 0.0f32;
+    let mut correct = 0usize;
+    let mut grad = probs.clone();
+    for r in 0..b {
+        let y = labels[r] as usize;
+        assert!(y < c, "label {y} out of range");
+        let p = probs.data[r * c + y].max(1e-12);
+        loss -= p.ln();
+        grad.data[r * c + y] -= 1.0;
+        let row = &probs.data[r * c..(r + 1) * c];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == y {
+            correct += 1;
+        }
+    }
+    let inv_b = 1.0 / b as f32;
+    for g in &mut grad.data {
+        *g *= inv_b;
+    }
+    (loss * inv_b, correct as f32 * inv_b, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let logits = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let p = softmax(&logits);
+        for r in 0..2 {
+            let s: f32 = p.data[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(p.data[2] > p.data[1] && p.data[1] > p.data[0]);
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let a = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[1, 3], vec![101.0, 102.0, 103.0]);
+        assert!(softmax(&a).max_abs_diff(&softmax(&b)) < 1e-6);
+    }
+
+    #[test]
+    fn ce_loss_and_grad() {
+        let logits = Tensor::from_vec(&[1, 2], vec![0.0, 0.0]);
+        let (loss, acc, grad) = cross_entropy_with_grad(&logits, &[1]);
+        assert!((loss - (2.0f32).ln()).abs() < 1e-6);
+        assert!(acc == 0.0 || acc == 1.0); // argmax tie -> either
+        assert!((grad.data[0] - 0.5).abs() < 1e-6);
+        assert!((grad.data[1] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let logits = Tensor::from_vec(&[2, 3], vec![0.5, -0.2, 0.1, 1.0, 0.0, -1.0]);
+        let labels = [2u32, 0u32];
+        let (_, _, grad) = cross_entropy_with_grad(&logits, &labels);
+        let eps = 1e-3;
+        for i in 0..6 {
+            let mut lp = logits.clone();
+            lp.data[i] += eps;
+            let mut lm = logits.clone();
+            lm.data[i] -= eps;
+            let (fp, _, _) = cross_entropy_with_grad(&lp, &labels);
+            let (fm, _, _) = cross_entropy_with_grad(&lm, &labels);
+            let num = (fp - fm) / (2.0 * eps);
+            assert!((num - grad.data[i]).abs() < 1e-3, "idx {i}: {num} vs {}", grad.data[i]);
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! # ApproxTrain — fast simulation of approximate FP multipliers for DNN
+//! training and inference
+//!
+//! Rust + JAX + Pallas reproduction of *ApproxTrain* (Gong et al., 2022).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): LUT-based
+//!   approximate-FP GEMM/matvec (AMSim, paper Alg. 2) compiled at build time.
+//! * **L2** — JAX models (`python/compile/`): `AMCONV2D`/`AMDENSE` layers with
+//!   the paper's IM2COL+GEMM restructuring of forward + both backward
+//!   gradients, lowered once to HLO text under `artifacts/`.
+//! * **L3** — this crate: multiplier functional models, LUT generation
+//!   (paper Alg. 1), dataset pipeline, PJRT runtime, training/inference
+//!   drivers, a batching inference server, and the experiment harness that
+//!   regenerates every table and figure of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use approxtrain::mult::registry;
+//! use approxtrain::lut::MantissaLut;
+//! use approxtrain::amsim::AmSim;
+//!
+//! // 1. pick a multiplier functional model (the paper's "C/C++ model")
+//! let afm16 = registry::by_name("afm16").unwrap();
+//! // 2. tabulate its mantissa products (paper Algorithm 1)
+//! let lut = MantissaLut::generate(afm16.as_ref());
+//! // 3. simulate (paper Algorithm 2)
+//! let sim = AmSim::new(&lut);
+//! let c = sim.mul(1.5f32, 2.25f32);
+//! assert!((c - 3.375).abs() / 3.375 < 0.05);
+//! ```
+pub mod amsim;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod hwmodel;
+pub mod kernels;
+pub mod layers;
+pub mod lut;
+pub mod mult;
+pub mod nn;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

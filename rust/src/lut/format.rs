@@ -1,0 +1,191 @@
+//! Binary on-disk format for mantissa-product LUTs.
+//!
+//! The paper writes LUTs "into binary files; thus, multiplier designers
+//! could load LUT binary files during run-time" (§V). Layout (little
+//! endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"AMLUT\x01\0\0"
+//! 8       4     m      mantissa bit-width (u32)
+//! 12      4     name_len (u32)
+//! 16      n     multiplier name (utf-8)
+//! 16+n    4*2^(2m)  entries (u32 little-endian)
+//! end     4     crc32 of the entries payload
+//! ```
+//!
+//! The same format is written by `python/compile/lutgen.py`; golden-file
+//! tests assert bit-identical output between the two implementations.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::MantissaLut;
+
+pub const MAGIC: &[u8; 8] = b"AMLUT\x01\0\0";
+
+/// CRC-32 (IEEE) — implemented locally; the offline dep set has no crc crate.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[derive(Debug)]
+pub enum LutIoError {
+    Io(std::io::Error),
+    BadMagic,
+    BadHeader(String),
+    CrcMismatch { want: u32, got: u32 },
+}
+
+impl std::fmt::Display for LutIoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LutIoError::Io(e) => write!(f, "lut io: {e}"),
+            LutIoError::BadMagic => write!(f, "not a LUT file (bad magic)"),
+            LutIoError::BadHeader(m) => write!(f, "bad LUT header: {m}"),
+            LutIoError::CrcMismatch { want, got } => {
+                write!(f, "LUT payload corrupt: crc {got:#x} != {want:#x}")
+            }
+        }
+    }
+}
+impl std::error::Error for LutIoError {}
+impl From<std::io::Error> for LutIoError {
+    fn from(e: std::io::Error) -> Self {
+        LutIoError::Io(e)
+    }
+}
+
+impl MantissaLut {
+    /// Serialize to the binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let name = self.mult_name.as_bytes();
+        let mut out = Vec::with_capacity(16 + name.len() + self.entries.len() * 4 + 4);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&self.m.to_le_bytes());
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name);
+        let payload_start = out.len();
+        for &e in &self.entries {
+            out.extend_from_slice(&e.to_le_bytes());
+        }
+        let crc = crc32(&out[payload_start..]);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<MantissaLut, LutIoError> {
+        if data.len() < 16 || &data[0..8] != MAGIC {
+            return Err(LutIoError::BadMagic);
+        }
+        let m = u32::from_le_bytes(data[8..12].try_into().unwrap());
+        if !(1..=super::MAX_LUT_M).contains(&m) {
+            return Err(LutIoError::BadHeader(format!("mantissa width {m}")));
+        }
+        let name_len = u32::from_le_bytes(data[12..16].try_into().unwrap()) as usize;
+        if data.len() < 16 + name_len {
+            return Err(LutIoError::BadHeader("truncated name".into()));
+        }
+        let name = std::str::from_utf8(&data[16..16 + name_len])
+            .map_err(|_| LutIoError::BadHeader("name not utf-8".into()))?
+            .to_string();
+        let n_entries = 1usize << (2 * m);
+        let payload_start = 16 + name_len;
+        let payload_end = payload_start + n_entries * 4;
+        if data.len() != payload_end + 4 {
+            return Err(LutIoError::BadHeader(format!(
+                "file size {} != expected {}",
+                data.len(),
+                payload_end + 4
+            )));
+        }
+        let payload = &data[payload_start..payload_end];
+        let want = u32::from_le_bytes(data[payload_end..].try_into().unwrap());
+        let got = crc32(payload);
+        if want != got {
+            return Err(LutIoError::CrcMismatch { want, got });
+        }
+        let entries = payload
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(MantissaLut { mult_name: name, m, entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<(), LutIoError> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<MantissaLut, LutIoError> {
+        let mut data = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut data)?;
+        Self::from_bytes(&data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::registry;
+
+    #[test]
+    fn crc32_known_vector() {
+        // standard test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let m = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(m.as_ref());
+        let bytes = lut.to_bytes();
+        let back = MantissaLut::from_bytes(&bytes).unwrap();
+        assert_eq!(back, lut);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let m = registry::by_name("mit16").unwrap();
+        let lut = MantissaLut::generate(m.as_ref());
+        let dir = std::env::temp_dir().join("approxtrain_test_luts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mit16.lut");
+        lut.save(&path).unwrap();
+        let back = MantissaLut::load(&path).unwrap();
+        assert_eq!(back, lut);
+        assert_eq!(back.mult_name, "mit16");
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let m = registry::by_name("bfloat16").unwrap();
+        let lut = MantissaLut::generate(m.as_ref());
+        let mut bytes = lut.to_bytes();
+        // flip a payload bit
+        let idx = bytes.len() / 2;
+        bytes[idx] ^= 0x10;
+        match MantissaLut::from_bytes(&bytes) {
+            Err(LutIoError::CrcMismatch { .. }) => {}
+            other => panic!("expected crc mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_truncation() {
+        assert!(matches!(MantissaLut::from_bytes(b"short"), Err(LutIoError::BadMagic)));
+        let m = registry::by_name("bfloat16").unwrap();
+        let bytes = MantissaLut::generate(m.as_ref()).to_bytes();
+        assert!(MantissaLut::from_bytes(&bytes[..bytes.len() - 8]).is_err());
+    }
+}

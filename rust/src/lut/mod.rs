@@ -1,0 +1,169 @@
+//! Mantissa-product lookup tables — paper §V-A, Algorithm 1.
+//!
+//! A LUT stores, for every pair of `m`-bit mantissas `(k, j)`, the 23-bit
+//! mantissa field of the approximate product plus a carry bit at bit 23
+//! (the "stored as 4 bytes" trick of the paper's footnote 1: entries are
+//! pre-shifted to the FP32 mantissa position so simulation needs no shift).
+//!
+//! Generation probes the *black-box* functional model exactly as Algorithm 1
+//! does: fixed non-special exponents, mantissas swept by the nested loop,
+//! carry recovered by comparing the product's exponent against the
+//! unnormalized sum of the operand exponents.
+
+pub mod format;
+
+use crate::mult::fpbits::{compose, decompose, FpParts, EXP_BIAS, MANT_BITS};
+use crate::mult::ApproxMul;
+
+/// Maximum tabulatable mantissa width (paper §V-B: 1..=12 bits; 12 bits is
+/// a 2^24-entry, 64 MiB table).
+pub const MAX_LUT_M: u32 = 12;
+
+/// A generated mantissa-product LUT.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MantissaLut {
+    /// multiplier name this table was generated from
+    pub mult_name: String,
+    /// mantissa bit-width `m`
+    pub m: u32,
+    /// `2^(2m)` entries: `(carry << 23) | mantissa23`
+    pub entries: Vec<u32>,
+}
+
+impl MantissaLut {
+    /// Algorithm 1: generate the LUT by probing `model` as a black box.
+    ///
+    /// Panics if the model's mantissa width exceeds [`MAX_LUT_M`] (the paper
+    /// simulates such designs directly instead).
+    pub fn generate(model: &dyn ApproxMul) -> MantissaLut {
+        let m = model.mantissa_bits();
+        assert!(
+            m <= MAX_LUT_M,
+            "mantissa width {m} not tabulatable (max {MAX_LUT_M}); use direct simulation"
+        );
+        // Alg. 1 lines 2-4: arbitrary signs, non-special exponents with a
+        // non-special unnormalized product exponent.
+        let exp_a: u32 = 127; // N
+        let exp_b: u32 = 127; // K; N + K - 127 = 127, all in [1, 254]
+        let size = 1usize << (2 * m);
+        let mut entries = vec![0u32; size];
+        for k in 0..(1u32 << m) {
+            for j in 0..(1u32 << m) {
+                let a = compose(FpParts { sign: 0, exp: exp_a, mant: k << (MANT_BITS - m) });
+                let b = compose(FpParts { sign: 0, exp: exp_b, mant: j << (MANT_BITS - m) });
+                let c = model.mul(a, b); // line 8: black-box probe
+                let pc = decompose(c);
+                // lines 9-13: carry detection from the exponent
+                let un_normalized = exp_a as i32 + exp_b as i32 - EXP_BIAS;
+                let carry = if (pc.exp as i32) > un_normalized { 1u32 } else { 0 };
+                entries[(k << m | j) as usize] = (carry << MANT_BITS) | pc.mant;
+            }
+        }
+        MantissaLut { mult_name: model.name().to_string(), m, entries }
+    }
+
+    /// Number of entries (`2^(2m)`).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Size in bytes of the payload (paper quotes 65.53 kB for m=7).
+    pub fn payload_bytes(&self) -> usize {
+        self.entries.len() * 4
+    }
+
+    /// Validate structural invariants: correct size, carry bit only at bit
+    /// 23, mantissa bits only in the top `m` positions.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.m == 0 || self.m > MAX_LUT_M {
+            return Err(format!("bad mantissa width {}", self.m));
+        }
+        if self.entries.len() != 1usize << (2 * self.m) {
+            return Err(format!(
+                "size {} != 2^(2*{})",
+                self.entries.len(),
+                self.m
+            ));
+        }
+        let low_mask = (1u32 << (MANT_BITS - self.m)) - 1;
+        for (i, &e) in self.entries.iter().enumerate() {
+            if e >> (MANT_BITS + 1) != 0 {
+                return Err(format!("entry {i} has bits above the carry: {e:#x}"));
+            }
+            if e & low_mask != 0 {
+                return Err(format!("entry {i} has sub-m mantissa bits: {e:#x}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::registry;
+
+    #[test]
+    fn sizes_match_paper() {
+        // paper: bfloat16 (m=7) -> 2^7 * 2^7 * 4 bytes = 65.53 kB
+        let bf16 = registry::by_name("bfloat16").unwrap();
+        let lut = MantissaLut::generate(bf16.as_ref());
+        assert_eq!(lut.len(), 128 * 128);
+        assert_eq!(lut.payload_bytes(), 65536);
+        lut.validate().unwrap();
+    }
+
+    #[test]
+    fn exact_lut_matches_direct_product() {
+        // for the exact bfloat16 model the LUT entry must equal the RNE
+        // mantissa product computed directly
+        let bf16 = registry::by_name("bfloat16").unwrap();
+        let lut = MantissaLut::generate(bf16.as_ref());
+        for k in 0..128u32 {
+            for j in 0..128u32 {
+                let (carry, mant) = bf16.mantissa_product(k << 16, j << 16);
+                let want = (carry << 23) | mant;
+                assert_eq!(lut.entries[(k << 7 | j) as usize], want, "k={k} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn carry_detection_works_for_all_m7_models() {
+        // black-box probing (Alg 1) must recover mantissa_product exactly
+        for name in ["mit16", "afm16", "realm16", "trunc16", "comp16"] {
+            let m = registry::by_name(name).unwrap();
+            let lut = MantissaLut::generate(m.as_ref());
+            lut.validate().unwrap();
+            for k in (0..128u32).step_by(7) {
+                for j in (0..128u32).step_by(5) {
+                    let (carry, mant) = m.mantissa_product(k << 16, j << 16);
+                    assert_eq!(
+                        lut.entries[(k << 7 | j) as usize],
+                        (carry << 23) | mant,
+                        "{name} k={k} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not tabulatable")]
+    fn wide_mantissa_rejected() {
+        let afm32 = registry::by_name("afm32").unwrap();
+        MantissaLut::generate(afm32.as_ref());
+    }
+
+    #[test]
+    fn validate_rejects_corruption() {
+        let bf16 = registry::by_name("bfloat16").unwrap();
+        let mut lut = MantissaLut::generate(bf16.as_ref());
+        lut.entries[5] |= 1 << 30;
+        assert!(lut.validate().is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! ApproxTrain launcher — the Layer-3 entrypoint.
+//!
+//! ```text
+//! approxtrain gen-lut --mult afm16 --out afm16.lut
+//! approxtrain hwmodel
+//! approxtrain train --model lenet5 --mode lut --mult afm16 --epochs 3
+//! approxtrain infer --model lenet5 --mode lut --mult afm16
+//! approxtrain serve --model lenet300 --requests 64
+//! approxtrain experiment fig6|fig10|table3|table4|table5|table6|fig11|fig12|all [--quick]
+//! approxtrain list-artifacts
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use approxtrain::cli::Args;
+use approxtrain::coordinator::experiments;
+use approxtrain::coordinator::trainer::{TrainConfig, Trainer};
+use approxtrain::lut::MantissaLut;
+use approxtrain::mult::registry;
+use approxtrain::runtime::executor::Engine;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.opt_or("artifacts", "artifacts"))
+}
+
+fn results_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.opt_or("results", "results"))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_str() {
+        "gen-lut" => gen_lut(&args),
+        "hwmodel" => {
+            println!("{}", experiments::fig1(&results_dir(&args))?);
+            Ok(())
+        }
+        "train" => train(&args),
+        "infer" => infer(&args),
+        "serve" => serve(&args),
+        "experiment" => experiment(&args),
+        "list-artifacts" => list_artifacts(&args),
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `approxtrain help`"),
+    }
+}
+
+const HELP: &str = "\
+ApproxTrain — fast simulation of approximate FP multipliers for DNN \
+training and inference (Rust + JAX + Pallas reproduction).
+
+commands:
+  gen-lut --mult <name> [--out file.lut]   generate a mantissa-product LUT
+  hwmodel                                  Fig 1 resource-efficiency model
+  train --model <m> --mode <tf|custom|lut|direct:afm32> --mult <name>
+        [--epochs N] [--lr F] [--samples N] [--seed N] [--ckpt out.ckpt]
+  infer --model <m> --mode <...> --mult <name> [--samples N] [--ckpt f]
+  serve --model <m> [--requests N] [--batch-wait-ms N]
+  experiment <fig1|fig6|fig10|table3|table4|table5|table6|fig11|fig12|all>
+        [--quick]
+  list-artifacts
+common options: --artifacts DIR (default artifacts) --results DIR
+";
+
+fn gen_lut(args: &Args) -> Result<()> {
+    let name = args.opt("mult").context("--mult required")?;
+    let model = registry::by_name(name).with_context(|| format!("unknown multiplier {name}"))?;
+    let lut = MantissaLut::generate(model.as_ref());
+    let out = args.opt_or("out", &format!("{name}.lut"));
+    lut.save(Path::new(&out)).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "wrote {out}: m={} entries={} payload={} bytes",
+        lut.m,
+        lut.len(),
+        lut.payload_bytes()
+    );
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let mut engine = Engine::new(&dir)?;
+    let cfg = TrainConfig {
+        model: args.opt_or("model", "lenet5"),
+        mode: args.opt_or("mode", "lut"),
+        mult: args.opt_or("mult", "afm16"),
+        epochs: args.opt_usize("epochs", 3),
+        lr: args.opt_f32("lr", 0.05),
+        seed: args.opt_u64("seed", 42),
+        eval_every: args.opt_usize("eval-every", 1),
+    };
+    let samples = args.opt_usize("samples", 512);
+    let ds = experiments::dataset_for(experiments::dataset_of(&cfg.model), samples, cfg.seed);
+    let (train_ds, test_ds) = ds.split(samples / 4);
+    println!(
+        "training {} mode={} mult={} epochs={} on {} ({} train / {} test)",
+        cfg.model, cfg.mode, cfg.mult, cfg.epochs, train_ds.name, train_ds.n, test_ds.n
+    );
+    let mut tr = Trainer::new(&mut engine, cfg, &dir)?;
+    let log = tr.fit(&train_ds, &test_ds)?;
+    for e in &log.epochs {
+        println!(
+            "epoch {:>3}  loss {:.4}  train acc {:.2}%  test acc {:.2}%  ({:.1}s)",
+            e.epoch,
+            e.train_loss,
+            e.train_acc * 100.0,
+            e.test_acc * 100.0,
+            e.seconds
+        );
+    }
+    if let Some(path) = args.opt("ckpt") {
+        tr.checkpoint()?.save(Path::new(path))?;
+        println!("checkpoint -> {path}");
+    }
+    Ok(())
+}
+
+fn infer(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let mut engine = Engine::new(&dir)?;
+    let cfg = TrainConfig {
+        model: args.opt_or("model", "lenet5"),
+        mode: args.opt_or("mode", "lut"),
+        mult: args.opt_or("mult", "afm16"),
+        epochs: 0,
+        lr: 0.0,
+        seed: args.opt_u64("seed", 42),
+        eval_every: 1,
+    };
+    let samples = args.opt_usize("samples", 256);
+    let ds = experiments::dataset_for(experiments::dataset_of(&cfg.model), samples, cfg.seed);
+    let mut tr = Trainer::new(&mut engine, cfg, &dir)?;
+    if let Some(path) = args.opt("ckpt") {
+        tr.load_checkpoint(&approxtrain::nn::checkpoint::Checkpoint::load(Path::new(path))?)?;
+    }
+    let acc = tr.evaluate(&ds)?;
+    println!("test accuracy (untrained unless --ckpt given): {:.2}%", acc * 100.0);
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    use approxtrain::coordinator::server::with_server;
+    use approxtrain::nn::init::init_params;
+    use approxtrain::runtime::artifact::Role;
+    use approxtrain::util::json::Json;
+    use std::time::Duration;
+
+    let dir = artifacts_dir(args);
+    let mut engine = Engine::new(&dir)?;
+    let model = args.opt_or("model", "lenet300");
+    let art = engine
+        .manifest()
+        .find(&model, "fwd", "lut")
+        .context("no lut fwd artifact")?
+        .clone();
+    // pre-compile before the timed serving loop
+    engine.prepare(&art.name)?;
+    let raw = Json::parse(&std::fs::read_to_string(dir.join("manifest.json"))?)?;
+    let params = init_params(&art, 42, &raw)?;
+    let lut = MantissaLut::load(&dir.join("luts/afm16.lut")).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let x_spec = &art.inputs[art.input_indices(Role::Input)[0]];
+    let batch = x_spec.shape[0];
+    let image_elems = x_spec.elements() / batch;
+    let classes = art.outputs[0].shape[1];
+    let requests = args.opt_usize("requests", 64);
+    let wait = Duration::from_millis(args.opt_u64("batch-wait-ms", 5));
+    let ds = experiments::dataset_for(experiments::dataset_of(&model), requests, 7);
+    let name = art.name.clone();
+    let stats = with_server(
+        engine,
+        &name,
+        params,
+        Some(lut.entries),
+        batch,
+        image_elems,
+        classes,
+        wait,
+        |client| {
+            std::thread::scope(|s| {
+                for t in 0..4 {
+                    let client = client.clone();
+                    let ds = &ds;
+                    s.spawn(move || {
+                        for i in (t..requests).step_by(4) {
+                            let _ = client.infer(ds.image(i).to_vec());
+                        }
+                    });
+                }
+            });
+        },
+    )?;
+    let lats = &stats.latencies_s;
+    println!(
+        "served {} requests in {} batches | p50 {:.1} ms p99 {:.1} ms | mean fill {:.1}/{batch}",
+        stats.requests,
+        stats.batches,
+        approxtrain::util::stats::percentile(lats, 50.0) * 1e3,
+        approxtrain::util::stats::percentile(lats, 99.0) * 1e3,
+        stats.fills.iter().sum::<usize>() as f64 / stats.batches.max(1) as f64,
+    );
+    Ok(())
+}
+
+fn experiment(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let quick = args.has_flag("quick");
+    let dir = artifacts_dir(args);
+    let results = results_dir(args);
+    let mut out = String::new();
+    if which == "fig1" || which == "all" {
+        out.push_str(&experiments::fig1(&results)?);
+    }
+    if which != "fig1" {
+        let mut engine = Engine::new(&dir)?;
+        match which {
+            "fig6" => out.push_str(&experiments::fig6(
+                &mut engine,
+                &results,
+                args.opt_usize("size", 256),
+                quick,
+            )?),
+            "fig10" | "table3" => {
+                out.push_str(&experiments::fig10_table3(&mut engine, &dir, &results, quick)?)
+            }
+            "table4" => out.push_str(&experiments::table4(&mut engine, &dir, &results, quick)?),
+            "table5" => {
+                out.push_str(&experiments::table5_6(&mut engine, &dir, &results, true, quick)?)
+            }
+            "table6" => {
+                out.push_str(&experiments::table5_6(&mut engine, &dir, &results, false, quick)?)
+            }
+            "fig11" => out.push_str(&experiments::fig11(&mut engine, &dir, &results, quick)?),
+            "fig12" => out.push_str(&experiments::fig12(&mut engine, &results, quick)?),
+            "all" => {
+                out.push_str(&experiments::fig6(&mut engine, &results, 256, quick)?);
+                out.push_str(&experiments::fig10_table3(&mut engine, &dir, &results, quick)?);
+                out.push_str(&experiments::table4(&mut engine, &dir, &results, quick)?);
+                out.push_str(&experiments::fig11(&mut engine, &dir, &results, quick)?);
+                out.push_str(&experiments::table5_6(&mut engine, &dir, &results, true, quick)?);
+                out.push_str(&experiments::table5_6(&mut engine, &dir, &results, false, quick)?);
+                out.push_str(&experiments::fig12(&mut engine, &results, quick)?);
+            }
+            other => bail!("unknown experiment {other:?}"),
+        }
+    }
+    println!("{out}");
+    approxtrain::coordinator::report::write_result(&results, "report.md", &out)?;
+    Ok(())
+}
+
+fn list_artifacts(args: &Args) -> Result<()> {
+    let engine = Engine::new(&artifacts_dir(args))?;
+    for art in engine.manifest().artifacts.values() {
+        println!(
+            "{:<28} model={:<10} phase={:<6} mode={:<13} inputs={} outputs={}",
+            art.name,
+            art.model,
+            art.phase,
+            art.mode,
+            art.inputs.len(),
+            art.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! IEEE-754 single-precision bit plumbing shared by every multiplier model,
+//! the LUT generator (Algorithm 1) and AMSim (Algorithm 2).
+//!
+//! Field layout of an FP32 word: `sign(1) | exponent(8, bias 127) |
+//! mantissa(23)`. All "m-bit" formats in the paper keep sign=1 and
+//! exponent=8 and vary only the mantissa width (§VII *Datatype*), so a
+//! narrower format is an FP32 whose mantissa has only the top `m` bits set.
+
+pub const SIGN_MASK: u32 = 0x8000_0000;
+pub const EXP_MASK: u32 = 0x7F80_0000;
+pub const MANT_MASK: u32 = 0x007F_FFFF;
+pub const EXP_BIAS: i32 = 127;
+pub const MANT_BITS: u32 = 23;
+
+/// Decomposed FP32.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FpParts {
+    /// 0 or 1
+    pub sign: u32,
+    /// biased exponent, 0..=255
+    pub exp: u32,
+    /// 23-bit mantissa field
+    pub mant: u32,
+}
+
+pub fn decompose(v: f32) -> FpParts {
+    let bits = v.to_bits();
+    FpParts {
+        sign: bits >> 31,
+        exp: (bits & EXP_MASK) >> MANT_BITS,
+        mant: bits & MANT_MASK,
+    }
+}
+
+pub fn compose(p: FpParts) -> f32 {
+    debug_assert!(p.sign <= 1 && p.exp <= 255 && p.mant <= MANT_MASK);
+    f32::from_bits((p.sign << 31) | (p.exp << MANT_BITS) | p.mant)
+}
+
+/// Round-to-nearest-even quantization of the mantissa to `m` bits,
+/// propagating a rounding carry into the exponent. Zeros/inf/NaN pass
+/// through; subnormals flush to zero (AMSim has no subnormal support —
+/// paper Alg. 2 line 13 flushes them too).
+pub fn quantize_mantissa(v: f32, m: u32) -> f32 {
+    assert!((1..=MANT_BITS).contains(&m));
+    if v == 0.0 || !v.is_finite() {
+        return v;
+    }
+    let p = decompose(v);
+    if p.exp == 0 {
+        return if p.sign == 1 { -0.0 } else { 0.0 };
+    }
+    if m == MANT_BITS {
+        return v;
+    }
+    let drop = MANT_BITS - m;
+    let half = 1u32 << (drop - 1);
+    let low = p.mant & ((1 << drop) - 1);
+    let mut kept = p.mant >> drop;
+    // round-to-nearest, ties-to-even
+    if low > half || (low == half && kept & 1 == 1) {
+        kept += 1;
+    }
+    let mut exp = p.exp;
+    if kept >> m != 0 {
+        // mantissa overflowed to 2.0 — renormalize
+        kept = 0;
+        exp += 1;
+        if exp >= 255 {
+            return if p.sign == 1 { f32::NEG_INFINITY } else { f32::INFINITY };
+        }
+    }
+    compose(FpParts { sign: p.sign, exp, mant: kept << drop })
+}
+
+/// True if `v` has no significant bits below the top `m` mantissa bits
+/// (i.e. it is exactly representable in the (1,8,m) format).
+pub fn representable_in(v: f32, m: u32) -> bool {
+    let p = decompose(v);
+    v == 0.0 || (p.exp > 0 && p.mant & ((1 << (MANT_BITS - m)) - 1) == 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+
+    #[test]
+    fn decompose_compose_roundtrip() {
+        for v in [0.0f32, 1.0, -1.0, 1.5, -3.375, 1e-20, 1e20, f32::MIN_POSITIVE] {
+            assert_eq!(compose(decompose(v)).to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn known_fields() {
+        let p = decompose(1.0);
+        assert_eq!((p.sign, p.exp, p.mant), (0, 127, 0));
+        let p = decompose(-1.5);
+        assert_eq!((p.sign, p.exp, p.mant), (1, 127, 1 << 22));
+    }
+
+    #[test]
+    fn quantize_bf16_examples() {
+        // 1 + 2^-7 is representable with m=7; 1 + 2^-8 rounds to 1.0 (even)
+        assert_eq!(quantize_mantissa(1.0 + 2f32.powi(-7), 7), 1.0 + 2f32.powi(-7));
+        assert_eq!(quantize_mantissa(1.0 + 2f32.powi(-8), 7), 1.0);
+        // tie rounds to even: 1 + 3*2^-8 -> 1 + 2*2^-7? (3/256 -> tie at 1.5/128 -> 2/128)
+        assert_eq!(quantize_mantissa(1.0 + 3.0 * 2f32.powi(-8), 7), 1.0 + 2.0 * 2f32.powi(-7));
+    }
+
+    #[test]
+    fn quantize_carry_into_exponent() {
+        // just below 2.0 rounds up to 2.0
+        let v = 2.0 - 2f32.powi(-9);
+        assert_eq!(quantize_mantissa(v, 7), 2.0);
+    }
+
+    #[test]
+    fn quantize_flushes_subnormals() {
+        assert_eq!(quantize_mantissa(f32::MIN_POSITIVE / 2.0, 7), 0.0);
+    }
+
+    #[test]
+    fn quantize_idempotent_property() {
+        for_all(
+            "quantize-idempotent",
+            11,
+            5000,
+            |r| (r.finite_f32(), 1 + r.below(23)),
+            |&(v, m)| {
+                let q = quantize_mantissa(v, m);
+                let qq = quantize_mantissa(q, m);
+                if q.to_bits() == qq.to_bits() || (q == 0.0 && qq == 0.0) {
+                    Ok(())
+                } else {
+                    Err(format!("quantize({v}, {m}) = {q} re-quantized to {qq}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn quantized_is_representable() {
+        for_all(
+            "quantized-representable",
+            12,
+            5000,
+            |r| (r.finite_f32(), 1 + r.below(23)),
+            |&(v, m)| {
+                let q = quantize_mantissa(v, m);
+                if !q.is_finite() || representable_in(q, m) {
+                    Ok(())
+                } else {
+                    Err(format!("quantize({v}, {m}) = {q} not representable"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! Approximate-multiplier functional models.
+//!
+//! The paper's flow (Fig. 5) takes a *C/C++ functional model* of an
+//! approximate FP multiplier from the designer and tabulates its mantissa
+//! products (Algorithm 1). In this reproduction the functional models are
+//! Rust implementations of the [`ApproxMul`] trait (with bit-exact Python
+//! mirrors in `python/compile/mults.py` used for LUT cross-checks); the
+//! contract is identical: a black-box `fn(f32, f32) -> f32` whose sign and
+//! exponent behave like an exact FP multiplier and whose mantissa may be
+//! approximated.
+//!
+//! Implemented designs (see DESIGN.md §Substitutions #5):
+//!
+//! | name | paper reference | mantissa strategy |
+//! |---|---|---|
+//! | `fp32`, `fpN` | IEEE 754 / bfloat16 | exact multiply, RNE to N bits |
+//! | `bfloat16` | [34] | alias of `fp7` |
+//! | `afm16`/`afm32` | Saadat et al. [29] | addition-based (log-domain) product + minimal-bias correction |
+//! | `mit16` | Mitchell [25] | plain log-domain addition, truncated |
+//! | `realm16` | Saadat et al. [30] | log-domain addition + piecewise-linear error correction |
+//! | `trunc16` | DRUM-style | exact product, round-toward-zero |
+//! | `comp16` | Kim [18] | log-domain addition + single compensation term |
+pub mod fpbits;
+pub mod models;
+pub mod registry;
+
+pub use fpbits::{compose, decompose, quantize_mantissa, FpParts};
+
+/// A black-box approximate FP multiplier functional model.
+///
+/// Inputs and output are FP32 bit patterns; a model with `mantissa_bits() ==
+/// m < 23` treats only the top `m` mantissa bits of each operand as
+/// significant (the LUT generator only ever presents such operands).
+pub trait ApproxMul: Send + Sync {
+    /// Multiplier identifier, e.g. `"afm16"`. Used by the CLI, the LUT file
+    /// header and the experiment configs.
+    fn name(&self) -> &str;
+
+    /// Number of significant mantissa bits `m` (1..=23).
+    fn mantissa_bits(&self) -> u32;
+
+    /// The functional model: approximate product of `a` and `b`.
+    fn mul(&self, a: f32, b: f32) -> f32;
+
+    /// Approximate the *mantissa product* of two operands given as 23-bit
+    /// mantissa fields (top `m` bits significant). Returns `(carry,
+    /// mantissa23)`: `carry` is set when the true product of `(1+x)(1+y)`
+    /// reaches 2 (i.e. the exponent must be incremented) and `mantissa23` is
+    /// the normalized 23-bit mantissa field of the result.
+    ///
+    /// This is the piece Algorithm 1 extracts by probing `mul`; models
+    /// implement `mul` in terms of it via [`models::mul_via_mantissa`].
+    fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::registry;
+    use crate::util::rng::Pcg32;
+
+    /// Every registered multiplier must keep sign and exponent semantics of
+    /// an exact FP multiplier: correct sign, zero handling, and a mantissa
+    /// relative error bounded by the design class (< 12.5% — Mitchell's
+    /// worst case is ~11.1%).
+    #[test]
+    fn all_models_are_plausible_multipliers() {
+        let mut rng = Pcg32::seeded(99);
+        for name in registry::names() {
+            let m = registry::by_name(name).unwrap();
+            assert_eq!(m.name(), *name);
+            for _ in 0..2000 {
+                let a = quant(rng.range(-100.0, 100.0), m.mantissa_bits());
+                let b = quant(rng.range(-100.0, 100.0), m.mantissa_bits());
+                let c = m.mul(a, b);
+                let exact = a * b;
+                if exact == 0.0 {
+                    assert_eq!(c, 0.0, "{name}: 0 handling");
+                    continue;
+                }
+                assert_eq!(
+                    c.is_sign_negative(),
+                    exact.is_sign_negative() || c == 0.0 && exact.abs() < 1e-30,
+                    "{name}: sign of {a}*{b}"
+                );
+                let re = ((c - exact) / exact).abs();
+                assert!(re < 0.125, "{name}: rel err {re} for {a}*{b} -> {c} (exact {exact})");
+            }
+        }
+    }
+
+    fn quant(v: f32, m: u32) -> f32 {
+        crate::mult::quantize_mantissa(v, m)
+    }
+}

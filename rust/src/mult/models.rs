@@ -1,0 +1,435 @@
+//! The multiplier functional models themselves.
+//!
+//! Every model implements [`ApproxMul::mantissa_product`] over 23-bit
+//! mantissa fields and gets its full `mul` via [`mul_via_mantissa`], which
+//! performs the sign/exponent computation that all paper-relevant designs
+//! keep exact (§V observation (1): mantissa multiplication is 91%/93% of
+//! the area/power of an FP multiplier, so that is what gets approximated).
+
+use super::fpbits::{compose, decompose, FpParts, EXP_BIAS, MANT_BITS, MANT_MASK};
+use super::ApproxMul;
+
+/// Shared sign/exponent scaffolding: decompose, delegate the mantissa
+/// product to the model, re-assemble with flush-to-zero and overflow-to-inf
+/// semantics (matching AMSim, paper Alg. 2 lines 12-19, with the exp+carry
+/// overflow check applied *after* the carry — see `amsim` module docs).
+pub fn mul_via_mantissa(model: &dyn ApproxMul, a: f32, b: f32) -> f32 {
+    if a.is_nan() || b.is_nan() || a.is_infinite() || b.is_infinite() {
+        return a * b; // delegate IEEE special cases to hardware semantics
+    }
+    let pa = decompose(a);
+    let pb = decompose(b);
+    let sign = pa.sign ^ pb.sign;
+    if pa.exp == 0 || pb.exp == 0 {
+        // zero or subnormal operand -> (signed) zero, AMSim line 13
+        return compose(FpParts { sign, exp: 0, mant: 0 });
+    }
+    let (carry, mant) = model.mantissa_product(pa.mant, pb.mant);
+    // flush-to-zero checked on the *pre-carry* exponent (paper Alg. 2
+    // lines 12-13), overflow on the post-carry exponent
+    let exp = pa.exp as i32 + pb.exp as i32 - EXP_BIAS;
+    if exp <= 0 {
+        return compose(FpParts { sign, exp: 0, mant: 0 });
+    }
+    let exp = exp + carry as i32;
+    if exp >= 255 {
+        return compose(FpParts { sign, exp: 255, mant: 0 }); // +-inf
+    }
+    compose(FpParts { sign, exp: exp as u32, mant })
+}
+
+/// Truncate a 23-bit mantissa field to its top `m` bits.
+#[inline]
+fn trunc_m(mant: u32, m: u32) -> u32 {
+    mant & (MANT_MASK << (MANT_BITS - m)) & MANT_MASK
+}
+
+// ---------------------------------------------------------------------------
+// Exact multiplier at m-bit mantissa (FP32 when m=23, bfloat16 when m=7)
+// ---------------------------------------------------------------------------
+
+/// IEEE-style exact multiplier with round-to-nearest-even at `m` mantissa
+/// bits. The FP32 / bfloat16 baselines of the paper (Table II).
+pub struct ExactFp {
+    name: String,
+    m: u32,
+    /// round-to-nearest-even if true, round-toward-zero if false
+    /// (round-toward-zero gives the DRUM-style `trunc16` design)
+    rne: bool,
+}
+
+impl ExactFp {
+    pub fn new(name: &str, m: u32, rne: bool) -> Self {
+        assert!((1..=MANT_BITS).contains(&m));
+        ExactFp { name: name.to_string(), m, rne }
+    }
+}
+
+impl ApproxMul for ExactFp {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn mantissa_bits(&self) -> u32 {
+        self.m
+    }
+    fn mul(&self, a: f32, b: f32) -> f32 {
+        mul_via_mantissa(self, a, b)
+    }
+
+    fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32) {
+        let ma = trunc_m(ma, self.m);
+        let mb = trunc_m(mb, self.m);
+        // significands in [2^23, 2^24)
+        let sa = (1u64 << MANT_BITS) | ma as u64;
+        let sb = (1u64 << MANT_BITS) | mb as u64;
+        let p = sa * sb; // in [2^46, 2^48)
+        let carry = (p >> 47) as u32; // product >= 2.0 ?
+        // normalized significand in [2^46, 2^47): fraction field is low 46 bits
+        let s = if carry == 1 { p >> 1 } else { p };
+        let frac46 = s & ((1u64 << 46) - 1);
+        // keep top m bits of the 46-bit fraction
+        let drop = 46 - self.m;
+        let mut kept = (frac46 >> drop) as u32;
+        if self.rne {
+            let half = 1u64 << (drop - 1);
+            let low = frac46 & ((1u64 << drop) - 1);
+            if low > half || (low == half && kept & 1 == 1) {
+                kept += 1;
+            }
+        }
+        let mut carry = carry;
+        if kept >> self.m != 0 {
+            // rounding overflowed the mantissa: renormalize.
+            // (cannot cascade: (2-ulp)^2 < 4, see fpbits tests)
+            kept = 0;
+            carry += 1;
+            debug_assert!(carry <= 1, "double carry in exact mantissa product");
+        }
+        (carry, (kept << (MANT_BITS - self.m)) & MANT_MASK)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mitchell's log multiplier (MIT16, [25])
+// ---------------------------------------------------------------------------
+
+/// Mitchell's logarithm-based multiplier: `log2(1+x) ~= x`, so the mantissa
+/// product is a single addition. Worst-case relative error ~ -11.1%.
+pub struct Mitchell {
+    name: String,
+    m: u32,
+}
+
+impl Mitchell {
+    pub fn new(name: &str, m: u32) -> Self {
+        assert!((1..=MANT_BITS).contains(&m));
+        Mitchell { name: name.to_string(), m }
+    }
+}
+
+impl ApproxMul for Mitchell {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn mantissa_bits(&self) -> u32 {
+        self.m
+    }
+    fn mul(&self, a: f32, b: f32) -> f32 {
+        mul_via_mantissa(self, a, b)
+    }
+
+    fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32) {
+        let s = trunc_m(ma, self.m) + trunc_m(mb, self.m); // x + y, 24 bits
+        if s >= 1 << MANT_BITS {
+            // x+y >= 1: product ~= 2 * (1 + (x+y-1))  (log-domain renorm)
+            (1, trunc_m(s - (1 << MANT_BITS), self.m))
+        } else {
+            (0, trunc_m(s, self.m))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AFM — minimally-biased approximate FP multiplier (AFM16/AFM32, [29])
+// ---------------------------------------------------------------------------
+
+/// Minimally-biased approximate multiplier in the style of Saadat et
+/// al. [29]: the mantissa product `(1+x)(1+y) = 1 + x + y + x*y` keeps the
+/// cheap `x + y` part exact and approximates the expensive `x*y` partial
+/// products with a narrow `k x k`-bit multiplier over the operands' top
+/// bits, plus a constant-shift bias-compensation term `(x + y) >> (k+1)`
+/// that cancels the expected value of the dropped partial products
+/// (`E[x*y_low + x_low*y] = (x+y) * 2^-(k+1)` for uniform low bits) —
+/// making the design *minimally biased*.
+///
+/// The published RTL is not available; this functional model reproduces the
+/// documented design class and error profile (near-zero mean error, MRED
+/// ~1% for k=4). See DESIGN.md §Substitutions #5.
+pub struct Afm {
+    name: String,
+    m: u32,
+    k: u32,
+}
+
+impl Afm {
+    pub fn new(name: &str, m: u32, k: u32) -> Self {
+        assert!((1..=MANT_BITS).contains(&m) && k <= m);
+        Afm { name: name.to_string(), m, k }
+    }
+}
+
+impl ApproxMul for Afm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn mantissa_bits(&self) -> u32 {
+        self.m
+    }
+    fn mul(&self, a: f32, b: f32) -> f32 {
+        mul_via_mantissa(self, a, b)
+    }
+
+    fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32) {
+        let ma = trunc_m(ma, self.m) as u64;
+        let mb = trunc_m(mb, self.m) as u64;
+        // top-k-bit partial product of x*y (a k x k hardware multiplier)
+        let ha = ma >> (MANT_BITS - self.k) << (MANT_BITS - self.k);
+        let hb = mb >> (MANT_BITS - self.k) << (MANT_BITS - self.k);
+        let xy = (ha * hb) >> MANT_BITS;
+        // bias compensation: expected value of the dropped partial products
+        let comp = (ma + mb) >> (self.k + 1);
+        let t = ma + mb + xy + comp; // x + y + x*y  (approx), < 3 * 2^23
+        if t >= 1 << MANT_BITS {
+            // product >= 2: mantissa (v - 2) / 2  (true product renorm)
+            let frac = (t - (1 << MANT_BITS)) >> 1;
+            (1, trunc_m(frac.min(MANT_MASK as u64) as u32, self.m))
+        } else {
+            (0, trunc_m(t as u32, self.m))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// REALM — reduced-error approximate log multiplier (REALM16, [30])
+// ---------------------------------------------------------------------------
+
+/// Piecewise log-domain correction constants, 8 segments, midpoint values
+/// of `log2(1+x) - x` scaled by 2^23. Identical constants are hard-coded in
+/// `python/compile/mults.py`; bit-exactness between the two is tested via
+/// the LUT golden files.
+pub const REALM_LOG_CORR: [i64; 8] =
+    [209403, 506903, 669557, 721940, 682465, 565287, 381522, 140059];
+/// Midpoint values of `2^f - 1 - f` (the antilog correction), times 2^23.
+pub const REALM_ANTILOG_CORR: [i64; 8] =
+    [-152893, -408621, -592590, -698305, -718684, -646004, -471841, -187011];
+
+/// REALM-style reduced-error log multiplier: Mitchell's single-addition
+/// core plus piecewise-constant correction of both the log approximation
+/// (per operand) and the antilog approximation (on the result), with 8
+/// segments indexed by the top-3 mantissa bits.
+pub struct Realm {
+    name: String,
+    m: u32,
+}
+
+impl Realm {
+    pub fn new(name: &str, m: u32) -> Self {
+        assert!((3..=MANT_BITS).contains(&m));
+        Realm { name: name.to_string(), m }
+    }
+}
+
+impl ApproxMul for Realm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn mantissa_bits(&self) -> u32 {
+        self.m
+    }
+    fn mul(&self, a: f32, b: f32) -> f32 {
+        mul_via_mantissa(self, a, b)
+    }
+
+    fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32) {
+        let ma = trunc_m(ma, self.m);
+        let mb = trunc_m(mb, self.m);
+        let seg = |m: u32| (m >> (MANT_BITS - 3)) as usize;
+        // corrected log-domain sum: x + y + c(x) + c(y) ~= log2((1+x)(1+y))
+        let mut s = ma as i64 + mb as i64 + REALM_LOG_CORR[seg(ma)] + REALM_LOG_CORR[seg(mb)];
+        let carry = if s >= 1 << MANT_BITS { 1 } else { 0 };
+        if carry == 1 {
+            s -= 1 << MANT_BITS;
+        }
+        // antilog: mantissa = f + d(f), d <= 0
+        let f = s.clamp(0, MANT_MASK as i64) as u32;
+        let g = (f as i64 + REALM_ANTILOG_CORR[seg(f)]).clamp(0, MANT_MASK as i64) as u32;
+        (carry, trunc_m(g, self.m))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// COMP — bitwise-AND compensated log multiplier (stand-in for Kim [18])
+// ---------------------------------------------------------------------------
+
+/// Compensated design: Mitchell's `1 + x + y` core plus a zero-cost
+/// compensation of the dropped `x*y` term by the bitwise AND of the
+/// operands' mantissas (a single gate row). Stand-in for the low-cost
+/// compensated bfloat16 multiplier of Kim [18].
+pub struct AndCompensated {
+    name: String,
+    m: u32,
+}
+
+impl AndCompensated {
+    pub fn new(name: &str, m: u32) -> Self {
+        AndCompensated { name: name.to_string(), m }
+    }
+}
+
+impl ApproxMul for AndCompensated {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn mantissa_bits(&self) -> u32 {
+        self.m
+    }
+    fn mul(&self, a: f32, b: f32) -> f32 {
+        mul_via_mantissa(self, a, b)
+    }
+
+    fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32) {
+        let ma = trunc_m(ma, self.m) as u64;
+        let mb = trunc_m(mb, self.m) as u64;
+        let t = ma + mb + (ma & mb); // 1 + x + y + (x AND y)
+        if t >= 1 << MANT_BITS {
+            let frac = (t - (1 << MANT_BITS)) >> 1;
+            (1, trunc_m(frac.min(MANT_MASK as u64) as u32, self.m))
+        } else {
+            (0, trunc_m(t as u32, self.m))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mult::fpbits::quantize_mantissa;
+    use crate::util::rng::Pcg32;
+    use crate::util::stats::relative_error_stats;
+
+    #[test]
+    fn fp32_is_exact() {
+        let fp32 = ExactFp::new("fp32", 23, true);
+        let mut rng = Pcg32::seeded(5);
+        for _ in 0..5000 {
+            let a = rng.range(-1e10, 1e10);
+            let b = rng.range(-1e3, 1e3);
+            assert_eq!(fp32.mul(a, b).to_bits(), (a * b).to_bits(), "{a} * {b}");
+        }
+    }
+
+    #[test]
+    fn bfloat16_matches_quantized_product() {
+        let bf16 = ExactFp::new("bfloat16", 7, true);
+        let mut rng = Pcg32::seeded(6);
+        for _ in 0..5000 {
+            let a = quantize_mantissa(rng.range(-100.0, 100.0), 7);
+            let b = quantize_mantissa(rng.range(-100.0, 100.0), 7);
+            let got = bf16.mul(a, b);
+            let want = quantize_mantissa(a * b, 7);
+            assert_eq!(got.to_bits(), want.to_bits(), "{a} * {b}: got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn zero_and_sign_handling() {
+        for m in [
+            &ExactFp::new("fp32", 23, true) as &dyn ApproxMul,
+            &Mitchell::new("mit16", 7),
+            &Afm::new("afm16", 7, 4),
+            &Realm::new("realm16", 7),
+            &AndCompensated::new("comp16", 7),
+        ] {
+            assert_eq!(m.mul(0.0, 3.5), 0.0);
+            assert_eq!(m.mul(-2.0, 0.0), -0.0);
+            assert!(m.mul(-2.0, 3.0) < 0.0, "{}", m.name());
+            assert!(m.mul(-2.0, -3.0) > 0.0, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        let afm = Afm::new("afm16", 7, 4);
+        assert_eq!(afm.mul(1e30, 1e30), f32::INFINITY);
+        assert_eq!(afm.mul(-1e30, 1e30), f32::NEG_INFINITY);
+        assert_eq!(afm.mul(1e-30, 1e-30), 0.0);
+    }
+
+    /// Error-profile ordering the paper's Fig 6 designs rely on:
+    /// AFM and REALM both reduce Mitchell's error; AFM is near-unbiased.
+    #[test]
+    fn error_profiles_ordered() {
+        let mut rng = Pcg32::seeded(7);
+        let mit = Mitchell::new("mit16", 7);
+        let afm = Afm::new("afm16", 7, 4);
+        let realm = Realm::new("realm16", 7);
+        let mut exact = Vec::new();
+        let mut vm = Vec::new();
+        let mut va = Vec::new();
+        let mut vr = Vec::new();
+        for _ in 0..20000 {
+            let a = quantize_mantissa(rng.range(1.0, 2.0), 7);
+            let b = quantize_mantissa(rng.range(1.0, 2.0), 7);
+            exact.push((a as f64) * (b as f64));
+            vm.push(mit.mul(a, b) as f64);
+            va.push(afm.mul(a, b) as f64);
+            vr.push(realm.mul(a, b) as f64);
+        }
+        let sm = relative_error_stats(&exact, &vm);
+        let sa = relative_error_stats(&exact, &va);
+        let sr = relative_error_stats(&exact, &vr);
+        assert!(sa.mred < sm.mred, "AFM mred {} !< Mitchell {}", sa.mred, sm.mred);
+        assert!(sr.mred < sm.mred, "REALM mred {} !< Mitchell {}", sr.mred, sm.mred);
+        assert!(sa.bias.abs() < 0.01, "AFM bias {}", sa.bias);
+        assert!(sm.bias < -0.02, "Mitchell must under-estimate, bias {}", sm.bias);
+        assert!(sm.max_re < 0.12, "Mitchell max err {}", sm.max_re);
+        assert!(sa.max_re < 0.04, "AFM max err {}", sa.max_re);
+    }
+
+    /// AFM with k == m degenerates to a (slightly biased-up) near-exact
+    /// multiplier: its x*y partial product term is complete.
+    #[test]
+    fn afm_full_k_is_near_exact() {
+        let afm = Afm::new("afm_full", 7, 7);
+        let mut rng = Pcg32::seeded(8);
+        for _ in 0..2000 {
+            let a = quantize_mantissa(rng.range(1.0, 2.0), 7);
+            let b = quantize_mantissa(rng.range(1.0, 2.0), 7);
+            let re = ((afm.mul(a, b) - a * b) / (a * b)).abs();
+            assert!(re < 0.02, "{a}*{b}: re {re}");
+        }
+    }
+
+    #[test]
+    fn mantissa_product_invariants() {
+        // carry bit and 23-bit range for all models across the full m=7 grid
+        let models: Vec<Box<dyn ApproxMul>> = vec![
+            Box::new(ExactFp::new("bf", 7, true)),
+            Box::new(ExactFp::new("tr", 7, false)),
+            Box::new(Mitchell::new("mit", 7)),
+            Box::new(Afm::new("afm", 7, 4)),
+            Box::new(Realm::new("realm", 7)),
+            Box::new(AndCompensated::new("comp", 7)),
+        ];
+        for model in &models {
+            for k in 0..128u32 {
+                for j in 0..128u32 {
+                    let (carry, mant) = model.mantissa_product(k << 16, j << 16);
+                    assert!(carry <= 1, "{}: carry {}", model.name(), carry);
+                    assert!(mant <= MANT_MASK, "{}: mant {:#x}", model.name(), mant);
+                    assert_eq!(mant & 0xFFFF, 0, "{}: low bits set for m=7", model.name());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Name-based multiplier registry: the CLI, experiment configs and LUT file
+//! headers all refer to multipliers by these names (paper Table II plus the
+//! Fig 6 designs).
+
+use super::models::{Afm, AndCompensated, ExactFp, Mitchell, Realm};
+use super::ApproxMul;
+
+/// All registered multiplier names, in presentation order.
+pub fn names() -> &'static [&'static str] {
+    &[
+        "fp32", "bfloat16", "fp16", "afm32", "afm16", "mit16", "realm16", "trunc16", "comp16",
+    ]
+}
+
+/// Instantiate a multiplier functional model by name.
+pub fn by_name(name: &str) -> Option<Box<dyn ApproxMul>> {
+    Some(match name {
+        // exact baselines (Table II)
+        "fp32" => Box::new(ExactFp::new("fp32", 23, true)),
+        "bfloat16" => Box::new(ExactFp::new("bfloat16", 7, true)),
+        // (1,8,10): FP16-precision mantissa with FP32 exponent range, the
+        // paper's datatype convention (§VII keeps e=8 in all formats)
+        "fp16" => Box::new(ExactFp::new("fp16", 10, true)),
+        // approximate designs
+        "afm32" => Box::new(Afm::new("afm32", 23, 6)),
+        "afm16" => Box::new(Afm::new("afm16", 7, 4)),
+        "mit16" => Box::new(Mitchell::new("mit16", 7)),
+        "realm16" => Box::new(Realm::new("realm16", 7)),
+        "trunc16" => Box::new(ExactFp::new("trunc16", 7, false)),
+        "comp16" => Box::new(AndCompensated::new("comp16", 7)),
+        _ => return None,
+    })
+}
+
+/// Whether a multiplier's mantissa product can be tabulated (paper §V-B:
+/// AMSim supports m in 1..=12; wider mantissas use direct simulation).
+pub fn lut_able(name: &str) -> bool {
+    by_name(name).map(|m| m.mantissa_bits() <= 12).unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_name_instantiates() {
+        for name in names() {
+            let m = by_name(name).expect(name);
+            assert_eq!(m.name(), *name);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn lut_ability_follows_mantissa_width() {
+        assert!(lut_able("afm16"));
+        assert!(lut_able("bfloat16"));
+        assert!(!lut_able("afm32"));
+        assert!(!lut_able("fp32"));
+        assert!(!lut_able("nope"));
+    }
+}

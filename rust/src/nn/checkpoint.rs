@@ -1,0 +1,158 @@
+//! Checkpoints: named f32 tensors in a simple binary container (magic +
+//! count + per-tensor name/shape/payload + crc). Used for the cross-format
+//! experiment (Table IV: train with one multiplier, evaluate with another)
+//! and the pruning flow (Fig 11: load a pre-trained model, prune, retrain).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::lut::format::crc32;
+
+pub const MAGIC: &[u8; 8] = b"ATCKPT\x01\0";
+
+/// An ordered set of named tensors.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn insert(&mut self, name: &str, shape: &[usize], data: Vec<f32>) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.tensors.insert(name.to_string(), (shape.to_vec(), data));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&(Vec<usize>, Vec<f32>)> {
+        self.tensors.get(name)
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        body.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, (shape, data)) in &self.tensors {
+            let nb = name.as_bytes();
+            body.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            body.extend_from_slice(nb);
+            body.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+            for &d in shape {
+                body.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            body.extend_from_slice(&(data.len() as u64).to_le_bytes());
+            for &v in data {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let mut out = Vec::with_capacity(body.len() + 16);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&crc32(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<Checkpoint> {
+        if data.len() < 12 || &data[0..8] != MAGIC {
+            bail!("not a checkpoint file");
+        }
+        let want_crc = u32::from_le_bytes(data[8..12].try_into().unwrap());
+        let body = &data[12..];
+        if crc32(body) != want_crc {
+            bail!("checkpoint payload corrupt");
+        }
+        let mut pos = 0usize;
+        let rd_u32 = |pos: &mut usize| -> Result<u32> {
+            if *pos + 4 > body.len() {
+                bail!("truncated checkpoint");
+            }
+            let v = u32::from_le_bytes(body[*pos..*pos + 4].try_into().unwrap());
+            *pos += 4;
+            Ok(v)
+        };
+        let rd_u64 = |pos: &mut usize| -> Result<u64> {
+            if *pos + 8 > body.len() {
+                bail!("truncated checkpoint");
+            }
+            let v = u64::from_le_bytes(body[*pos..*pos + 8].try_into().unwrap());
+            *pos += 8;
+            Ok(v)
+        };
+        let count = rd_u32(&mut pos)?;
+        let mut ckpt = Checkpoint::default();
+        for _ in 0..count {
+            let nlen = rd_u32(&mut pos)? as usize;
+            let name = std::str::from_utf8(&body[pos..pos + nlen])
+                .context("bad tensor name")?
+                .to_string();
+            pos += nlen;
+            let rank = rd_u32(&mut pos)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(rd_u64(&mut pos)? as usize);
+            }
+            let n = rd_u64(&mut pos)? as usize;
+            if pos + 4 * n > body.len() {
+                bail!("truncated tensor {name}");
+            }
+            let data: Vec<f32> = body[pos..pos + 4 * n]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            pos += 4 * n;
+            ckpt.tensors.insert(name, (shape, data));
+        }
+        Ok(ckpt)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::File::create(path)?.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut data = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?
+            .read_to_end(&mut data)?;
+        Self::from_bytes(&data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut c = Checkpoint::default();
+        c.insert("fc1/w", &[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        c.insert("fc1/b", &[3], vec![0.1, 0.2, 0.3]);
+        let back = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.get("fc1/w").unwrap().0, vec![2, 3]);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut c = Checkpoint::default();
+        c.insert("w", &[2], vec![1.0, 2.0]);
+        let mut bytes = c.to_bytes();
+        let n = bytes.len();
+        bytes[n - 2] ^= 0xFF;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+        assert!(Checkpoint::from_bytes(b"junk").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut c = Checkpoint::default();
+        c.insert("x", &[1], vec![42.0]);
+        let path = std::env::temp_dir().join("approxtrain_ckpt_test/a.ckpt");
+        c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), c);
+    }
+}

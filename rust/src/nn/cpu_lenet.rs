@@ -1,0 +1,231 @@
+//! Pure-Rust LeNet executors — the ATxC ("CPU direct simulation") system of
+//! Tables V/VI. Forward and full backward with every multiply routed
+//! through a [`MulKernel`]; used by the CPU-path benchmarks and as an
+//! end-to-end oracle against the compiled artifacts.
+
+use crate::kernels::MulKernel;
+use crate::layers::activations::{relu, relu_backward};
+use crate::layers::softmax::cross_entropy_with_grad;
+use crate::layers::{amconv2d, amdense};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// LeNet-300-100 parameters.
+pub struct Lenet300 {
+    pub w1: Tensor,
+    pub b1: Tensor,
+    pub w2: Tensor,
+    pub b2: Tensor,
+    pub w3: Tensor,
+    pub b3: Tensor,
+}
+
+impl Lenet300 {
+    pub fn init(n_in: usize, classes: usize, seed: u64) -> Lenet300 {
+        let he = |shape: &[usize], fan_in: usize, stream: u64| {
+            let mut rng = Pcg32::new(seed, stream);
+            let std = (2.0 / fan_in as f32).sqrt();
+            let n: usize = shape.iter().product();
+            Tensor::from_vec(shape, (0..n).map(|_| std * rng.normal()).collect())
+        };
+        Lenet300 {
+            w1: he(&[n_in, 300], n_in, 1),
+            b1: Tensor::zeros(&[300]),
+            w2: he(&[300, 100], 300, 2),
+            b2: Tensor::zeros(&[100]),
+            w3: he(&[100, classes], 100, 3),
+            b3: Tensor::zeros(&[classes]),
+        }
+    }
+
+    /// Forward pass; `x` is `[batch, n_in]`.
+    pub fn forward(&self, mul: &MulKernel, x: &Tensor) -> Tensor {
+        let h1 = relu(&amdense::forward(mul, x, &self.w1, Some(&self.b1)));
+        let h2 = relu(&amdense::forward(mul, &h1, &self.w2, Some(&self.b2)));
+        amdense::forward(mul, &h2, &self.w3, Some(&self.b3))
+    }
+
+    /// One SGD training step; returns (loss, accuracy).
+    pub fn train_step(
+        &mut self,
+        mul: &MulKernel,
+        x: &Tensor,
+        labels: &[u32],
+        lr: f32,
+    ) -> (f32, f32) {
+        // forward, keeping pre-activations for relu backward
+        let z1 = amdense::forward(mul, x, &self.w1, Some(&self.b1));
+        let h1 = relu(&z1);
+        let z2 = amdense::forward(mul, &h1, &self.w2, Some(&self.b2));
+        let h2 = relu(&z2);
+        let logits = amdense::forward(mul, &h2, &self.w3, Some(&self.b3));
+        let (loss, acc, dlogits) = cross_entropy_with_grad(&logits, labels);
+        // backward
+        let dw3 = amdense::weight_grad(mul, &h2, &dlogits);
+        let db3 = amdense::bias_grad(&dlogits);
+        let dh2 = relu_backward(&amdense::input_grad(mul, &dlogits, &self.w3), &z2);
+        let dw2 = amdense::weight_grad(mul, &h1, &dh2);
+        let db2 = amdense::bias_grad(&dh2);
+        let dh1 = relu_backward(&amdense::input_grad(mul, &dh2, &self.w2), &z1);
+        let dw1 = amdense::weight_grad(mul, x, &dh1);
+        let db1 = amdense::bias_grad(&dh1);
+        // plain SGD (the CPU path benchmarks per-batch cost, not curves)
+        sgd(&mut self.w3, &dw3, lr);
+        sgd(&mut self.b3, &db3, lr);
+        sgd(&mut self.w2, &dw2, lr);
+        sgd(&mut self.b2, &db2, lr);
+        sgd(&mut self.w1, &dw1, lr);
+        sgd(&mut self.b1, &db1, lr);
+        (loss, acc)
+    }
+}
+
+/// LeNet-5 parameters (28x28x1 input).
+pub struct Lenet5 {
+    pub c1: Tensor, // [5,5,1,6]
+    pub c2: Tensor, // [5,5,6,16]
+    pub w1: Tensor, // [400,120]
+    pub b1: Tensor,
+    pub w2: Tensor, // [120,84]
+    pub b2: Tensor,
+    pub w3: Tensor, // [84,10]
+    pub b3: Tensor,
+}
+
+impl Lenet5 {
+    pub fn init(seed: u64) -> Lenet5 {
+        let he = |shape: &[usize], fan_in: usize, stream: u64| {
+            let mut rng = Pcg32::new(seed, stream);
+            let std = (2.0 / fan_in as f32).sqrt();
+            let n: usize = shape.iter().product();
+            Tensor::from_vec(shape, (0..n).map(|_| std * rng.normal()).collect())
+        };
+        Lenet5 {
+            c1: he(&[5, 5, 1, 6], 25, 1),
+            c2: he(&[5, 5, 6, 16], 150, 2),
+            w1: he(&[400, 120], 400, 3),
+            b1: Tensor::zeros(&[120]),
+            w2: he(&[120, 84], 120, 4),
+            b2: Tensor::zeros(&[84]),
+            w3: he(&[84, 10], 84, 5),
+            b3: Tensor::zeros(&[10]),
+        }
+    }
+
+    /// Forward; `x` is `[batch, 28, 28, 1]`.
+    pub fn forward(&self, mul: &MulKernel, x: &Tensor) -> Tensor {
+        use crate::kernels::pool::maxpool2x2;
+        let a1 = relu(&amconv2d::forward(mul, x, &self.c1, 1, 2));
+        let (p1, _) = maxpool2x2(&a1.data, x.shape[0], 28, 28, 6);
+        let p1 = Tensor::from_vec(&[x.shape[0], 14, 14, 6], p1);
+        let a2 = relu(&amconv2d::forward(mul, &p1, &self.c2, 1, 0));
+        let (p2, _) = maxpool2x2(&a2.data, x.shape[0], 10, 10, 16);
+        let p2 = Tensor::from_vec(&[x.shape[0], 400], p2);
+        let h1 = relu(&amdense::forward(mul, &p2, &self.w1, Some(&self.b1)));
+        let h2 = relu(&amdense::forward(mul, &h1, &self.w2, Some(&self.b2)));
+        amdense::forward(mul, &h2, &self.w3, Some(&self.b3))
+    }
+
+    /// One SGD step (full backward through convs and pools).
+    pub fn train_step(
+        &mut self,
+        mul: &MulKernel,
+        x: &Tensor,
+        labels: &[u32],
+        lr: f32,
+    ) -> (f32, f32) {
+        use crate::kernels::pool::{maxpool2x2, maxpool2x2_backward};
+        let batch = x.shape[0];
+        // forward (cache everything)
+        let z1 = amconv2d::forward(mul, x, &self.c1, 1, 2);
+        let a1 = relu(&z1);
+        let (p1d, arg1) = maxpool2x2(&a1.data, batch, 28, 28, 6);
+        let p1 = Tensor::from_vec(&[batch, 14, 14, 6], p1d);
+        let z2 = amconv2d::forward(mul, &p1, &self.c2, 1, 0);
+        let a2 = relu(&z2);
+        let (p2d, arg2) = maxpool2x2(&a2.data, batch, 10, 10, 16);
+        let flat = Tensor::from_vec(&[batch, 400], p2d);
+        let zf1 = amdense::forward(mul, &flat, &self.w1, Some(&self.b1));
+        let h1 = relu(&zf1);
+        let zf2 = amdense::forward(mul, &h1, &self.w2, Some(&self.b2));
+        let h2 = relu(&zf2);
+        let logits = amdense::forward(mul, &h2, &self.w3, Some(&self.b3));
+        let (loss, acc, dlogits) = cross_entropy_with_grad(&logits, labels);
+        // dense backward
+        let dw3 = amdense::weight_grad(mul, &h2, &dlogits);
+        let db3 = amdense::bias_grad(&dlogits);
+        let dh2 = relu_backward(&amdense::input_grad(mul, &dlogits, &self.w3), &zf2);
+        let dw2 = amdense::weight_grad(mul, &h1, &dh2);
+        let db2 = amdense::bias_grad(&dh2);
+        let dh1 = relu_backward(&amdense::input_grad(mul, &dh2, &self.w2), &zf1);
+        let dw1 = amdense::weight_grad(mul, &flat, &dh1);
+        let db1 = amdense::bias_grad(&dh1);
+        let dflat = amdense::input_grad(mul, &dh1, &self.w1);
+        // conv2 backward through pool2
+        let da2 = maxpool2x2_backward(&dflat.data, &arg2, batch * 10 * 10 * 16);
+        let dz2 = relu_backward(&Tensor::from_vec(&[batch, 10, 10, 16], da2), &z2);
+        let dc2 = amconv2d::weight_grad(mul, &p1, &dz2, &self.c2.shape, 1, 0);
+        let dp1 = amconv2d::input_grad(mul, &dz2, &self.c2, &p1.shape, 1, 0);
+        // conv1 backward through pool1
+        let da1 = maxpool2x2_backward(&dp1.data, &arg1, batch * 28 * 28 * 6);
+        let dz1 = relu_backward(&Tensor::from_vec(&[batch, 28, 28, 6], da1), &z1);
+        let dc1 = amconv2d::weight_grad(mul, x, &dz1, &self.c1.shape, 1, 2);
+        // updates
+        sgd(&mut self.c1, &dc1, lr);
+        sgd(&mut self.c2, &dc2, lr);
+        sgd(&mut self.w1, &dw1, lr);
+        sgd(&mut self.b1, &db1, lr);
+        sgd(&mut self.w2, &dw2, lr);
+        sgd(&mut self.b2, &db2, lr);
+        sgd(&mut self.w3, &dw3, lr);
+        sgd(&mut self.b3, &db3, lr);
+        (loss, acc)
+    }
+}
+
+fn sgd(p: &mut Tensor, g: &Tensor, lr: f32) {
+    for (pv, gv) in p.data.iter_mut().zip(&g.data) {
+        *pv -= lr * gv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{mnist_like, SynthSpec};
+
+    #[test]
+    fn lenet300_learns_one_batch() {
+        let ds = mnist_like(&SynthSpec { n: 32, ..SynthSpec::mnist_like_default() });
+        let x = Tensor::from_vec(&[32, 784], ds.images.clone());
+        let mut net = Lenet300::init(784, 10, 7);
+        let mul = MulKernel::Native;
+        let (l0, _) = net.train_step(&mul, &x, &ds.labels, 0.05);
+        let mut last = l0;
+        for _ in 0..8 {
+            let (l, _) = net.train_step(&mul, &x, &ds.labels, 0.05);
+            last = l;
+        }
+        assert!(last < l0 * 0.7, "loss {l0} -> {last}");
+    }
+
+    #[test]
+    fn lenet5_learns_one_batch_with_approx_mult() {
+        use crate::amsim::AmSim;
+        use crate::lut::MantissaLut;
+        use crate::mult::registry;
+        let ds = mnist_like(&SynthSpec { n: 8, ..SynthSpec::mnist_like_default() });
+        let x = Tensor::from_vec(&[8, 28, 28, 1], ds.images.clone());
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let mul = MulKernel::Lut(AmSim::new(&lut));
+        let mut net = Lenet5::init(7);
+        let (l0, _) = net.train_step(&mul, &x, &ds.labels, 0.05);
+        let mut last = l0;
+        for _ in 0..6 {
+            let (l, _) = net.train_step(&mul, &x, &ds.labels, 0.05);
+            last = l;
+        }
+        assert!(last < l0, "approx loss did not decrease: {l0} -> {last}");
+    }
+}

@@ -1,0 +1,108 @@
+//! Parameter initialization driven by the artifact manifest.
+//!
+//! `aot.py` exports each parameter's init kind (`he_normal`/`zeros`/`ones`)
+//! and fan-in; the coordinator initializes deterministically from a seed so
+//! every multiplier configuration trains from bit-identical weights (the
+//! paper's same-random-seed methodology, §VIII-A).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::{Artifact, Role};
+use crate::runtime::executor::Value;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Initialize all `param` inputs of an artifact. Returns values in the
+/// artifact's positional param order.
+pub fn init_params(art: &Artifact, seed: u64, raw_manifest: &Json) -> Result<Vec<Value>> {
+    // init metadata lives in the manifest json (role specs don't carry it),
+    // so re-read the artifact's input entries
+    let arts = raw_manifest
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("bad manifest"))?;
+    let entry = arts
+        .iter()
+        .find(|a| a.get("name").and_then(Json::as_str) == Some(&art.name))
+        .ok_or_else(|| anyhow::anyhow!("artifact {} missing from raw manifest", art.name))?;
+    let inputs = entry.get("inputs").and_then(Json::as_arr).unwrap();
+
+    let mut out = Vec::new();
+    // one independent stream per parameter so ordering changes don't shift
+    // other parameters' values
+    for (pi, idx) in art.input_indices(Role::Param).into_iter().enumerate() {
+        let spec = &art.inputs[idx];
+        let meta = &inputs[idx];
+        let init = meta.get("init").and_then(Json::as_str).unwrap_or("zeros");
+        let fan_in = meta.get("fan_in").and_then(Json::as_usize).unwrap_or(0);
+        let n = spec.elements();
+        let mut rng = Pcg32::new(seed, 0x1111 + pi as u64);
+        let data = match init {
+            "he_normal" => {
+                if fan_in == 0 {
+                    bail!("{}: he_normal without fan_in", spec.name);
+                }
+                let std = (2.0 / fan_in as f32).sqrt();
+                (0..n).map(|_| std * rng.normal()).collect()
+            }
+            "zeros" => vec![0.0; n],
+            "ones" => vec![1.0; n],
+            other => bail!("{}: unknown init {other:?}", spec.name),
+        };
+        out.push(Value::F32(data));
+    }
+    Ok(out)
+}
+
+/// Zero velocity buffers matching an artifact's `velocity` inputs.
+pub fn init_velocities(art: &Artifact) -> Vec<Value> {
+    art.input_indices(Role::Velocity)
+        .into_iter()
+        .map(|idx| Value::F32(vec![0.0; art.inputs[idx].elements()]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+    use std::path::Path;
+
+    fn manifest_json() -> &'static str {
+        r#"{"artifacts": [{"name": "m_train_lut", "file": "f", "model": "m",
+            "phase": "train", "mode": "lut",
+            "inputs": [
+              {"name": "w", "role": "param", "shape": [4, 3], "dtype": "f32",
+               "init": "he_normal", "fan_in": 4},
+              {"name": "b", "role": "param", "shape": [3], "dtype": "f32",
+               "init": "zeros"},
+              {"name": "g", "role": "param", "shape": [3], "dtype": "f32",
+               "init": "ones"},
+              {"name": "vel:w", "role": "velocity", "shape": [4, 3], "dtype": "f32"},
+              {"name": "x", "role": "input", "shape": [2, 4], "dtype": "f32"}
+            ],
+            "outputs": []}]}"#
+    }
+
+    #[test]
+    fn init_kinds_and_determinism() {
+        let m = Manifest::parse(Path::new("/tmp"), manifest_json()).unwrap();
+        let art = m.get("m_train_lut").unwrap();
+        let raw = Json::parse(manifest_json()).unwrap();
+        let p1 = init_params(art, 42, &raw).unwrap();
+        let p2 = init_params(art, 42, &raw).unwrap();
+        let p3 = init_params(art, 43, &raw).unwrap();
+        assert_eq!(p1.len(), 3);
+        assert_eq!(p1[0].as_f32().unwrap(), p2[0].as_f32().unwrap());
+        assert_ne!(p1[0].as_f32().unwrap(), p3[0].as_f32().unwrap());
+        assert!(p1[1].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        assert!(p1[2].as_f32().unwrap().iter().all(|&v| v == 1.0));
+        // he scale: std ~ sqrt(2/4)
+        let w = p1[0].as_f32().unwrap();
+        let std = (w.iter().map(|v| v * v).sum::<f32>() / w.len() as f32).sqrt();
+        assert!(std > 0.2 && std < 1.5, "std {std}");
+        let vels = init_velocities(art);
+        assert_eq!(vels.len(), 1);
+        assert_eq!(vels[0].len(), 12);
+    }
+}

@@ -1,0 +1,91 @@
+//! Training metrics: per-epoch records and CSV/console emission (the data
+//! behind the Fig 10 training curves).
+
+use std::fmt::Write as _;
+
+/// One epoch of a training run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub train_acc: f32,
+    pub test_acc: f32,
+    pub seconds: f64,
+}
+
+/// A full training curve for one (model, dataset, multiplier) cell.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub label: String,
+    pub epochs: Vec<EpochRecord>,
+}
+
+impl RunLog {
+    pub fn new(label: &str) -> RunLog {
+        RunLog { label: label.to_string(), epochs: Vec::new() }
+    }
+
+    pub fn final_test_acc(&self) -> f32 {
+        self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn best_test_acc(&self) -> f32 {
+        self.epochs.iter().map(|e| e.test_acc).fold(0.0, f32::max)
+    }
+
+    /// CSV with a `label` column so multiple runs concatenate into one file.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("label,epoch,train_loss,train_acc,test_acc,seconds\n");
+        for e in &self.epochs {
+            writeln!(
+                out,
+                "{},{},{:.6},{:.4},{:.4},{:.3}",
+                self.label, e.epoch, e.train_loss, e.train_acc, e.test_acc, e.seconds
+            )
+            .unwrap();
+        }
+        out
+    }
+}
+
+/// Compute classification accuracy from logits (row-major `[batch, classes]`).
+pub fn accuracy_from_logits(logits: &[f32], labels: &[u32], classes: usize) -> f32 {
+    assert_eq!(logits.len(), labels.len() * classes);
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == label as usize {
+            correct += 1;
+        }
+    }
+    correct as f32 / labels.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basics() {
+        let logits = [1.0, 0.0, 0.0, 9.0];
+        assert_eq!(accuracy_from_logits(&logits, &[0, 1], 2), 1.0);
+        assert_eq!(accuracy_from_logits(&logits, &[1, 0], 2), 0.0);
+    }
+
+    #[test]
+    fn runlog_csv_and_best() {
+        let mut log = RunLog::new("lenet5/afm16");
+        log.epochs.push(EpochRecord { epoch: 0, train_loss: 2.0, train_acc: 0.3, test_acc: 0.4, seconds: 1.0 });
+        log.epochs.push(EpochRecord { epoch: 1, train_loss: 1.0, train_acc: 0.7, test_acc: 0.6, seconds: 1.0 });
+        assert_eq!(log.final_test_acc(), 0.6);
+        assert_eq!(log.best_test_acc(), 0.6);
+        let csv = log.to_csv();
+        assert!(csv.contains("lenet5/afm16,1,1.000000,0.7000,0.6000"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Model-side support for the coordinator: parameter initialization from
+//! manifest metadata, checkpoints, metrics, and the pure-Rust (ATxC)
+//! LeNet executors used for CPU-path benchmarks and artifact validation.
+pub mod checkpoint;
+pub mod cpu_lenet;
+pub mod cpu_resnet;
+pub mod init;
+pub mod metrics;

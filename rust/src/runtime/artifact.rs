@@ -1,0 +1,259 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the Rust coordinator (which drives
+//! training/inference purely from this metadata — no Python at runtime).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Role of an artifact input/output tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// trainable parameter (fed back between steps)
+    Param,
+    /// optimizer momentum buffer (fed back between steps)
+    Velocity,
+    /// batch images
+    Input,
+    /// batch labels (i32)
+    Label,
+    /// mantissa-product LUT (u32)
+    Lut,
+    /// scalar hyper-parameter (learning rate)
+    Hyper,
+    /// scalar metric output (loss/accuracy)
+    Metric,
+    /// logits output
+    Logits,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "param" => Role::Param,
+            "velocity" => Role::Velocity,
+            "input" => Role::Input,
+            "label" => Role::Label,
+            "lut" => Role::Lut,
+            "hyper" => Role::Hyper,
+            "metric" => Role::Metric,
+            "logits" => Role::Logits,
+            other => bail!("unknown tensor role {other:?}"),
+        })
+    }
+}
+
+/// Dtype of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+/// One named tensor in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub role: Role,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing name"))?
+            .to_string();
+        let role = Role::parse(
+            j.get("role").and_then(Json::as_str).ok_or_else(|| anyhow!("{name}: missing role"))?,
+        )?;
+        let dtype = Dtype::parse(j.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?;
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("{name}: bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name, role, shape, dtype })
+    }
+}
+
+/// One compiled artifact (an HLO-text file plus its signature).
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub phase: String,
+    pub mode: String,
+    pub mantissa_bits: u32,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl Artifact {
+    /// Indices of inputs with the given role, in positional order.
+    pub fn input_indices(&self, role: Role) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|t| t.name == name)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?;
+        let mut artifacts = BTreeMap::new();
+        for a in arts {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let art = Artifact {
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: missing file"))?
+                    .to_string(),
+                model: a.get("model").and_then(Json::as_str).unwrap_or("").to_string(),
+                phase: a.get("phase").and_then(Json::as_str).unwrap_or("").to_string(),
+                mode: a.get("mode").and_then(Json::as_str).unwrap_or("").to_string(),
+                mantissa_bits: a
+                    .get("mantissa_bits")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(7) as u32,
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+                name: name.clone(),
+            };
+            artifacts.insert(name, art);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, art: &Artifact) -> PathBuf {
+        self.dir.join(&art.file)
+    }
+
+    /// Artifacts filtered by (model, phase, mode).
+    pub fn find(&self, model: &str, phase: &str, mode: &str) -> Option<&Artifact> {
+        self.artifacts
+            .values()
+            .find(|a| a.model == model && a.phase == phase && a.mode == mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "lenet5_train_lut", "file": "lenet5_train_lut.hlo.txt",
+         "model": "lenet5", "phase": "train", "mode": "lut", "mantissa_bits": 7,
+         "inputs": [
+           {"name": "conv1/w", "role": "param", "shape": [5,5,1,6], "dtype": "f32"},
+           {"name": "vel:conv1/w", "role": "velocity", "shape": [5,5,1,6], "dtype": "f32"},
+           {"name": "x", "role": "input", "shape": [64,28,28,1], "dtype": "f32"},
+           {"name": "y", "role": "label", "shape": [64], "dtype": "i32"},
+           {"name": "lut", "role": "lut", "shape": [16384], "dtype": "u32"},
+           {"name": "lr", "role": "hyper", "shape": [], "dtype": "f32"}
+         ],
+         "outputs": [
+           {"name": "conv1/w", "role": "param", "shape": [5,5,1,6], "dtype": "f32"},
+           {"name": "vel:conv1/w", "role": "velocity", "shape": [5,5,1,6], "dtype": "f32"},
+           {"name": "loss", "role": "metric", "shape": [], "dtype": "f32"},
+           {"name": "acc", "role": "metric", "shape": [], "dtype": "f32"}
+         ]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        let a = m.get("lenet5_train_lut").unwrap();
+        assert_eq!(a.model, "lenet5");
+        assert_eq!(a.inputs.len(), 6);
+        assert_eq!(a.input_indices(Role::Param), vec![0]);
+        assert_eq!(a.input_indices(Role::Lut), vec![4]);
+        assert_eq!(a.output_index("loss"), Some(2));
+        assert_eq!(a.inputs[4].dtype, Dtype::U32);
+        assert_eq!(a.inputs[2].elements(), 64 * 28 * 28);
+        assert!(m.find("lenet5", "train", "lut").is_some());
+        assert!(m.find("lenet5", "train", "native").is_none());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"artifacts":[{"file":"x"}]}"#).is_err());
+        let bad_role = SAMPLE.replace("\"param\"", "\"banana\"");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad_role).is_err());
+    }
+}

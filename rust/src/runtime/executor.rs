@@ -1,0 +1,147 @@
+//! Execution engine: compiles artifacts on demand, caches executables, and
+//! runs them with named buffers. This is the only place where the L3
+//! coordinator touches PJRT.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{Artifact, Dtype, Manifest};
+use super::Runtime;
+
+/// Host-side tensor value matching a [`TensorSpec`].
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Value {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(v) => Ok(v),
+            _ => bail!("value is not f32"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::I32(v) => v.len(),
+            Value::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got {} elements", v.len());
+        }
+        Ok(v[0])
+    }
+}
+
+/// Compiles and caches executables; executes with host values.
+pub struct Engine {
+    runtime: Runtime,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let runtime = Runtime::cpu()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Engine { runtime, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let art = self.manifest.get(name)?.clone();
+        let exe = self
+            .runtime
+            .compile_file(&self.manifest.hlo_path(&art))
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `name` with positional values; validates count, length and
+    /// dtype against the manifest, returns outputs in manifest order.
+    pub fn run(&mut self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.prepare(name)?;
+        let art = self.manifest.get(name)?.clone();
+        validate_inputs(&art, inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&art.inputs)
+            .map(|(v, spec)| {
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                Ok(match v {
+                    Value::F32(data) => xla::Literal::vec1(data).reshape(&dims)?,
+                    Value::I32(data) => xla::Literal::vec1(data).reshape(&dims)?,
+                    Value::U32(data) => xla::Literal::vec1(data).reshape(&dims)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.cache.get(name).expect("prepared above");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        // aot.py lowers with return_tuple=True
+        let parts = result.to_tuple().with_context(|| format!("untupling result of {name}"))?;
+        if parts.len() != art.outputs.len() {
+            bail!("{name}: {} outputs, manifest says {}", parts.len(), art.outputs.len());
+        }
+        parts
+            .into_iter()
+            .zip(&art.outputs)
+            .map(|(lit, spec)| {
+                Ok(match spec.dtype {
+                    Dtype::F32 => Value::F32(lit.to_vec::<f32>()?),
+                    Dtype::I32 => Value::I32(lit.to_vec::<i32>()?),
+                    Dtype::U32 => Value::U32(lit.to_vec::<u32>()?),
+                })
+            })
+            .collect()
+    }
+}
+
+fn validate_inputs(art: &Artifact, inputs: &[Value]) -> Result<()> {
+    if inputs.len() != art.inputs.len() {
+        bail!("{}: got {} inputs, manifest says {}", art.name, inputs.len(), art.inputs.len());
+    }
+    for (v, spec) in inputs.iter().zip(&art.inputs) {
+        if v.len() != spec.elements() {
+            bail!(
+                "{}: input {} has {} elements, expected {} {:?}",
+                art.name,
+                spec.name,
+                v.len(),
+                spec.elements(),
+                spec.shape
+            );
+        }
+        let ok = matches!(
+            (v, spec.dtype),
+            (Value::F32(_), Dtype::F32) | (Value::I32(_), Dtype::I32) | (Value::U32(_), Dtype::U32)
+        );
+        if !ok {
+            bail!("{}: input {} dtype mismatch ({:?})", art.name, spec.name, spec.dtype);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! PJRT runtime — loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! Interchange is **HLO text**, not serialized `HloModuleProto`: jax >= 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see `/opt/xla-example/README.md`).
+pub mod artifact;
+pub mod executor;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client wrapper. One per process; executables are compiled from
+/// HLO text files and cached by the [`executor::Engine`].
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this environment; on a real
+    /// TPU deployment this would be the TPU plugin and the same artifacts,
+    /// minus interpret-mode lowering, would run on hardware).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text file into an executable.
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// Convert an f32 slice + shape to an [`xla::Literal`].
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Convert a u32 slice to a rank-1 literal (the LUT operand).
+pub fn literal_u32(data: &[u32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Convert an i32 slice + shape to a literal (labels).
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}

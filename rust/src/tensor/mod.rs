@@ -1,0 +1,123 @@
+//! Minimal dense f32 tensor used by the CPU kernel/layer substrate (the
+//! ATxC path of the paper's Tables V/VI and the numeric oracle for the
+//! compiled artifacts).
+//!
+//! Layout is row-major over an arbitrary-rank shape; images use NHWC
+//! (batch, height, width, channels), matching the L2 JAX models.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Reshape without copying; total size must match.
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.len(), shape.iter().product::<usize>(), "reshape size mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 4-D accessor (NHWC).
+    #[inline]
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 4);
+        let (sh, sw, sc) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * sh + h) * sw + w) * sc + c]
+    }
+
+    /// 2-D accessor.
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// Maximum absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Apply `f` elementwise in place.
+    pub fn map_inplace<F: Fn(f32) -> f32>(&mut self, f: F) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_strides() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn accessors() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.at2(0, 1), 2.0);
+        assert_eq!(t.at2(1, 0), 3.0);
+        let t4 = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t4.at4(0, 1, 0, 0), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape size mismatch")]
+    fn reshape_checks_size() {
+        Tensor::zeros(&[2, 3]).reshape(&[7]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![1.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

@@ -1,0 +1,46 @@
+//! Small self-contained utilities: deterministic RNG, a minimal JSON
+//! parser/emitter (no external deps are available offline), statistics,
+//! timing, and a scoped thread-pool helper.
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threads;
+pub mod timer;
+
+/// Round `v` up to the next multiple of `m` (m > 0).
+pub fn round_up(v: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    v.div_ceil(m) * m
+}
+
+/// Human-readable duration, paper-table style ("3 ms", "23 s").
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.2} s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} us", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_works() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn fmt_duration_picks_unit() {
+        assert_eq!(fmt_duration(2.0), "2.00 s");
+        assert_eq!(fmt_duration(0.002), "2.00 ms");
+        assert_eq!(fmt_duration(0.000002), "2.00 us");
+    }
+}

@@ -1,0 +1,44 @@
+//! Tiny property-testing helper (no `proptest` offline): run a predicate on
+//! many seeded-random cases; on failure report the seed + case index so the
+//! exact input can be replayed.
+
+use super::rng::Pcg32;
+
+/// Run `cases` random trials. `gen` draws an input from the RNG, `check`
+/// returns `Err(description)` on violation. Panics with a replayable
+/// message on the first failure.
+pub fn for_all<T: std::fmt::Debug, G, C>(name: &str, seed: u64, cases: usize, mut gen: G, check: C)
+where
+    G: FnMut(&mut Pcg32) -> T,
+    C: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Pcg32::new(seed, 0xF00D);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!("property '{name}' failed (seed={seed}, case={i}): {msg}\ninput: {input:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        for_all("add-commutes", 1, 200, |r| (r.finite_f32(), r.finite_f32()), |(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn reports_failures() {
+        for_all("always-fails", 2, 10, |r| r.next_u32(), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,173 @@
+//! Deterministic PRNG used everywhere seeds matter: dataset synthesis,
+//! weight initialization, shuffling, property tests.
+//!
+//! The paper trains every multiplier variant from the *same random seed* so
+//! curves are comparable (§VIII-A); a fully deterministic, dependency-free
+//! generator is therefore part of the reproduction contract.
+
+/// PCG32 (O'Neill 2014), the `pcg_setseq_64_xsh_rr_32` member.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Seed with a stream id; distinct `(seed, stream)` pairs give
+    /// independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Seed with stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire rejection).
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(bound as u64);
+            let l = m as u32;
+            if l >= bound || l >= (bound.wrapping_neg() % bound) {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * (u1 as f64).ln()).sqrt();
+            let th = 2.0 * std::f64::consts::PI * u2 as f64;
+            return (r * th.cos()) as f32;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random *finite, normal-range* f32 with full sign/exponent/mantissa
+    /// coverage — used by multiplier property tests.
+    pub fn finite_f32(&mut self) -> f32 {
+        loop {
+            let bits = self.next_u32();
+            let v = f32::from_bits(bits);
+            if v.is_finite() && (v == 0.0 || v.abs() >= f32::MIN_POSITIVE) {
+                return v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg32::new(42, 54);
+        let mut b = Pcg32::new(42, 54);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg32::new(42, 0);
+        let mut b = Pcg32::new(42, 1);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg32::seeded(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut r = Pcg32::seeded(1);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.uniform() as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(2);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn finite_f32_is_finite() {
+        let mut r = Pcg32::seeded(4);
+        for _ in 0..10_000 {
+            assert!(r.finite_f32().is_finite());
+        }
+    }
+}

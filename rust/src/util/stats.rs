@@ -1,0 +1,125 @@
+//! Statistics helpers used by the benchmark harness and experiment reports
+//! (the paper reports geometric means of speed ratios, §IX).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Geometric mean; panics on non-positive values.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty(), "geomean of empty slice");
+    let log_sum: f64 = xs
+        .iter()
+        .map(|&x| {
+            assert!(x > 0.0, "geomean requires positive values, got {x}");
+            x.ln()
+        })
+        .sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100]. Sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Error metrics between a reference and an approximation — used to
+/// characterize multiplier models (mean relative error distance, bias).
+pub struct ErrStats {
+    /// mean relative error distance (MRED)
+    pub mred: f64,
+    /// mean (signed) relative error — the "bias" the AFM design minimizes
+    pub bias: f64,
+    /// max relative error
+    pub max_re: f64,
+}
+
+pub fn relative_error_stats(exact: &[f64], approx: &[f64]) -> ErrStats {
+    assert_eq!(exact.len(), approx.len());
+    let mut sum_abs = 0.0;
+    let mut sum_signed = 0.0;
+    let mut max_re: f64 = 0.0;
+    let mut n = 0usize;
+    for (&e, &a) in exact.iter().zip(approx) {
+        if e == 0.0 {
+            continue;
+        }
+        let re = (a - e) / e;
+        sum_abs += re.abs();
+        sum_signed += re;
+        max_re = max_re.max(re.abs());
+        n += 1;
+    }
+    let n = n.max(1) as f64;
+    ErrStats { mred: sum_abs / n, bias: sum_signed / n, max_re }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_geomean() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geomean_rejects_nonpositive() {
+        geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 25.0), 2.0);
+    }
+
+    #[test]
+    fn stddev_basics() {
+        assert_eq!(stddev(&[2.0, 2.0, 2.0]), 0.0);
+        assert!((stddev(&[1.0, 3.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn err_stats() {
+        let exact = [1.0, 2.0, 4.0];
+        let approx = [1.1, 1.9, 4.0];
+        let s = relative_error_stats(&exact, &approx);
+        assert!(s.mred > 0.0 && s.mred < 0.1);
+        assert!(s.max_re <= 0.1 + 1e-12);
+    }
+}

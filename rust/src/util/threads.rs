@@ -1,0 +1,99 @@
+//! Data-parallel helpers over `std::thread::scope`.
+//!
+//! The paper's CUDA kernels get their throughput from fine-grained GPU
+//! parallelism; on the CPU substrate the analogous lever is chunked
+//! multi-threading. (The benchmark machine for this reproduction exposes a
+//! single core, so `available_threads()` frequently returns 1 and these
+//! helpers degrade to plain loops — the code path is still exercised by
+//! tests with explicit thread counts.)
+
+/// Number of worker threads to use by default.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_index, start, end)` over `n` items split into `threads`
+/// contiguous ranges. `f` must be `Sync` since it is shared across threads.
+pub fn parallel_ranges<F: Fn(usize, usize, usize) + Sync>(n: usize, threads: usize, f: F) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, 0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(t, start, end));
+        }
+    });
+}
+
+/// Map `f` over disjoint mutable row-chunks of `out` (each of `row_len`
+/// elements). This is the shape of every kernel loop: each output row is
+/// written by exactly one thread.
+pub fn parallel_rows<F>(out: &mut [f32], row_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && out.len() % row_len == 0);
+    let rows = out.len() / row_len;
+    let threads = threads.max(1).min(rows.max(1));
+    if threads <= 1 {
+        for (r, chunk) in out.chunks_mut(row_len).enumerate() {
+            f(r, chunk);
+        }
+        return;
+    }
+    let rows_per = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, block) in out.chunks_mut(rows_per * row_len).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (i, chunk) in block.chunks_mut(row_len).enumerate() {
+                    f(t * rows_per + i, chunk);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn ranges_cover_everything_once() {
+        for threads in [1, 2, 3, 7] {
+            let hits = AtomicUsize::new(0);
+            parallel_ranges(100, threads, |_, s, e| {
+                hits.fetch_add(e - s, Ordering::SeqCst);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), 100, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn ranges_handle_zero() {
+        parallel_ranges(0, 4, |_, s, e| assert_eq!(s, e));
+    }
+
+    #[test]
+    fn rows_write_disjoint() {
+        for threads in [1, 2, 4] {
+            let mut out = vec![0.0f32; 12];
+            parallel_rows(&mut out, 3, threads, |r, chunk| {
+                for c in chunk.iter_mut() {
+                    *c = r as f32;
+                }
+            });
+            assert_eq!(out, vec![0., 0., 0., 1., 1., 1., 2., 2., 2., 3., 3., 3.]);
+        }
+    }
+}

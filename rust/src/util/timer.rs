@@ -1,0 +1,88 @@
+//! Micro-benchmark harness. The vendored dependency set has no `criterion`,
+//! so the paper-table benches (`rust/benches/paper_benches.rs`) use this:
+//! warmup, repeated timed runs, median/mean/stddev reporting.
+
+use std::time::Instant;
+
+use super::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// seconds per iteration
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+    pub fn stddev_s(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+/// Adaptive version: keeps a minimum number of iterations but stops once
+/// `budget_s` of measured time has been spent, so cheap and expensive cases
+/// can share one harness.
+pub fn bench_budget<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    budget_s: f64,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let mut spent = 0.0;
+    while samples.len() < min_iters || (spent < budget_s && samples.len() < 1000) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        samples.push(dt);
+        spent += dt;
+        if spent >= budget_s && samples.len() >= min_iters {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u32;
+        let r = bench("t", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.median_s() >= 0.0);
+    }
+
+    #[test]
+    fn bench_budget_respects_min() {
+        let r = bench_budget("t", 0, 3, 0.0, || {});
+        assert!(r.samples.len() >= 3);
+    }
+}

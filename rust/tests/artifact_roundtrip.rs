@@ -1,0 +1,110 @@
+//! Integration: the compiled artifacts (Pallas/XLA path, "GPU" analog) must
+//! produce the same numbers as the pure-Rust CPU kernels — the paper's own
+//! validation methodology (§VI footnote 2).
+//!
+//! These tests are skipped (pass trivially) when `artifacts/` has not been
+//! built; `make test` builds it first.
+
+use std::path::{Path, PathBuf};
+
+use approxtrain::amsim::AmSim;
+use approxtrain::kernels::gemm::gemm;
+use approxtrain::kernels::MulKernel;
+use approxtrain::lut::MantissaLut;
+use approxtrain::mult::fpbits::quantize_mantissa;
+use approxtrain::mult::registry;
+use approxtrain::runtime::executor::{Engine, Value};
+use approxtrain::util::rng::Pcg32;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn gemm_lut_artifact_matches_rust_kernels_bitwise() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let Some(art) = engine.manifest().find("gemm128", "gemm", "lut") else {
+        eprintln!("skipping: gemm128 lut artifact absent");
+        return;
+    };
+    let name = art.name.clone();
+    let n = 128usize;
+    let mut rng = Pcg32::seeded(2024);
+    let a: Vec<f32> =
+        (0..n * n).map(|_| quantize_mantissa(rng.range(-2.0, 2.0), 7)).collect();
+    let b: Vec<f32> =
+        (0..n * n).map(|_| quantize_mantissa(rng.range(-2.0, 2.0), 7)).collect();
+
+    // LUT generated in Rust from the same functional model
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+
+    let out = engine
+        .run(&name, &[Value::F32(a.clone()), Value::F32(b.clone()), Value::U32(lut.entries.clone())])
+        .unwrap();
+    let c_xla = out[0].as_f32().unwrap();
+
+    let mut c_rust = vec![0.0f32; n * n];
+    gemm(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c_rust, n, n, n);
+
+    let mut max_diff = 0.0f32;
+    for i in 0..n * n {
+        max_diff = max_diff.max((c_xla[i] - c_rust[i]).abs());
+    }
+    // identical multiplies, different accumulation order -> tiny fp drift
+    assert!(max_diff < 2e-3, "ATxG vs ATxC mismatch: {max_diff}");
+}
+
+#[test]
+fn gemm_native_artifact_matches_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    if engine.manifest().find("gemm128", "gemm", "native").is_none() {
+        return;
+    }
+    let n = 128usize;
+    let mut rng = Pcg32::seeded(7);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.range(-1.0, 1.0)).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.range(-1.0, 1.0)).collect();
+    let out = engine
+        .run("gemm128_native", &[Value::F32(a.clone()), Value::F32(b.clone())])
+        .unwrap();
+    let c = out[0].as_f32().unwrap();
+    let mut c_ref = vec![0.0f32; n * n];
+    gemm(&MulKernel::Native, &a, &b, &mut c_ref, n, n, n);
+    for i in 0..n * n {
+        assert!((c[i] - c_ref[i]).abs() < 1e-3, "idx {i}: {} vs {}", c[i], c_ref[i]);
+    }
+}
+
+#[test]
+fn lut_files_from_python_match_rust_generation() {
+    let Some(dir) = artifacts_dir() else { return };
+    let lut_dir = dir.join("luts");
+    if !lut_dir.exists() {
+        return;
+    }
+    let mut checked = 0;
+    for name in registry::names() {
+        if !registry::lut_able(name) {
+            continue;
+        }
+        let path = lut_dir.join(format!("{name}.lut"));
+        if !path.exists() {
+            continue;
+        }
+        let from_py = MantissaLut::load(&path).unwrap();
+        let model = registry::by_name(name).unwrap();
+        let from_rust = MantissaLut::generate(model.as_ref());
+        assert_eq!(from_py, from_rust, "python and rust LUTs differ for {name}");
+        checked += 1;
+    }
+    assert!(checked >= 5, "only {checked} LUT golden files checked");
+}

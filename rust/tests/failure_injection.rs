@@ -1,0 +1,107 @@
+//! Failure-injection tests: the coordinator must fail loudly and
+//! informatively on corrupt or mismatched inputs, never silently train on
+//! garbage.
+
+use std::path::{Path, PathBuf};
+
+use approxtrain::lut::MantissaLut;
+use approxtrain::mult::registry;
+use approxtrain::runtime::artifact::Manifest;
+use approxtrain::runtime::executor::{Engine, Value};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn wrong_input_count_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let err = engine.run("gemm128_native", &[Value::F32(vec![0.0; 128 * 128])]).unwrap_err();
+    assert!(err.to_string().contains("inputs"), "{err}");
+}
+
+#[test]
+fn wrong_shape_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let err = engine
+        .run("gemm128_native", &[Value::F32(vec![0.0; 10]), Value::F32(vec![0.0; 128 * 128])])
+        .unwrap_err();
+    assert!(err.to_string().contains("elements"), "{err}");
+}
+
+#[test]
+fn wrong_dtype_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let err = engine
+        .run(
+            "gemm128_native",
+            &[Value::I32(vec![0; 128 * 128]), Value::F32(vec![0.0; 128 * 128])],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("dtype"), "{err}");
+}
+
+#[test]
+fn unknown_artifact_lists_alternatives() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let err = engine.run("nonexistent", &[]).unwrap_err();
+    assert!(err.to_string().contains("not in manifest"), "{err}");
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    let tmp = std::env::temp_dir().join("approxtrain_bad_manifest");
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::write(tmp.join("manifest.json"), "{not json").unwrap();
+    assert!(Engine::new(&tmp).is_err());
+    std::fs::write(tmp.join("manifest.json"), r#"{"artifacts":[{"name":"x"}]}"#).unwrap();
+    assert!(Engine::new(&tmp).is_err());
+}
+
+#[test]
+fn corrupt_hlo_file_fails_at_compile() {
+    let Some(dir) = artifacts_dir() else { return };
+    let tmp = std::env::temp_dir().join("approxtrain_bad_hlo");
+    std::fs::create_dir_all(&tmp).unwrap();
+    // valid manifest pointing at garbage HLO
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    std::fs::write(tmp.join("manifest.json"), &manifest).unwrap();
+    let m = Manifest::load(&tmp).unwrap();
+    let art = m.artifacts.values().next().unwrap().clone();
+    std::fs::write(tmp.join(&art.file), "HloModule garbage\n\nENTRY {}").unwrap();
+    let mut engine = Engine::new(&tmp).unwrap();
+    assert!(engine.prepare(&art.name).is_err());
+}
+
+#[test]
+fn truncated_lut_file_detected() {
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    let bytes = lut.to_bytes();
+    for cut in [1, 16, bytes.len() / 2, bytes.len() - 1] {
+        assert!(MantissaLut::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+    }
+}
+
+#[test]
+fn trainer_rejects_untabulatable_multiplier() {
+    use approxtrain::coordinator::trainer::{TrainConfig, Trainer};
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let cfg = TrainConfig {
+        model: "lenet300".into(),
+        mode: "lut".into(),
+        mult: "afm32".into(), // m=23 cannot be tabulated
+        epochs: 1,
+        lr: 0.05,
+        seed: 1,
+        eval_every: 1,
+    };
+    let err = Trainer::new(&mut engine, cfg, &dir).err().expect("must fail");
+    assert!(err.to_string().contains("not tabulatable"), "{err}");
+}

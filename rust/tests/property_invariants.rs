@@ -1,0 +1,146 @@
+//! Cross-cutting property tests over the multiplier/AMSim substrate
+//! (hand-rolled `util::prop` harness; no proptest offline).
+
+use approxtrain::amsim::AmSim;
+use approxtrain::lut::MantissaLut;
+use approxtrain::mult::fpbits::quantize_mantissa;
+use approxtrain::mult::registry;
+use approxtrain::util::prop::for_all;
+
+const M7_DESIGNS: [&str; 6] = ["bfloat16", "afm16", "mit16", "realm16", "trunc16", "comp16"];
+
+/// All implemented mantissa approximations are symmetric in their
+/// operands, so the full multiply must commute (bitwise).
+#[test]
+fn multiplication_commutes() {
+    for name in M7_DESIGNS {
+        let model = registry::by_name(name).unwrap();
+        for_all(
+            &format!("commute-{name}"),
+            7,
+            5000,
+            |r| (quantize_mantissa(r.finite_f32(), 7), quantize_mantissa(r.finite_f32(), 7)),
+            |&(a, b)| {
+                let ab = model.mul(a, b);
+                let ba = model.mul(b, a);
+                if ab.to_bits() == ba.to_bits() {
+                    Ok(())
+                } else {
+                    Err(format!("{a}*{b} = {ab} but {b}*{a} = {ba}"))
+                }
+            },
+        );
+    }
+}
+
+/// Scaling an operand by a power of two only touches the exponent, which
+/// every design computes exactly: amsim(2a, b) == 2 * amsim(a, b)
+/// (whenever neither side over/underflows).
+#[test]
+fn power_of_two_scale_invariance() {
+    for name in M7_DESIGNS {
+        let model = registry::by_name(name).unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let sim = AmSim::new(&lut);
+        for_all(
+            &format!("pow2-scale-{name}"),
+            8,
+            5000,
+            |r| {
+                (
+                    quantize_mantissa(r.range(-100.0, 100.0), 7),
+                    quantize_mantissa(r.range(-100.0, 100.0), 7),
+                )
+            },
+            |&(a, b)| {
+                let base = sim.mul(a, b);
+                let scaled = sim.mul(2.0 * a, b);
+                if base == 0.0 || !base.is_finite() || !scaled.is_finite() {
+                    return Ok(()); // flush/overflow edge excluded by contract
+                }
+                if (2.0 * base).to_bits() == scaled.to_bits() {
+                    Ok(())
+                } else {
+                    Err(format!("2*({a}*{b}) = {} but (2{a})*{b} = {scaled}", 2.0 * base))
+                }
+            },
+        );
+    }
+}
+
+/// Sign algebra: amsim(-a, b) == -amsim(a, b) exactly (sign is XOR'd).
+#[test]
+fn sign_antisymmetry() {
+    for name in M7_DESIGNS {
+        let model = registry::by_name(name).unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let sim = AmSim::new(&lut);
+        for_all(
+            &format!("sign-{name}"),
+            9,
+            5000,
+            |r| (quantize_mantissa(r.finite_f32(), 7), quantize_mantissa(r.finite_f32(), 7)),
+            |&(a, b)| {
+                let pos = sim.mul(a, b);
+                let neg = sim.mul(-a, b);
+                // AMSim flushes to unsigned zero, so compare magnitudes +
+                // sign only for non-zero results
+                if pos == 0.0 && neg == 0.0 {
+                    return Ok(());
+                }
+                if (-pos).to_bits() == neg.to_bits() {
+                    Ok(())
+                } else {
+                    Err(format!("-({a}*{b}) = {} but (-{a})*{b} = {neg}", -pos))
+                }
+            },
+        );
+    }
+}
+
+/// Monotonicity on positive operands: if 0 < a1 < a2 then
+/// amsim(a1, b) <= amsim(a2, b) for fixed positive b. Holds for designs
+/// whose mantissa product is monotone in each operand — sums, truncated
+/// products, monotone corrections. `comp16` is deliberately excluded: its
+/// bitwise-AND compensation term is non-monotone (e.g. 81.5*11.8125 >
+/// 96*11.8125 under comp16), a real hazard of AND-compensated designs
+/// that this suite documents.
+#[test]
+fn monotone_in_positive_operand() {
+    for name in ["bfloat16", "afm16", "mit16", "realm16", "trunc16"] {
+        let model = registry::by_name(name).unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let sim = AmSim::new(&lut);
+        for_all(
+            &format!("monotone-{name}"),
+            10,
+            3000,
+            |r| {
+                let a1 = quantize_mantissa(r.range(0.1, 100.0), 7);
+                let a2 = quantize_mantissa(a1 * r.range(1.0, 4.0), 7);
+                let b = quantize_mantissa(r.range(0.1, 100.0), 7);
+                (a1, a2.max(a1), b)
+            },
+            |&(a1, a2, b)| {
+                let y1 = sim.mul(a1, b);
+                let y2 = sim.mul(a2, b);
+                if y1 <= y2 {
+                    Ok(())
+                } else {
+                    Err(format!("{a1}*{b} = {y1} > {a2}*{b} = {y2}"))
+                }
+            },
+        );
+    }
+}
+
+/// LUT round-trip through bytes is the identity for every design.
+#[test]
+fn lut_serialization_identity() {
+    for name in M7_DESIGNS {
+        let model = registry::by_name(name).unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let back = MantissaLut::from_bytes(&lut.to_bytes()).unwrap();
+        assert_eq!(lut, back, "{name}");
+    }
+}

@@ -1,0 +1,146 @@
+//! End-to-end training integration: the full L3 -> PJRT -> artifact path
+//! must learn, match its CPU oracle, and keep multiplier runs comparable.
+//! Skipped when `artifacts/` has not been built.
+
+use std::path::{Path, PathBuf};
+
+use approxtrain::coordinator::trainer::{TrainConfig, Trainer};
+use approxtrain::data::synth::{mnist_like, SynthSpec};
+use approxtrain::runtime::executor::Engine;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn cfg(model: &str, mode: &str, mult: &str, epochs: usize) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        mode: mode.into(),
+        mult: mult.into(),
+        epochs,
+        lr: 0.05,
+        seed: 42,
+        eval_every: 1,
+    }
+}
+
+#[test]
+fn lenet300_trains_with_approximate_multiplier() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let ds = mnist_like(&SynthSpec { n: 320, ..SynthSpec::mnist_like_default() });
+    let (train, test) = ds.split(64);
+    let mut tr = Trainer::new(&mut engine, cfg("lenet300", "lut", "afm16", 3), &dir).unwrap();
+    let log = tr.fit(&train, &test).unwrap();
+    let first = log.epochs.first().unwrap();
+    let last = log.epochs.last().unwrap();
+    assert!(
+        last.train_loss < first.train_loss * 0.7,
+        "loss did not fall: {} -> {}",
+        first.train_loss,
+        last.train_loss
+    );
+    assert!(last.test_acc > 0.5, "test acc {:.3}", last.test_acc);
+}
+
+/// The paper's core claim in miniature: approximate-multiplier training
+/// converges like exact training from the same seed (Fig 10).
+#[test]
+fn approximate_convergence_tracks_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let ds = mnist_like(&SynthSpec { n: 320, ..SynthSpec::mnist_like_default() });
+    let (train, test) = ds.split(64);
+    let mut accs = Vec::new();
+    for (mode, mult) in [("custom", "fp32"), ("lut", "afm16"), ("lut", "bfloat16")] {
+        let mut tr = Trainer::new(&mut engine, cfg("lenet300", mode, mult, 3), &dir).unwrap();
+        let log = tr.fit(&train, &test).unwrap();
+        accs.push(log.final_test_acc());
+    }
+    let (fp32, afm16, bf16) = (accs[0], accs[1], accs[2]);
+    assert!((afm16 - fp32).abs() < 0.15, "AFM16 {afm16} vs FP32 {fp32}");
+    assert!((bf16 - fp32).abs() < 0.15, "bf16 {bf16} vs FP32 {fp32}");
+}
+
+/// Checkpoint round trip through a second trainer (cross-format machinery).
+#[test]
+fn checkpoint_transfers_across_modes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let ds = mnist_like(&SynthSpec { n: 256, ..SynthSpec::mnist_like_default() });
+    let (train, test) = ds.split(64);
+    let mut tr = Trainer::new(&mut engine, cfg("lenet300", "lut", "afm16", 2), &dir).unwrap();
+    tr.fit(&train, &test).unwrap();
+    let acc_lut = tr.evaluate(&test).unwrap();
+    let ckpt = tr.checkpoint().unwrap();
+    // evaluate the same weights under the exact-multiplier artifact
+    let mut tr2 = Trainer::new(&mut engine, cfg("lenet300", "custom", "fp32", 0), &dir).unwrap();
+    tr2.load_checkpoint(&ckpt).unwrap();
+    let acc_exact = tr2.evaluate(&test).unwrap();
+    assert!(
+        (acc_lut - acc_exact).abs() < 0.1,
+        "cross-format eval diverged: {acc_lut} vs {acc_exact} (Table IV claim)"
+    );
+}
+
+/// The batching server answers every request exactly once with sane logits.
+#[test]
+fn server_round_trip() {
+    use approxtrain::coordinator::server::with_server;
+    use approxtrain::lut::MantissaLut;
+    use approxtrain::nn::init::init_params;
+    use approxtrain::runtime::artifact::Role;
+    use approxtrain::util::json::Json;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let art = engine.manifest().find("lenet300", "fwd", "lut").unwrap().clone();
+    engine.prepare(&art.name).unwrap();
+    let raw = Json::parse(&std::fs::read_to_string(dir.join("manifest.json")).unwrap()).unwrap();
+    let params = init_params(&art, 1, &raw).unwrap();
+    let lut = MantissaLut::load(&dir.join("luts/afm16.lut")).unwrap();
+    let x_spec = &art.inputs[art.input_indices(Role::Input)[0]];
+    let batch = x_spec.shape[0];
+    let image_elems = x_spec.elements() / batch;
+    let classes = art.outputs[0].shape[1];
+    let answered = AtomicUsize::new(0);
+    let n_requests = 10;
+    let stats = with_server(
+        engine,
+        &art.name.clone(),
+        params,
+        Some(lut.entries),
+        batch,
+        image_elems,
+        classes,
+        Duration::from_millis(2),
+        |client| {
+            std::thread::scope(|s| {
+                for _ in 0..2 {
+                    let client = client.clone();
+                    let answered = &answered;
+                    s.spawn(move || {
+                        for _ in 0..n_requests / 2 {
+                            let reply = client.infer(vec![0.5; image_elems]).unwrap();
+                            assert_eq!(reply.logits.len(), classes);
+                            assert!(reply.logits.iter().all(|v| v.is_finite()));
+                            answered.fetch_add(1, Ordering::SeqCst);
+                        }
+                    });
+                }
+            });
+        },
+    )
+    .unwrap();
+    assert_eq!(answered.load(Ordering::SeqCst), n_requests);
+    assert_eq!(stats.requests, n_requests);
+    assert!(stats.batches <= n_requests);
+}
