@@ -12,8 +12,8 @@
 //! ```
 
 use approxtrain::amsim::AmSim;
-use approxtrain::kernels::gemm::gemm;
-use approxtrain::kernels::MulKernel;
+use approxtrain::kernels::gemm::{gemm, gemm_auto};
+use approxtrain::kernels::{MulBackend, MulKernel};
 use approxtrain::lut::MantissaLut;
 use approxtrain::mult::fpbits::quantize_mantissa;
 use approxtrain::mult::registry;
@@ -36,21 +36,28 @@ fn main() -> anyhow::Result<()> {
         println!("  amsim({a} * {b}) = {} (exact {})", sim.mul(a, b), a * b);
     }
 
-    // 4. approximate GEMM on the CPU kernel (ATxC path)
+    // 4. approximate GEMM on the CPU kernel (ATxC path). The kernels run
+    //    on the batched MulBackend panel ops — one strategy dispatch per
+    //    packed panel, a tight LUT-gather inner loop — and gemm_auto fans
+    //    large problems out over the persistent worker pool.
     let n = 64;
     let mut rng = Pcg32::seeded(1);
     let a: Vec<f32> = (0..n * n).map(|_| quantize_mantissa(rng.range(-1.0, 1.0), 7)).collect();
     let b: Vec<f32> = (0..n * n).map(|_| quantize_mantissa(rng.range(-1.0, 1.0), 7)).collect();
     let mut c_exact = vec![0.0f32; n * n];
     let mut c_approx = vec![0.0f32; n * n];
-    gemm(&MulKernel::Native, &a, &b, &mut c_exact, n, n, n);
-    gemm(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c_approx, n, n, n);
+    gemm_auto(&MulKernel::Native, &a, &b, &mut c_exact, n, n, n);
+    gemm_auto(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c_approx, n, n, n);
     let max_err = c_exact
         .iter()
         .zip(&c_approx)
         .map(|(e, ap)| (e - ap).abs())
         .fold(0.0f32, f32::max);
     println!("CPU GEMM {n}x{n}: max |exact - approx| = {max_err:.4}");
+    // the batched panel ops are also directly usable (bit-identical to
+    // scalar sim.mul per element):
+    let d = MulKernel::Lut(AmSim::new(&lut)).dot_panel(&a[..n], &b[..n]);
+    println!("dot_panel over one row: {d:.4}");
 
     // 5. same computation through the AOT-compiled artifact (ATxG path)
     match Engine::new(std::path::Path::new("artifacts")) {

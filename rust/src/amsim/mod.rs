@@ -31,6 +31,14 @@ pub struct AmSim<'a> {
 
 impl<'a> AmSim<'a> {
     pub fn new(lut: &'a MantissaLut) -> AmSim<'a> {
+        // The panel kernels below index the table with
+        // `(amnt << m) | bmnt` where both halves are `m`-bit values, and
+        // elide the bounds check on the strength of this invariant.
+        assert_eq!(
+            lut.entries.len(),
+            1usize << (2 * lut.m),
+            "LUT size must be 2^(2m)"
+        );
         AmSim { lut: &lut.entries, m: lut.m, shift: MANT_BITS - lut.m }
     }
 
@@ -69,24 +77,121 @@ impl<'a> AmSim<'a> {
         f32::from_bits(self.mul_bits(a.to_bits(), b.to_bits()))
     }
 
-    /// Vectorized front-end: `out[i] = amsim(a[i], b[i])`.
+    /// One LUT gather with all Algorithm-2 "global variables" passed in as
+    /// locals so the panel loops keep them in registers instead of
+    /// re-reading `self` per element.
+    ///
+    /// # Safety contract (checked in [`AmSim::new`])
+    /// `lut.len() == 1 << (2 * m)` and both mantissa halves are `m`-bit,
+    /// so the index is always in bounds; the unchecked access removes the
+    /// per-multiply bounds test from the innermost loop.
+    #[inline(always)]
+    fn gather(lut: &[u32], m: u32, shift: u32, a: u32, b: u32) -> u32 {
+        let amnt = (a & MANT_MASK) >> shift;
+        let bmnt = (b & MANT_MASK) >> shift;
+        // SAFETY: amnt, bmnt < 2^m, so (amnt << m | bmnt) < 2^(2m) == lut.len().
+        let entry = unsafe { *lut.get_unchecked(((amnt << m) | bmnt) as usize) };
+        let carry = (entry >> MANT_BITS) & 1;
+        let mnt = entry & MANT_MASK;
+        let sign = (a ^ b) & SIGN_MASK;
+        let ea = (a & EXP_MASK) >> MANT_BITS;
+        let eb = (b & EXP_MASK) >> MANT_BITS;
+        let exp = ea as i32 + eb as i32 - EXP_BIAS;
+        if exp <= 0 || ea == 0 || eb == 0 {
+            return 0;
+        }
+        let exp = exp + carry as i32;
+        if exp >= 255 {
+            return sign | EXP_MASK; // +-inf
+        }
+        sign | ((exp as u32) << MANT_BITS) | mnt
+    }
+
+    /// Vectorized front-end: `out[i] = amsim(a[i], b[i])` — a tight
+    /// LUT-gather loop, bit-identical to calling [`AmSim::mul`] per
+    /// element.
     pub fn mul_slice(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
         assert!(a.len() == b.len() && a.len() == out.len());
-        for i in 0..a.len() {
-            out[i] = self.mul(a[i], b[i]);
+        let (lut, m, shift) = (self.lut, self.m, self.shift);
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = f32::from_bits(Self::gather(lut, m, shift, x.to_bits(), y.to_bits()));
         }
     }
 
     /// Multiply-accumulate over two slices with FP32 accumulation — the
     /// paper's mixed-precision rule (§VII *Datatype*: "all accumulation
     /// operations are performed in FP32").
+    ///
+    /// This is the GEMM/matvec inner loop: shift/mask hoisted into
+    /// registers, LUT gathers unrolled 4-wide so the address computations
+    /// pipeline, accumulation kept strictly sequential so the result is
+    /// bit-identical to the scalar `acc += amsim(a[i], b[i])` reference.
     pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
         assert_eq!(a.len(), b.len());
+        let (lut, m, shift) = (self.lut, self.m, self.shift);
+        let n = a.len();
         let mut acc = 0.0f32;
-        for i in 0..a.len() {
-            acc += self.mul(a[i], b[i]);
+        let mut i = 0;
+        while i + 4 <= n {
+            // the four gathers are independent (ILP); the four adds are
+            // ordered (bit-exactness)
+            let p0 = Self::gather(lut, m, shift, a[i].to_bits(), b[i].to_bits());
+            let p1 = Self::gather(lut, m, shift, a[i + 1].to_bits(), b[i + 1].to_bits());
+            let p2 = Self::gather(lut, m, shift, a[i + 2].to_bits(), b[i + 2].to_bits());
+            let p3 = Self::gather(lut, m, shift, a[i + 3].to_bits(), b[i + 3].to_bits());
+            acc += f32::from_bits(p0);
+            acc += f32::from_bits(p1);
+            acc += f32::from_bits(p2);
+            acc += f32::from_bits(p3);
+            i += 4;
+        }
+        while i < n {
+            acc += f32::from_bits(Self::gather(lut, m, shift, a[i].to_bits(), b[i].to_bits()));
+            i += 1;
         }
         acc
+    }
+
+    /// Row-FMA: `acc[j] += amsim(x, row[j])`, with `x`'s mantissa half and
+    /// exponent hoisted out of the loop (the dense weight-gradient inner
+    /// loop). Bit-identical to the per-element scalar sequence, including
+    /// the `+= 0.0` flush-adds (which normalize `-0.0` accumulators the
+    /// same way the scalar path does).
+    pub fn fma_row(&self, acc: &mut [f32], x: f32, row: &[f32]) {
+        assert_eq!(acc.len(), row.len());
+        let (lut, m, shift) = (self.lut, self.m, self.shift);
+        let xb = x.to_bits();
+        let ea = (xb & EXP_MASK) >> MANT_BITS;
+        if ea == 0 {
+            // x is zero/subnormal: every product flushes to +0.0; keep the
+            // adds so accumulator bit patterns match the scalar path
+            for a in acc.iter_mut() {
+                *a += 0.0;
+            }
+            return;
+        }
+        let xrow = (xb & MANT_MASK) >> shift << m; // pre-shifted LUT row base
+        let xsign = xb & SIGN_MASK;
+        for (a, &r) in acc.iter_mut().zip(row) {
+            let rb = r.to_bits();
+            let bmnt = (rb & MANT_MASK) >> shift;
+            // SAFETY: same invariant as `gather` (see AmSim::new).
+            let entry = unsafe { *lut.get_unchecked((xrow | bmnt) as usize) };
+            let eb = (rb & EXP_MASK) >> MANT_BITS;
+            let exp = ea as i32 + eb as i32 - EXP_BIAS;
+            let bits = if exp <= 0 || eb == 0 {
+                0
+            } else {
+                let sign = (xsign ^ rb) & SIGN_MASK;
+                let exp = exp + ((entry >> MANT_BITS) & 1) as i32;
+                if exp >= 255 {
+                    sign | EXP_MASK
+                } else {
+                    sign | ((exp as u32) << MANT_BITS) | (entry & MANT_MASK)
+                }
+            };
+            *a += f32::from_bits(bits);
+        }
     }
 
     pub fn mantissa_bits(&self) -> u32 {
@@ -185,6 +290,46 @@ mod tests {
         let got = sim.dot(&a, &b);
         let want: f32 = a.iter().sum();
         assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+    }
+
+    /// The batched panel ops (unrolled dot, hoisted-operand fma_row) must
+    /// reproduce the scalar `mul` + sequential-add reference bit for bit —
+    /// the contract the GEMM/matvec kernels rely on.
+    #[test]
+    fn panel_ops_match_scalar_bitwise() {
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let sim = AmSim::new(&lut);
+        let mk = |seed: u64, n: usize| {
+            let mut r = crate::util::rng::Pcg32::seeded(seed);
+            (0..n).map(|_| quantize_mantissa(r.range(-3.0, 3.0), 7)).collect::<Vec<f32>>()
+        };
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 64, 129] {
+            let a = mk(100 + n as u64, n);
+            let b = mk(200 + n as u64, n);
+            // dot: unrolled vs strictly scalar
+            let mut want = 0.0f32;
+            for i in 0..n {
+                want += sim.mul(a[i], b[i]);
+            }
+            assert_eq!(sim.dot(&a, &b).to_bits(), want.to_bits(), "dot n={n}");
+            // fma_row: hoisted vs scalar, including a zero multiplicand
+            for x in [1.7f32, -0.625, 0.0] {
+                let mut acc = mk(300 + n as u64, n);
+                let mut acc_ref = acc.clone();
+                sim.fma_row(&mut acc, x, &b);
+                for i in 0..n {
+                    acc_ref[i] += sim.mul(x, b[i]);
+                }
+                for i in 0..n {
+                    assert_eq!(
+                        acc[i].to_bits(),
+                        acc_ref[i].to_bits(),
+                        "fma_row x={x} n={n} idx {i}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

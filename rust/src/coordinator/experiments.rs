@@ -79,6 +79,174 @@ pub fn fig1(results_dir: &Path) -> Result<String> {
 }
 
 // ---------------------------------------------------------------------------
+// BENCH_gemm — CPU GEMM perf record: native vs direct vs LUT (à la Fig 6)
+// ---------------------------------------------------------------------------
+
+/// Benchmark the CPU GEMM kernel under the three simulation strategies and
+/// emit the `BENCH_gemm.json` perf record (the repo's bench trajectory).
+///
+/// Rows per size:
+/// * `native` — hardware `*` (the ATnG baseline);
+/// * `direct_afm16` — per-multiply functional-model calls (ATxC / "direct
+///   C simulation");
+/// * `lut_afm16` — batched AMSim LUT-gather panels (ATxG), single lane;
+/// * `lut_scalar_dispatch` — the per-element-dispatch reference
+///   ([`crate::kernels::gemm::gemm_scalar_reference`]), measuring the
+///   dispatch-amortization headroom the batched panels close;
+/// * `lut_pool` — the LUT path over the persistent worker pool's full
+///   width.
+///
+/// Before timing, the LUT path is asserted bit-identical to the scalar
+/// `AmSim::mul`-per-element reference (the paper's §VI footnote 2
+/// methodology), so the record can never report a fast-but-wrong kernel.
+///
+/// Runs without artifacts — pure CPU path. Unlike the figure experiments
+/// it never touches the PJRT engine.
+pub fn bench_gemm(
+    results_dir: &Path,
+    max_size: usize,
+    quick: bool,
+    record_root: bool,
+) -> Result<String> {
+    use crate::amsim::AmSim;
+    use crate::kernels::gemm::{gemm, gemm_scalar_reference, gemm_threaded};
+    use crate::kernels::MulKernel;
+    use crate::util::json::Json;
+    use crate::util::threads;
+
+    let budget = if quick { 0.15 } else { 1.0 };
+    let mut sizes: Vec<usize> = if quick { vec![32, 64] } else { vec![64, 128] };
+    sizes.retain(|&s| s < max_size); // max_size is a hard ceiling (CI smoke relies on it)
+    sizes.push(max_size);
+    sizes.sort_unstable();
+    sizes.dedup();
+
+    let model = registry::by_name("afm16").ok_or_else(|| anyhow!("afm16 not registered"))?;
+    let lut = MantissaLut::generate(model.as_ref());
+    let lanes = threads::global().width();
+
+    let mut table = Table::new(
+        "BENCH_gemm — CPU GEMM simulation strategies (batched panel kernels)",
+        &["size", "strategy", "time", "vs native", "vs scalar-dispatch LUT"],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    let mut headline_speedup = 0.0f64;
+    for &n in &sizes {
+        let mut rng = Pcg32::seeded(2600 + n as u64);
+        let a: Vec<f32> = (0..n * n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n * n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let mut c = vec![0.0f32; n * n];
+
+        // correctness gate: batched LUT panels == scalar AmSim::mul
+        // applied elementwise, bit for bit
+        let mut c_ref = vec![0.0f32; n * n];
+        gemm(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n);
+        gemm_scalar_reference(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c_ref, n, n, n);
+        for i in 0..n * n {
+            if c[i].to_bits() != c_ref[i].to_bits() {
+                return Err(anyhow!(
+                    "bench aborted: batched LUT GEMM diverged from scalar reference at n={n} idx {i}"
+                ));
+            }
+        }
+
+        let timed = |strategy: &str, f: &mut dyn FnMut()| -> f64 {
+            let r = bench_budget(strategy, 1, 3, budget, f);
+            r.median_s()
+        };
+        let t_native = timed("native", &mut || {
+            gemm(&MulKernel::Native, &a, &b, &mut c, n, n, n);
+        });
+        let t_direct = timed("direct_afm16", &mut || {
+            gemm(&MulKernel::Direct(model.as_ref()), &a, &b, &mut c, n, n, n);
+        });
+        let t_lut = timed("lut_afm16", &mut || {
+            gemm(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n);
+        });
+        let t_scalar = timed("lut_scalar_dispatch", &mut || {
+            gemm_scalar_reference(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n);
+        });
+        let t_pool = timed("lut_pool", &mut || {
+            gemm_threaded(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n, lanes);
+        });
+
+        for (strategy, t) in [
+            ("native", t_native),
+            ("direct_afm16", t_direct),
+            ("lut_afm16", t_lut),
+            ("lut_scalar_dispatch", t_scalar),
+            ("lut_pool", t_pool),
+        ] {
+            table.row(vec![
+                format!("{n}x{n}x{n}"),
+                strategy.into(),
+                fmt_time(t),
+                fmt_ratio(t / t_native),
+                fmt_ratio(t / t_scalar),
+            ]);
+            records.push(Json::obj(vec![
+                ("m", Json::num(n as f64)),
+                ("k", Json::num(n as f64)),
+                ("n", Json::num(n as f64)),
+                ("strategy", Json::str(strategy)),
+                ("seconds_median", Json::num(t)),
+                ("vs_native", Json::num(t / t_native)),
+            ]));
+        }
+        if n == *sizes.last().unwrap() {
+            headline_speedup = t_scalar / t_lut;
+        }
+    }
+
+    let record = Json::obj(vec![
+        ("schema", Json::str("approxtrain/bench_gemm/v1")),
+        (
+            "description",
+            Json::str(
+                "CPU GEMM time per call: native vs direct functional-model vs AMSim LUT \
+                 (paper Fig 6 configurations on the ATxC substrate)",
+            ),
+        ),
+        ("multiplier", Json::str("afm16")),
+        (
+            "provenance",
+            Json::str("measured in-process by approxtrain bench_gemm on this machine"),
+        ),
+        ("pool_lanes", Json::num(lanes as f64)),
+        ("quick", Json::Bool(quick)),
+        (
+            "sizes",
+            Json::arr(sizes.iter().map(|&s| Json::num(s as f64))),
+        ),
+        ("lut_batched_speedup_vs_scalar_dispatch", Json::num(headline_speedup)),
+        ("records", Json::Arr(records)),
+    ]);
+    let payload = record.to_string();
+    write_result(results_dir, "BENCH_gemm.json", &payload)?;
+    if record_root {
+        // the committed record lives at the repo root. CARGO_MANIFEST_DIR
+        // is exactly that for the documented `cargo run`/`cargo bench`
+        // flows regardless of invocation cwd; an installed binary on a
+        // machine without the source tree falls back to the cwd.
+        let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let root_record = if manifest_dir.is_dir() {
+            manifest_dir.join("BENCH_gemm.json")
+        } else {
+            Path::new("BENCH_gemm.json").to_path_buf()
+        };
+        std::fs::write(&root_record, &payload)
+            .map_err(|e| anyhow!("writing {}: {e}", root_record.display()))?;
+    }
+    let mut md = table.to_markdown();
+    md.push_str(&format!(
+        "Batched LUT panels vs per-element dispatch at {max}: {speed:.2}x\n\n",
+        max = sizes.last().unwrap(),
+        speed = headline_speedup
+    ));
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
 // Fig 6 — GEMM: AMSim vs direct simulation vs native
 // ---------------------------------------------------------------------------
 

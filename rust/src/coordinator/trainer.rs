@@ -55,6 +55,11 @@ pub struct Trainer<'e> {
 
 impl<'e> Trainer<'e> {
     pub fn new(engine: &'e mut Engine, cfg: TrainConfig, artifacts_dir: &Path) -> Result<Trainer<'e>> {
+        // Spawn the persistent kernel worker pool up front: every GEMM of
+        // the CPU fallback/oracle path (and the experiment harness's ATxC
+        // timings) reuses it, so no per-step thread spawning ever lands in
+        // a timed training step.
+        let _pool_width = crate::util::threads::global().width();
         let train_art = engine
             .manifest()
             .find(&cfg.model, "train", &cfg.mode)

@@ -3,11 +3,22 @@
 //! The CUDA version fetches 16x16 tiles of both operands into on-chip
 //! shared memory; the CPU analog is cache blocking: pack a `BK x BN` panel
 //! of `B` once per tile row and walk `A` rows through it, accumulating in
-//! FP32. The multiply itself is pluggable ([`MulKernel`]) so the same
-//! kernel body serves the native / direct-simulation / AMSim comparisons of
-//! Fig 6.
+//! FP32. The multiply itself is pluggable ([`MulKernel`]) and the inner
+//! loop runs on the batched [`MulBackend`] panel ops, so strategy dispatch
+//! is paid once per packed panel column instead of once per multiply —
+//! the AMSim path becomes a tight LUT-gather loop, the native path a
+//! plain FMA loop. [`gemm_scalar_reference`] preserves the old
+//! per-element-dispatch implementation as the bench baseline and the
+//! bit-exactness oracle.
+//!
+//! Threading goes through the persistent pool in [`crate::util::threads`]
+//! (row-blocks over lanes, the coarse-grained parallelism axis of the
+//! CUDA grid); per-call `thread::scope` spawning is gone from the hot
+//! path. Results are bit-identical for any thread count: each output row
+//! is computed by exactly one lane with the same per-row arithmetic.
 
-use super::MulKernel;
+use super::{MulBackend, MulKernel};
+use crate::util::threads::{self, SendMutPtr};
 
 /// Cache-block sizes. 64x64 f32 panels are 16 KiB — two fit in a typical
 /// 32 KiB L1D the way two 16x16 tiles fit in a CUDA SM's shared memory.
@@ -15,14 +26,38 @@ pub const BM: usize = 64;
 pub const BN: usize = 64;
 pub const BK: usize = 64;
 
+/// MAC-count threshold above which [`gemm_auto`] fans out over the pool.
+/// Below it, panel packing + chunk handoff costs more than it saves.
+pub const AUTO_THREAD_MACS: usize = 1 << 18;
+
 /// `c[M,N] = a[M,K] * b[K,N]` (row-major, C overwritten), multiplications
 /// routed through `mul`, accumulation in FP32.
 pub fn gemm(mul: &MulKernel, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     gemm_threaded(mul, a, b, c, m, k, n, 1);
 }
 
+/// [`gemm`] that picks its own thread count: the persistent pool's full
+/// width for large problems, single-lane for small ones. The layers
+/// (conv/dense) call this so every model forward/backward shares the same
+/// warm pool.
+pub fn gemm_auto(
+    mul: &MulKernel,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let lanes = threads::global().width();
+    let big = m.saturating_mul(k).saturating_mul(n) >= AUTO_THREAD_MACS;
+    gemm_threaded(mul, a, b, c, m, k, n, if big { lanes } else { 1 });
+}
+
 /// Threaded variant: output row-blocks are distributed over `threads`
-/// workers (the coarse-grained parallelism axis of the CUDA grid).
+/// lanes of the persistent worker pool (the coarse-grained parallelism
+/// axis of the CUDA grid). Bit-identical to the single-threaded result
+/// for every strategy and thread count.
 pub fn gemm_threaded(
     mul: &MulKernel,
     a: &[f32],
@@ -42,24 +77,23 @@ pub fn gemm_threaded(
     }
     let threads = threads.max(1).min(m);
     if threads == 1 {
-        gemm_block_range(mul, a, b, c, 0, m, k, n);
+        gemm_rows_into(mul, a, b, c, 0, m, k, n);
         return;
     }
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (t, c_block) in c.chunks_mut(rows_per * n).enumerate() {
-            let m0 = t * rows_per;
-            let m1 = (m0 + c_block.len() / n).min(m);
-            s.spawn(move || {
-                // re-base the row indices onto the thread's sub-slice of C
-                gemm_rows_into(mul, a, b, c_block, m0, m1, k, n);
-            });
-        }
+    let base = SendMutPtr(c.as_mut_ptr());
+    threads::global().run_chunks(m, threads, |_, m0, m1| {
+        // SAFETY: run_chunks hands out disjoint row ranges [m0, m1) and
+        // blocks until all chunks complete, so each C row is written by
+        // exactly one lane while `c` is alive.
+        let c_block = unsafe { std::slice::from_raw_parts_mut(base.0.add(m0 * n), (m1 - m0) * n) };
+        gemm_rows_into(mul, a, b, c_block, m0, m1, k, n);
     });
 }
 
 /// Blocked GEMM of global rows `[m0, m1)` written into a C sub-slice that
-/// starts at row `m0`.
+/// starts at row `m0`. The B panel `[k0..kn, j0..jn]` is packed
+/// contiguously (the CUDA "shared-memory fetch") and transposed so the
+/// inner `dot_panel` walks both operands with stride 1.
 fn gemm_rows_into(
     mul: &MulKernel,
     a: &[f32],
@@ -86,28 +120,70 @@ fn gemm_rows_into(
                 let c_row = &mut c_block[(i - m0) * n + j0..(i - m0) * n + jn];
                 for (jj, c_val) in c_row.iter_mut().enumerate() {
                     let b_col = &b_panel[jj * kw..jj * kw + kw];
-                    *c_val += mul.dot(a_row, b_col);
+                    *c_val += mul.dot_panel(a_row, b_col);
                 }
             }
         }
     }
 }
 
-/// Internal: single-threaded blocked GEMM over a row range `[m0, m1)`.
-/// The B panel `[k0..kn, j0..jn]` is packed contiguously (the CUDA
-/// "shared-memory fetch") and transposed so the inner dot walks both
-/// operands with stride 1.
-fn gemm_block_range(
+/// Per-element-dispatch reference: identical blocking and accumulation
+/// order, but every multiply goes through the scalar [`MulKernel::mul`]
+/// enum dispatch with none of the panel hoisting/unrolling.
+///
+/// Scope note for the bench record: the pre-panel GEMM already hoisted
+/// dispatch once per packed column (via the old `MulKernel::dot`), so
+/// this is *not* a faithful replay of the old GEMM — it is the fully
+/// unamortized per-multiply dispatch cost that the AdaPT-style argument
+/// is about, and that the old dense weight-gradient inner loop
+/// (`row[o] += mul.mul(..)`) actually paid. Kept deliberately:
+///
+/// * benches measure the dispatch-amortization headroom against it
+///   (`BENCH_gemm.json`, strategy `lut_scalar_dispatch`);
+/// * `tests/batched_vs_scalar.rs` uses it as the bit-exactness oracle.
+pub fn gemm_scalar_reference(
     mul: &MulKernel,
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
-    m0: usize,
-    m1: usize,
+    m: usize,
     k: usize,
     n: usize,
 ) {
-    gemm_rows_into(mul, a, b, &mut c[m0 * n..m1 * n], m0, m1, k, n);
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    c.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let mut b_panel = vec![0.0f32; BK * BN];
+    for j0 in (0..n).step_by(BN) {
+        let jn = (j0 + BN).min(n);
+        for k0 in (0..k).step_by(BK) {
+            let kn = (k0 + BK).min(k);
+            let kw = kn - k0;
+            for j in j0..jn {
+                for kk in k0..kn {
+                    b_panel[(j - j0) * kw + (kk - k0)] = b[kk * n + j];
+                }
+            }
+            for i in 0..m {
+                let a_row = &a[i * k + k0..i * k + kn];
+                let c_row = &mut c[i * n + j0..i * n + jn];
+                for (jj, c_val) in c_row.iter_mut().enumerate() {
+                    let b_col = &b_panel[jj * kw..jj * kw + kw];
+                    // per-element dispatch + the same two-level sequential
+                    // accumulation as dot_panel
+                    let mut acc = 0.0f32;
+                    for t in 0..kw {
+                        acc += mul.mul(a_row[t], b_col[t]);
+                    }
+                    *c_val += acc;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -198,8 +274,57 @@ mod tests {
     }
 
     #[test]
+    fn threaded_pool_matches_single_thread_bitwise() {
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let mut rng = Pcg32::seeded(24);
+        let (m, k, n) = (37, 41, 29);
+        let a: Vec<f32> =
+            (0..m * k).map(|_| quantize_mantissa(rng.range(-2.0, 2.0), 7)).collect();
+        let b: Vec<f32> =
+            (0..k * n).map(|_| quantize_mantissa(rng.range(-2.0, 2.0), 7)).collect();
+        for mul in [
+            MulKernel::Native,
+            MulKernel::Direct(model.as_ref()),
+            MulKernel::Lut(AmSim::new(&lut)),
+        ] {
+            let mut c1 = vec![0.0f32; m * n];
+            gemm_threaded(&mul, &a, &b, &mut c1, m, k, n, 1);
+            for threads in [2, 3, 8, 64] {
+                let mut ct = vec![0.0f32; m * n];
+                gemm_threaded(&mul, &a, &b, &mut ct, m, k, n, threads);
+                for i in 0..m * n {
+                    assert_eq!(
+                        c1[i].to_bits(),
+                        ct[i].to_bits(),
+                        "{} threads={threads} idx {i}",
+                        mul.describe()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_matches_fixed_thread_counts() {
+        let mut rng = Pcg32::seeded(25);
+        // large enough to cross AUTO_THREAD_MACS with k=96
+        let (m, k, n) = (72, 96, 72);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.range(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.range(-1.0, 1.0)).collect();
+        let mut c_auto = vec![0.0f32; m * n];
+        let mut c_one = vec![0.0f32; m * n];
+        gemm_auto(&MulKernel::Native, &a, &b, &mut c_auto, m, k, n);
+        gemm(&MulKernel::Native, &a, &b, &mut c_one, m, k, n);
+        for i in 0..m * n {
+            assert_eq!(c_auto[i].to_bits(), c_one[i].to_bits(), "idx {i}");
+        }
+    }
+
+    #[test]
     fn empty_dims() {
         let mut c = vec![0.0f32; 0];
         gemm(&MulKernel::Native, &[], &[], &mut c, 0, 5, 0);
+        gemm_scalar_reference(&MulKernel::Native, &[], &[], &mut c, 0, 5, 0);
     }
 }

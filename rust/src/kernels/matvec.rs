@@ -2,8 +2,14 @@
 //! "shared-memory-based tiling is superfluous for a 1-D vector", so the
 //! dense layer gets its own simpler kernel instead of the GEMM kernel.
 //! Batched over samples because the coordinator feeds mini-batches.
+//!
+//! All inner loops run on the batched [`MulBackend`] panel ops: row dots
+//! through `dot_panel`, the weight-gradient rank-1 update through
+//! `fma_row` (strategy dispatch and the broadcast operand's decomposition
+//! hoisted out of the per-element loop). Bit-identical to the scalar
+//! per-element reference — see `tests/batched_vs_scalar.rs`.
 
-use super::MulKernel;
+use super::{MulBackend, MulKernel};
 
 /// `y[o] = sum_i w[o, i] * x[i]` — one sample. `w` is row-major `[out, in]`.
 pub fn matvec(mul: &MulKernel, w: &[f32], x: &[f32], y: &mut [f32]) {
@@ -11,7 +17,7 @@ pub fn matvec(mul: &MulKernel, w: &[f32], x: &[f32], y: &mut [f32]) {
     let n_out = y.len();
     assert_eq!(w.len(), n_in * n_out, "W shape");
     for (o, y_val) in y.iter_mut().enumerate() {
-        *y_val = mul.dot(&w[o * n_in..(o + 1) * n_in], x);
+        *y_val = mul.dot_panel(&w[o * n_in..(o + 1) * n_in], x);
     }
 }
 
@@ -62,11 +68,8 @@ pub fn dense_weight_grad(
         let xb = &x[b * n_in..(b + 1) * n_in];
         let dyb = &dy[b * n_out..(b + 1) * n_out];
         for i in 0..n_in {
-            let xi = xb[i];
             let row = &mut dw[i * n_out..(i + 1) * n_out];
-            for o in 0..n_out {
-                row[o] += mul.mul(xi, dyb[o]);
-            }
+            mul.fma_row(row, xb[i], dyb);
         }
     }
 }
@@ -89,7 +92,7 @@ pub fn dense_input_grad(
         let dyb = &dy[b * n_out..(b + 1) * n_out];
         let dxb = &mut dx[b * n_in..(b + 1) * n_in];
         for (i, dx_val) in dxb.iter_mut().enumerate() {
-            *dx_val = mul.dot(&w[i * n_out..(i + 1) * n_out], dyb);
+            *dx_val = mul.dot_panel(&w[i * n_out..(i + 1) * n_out], dyb);
         }
     }
 }

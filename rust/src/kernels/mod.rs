@@ -4,6 +4,17 @@
 //! between the native hardware `*`, a direct functional-model call (the
 //! paper's "direct C simulation"), or the LUT-based AMSim — the three
 //! simulation strategies compared in Fig 6 and Tables V/VI.
+//!
+//! The kernels are written against the **batched** [`MulBackend`] panel
+//! operations rather than per-element [`MulKernel::mul`] calls: strategy
+//! dispatch happens once per contiguous panel, so the AMSim path is a
+//! tight LUT-gather loop with its shift/mask hoisted into registers
+//! (AdaPT, arXiv 2203.04071, makes the same observation: per-multiply
+//! dispatch must be amortized by vectorized LUT lookups for emulation to
+//! be usable at training scale) and the native path is a plain FMA loop
+//! the compiler can treat as the cuBLAS stand-in baseline. Each panel op
+//! is bit-identical to its scalar per-element reference; see
+//! `tests/batched_vs_scalar.rs`.
 pub mod gemm;
 pub mod im2col;
 pub mod matvec;
@@ -25,6 +36,10 @@ pub enum MulKernel<'a> {
 }
 
 impl<'a> MulKernel<'a> {
+    /// Scalar multiply — the *reference semantics* every batched panel op
+    /// must reproduce bit-for-bit. Kernel inner loops should use
+    /// [`MulBackend`] instead; this stays for scalar call sites, oracles
+    /// and tests.
     #[inline(always)]
     pub fn mul(&self, a: f32, b: f32) -> f32 {
         match self {
@@ -34,14 +49,59 @@ impl<'a> MulKernel<'a> {
         }
     }
 
-    /// Dot product with FP32 accumulation (the paper's mixed-precision
-    /// accumulation rule).
-    #[inline]
-    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+    pub fn describe(&self) -> String {
+        match self {
+            MulKernel::Native => "native".into(),
+            MulKernel::Direct(m) => format!("direct:{}", m.name()),
+            MulKernel::Lut(sim) => format!("lut:m{}", sim.mantissa_bits()),
+        }
+    }
+}
+
+/// Batched panel operations over contiguous slices — the interface the
+/// GEMM / matvec / im2col-fed convolution inner loops are written against.
+///
+/// Contract: each operation is **bit-identical** to the corresponding
+/// per-element scalar sequence using [`MulKernel::mul`] with strictly
+/// sequential FP32 accumulation (`tests/batched_vs_scalar.rs` enforces
+/// this for all three strategies). What batching buys is *dispatch
+/// amortization*: the strategy `match` runs once per panel, not once per
+/// multiply.
+pub trait MulBackend {
+    /// `out[i] = mul(a[i], b[i])` over a contiguous panel.
+    fn mul_panel(&self, a: &[f32], b: &[f32], out: &mut [f32]);
+
+    /// `sum_i mul(a[i], b[i])` with sequential FP32 accumulation.
+    fn dot_panel(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// `acc[j] += mul(x, row[j])` — the rank-1-update inner loop, with the
+    /// broadcast operand's decomposition hoisted out of the loop.
+    fn fma_row(&self, acc: &mut [f32], x: f32, row: &[f32]);
+}
+
+impl MulBackend for MulKernel<'_> {
+    fn mul_panel(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
+        assert!(a.len() == b.len() && a.len() == out.len());
+        match self {
+            MulKernel::Native => {
+                for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                    *o = x * y;
+                }
+            }
+            MulKernel::Direct(m) => {
+                for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+                    *o = m.mul(x, y);
+                }
+            }
+            MulKernel::Lut(sim) => sim.mul_slice(a, b, out),
+        }
+    }
+
+    fn dot_panel(&self, a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
         match self {
-            // keep the native path free of per-element dispatch: this is
-            // the baseline every slowdown ratio is measured against
+            // native: plain sequential FMA loop — the baseline every
+            // slowdown ratio is measured against
             MulKernel::Native => {
                 let mut acc = 0.0;
                 for i in 0..a.len() {
@@ -49,10 +109,27 @@ impl<'a> MulKernel<'a> {
                 }
                 acc
             }
+            // direct: the virtual call per multiply is inherent to the
+            // black-box model (the paper's "direct C simulation" cost);
+            // unroll 4-wide so the calls pipeline, keep the adds ordered
             MulKernel::Direct(m) => {
-                let mut acc = 0.0;
-                for i in 0..a.len() {
+                let n = a.len();
+                let mut acc = 0.0f32;
+                let mut i = 0;
+                while i + 4 <= n {
+                    let p0 = m.mul(a[i], b[i]);
+                    let p1 = m.mul(a[i + 1], b[i + 1]);
+                    let p2 = m.mul(a[i + 2], b[i + 2]);
+                    let p3 = m.mul(a[i + 3], b[i + 3]);
+                    acc += p0;
+                    acc += p1;
+                    acc += p2;
+                    acc += p3;
+                    i += 4;
+                }
+                while i < n {
                     acc += m.mul(a[i], b[i]);
+                    i += 1;
                 }
                 acc
             }
@@ -60,11 +137,20 @@ impl<'a> MulKernel<'a> {
         }
     }
 
-    pub fn describe(&self) -> String {
+    fn fma_row(&self, acc: &mut [f32], x: f32, row: &[f32]) {
+        assert_eq!(acc.len(), row.len());
         match self {
-            MulKernel::Native => "native".into(),
-            MulKernel::Direct(m) => format!("direct:{}", m.name()),
-            MulKernel::Lut(sim) => format!("lut:m{}", sim.mantissa_bits()),
+            MulKernel::Native => {
+                for (a, &r) in acc.iter_mut().zip(row) {
+                    *a += x * r;
+                }
+            }
+            MulKernel::Direct(m) => {
+                for (a, &r) in acc.iter_mut().zip(row) {
+                    *a += m.mul(x, r);
+                }
+            }
+            MulKernel::Lut(sim) => sim.fma_row(acc, x, row),
         }
     }
 }

@@ -2,8 +2,13 @@
 //! backward gradients via the IM2COL+GEMM restructuring, with fused
 //! dilation in the weight gradient and fused pad+dilate plus a
 //! transpose-and-reverse pre-pass in the preceding-layer gradient.
+//!
+//! All three GEMMs go through [`gemm_auto`]: the batched
+//! [`crate::kernels::MulBackend`] panel inner loops, fanned out over the
+//! persistent worker pool when the im2col matrices are large enough.
+//! Outputs are bit-identical regardless of lane count.
 
-use crate::kernels::gemm::gemm;
+use crate::kernels::gemm::gemm_auto;
 use crate::kernels::im2col::{im2col_forward, im2col_plg, im2col_weight_grad};
 use crate::kernels::transpose_reverse::transpose_reverse;
 use crate::kernels::{Conv2dGeom, MulKernel};
@@ -16,7 +21,7 @@ pub fn forward(mul: &MulKernel, x: &Tensor, w: &Tensor, stride: usize, pad: usiz
     let mut cols = vec![0.0f32; g.col_rows() * g.col_cols()];
     im2col_forward(&g, &x.data, &mut cols);
     let mut y = Tensor::zeros(&[g.batch, g.out_h(), g.out_w(), g.out_c]);
-    gemm(mul, &cols, &w.data, &mut y.data, g.col_rows(), g.col_cols(), g.out_c);
+    gemm_auto(mul, &cols, &w.data, &mut y.data, g.col_rows(), g.col_cols(), g.out_c);
     y
 }
 
@@ -47,7 +52,7 @@ pub fn weight_grad(
     let mut cols = vec![0.0f32; g.col_cols() * q];
     im2col_weight_grad(&g, &x.data, &mut cols);
     let mut dw = Tensor::zeros(w_shape);
-    gemm(mul, &cols, &dy.data, &mut dw.data, g.col_cols(), q, g.out_c);
+    gemm_auto(mul, &cols, &dy.data, &mut dw.data, g.col_cols(), q, g.out_c);
     dw
 }
 
@@ -82,7 +87,7 @@ pub fn input_grad(
     // GEMM reads
     let wrt = transpose_reverse(&w.data, g.k_h, g.k_w, g.in_c, g.out_c);
     let mut dx = Tensor::zeros(x_shape);
-    gemm(mul, &cols, &wrt, &mut dx.data, rows, rlen, g.in_c);
+    gemm_auto(mul, &cols, &wrt, &mut dx.data, rows, rlen, g.in_c);
     dx
 }
 

@@ -18,6 +18,48 @@
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
 //!
+//! ## Simulation strategies (paper Fig. 6)
+//!
+//! Every CPU kernel multiply is routed through a
+//! [`kernels::MulKernel`], whose three variants are the paper's Fig. 6
+//! configurations:
+//!
+//! | variant | paper system | what each multiply costs |
+//! |---|---|---|
+//! | [`kernels::MulKernel::Native`] | ATnG / TFnG | the hardware `*` (baseline) |
+//! | [`kernels::MulKernel::Direct`] | ATxC "direct C simulation" | a functional-model call (bit manipulation) |
+//! | [`kernels::MulKernel::Lut`]    | ATxG AMSim | one mantissa-LUT gather (Alg. 2) |
+//!
+//! The kernels consume these through the batched
+//! [`kernels::MulBackend`] panel operations (`mul_panel` / `dot_panel` /
+//! `fma_row`): strategy dispatch is paid once per contiguous panel, so
+//! the AMSim path is a tight LUT-gather loop with hoisted shift/mask and
+//! the native path a plain FMA loop — while staying bit-identical to the
+//! per-element scalar reference (enforced by `tests/batched_vs_scalar.rs`).
+//! Threaded GEMM runs on the persistent worker pool in [`util::threads`].
+//! `cargo bench -- gemm` (or `approxtrain bench-gemm`) times all three
+//! strategies and records `BENCH_gemm.json`; methodology in
+//! `docs/BENCHMARKS.md`.
+//!
+//! ## Module map (`rust/src/`)
+//!
+//! ```text
+//! mult/        multiplier functional models (paper's "C/C++ models") + FP32 bit plumbing
+//! lut/         mantissa-product LUT generation (Algorithm 1) + binary format
+//! amsim/       LUT-based multiplication simulator (Algorithm 2) + batched panels
+//! kernels/     CPU analogs of the paper's CUDA kernels: GEMM, IM2COL x3,
+//!              transpose-reverse, matvec, pooling (§VI)
+//! layers/      AMCONV2D / AMDENSE / activations / softmax / batchnorm (§VI-B, §VI-C)
+//! nn/          pure-Rust LeNet/ResNet executors, init, metrics, checkpoints
+//! tensor/      minimal row-major tensor
+//! data/        IDX loader + deterministic synthetic datasets
+//! runtime/     PJRT engine for the compiled artifacts (stubbed offline)
+//! coordinator/ trainer, batching inference server, experiments, pruning, reports
+//! hwmodel/     Fig. 1 area/power efficiency model
+//! util/        RNG, JSON, stats, timer, persistent thread pool, prop-test harness
+//! cli/         argument parsing for the `approxtrain` binary
+//! ```
+//!
 //! ## Quick tour
 //!
 //! ```no_run

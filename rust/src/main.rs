@@ -6,6 +6,7 @@
 //! approxtrain train --model lenet5 --mode lut --mult afm16 --epochs 3
 //! approxtrain infer --model lenet5 --mode lut --mult afm16
 //! approxtrain serve --model lenet300 --requests 64
+//! approxtrain bench-gemm --size 256
 //! approxtrain experiment fig6|fig10|table3|table4|table5|table6|fig11|fig12|all [--quick]
 //! approxtrain list-artifacts
 //! ```
@@ -40,6 +41,20 @@ fn main() -> Result<()> {
         "train" => train(&args),
         "infer" => infer(&args),
         "serve" => serve(&args),
+        "bench-gemm" => {
+            // pure CPU-kernel benchmark; needs no artifacts. Full-budget
+            // runs refresh the committed BENCH_gemm.json at the repo root;
+            // --quick keeps its low-budget numbers in results/ only.
+            let quick = args.has_flag("quick");
+            let out = experiments::bench_gemm(
+                &results_dir(&args),
+                args.opt_usize("size", 256),
+                quick,
+                !quick,
+            )?;
+            println!("{out}");
+            Ok(())
+        }
         "experiment" => experiment(&args),
         "list-artifacts" => list_artifacts(&args),
         "" | "help" => {
@@ -61,6 +76,7 @@ commands:
         [--epochs N] [--lr F] [--samples N] [--seed N] [--ckpt out.ckpt]
   infer --model <m> --mode <...> --mult <name> [--samples N] [--ckpt f]
   serve --model <m> [--requests N] [--batch-wait-ms N]
+  bench-gemm [--size N] [--quick]          CPU GEMM perf record (BENCH_gemm.json)
   experiment <fig1|fig6|fig10|table3|table4|table5|table6|fig11|fig12|all>
         [--quick]
   list-artifacts

@@ -1,66 +1,210 @@
-//! Data-parallel helpers over `std::thread::scope`.
+//! Persistent worker pool + data-parallel helpers.
 //!
 //! The paper's CUDA kernels get their throughput from fine-grained GPU
 //! parallelism; on the CPU substrate the analogous lever is chunked
-//! multi-threading. (The benchmark machine for this reproduction exposes a
-//! single core, so `available_threads()` frequently returns 1 and these
-//! helpers degrade to plain loops — the code path is still exercised by
-//! tests with explicit thread counts.)
+//! multi-threading. Earlier revisions spawned a fresh `std::thread::scope`
+//! per GEMM call, which put thread create/join on the per-layer hot path —
+//! exactly the kind of per-call overhead the paper's AMSim design
+//! amortizes away. The [`ThreadPool`] here is spawned once (see
+//! [`global`]) and reused across every GEMM/kernel invocation by the
+//! trainer and the batching server.
+//!
+//! (The benchmark machine for this reproduction exposes very few cores, so
+//! `available_threads()` frequently returns 1 or 2 and the pool degrades
+//! to inline loops — the multi-worker path is still exercised by tests
+//! with explicit thread counts.)
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
 /// Number of worker threads to use by default.
 pub fn available_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// A `*mut f32` that can be captured by `Sync` closures. The caller is
+/// responsible for ensuring every concurrent access lands on a disjoint
+/// region — the pattern used by all kernel loops (one output row-range per
+/// chunk).
+#[derive(Clone, Copy)]
+pub struct SendMutPtr(pub *mut f32);
+
+// SAFETY: raw pointers carry no aliasing guarantees by themselves; the
+// kernels only ever write through disjoint offsets per chunk.
+unsafe impl Send for SendMutPtr {}
+unsafe impl Sync for SendMutPtr {}
+
+/// One fan-out/fan-in unit of work: a borrowed closure plus an atomic
+/// chunk cursor. The closure reference is lifetime-erased; soundness comes
+/// from [`ThreadPool::run_chunks`] not returning (or unwinding) until
+/// `pending` hits 0, so no worker can observe the closure after the
+/// caller's frame ends. [`execute`] never unwinds — a panicking chunk is
+/// caught, recorded, and re-raised by the submitting thread *after* the
+/// completion wait, mirroring `std::thread::scope` semantics.
+struct JobState {
+    func: &'static (dyn Fn(usize, usize, usize) + Sync),
+    items: usize,
+    chunk: usize,
+    chunks: usize,
+    next: AtomicUsize,
+    pending: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+type Job = Arc<JobState>;
+
+fn execute(job: &JobState) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.chunks {
+            return;
+        }
+        let start = i * job.chunk;
+        let end = ((i + 1) * job.chunk).min(job.items);
+        // AssertUnwindSafe: on Err the payload is stashed and re-raised on
+        // the submitting thread once every chunk has finished, so no one
+        // observes the possibly-inconsistent captures in the meantime.
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (job.func)(i, start, end)));
+        if let Err(payload) = result {
+            let mut slot = job.panic.lock().unwrap();
+            slot.get_or_insert(payload); // keep the first panic
+        }
+        // decremented on the panic path too — a poisoned chunk must never
+        // leave the submitter waiting forever or shrink the pool
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            *job.done.lock().unwrap() = true;
+            job.cv.notify_all();
+        }
+    }
+}
+
+/// Persistent worker pool. Jobs are broadcast to every worker; workers and
+/// the submitting thread race over an atomic chunk cursor, so the fastest
+/// threads naturally take more chunks (the CUDA-grid work-stealing analog).
+pub struct ThreadPool {
+    senders: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total execution lanes: `threads - 1` spawned
+    /// workers plus the submitting thread, which always participates.
+    pub fn new(threads: usize) -> ThreadPool {
+        let workers = threads.max(1) - 1;
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+            senders.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("amsim-pool-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            execute(&job);
+                        }
+                    })
+                    .expect("spawning pool worker"),
+            );
+        }
+        ThreadPool { senders, handles }
+    }
+
+    /// Total execution lanes (spawned workers + the submitting thread).
+    pub fn width(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Split `items` into up to `chunks` contiguous ranges and run
+    /// `f(chunk_index, start, end)` over them, blocking until all chunks
+    /// complete. The submitting thread executes chunks too, so the call
+    /// makes progress even when every worker is busy (nested submissions
+    /// included). `f` only needs to borrow from the caller's frame.
+    pub fn run_chunks<F>(&self, items: usize, chunks: usize, f: F)
+    where
+        F: Fn(usize, usize, usize) + Sync,
+    {
+        if items == 0 {
+            return;
+        }
+        let chunk = items.div_ceil(chunks.max(1));
+        let chunks = items.div_ceil(chunk);
+        if chunks == 1 || self.handles.is_empty() {
+            for i in 0..chunks {
+                f(i, i * chunk, ((i + 1) * chunk).min(items));
+            }
+            return;
+        }
+        let f_ref: &(dyn Fn(usize, usize, usize) + Sync) = &f;
+        // SAFETY: lifetime erasure only. `execute` never unwinds (chunk
+        // panics are caught and stashed), so the wait loop below always
+        // runs and guarantees the reference is dead — no worker can still
+        // be inside `f` — before this frame returns or unwinds.
+        let f_static: &'static (dyn Fn(usize, usize, usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let job: Job = Arc::new(JobState {
+            func: f_static,
+            items,
+            chunk,
+            chunks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(chunks),
+            panic: Mutex::new(None),
+            done: Mutex::new(false),
+            cv: Condvar::new(),
+        });
+        for tx in &self.senders {
+            // a worker that exited (only possible at teardown) just means
+            // fewer lanes; the cursor still drains via the caller
+            let _ = tx.send(job.clone());
+        }
+        execute(&job);
+        let mut finished = job.done.lock().unwrap();
+        while !*finished {
+            finished = job.cv.wait(finished).unwrap();
+        }
+        drop(finished);
+        // every chunk is done; re-raise the first chunk panic on the
+        // submitting thread (std::thread::scope behaviour)
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.senders.clear(); // closes channels; workers exit their recv loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool, spawned on first use with [`available_threads`]
+/// lanes. The trainer and the batching server touch this at startup so
+/// worker spawn cost never lands inside a timed step (see
+/// `coordinator::trainer` / `coordinator::server`).
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(available_threads()))
+}
+
 /// Run `f(chunk_index, start, end)` over `n` items split into `threads`
-/// contiguous ranges. `f` must be `Sync` since it is shared across threads.
+/// contiguous ranges on the global pool. `f` must be `Sync` since it is
+/// shared across threads.
 pub fn parallel_ranges<F: Fn(usize, usize, usize) + Sync>(n: usize, threads: usize, f: F) {
     let threads = threads.max(1).min(n.max(1));
     if threads <= 1 || n == 0 {
         f(0, 0, n);
         return;
     }
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for t in 0..threads {
-            let start = t * chunk;
-            let end = ((t + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(t, start, end));
-        }
-    });
-}
-
-/// Map `f` over disjoint mutable row-chunks of `out` (each of `row_len`
-/// elements). This is the shape of every kernel loop: each output row is
-/// written by exactly one thread.
-pub fn parallel_rows<F>(out: &mut [f32], row_len: usize, threads: usize, f: F)
-where
-    F: Fn(usize, &mut [f32]) + Sync,
-{
-    assert!(row_len > 0 && out.len() % row_len == 0);
-    let rows = out.len() / row_len;
-    let threads = threads.max(1).min(rows.max(1));
-    if threads <= 1 {
-        for (r, chunk) in out.chunks_mut(row_len).enumerate() {
-            f(r, chunk);
-        }
-        return;
-    }
-    let rows_per = rows.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (t, block) in out.chunks_mut(rows_per * row_len).enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                for (i, chunk) in block.chunks_mut(row_len).enumerate() {
-                    f(t * rows_per + i, chunk);
-                }
-            });
-        }
-    });
+    global().run_chunks(n, threads, f);
 }
 
 #[cfg(test)]
@@ -85,15 +229,75 @@ mod tests {
     }
 
     #[test]
-    fn rows_write_disjoint() {
-        for threads in [1, 2, 4] {
-            let mut out = vec![0.0f32; 12];
-            parallel_rows(&mut out, 3, threads, |r, chunk| {
-                for c in chunk.iter_mut() {
-                    *c = r as f32;
+    fn pool_is_reusable_across_many_jobs() {
+        // the point of the persistent pool: many cheap jobs, no per-job
+        // thread spawning
+        let pool = ThreadPool::new(3);
+        assert_eq!(pool.width(), 3);
+        let total = AtomicUsize::new(0);
+        for round in 1..=50usize {
+            pool.run_chunks(round, 3, |_, s, e| {
+                total.fetch_add(e - s, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), (1..=50).sum::<usize>());
+    }
+
+    #[test]
+    fn pool_handles_more_chunks_than_workers() {
+        let pool = ThreadPool::new(2);
+        let hits = AtomicUsize::new(0);
+        pool.run_chunks(97, 13, |_, s, e| {
+            hits.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 97);
+    }
+
+    #[test]
+    fn nested_submission_does_not_deadlock() {
+        let pool = global();
+        let total = AtomicUsize::new(0);
+        pool.run_chunks(4, 4, |_, s, e| {
+            for _ in s..e {
+                // a chunk that itself fans out (layer calling a threaded
+                // GEMM): the submitting lane participates, so this always
+                // drains even when all workers are busy
+                pool.run_chunks(8, 2, |_, s2, e2| {
+                    total.fetch_add(e2 - s2, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn chunk_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_chunks(8, 4, |i, _, _| {
+                if i == 2 {
+                    panic!("chunk 2 boom");
                 }
             });
-            assert_eq!(out, vec![0., 0., 0., 1., 1., 1., 2., 2., 2., 3., 3., 3.]);
-        }
+        }));
+        // the panic reaches the submitting thread (scope semantics)...
+        assert!(result.is_err());
+        // ...and the pool neither deadlocks nor loses lanes
+        assert_eq!(pool.width(), 3);
+        let hits = AtomicUsize::new(0);
+        pool.run_chunks(10, 4, |_, s, e| {
+            hits.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn single_lane_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.run_chunks(10, 4, |_, s, e| {
+            hits.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 10);
     }
 }

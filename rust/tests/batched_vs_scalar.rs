@@ -1,0 +1,216 @@
+//! Property tests for the batched multiply backend: the panel kernels
+//! (GEMM / matvec / rank-1 update) must be *bit-identical* to the scalar
+//! `MulKernel::mul` per-element reference with sequential FP32
+//! accumulation — Direct and LUT exactly, Native modulo FP reassociation
+//! (in practice also exact, but the contract only promises a tolerance) —
+//! and the pool-threaded GEMM must equal the single-threaded one exactly
+//! for every strategy. Batching amortizes *dispatch*; it must never change
+//! *arithmetic*.
+
+use approxtrain::amsim::AmSim;
+use approxtrain::kernels::gemm::{gemm, gemm_scalar_reference, gemm_threaded};
+use approxtrain::kernels::matvec::{dense_forward, dense_input_grad, dense_weight_grad};
+use approxtrain::kernels::{MulBackend, MulKernel};
+use approxtrain::lut::MantissaLut;
+use approxtrain::mult::registry;
+use approxtrain::util::rng::Pcg32;
+
+fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.range(-2.0, 2.0)).collect()
+}
+
+/// Run `f` under all three strategies; `exact` says whether the comparison
+/// must be bitwise (Direct/LUT) or tolerance-based (Native).
+fn for_each_strategy(f: impl Fn(&MulKernel, bool, &str)) {
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    f(&MulKernel::Native, false, "native");
+    f(&MulKernel::Direct(model.as_ref()), true, "direct");
+    f(&MulKernel::Lut(AmSim::new(&lut)), true, "lut");
+}
+
+fn assert_same(got: &[f32], want: &[f32], exact: bool, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for i in 0..got.len() {
+        if exact {
+            assert_eq!(
+                got[i].to_bits(),
+                want[i].to_bits(),
+                "{what} idx {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        } else {
+            assert!(
+                (got[i] - want[i]).abs() <= 1e-5 * want[i].abs().max(1.0),
+                "{what} idx {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_batched_equals_scalar_dispatch() {
+    // sizes straddling the BK=64 block boundary so the two-level
+    // accumulation is exercised across blocks
+    for (m, k, n) in [(1, 1, 1), (5, 17, 9), (33, 64, 20), (21, 65, 19), (16, 130, 24)] {
+        for_each_strategy(|mul, exact, name| {
+            let mut rng = Pcg32::seeded(900 + (m * k * n) as u64);
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut c = vec![0.0f32; m * n];
+            let mut c_ref = vec![0.0f32; m * n];
+            gemm(mul, &a, &b, &mut c, m, k, n);
+            gemm_scalar_reference(mul, &a, &b, &mut c_ref, m, k, n);
+            assert_same(&c, &c_ref, exact, &format!("gemm[{name}] ({m},{k},{n})"));
+        });
+    }
+}
+
+#[test]
+fn gemm_pool_threaded_equals_single_threaded() {
+    let (m, k, n) = (43, 70, 31);
+    for_each_strategy(|mul, _exact, name| {
+        let mut rng = Pcg32::seeded(901);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut c1 = vec![0.0f32; m * n];
+        gemm_threaded(mul, &a, &b, &mut c1, m, k, n, 1);
+        for threads in [2, 4, 7, 43] {
+            let mut ct = vec![0.0f32; m * n];
+            gemm_threaded(mul, &a, &b, &mut ct, m, k, n, threads);
+            // thread count must never change a single bit, for ANY strategy
+            assert_same(&ct, &c1, true, &format!("gemm_threaded[{name}] t={threads}"));
+        }
+    });
+}
+
+#[test]
+fn mul_panel_equals_elementwise_mul() {
+    for n in [0usize, 1, 3, 4, 7, 64, 201] {
+        for_each_strategy(|mul, _exact, name| {
+            let mut rng = Pcg32::seeded(902 + n as u64);
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let mut out = vec![0.0f32; n];
+            mul.mul_panel(&a, &b, &mut out);
+            let want: Vec<f32> = (0..n).map(|i| mul.mul(a[i], b[i])).collect();
+            // products themselves are always bitwise-identical, native
+            // included: there is no accumulation to reassociate
+            assert_same(&out, &want, true, &format!("mul_panel[{name}] n={n}"));
+        });
+    }
+}
+
+#[test]
+fn dot_panel_equals_sequential_scalar() {
+    for n in [0usize, 1, 2, 3, 4, 5, 8, 63, 64, 65, 200] {
+        for_each_strategy(|mul, exact, name| {
+            let mut rng = Pcg32::seeded(903 + n as u64);
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let got = mul.dot_panel(&a, &b);
+            let mut want = 0.0f32;
+            for i in 0..n {
+                want += mul.mul(a[i], b[i]);
+            }
+            assert_same(&[got], &[want], exact, &format!("dot_panel[{name}] n={n}"));
+        });
+    }
+}
+
+#[test]
+fn dense_kernels_equal_scalar_reference() {
+    let (batch, n_in, n_out) = (5, 37, 23);
+    for_each_strategy(|mul, exact, name| {
+        let mut rng = Pcg32::seeded(904);
+        let x = rand_vec(&mut rng, batch * n_in);
+        let w = rand_vec(&mut rng, n_in * n_out);
+        let dy = rand_vec(&mut rng, batch * n_out);
+
+        // forward: reference mirrors the kernel's transpose-then-dot shape
+        let mut y = vec![0.0f32; batch * n_out];
+        dense_forward(mul, &x, &w, &mut y, batch, n_in, n_out);
+        let mut wt = vec![0.0f32; w.len()];
+        for i in 0..n_in {
+            for o in 0..n_out {
+                wt[o * n_in + i] = w[i * n_out + o];
+            }
+        }
+        let mut y_ref = vec![0.0f32; batch * n_out];
+        for b in 0..batch {
+            for o in 0..n_out {
+                let mut acc = 0.0f32;
+                for i in 0..n_in {
+                    acc += mul.mul(wt[o * n_in + i], x[b * n_in + i]);
+                }
+                y_ref[b * n_out + o] = acc;
+            }
+        }
+        assert_same(&y, &y_ref, exact, &format!("dense_forward[{name}]"));
+
+        // weight gradient: batched fma_row vs scalar rank-1 updates
+        let mut dw = vec![0.0f32; n_in * n_out];
+        dense_weight_grad(mul, &x, &dy, &mut dw, batch, n_in, n_out);
+        let mut dw_ref = vec![0.0f32; n_in * n_out];
+        for b in 0..batch {
+            for i in 0..n_in {
+                for o in 0..n_out {
+                    dw_ref[i * n_out + o] += mul.mul(x[b * n_in + i], dy[b * n_out + o]);
+                }
+            }
+        }
+        assert_same(&dw, &dw_ref, exact, &format!("dense_weight_grad[{name}]"));
+
+        // input gradient
+        let mut dx = vec![0.0f32; batch * n_in];
+        dense_input_grad(mul, &dy, &w, &mut dx, batch, n_in, n_out);
+        let mut dx_ref = vec![0.0f32; batch * n_in];
+        for b in 0..batch {
+            for i in 0..n_in {
+                let mut acc = 0.0f32;
+                for o in 0..n_out {
+                    acc += mul.mul(w[i * n_out + o], dy[b * n_out + o]);
+                }
+                dx_ref[b * n_in + i] = acc;
+            }
+        }
+        assert_same(&dx, &dx_ref, exact, &format!("dense_input_grad[{name}]"));
+    });
+}
+
+/// End-to-end: a whole conv layer (forward + both gradients) through the
+/// batched kernels under LUT vs Direct stays bit-identical — the paper's
+/// §VI footnote 2 validation, now running on the panel code path.
+#[test]
+fn conv_layer_lut_equals_direct_through_batched_path() {
+    use approxtrain::layers::amconv2d;
+    use approxtrain::mult::fpbits::quantize_mantissa;
+    use approxtrain::tensor::Tensor;
+    let model = registry::by_name("mit16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    let mut rng = Pcg32::seeded(905);
+    let mut q = |shape: &[usize]| {
+        let n: usize = shape.iter().product();
+        Tensor::from_vec(
+            shape,
+            (0..n).map(|_| quantize_mantissa(rng.range(-1.0, 1.0), 7)).collect(),
+        )
+    };
+    let x = q(&[2, 8, 8, 3]);
+    let w = q(&[3, 3, 3, 4]);
+    let direct = MulKernel::Direct(model.as_ref());
+    let lut_k = MulKernel::Lut(AmSim::new(&lut));
+    let y_d = amconv2d::forward(&direct, &x, &w, 2, 1);
+    let y_l = amconv2d::forward(&lut_k, &x, &w, 2, 1);
+    assert_same(&y_l.data, &y_d.data, true, "conv forward");
+    let dy = q(&y_d.shape);
+    let dw_d = amconv2d::weight_grad(&direct, &x, &dy, &w.shape, 2, 1);
+    let dw_l = amconv2d::weight_grad(&lut_k, &x, &dy, &w.shape, 2, 1);
+    assert_same(&dw_l.data, &dw_d.data, true, "conv weight grad");
+    let dx_d = amconv2d::input_grad(&direct, &dy, &w, &x.shape, 2, 1);
+    let dx_l = amconv2d::input_grad(&lut_k, &dy, &w, &x.shape, 2, 1);
+    assert_same(&dx_l.data, &dx_d.data, true, "conv input grad");
+}

@@ -1,0 +1,225 @@
+//! Vendored, API-compatible subset of the `anyhow` crate.
+//!
+//! This build environment has no registry access, so the workspace carries
+//! the slice of anyhow it actually uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait (on both `Result` and `Option`), and the
+//! `anyhow!` / `bail!` macros. Semantics match upstream where it matters:
+//!
+//! * any `std::error::Error + Send + Sync + 'static` converts into [`Error`]
+//!   via `?` (the blanket `From` impl);
+//! * [`Error`] itself does **not** implement `std::error::Error` (same
+//!   coherence reason as upstream: the blanket `From` would conflict);
+//! * `.context(...)` wraps the message, keeping the source for `Debug`.
+//!
+//! Deliberately omitted: downcasting, backtraces, `ensure!`.
+
+use std::fmt;
+
+/// Error type: a display message plus an optional boxed source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a display-able message (what `anyhow!` produces).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap with an outer context message. Unlike upstream anyhow (which
+    /// shows only the outermost layer in `Display`), the full chain is
+    /// concatenated `outer: inner` — strictly more informative, and every
+    /// caller in this workspace only does `contains(...)` checks.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source.as_ref().map(|e| e.as_ref() as &dyn std::error::Error);
+        while let Some(e) = src {
+            write!(f, "\n\ncaused by: {e}")?;
+            src = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result<T>` — also usable as `Result<T, E>` thanks to the
+/// defaulted parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+// Layering context onto an already-anyhow Result (no coherence overlap
+// with the generic impl: `Error` does not implement `std::error::Error`).
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Create an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn context_layers_display() {
+        let e: Result<(), std::io::Error> = Err(io_err());
+        let e = e.context("reading manifest").unwrap_err();
+        let s = e.to_string();
+        assert!(s.contains("reading manifest") && s.contains("missing thing"), "{s}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.with_context(|| format!("--{} required", "mult")).unwrap_err();
+        assert!(err.to_string().contains("--mult required"));
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("bad value {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        assert!(inner(true).unwrap_err().to_string().contains("bad value 7"));
+        let e = anyhow!("plain {}", "msg");
+        assert_eq!(e.to_string(), "plain msg");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        fn inner() -> Result<()> {
+            bail!("inner failure");
+        }
+        let err = inner().with_context(|| "outer step").unwrap_err();
+        let s = err.to_string();
+        assert!(s.contains("outer step") && s.contains("inner failure"), "{s}");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::new(io_err()).context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("caused by"), "{dbg}");
+    }
+}

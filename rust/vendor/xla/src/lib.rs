@@ -1,0 +1,220 @@
+//! Offline stub of the `xla` PJRT bindings used by `approxtrain::runtime`.
+//!
+//! The real dependency links `xla_extension` (a multi-GB native XLA build)
+//! which is not present in this environment, and the build has no registry
+//! access to fetch it. This stub keeps the whole crate compiling and the
+//! pure-Rust (ATxC) paths fully functional:
+//!
+//! * [`Literal`] is a real host-side tensor container — construction,
+//!   reshape, tuple handling and element extraction all work;
+//! * device-side types ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`PjRtBuffer`]) carry the same signatures but fail at **client
+//!   creation** with a clear message, which the coordinator surfaces as
+//!   "artifact path unavailable" — exactly the behaviour it already has
+//!   when `artifacts/` is not built.
+//!
+//! Swapping in the real bindings is a one-line `Cargo.toml` change; no
+//! source edits are required.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversion
+/// into `anyhow::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT runtime unavailable in this offline build (stub xla crate); \
+         the pure-Rust CPU kernels remain fully functional — see README \
+         'Runtime backends'"
+            .to_string(),
+    )
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<&[Self]>;
+}
+
+/// Type-erased literal storage.
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+macro_rules! native {
+    ($ty:ty, $variant:ident) => {
+        impl NativeType for $ty {
+            fn wrap(data: Vec<Self>) -> Data {
+                Data::$variant(data)
+            }
+            fn unwrap(data: &Data) -> Option<&[Self]> {
+                match data {
+                    Data::$variant(v) => Some(v),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(i32, I32);
+native!(u32, U32);
+
+/// Host-side tensor value (fully functional in the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want != self.element_count() as i64 {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Split a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(parts) => Ok(parts),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+
+    /// Extract elements as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("literal dtype mismatch".to_string()))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path).map_err(|e| Error(format!("{path}: {e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// Computation wrapper (opaque in the stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client. In the stub, creation always fails — there is no XLA
+/// runtime to back it — so every downstream path degrades exactly like a
+/// missing `artifacts/` directory.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable handle (never constructed in the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// Device buffer handle (never constructed in the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn client_unavailable_with_clear_message() {
+        let err = PjRtClient::cpu().err().expect("stub must not pretend to run");
+        assert!(err.to_string().contains("unavailable"), "{err}");
+    }
+}
