@@ -19,11 +19,29 @@ else
     echo "rustfmt not installed; skipping format check"
 fi
 
+step "test registration check (every rust/tests/*.rs declared in Cargo.toml)"
+# autotests is off (sources live under rust/), so an unregistered test
+# file would silently never run — fail loudly instead
+for f in rust/tests/*.rs; do
+    if ! grep -Fq "path = \"$f\"" Cargo.toml; then
+        echo "ERROR: $f is not registered as a [[test]] target in Cargo.toml"
+        fail=1
+    fi
+done
+
 step "cargo build --release"
 cargo build --release || fail=1
 
-step "cargo test -q"
-cargo test -q || fail=1
+step "cargo test -q (unit tests, debug assertions on)"
+# unit tests run in debug for the debug_assert coverage; the heavy
+# integration sweeps (golden vectors, GEMM property grids) are deferred
+# to the release pass below so they only run once, optimized
+cargo test -q --lib --bins --examples || fail=1
+
+step "cargo test --release -q (full suite incl. integration, release mode)"
+# the golden-vector and GEMM property sweeps are sized for release-mode
+# speed; running them optimized also exercises the code the benches ship
+cargo test --release -q || fail=1
 
 step "bench smoke (tiny sizes; does not touch the committed BENCH_gemm.json)"
 cargo bench --bench paper_benches -- gemm --smoke || fail=1

@@ -36,10 +36,11 @@ fn main() -> anyhow::Result<()> {
         println!("  amsim({a} * {b}) = {} (exact {})", sim.mul(a, b), a * b);
     }
 
-    // 4. approximate GEMM on the CPU kernel (ATxC path). The kernels run
-    //    on the batched MulBackend panel ops — one strategy dispatch per
-    //    packed panel, a tight LUT-gather inner loop — and gemm_auto fans
-    //    large problems out over the persistent worker pool.
+    // 4. approximate GEMM on the CPU kernel (ATxC path). gemm_auto runs
+    //    the cache-blocked tiled kernel: packed operand panels feed the
+    //    batched MulBackend ops — one strategy dispatch per panel, a tight
+    //    contiguous LUT-gather inner loop — and large problems fan out as
+    //    2D output tiles over the persistent worker pool.
     let n = 64;
     let mut rng = Pcg32::seeded(1);
     let a: Vec<f32> = (0..n * n).map(|_| quantize_mantissa(rng.range(-1.0, 1.0), 7)).collect();

@@ -13,9 +13,12 @@
 //!
 //! Results are printed and written under `results/`. The `gemm` experiment
 //! needs no artifacts (pure CPU kernels): the native / direct / LUT
-//! comparison of paper Fig 6 plus the batched-panel-vs-per-element-dispatch
-//! speedup. Only an explicit full-budget `gemm` run refreshes the committed
-//! repo-root `BENCH_gemm.json` (see docs/BENCHMARKS.md).
+//! comparison of paper Fig 6 for both the row-sliced panel kernel and the
+//! cache-blocked packed tiled kernel, the
+//! batched-panel-vs-per-element-dispatch and tiled-vs-panel speedups, and
+//! a tile-size autotune probe at the largest size. Only an explicit
+//! full-budget `gemm` run refreshes the committed repo-root
+//! `BENCH_gemm.json` (see docs/BENCHMARKS.md).
 
 use std::path::Path;
 

@@ -121,16 +121,23 @@ impl<'a> AmSim<'a> {
     /// Multiply-accumulate over two slices with FP32 accumulation — the
     /// paper's mixed-precision rule (§VII *Datatype*: "all accumulation
     /// operations are performed in FP32").
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        self.dot_acc(0.0, a, b)
+    }
+
+    /// [`AmSim::dot`] continued from a running accumulator `init`.
     ///
     /// This is the GEMM/matvec inner loop: shift/mask hoisted into
     /// registers, LUT gathers unrolled 4-wide so the address computations
     /// pipeline, accumulation kept strictly sequential so the result is
-    /// bit-identical to the scalar `acc += amsim(a[i], b[i])` reference.
-    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+    /// bit-identical to the scalar `acc += amsim(a[i], b[i])` reference —
+    /// and, because the accumulator is threaded through, independent of
+    /// how callers split a long dot across cache blocks.
+    pub fn dot_acc(&self, init: f32, a: &[f32], b: &[f32]) -> f32 {
         assert_eq!(a.len(), b.len());
         let (lut, m, shift) = (self.lut, self.m, self.shift);
         let n = a.len();
-        let mut acc = 0.0f32;
+        let mut acc = init;
         let mut i = 0;
         while i + 4 <= n {
             // the four gathers are independent (ILP); the four adds are

@@ -85,18 +85,25 @@ pub fn fig1(results_dir: &Path) -> Result<String> {
 /// Benchmark the CPU GEMM kernel under the three simulation strategies and
 /// emit the `BENCH_gemm.json` perf record (the repo's bench trajectory).
 ///
-/// Rows per size:
-/// * `native` — hardware `*` (the ATnG baseline);
-/// * `direct_afm16` — per-multiply functional-model calls (ATxC / "direct
-///   C simulation");
-/// * `lut_afm16` — batched AMSim LUT-gather panels (ATxG), single lane;
-/// * `lut_scalar_dispatch` — the per-element-dispatch reference
+/// Rows per size — the panel (1D row-sliced, PR 1) and tiled (2D
+/// cache-blocked packed) kernels for each strategy:
+/// * `native` / `native_tiled` — hardware `*` (the ATnG baseline);
+/// * `direct_afm16` / `direct_afm16_tiled` — per-multiply
+///   functional-model calls (ATxC / "direct C simulation");
+/// * `lut_afm16` / `lut_afm16_tiled` — batched AMSim LUT-gather panels
+///   (ATxG), single lane;
+/// * `lut_scalar_dispatch` — the per-element-dispatch naive-loop oracle
 ///   ([`crate::kernels::gemm::gemm_scalar_reference`]), measuring the
-///   dispatch-amortization headroom the batched panels close;
-/// * `lut_pool` — the LUT path over the persistent worker pool's full
-///   width.
+///   dispatch + cache-blocking headroom the batched kernels close;
+/// * `lut_pool` / `lut_tiled_pool` — the LUT paths over the persistent
+///   worker pool's full width (row-blocks vs the 2D tile queue).
 ///
-/// Before timing, the LUT path is asserted bit-identical to the scalar
+/// At the largest size a tile-size autotune probe times the LUT tiled
+/// path over [`crate::kernels::gemm::TileConfig::AUTOTUNE_CANDIDATES`]
+/// and records the winner.
+///
+/// Before timing, every optimized path (panel, tiled at each probed
+/// geometry, pool-threaded tiled) is asserted bit-identical to the scalar
 /// `AmSim::mul`-per-element reference (the paper's §VI footnote 2
 /// methodology), so the record can never report a fast-but-wrong kernel.
 ///
@@ -109,7 +116,10 @@ pub fn bench_gemm(
     record_root: bool,
 ) -> Result<String> {
     use crate::amsim::AmSim;
-    use crate::kernels::gemm::{gemm, gemm_scalar_reference, gemm_threaded};
+    use crate::kernels::gemm::{
+        gemm_panel, gemm_panel_threaded, gemm_scalar_reference, gemm_tiled_threaded,
+        gemm_tiled_with, TileConfig,
+    };
     use crate::kernels::MulKernel;
     use crate::util::json::Json;
     use crate::util::threads;
@@ -123,51 +133,107 @@ pub fn bench_gemm(
 
     let model = registry::by_name("afm16").ok_or_else(|| anyhow!("afm16 not registered"))?;
     let lut = MantissaLut::generate(model.as_ref());
+    lut.validate().map_err(|e| anyhow!("generated afm16 LUT failed validation: {e}"))?;
     let lanes = threads::global().width();
 
     let mut table = Table::new(
-        "BENCH_gemm — CPU GEMM simulation strategies (batched panel kernels)",
+        "BENCH_gemm — CPU GEMM simulation strategies (panel vs tiled kernels)",
         &["size", "strategy", "time", "vs native", "vs scalar-dispatch LUT"],
     );
     let mut records: Vec<Json> = Vec::new();
+    let mut autotune: Vec<Json> = Vec::new();
+    let mut best_cfg: Option<(f64, TileConfig)> = None;
     let mut headline_speedup = 0.0f64;
+    let mut tiled_vs_panel = 0.0f64;
+    let last_size = *sizes.last().unwrap();
     for &n in &sizes {
         let mut rng = Pcg32::seeded(2600 + n as u64);
         let a: Vec<f32> = (0..n * n).map(|_| rng.range(-1.0, 1.0)).collect();
         let b: Vec<f32> = (0..n * n).map(|_| rng.range(-1.0, 1.0)).collect();
         let mut c = vec![0.0f32; n * n];
 
-        // correctness gate: batched LUT panels == scalar AmSim::mul
-        // applied elementwise, bit for bit
+        // correctness gate: every optimized LUT path == scalar AmSim::mul
+        // applied elementwise with sequential accumulation, bit for bit
         let mut c_ref = vec![0.0f32; n * n];
-        gemm(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n);
         gemm_scalar_reference(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c_ref, n, n, n);
-        for i in 0..n * n {
-            if c[i].to_bits() != c_ref[i].to_bits() {
-                return Err(anyhow!(
-                    "bench aborted: batched LUT GEMM diverged from scalar reference at n={n} idx {i}"
-                ));
+        let gate = |label: &str, got: &[f32]| -> Result<()> {
+            for i in 0..n * n {
+                if got[i].to_bits() != c_ref[i].to_bits() {
+                    return Err(anyhow!(
+                        "bench aborted: {label} LUT GEMM diverged from scalar reference \
+                         at n={n} idx {i}"
+                    ));
+                }
             }
-        }
+            Ok(())
+        };
+        gemm_panel(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n);
+        gate("panel", &c)?;
+        gemm_tiled_with(
+            &MulKernel::Lut(AmSim::new(&lut)),
+            TileConfig::DEFAULT,
+            &a,
+            &b,
+            &mut c,
+            n,
+            n,
+            n,
+            1,
+        );
+        gate("tiled", &c)?;
+        gemm_tiled_threaded(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n, lanes);
+        gate("tiled_pool", &c)?;
 
         let timed = |strategy: &str, f: &mut dyn FnMut()| -> f64 {
             let r = bench_budget(strategy, 1, 3, budget, f);
             r.median_s()
         };
         let t_native = timed("native", &mut || {
-            gemm(&MulKernel::Native, &a, &b, &mut c, n, n, n);
+            gemm_panel(&MulKernel::Native, &a, &b, &mut c, n, n, n);
         });
         let t_direct = timed("direct_afm16", &mut || {
-            gemm(&MulKernel::Direct(model.as_ref()), &a, &b, &mut c, n, n, n);
+            gemm_panel(&MulKernel::Direct(model.as_ref()), &a, &b, &mut c, n, n, n);
         });
         let t_lut = timed("lut_afm16", &mut || {
-            gemm(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n);
+            gemm_panel(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n);
         });
         let t_scalar = timed("lut_scalar_dispatch", &mut || {
             gemm_scalar_reference(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n);
         });
         let t_pool = timed("lut_pool", &mut || {
-            gemm_threaded(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n, lanes);
+            gemm_panel_threaded(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n, lanes);
+        });
+        let t_native_tiled = timed("native_tiled", &mut || {
+            gemm_tiled_with(&MulKernel::Native, TileConfig::DEFAULT, &a, &b, &mut c, n, n, n, 1);
+        });
+        let t_direct_tiled = timed("direct_afm16_tiled", &mut || {
+            gemm_tiled_with(
+                &MulKernel::Direct(model.as_ref()),
+                TileConfig::DEFAULT,
+                &a,
+                &b,
+                &mut c,
+                n,
+                n,
+                n,
+                1,
+            );
+        });
+        let t_lut_tiled = timed("lut_afm16_tiled", &mut || {
+            gemm_tiled_with(
+                &MulKernel::Lut(AmSim::new(&lut)),
+                TileConfig::DEFAULT,
+                &a,
+                &b,
+                &mut c,
+                n,
+                n,
+                n,
+                1,
+            );
+        });
+        let t_tiled_pool = timed("lut_tiled_pool", &mut || {
+            gemm_tiled_threaded(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n, lanes);
         });
 
         for (strategy, t) in [
@@ -176,6 +242,10 @@ pub fn bench_gemm(
             ("lut_afm16", t_lut),
             ("lut_scalar_dispatch", t_scalar),
             ("lut_pool", t_pool),
+            ("native_tiled", t_native_tiled),
+            ("direct_afm16_tiled", t_direct_tiled),
+            ("lut_afm16_tiled", t_lut_tiled),
+            ("lut_tiled_pool", t_tiled_pool),
         ] {
             table.row(vec![
                 format!("{n}x{n}x{n}"),
@@ -193,18 +263,64 @@ pub fn bench_gemm(
                 ("vs_native", Json::num(t / t_native)),
             ]));
         }
-        if n == *sizes.last().unwrap() {
+        if n == last_size {
             headline_speedup = t_scalar / t_lut;
+            tiled_vs_panel = t_lut / t_lut_tiled;
+            // tile-size autotune probe (LUT path, single lane): gate each
+            // candidate geometry bit-exactly, then time it. DEFAULT was
+            // already gated and timed above (`lut_afm16_tiled`), so its
+            // measurement is reused rather than re-run.
+            for cfg in TileConfig::AUTOTUNE_CANDIDATES {
+                let t = if cfg == TileConfig::DEFAULT {
+                    t_lut_tiled
+                } else {
+                    gemm_tiled_with(
+                        &MulKernel::Lut(AmSim::new(&lut)),
+                        cfg,
+                        &a,
+                        &b,
+                        &mut c,
+                        n,
+                        n,
+                        n,
+                        1,
+                    );
+                    gate(&format!("tiled mc{} kc{} nc{}", cfg.mc, cfg.kc, cfg.nc), &c)?;
+                    timed(&format!("autotune mc{} kc{} nc{}", cfg.mc, cfg.kc, cfg.nc), &mut || {
+                        gemm_tiled_with(
+                            &MulKernel::Lut(AmSim::new(&lut)),
+                            cfg,
+                            &a,
+                            &b,
+                            &mut c,
+                            n,
+                            n,
+                            n,
+                            1,
+                        );
+                    })
+                };
+                autotune.push(Json::obj(vec![
+                    ("mc", Json::num(cfg.mc as f64)),
+                    ("kc", Json::num(cfg.kc as f64)),
+                    ("nc", Json::num(cfg.nc as f64)),
+                    ("seconds_median", Json::num(t)),
+                ]));
+                if best_cfg.map_or(true, |(bt, _)| t < bt) {
+                    best_cfg = Some((t, cfg));
+                }
+            }
         }
     }
 
+    let (best_t, best) = best_cfg.expect("autotune probed at least one config");
     let record = Json::obj(vec![
-        ("schema", Json::str("approxtrain/bench_gemm/v1")),
+        ("schema", Json::str("approxtrain/bench_gemm/v2")),
         (
             "description",
             Json::str(
                 "CPU GEMM time per call: native vs direct functional-model vs AMSim LUT \
-                 (paper Fig 6 configurations on the ATxC substrate)",
+                 (paper Fig 6 configurations on the ATxC substrate), panel vs tiled kernels",
             ),
         ),
         ("multiplier", Json::str("afm16")),
@@ -219,6 +335,23 @@ pub fn bench_gemm(
             Json::arr(sizes.iter().map(|&s| Json::num(s as f64))),
         ),
         ("lut_batched_speedup_vs_scalar_dispatch", Json::num(headline_speedup)),
+        ("lut_tiled_speedup_vs_panel", Json::num(tiled_vs_panel)),
+        (
+            "autotune",
+            Json::obj(vec![
+                ("size", Json::num(last_size as f64)),
+                ("candidates", Json::Arr(autotune)),
+                (
+                    "best",
+                    Json::obj(vec![
+                        ("mc", Json::num(best.mc as f64)),
+                        ("kc", Json::num(best.kc as f64)),
+                        ("nc", Json::num(best.nc as f64)),
+                        ("seconds_median", Json::num(best_t)),
+                    ]),
+                ),
+            ]),
+        ),
         ("records", Json::Arr(records)),
     ]);
     let payload = record.to_string();
@@ -239,9 +372,12 @@ pub fn bench_gemm(
     }
     let mut md = table.to_markdown();
     md.push_str(&format!(
-        "Batched LUT panels vs per-element dispatch at {max}: {speed:.2}x\n\n",
-        max = sizes.last().unwrap(),
-        speed = headline_speedup
+        "Batched LUT panels vs per-element dispatch at {last_size}: {headline_speedup:.2}x\n"
+    ));
+    md.push_str(&format!(
+        "Tiled vs panel LUT kernel at {last_size}: {tiled_vs_panel:.2}x \
+         (autotune best: mc={} kc={} nc={})\n\n",
+        best.mc, best.kc, best.nc
     ));
     Ok(md)
 }
@@ -258,6 +394,7 @@ pub fn fig6(engine: &mut Engine, results_dir: &Path, size: usize, quick: bool) -
     let b: Vec<f32> = (0..n * n).map(|_| rng.range(-1.0, 1.0)).collect();
     let lut = MantissaLut::load(&engine.manifest().dir.join("luts/afm16.lut"))
         .map_err(|e| anyhow!("{e}"))?;
+    lut.validate().map_err(|e| anyhow!("loaded afm16 LUT failed validation: {e}"))?;
 
     let time_artifact = |engine: &mut Engine, name: &str, with_lut: bool| -> Result<f64> {
         engine.prepare(name)?;
@@ -726,6 +863,7 @@ pub fn fig12(engine: &mut Engine, results_dir: &Path, quick: bool) -> Result<Str
     let b: Vec<f32> = (0..n * n).map(|_| rng.range(-1.0, 1.0)).collect();
     let lut = MantissaLut::load(&engine.manifest().dir.join("luts/afm16.lut"))
         .map_err(|e| anyhow!("{e}"))?;
+    lut.validate().map_err(|e| anyhow!("loaded afm16 LUT failed validation: {e}"))?;
 
     // ApproxTrain path: mantissa-LUT artifact
     let name = format!("gemm{n}_lut");

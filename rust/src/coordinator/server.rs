@@ -79,10 +79,11 @@ pub fn serve(
     max_wait: Duration,
 ) -> Result<Stats> {
     // Warm the persistent kernel worker pool before the serving loop so
-    // first-request latency never includes thread spawning; all batched
-    // CPU kernel work behind the forward pass shares this pool across
-    // batches.
-    let _pool_width = crate::util::threads::global().width();
+    // first-request latency never includes thread spawning, and
+    // pre-allocate the per-lane pack buffers of the tiled GEMM (best
+    // effort); all batched CPU kernel work behind the forward pass shares
+    // this pool across batches.
+    crate::kernels::gemm::warm_tiled();
     let mut stats = Stats::default();
     loop {
         // collect up to `batch` requests, waiting at most max_wait after

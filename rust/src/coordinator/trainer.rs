@@ -58,8 +58,10 @@ impl<'e> Trainer<'e> {
         // Spawn the persistent kernel worker pool up front: every GEMM of
         // the CPU fallback/oracle path (and the experiment harness's ATxC
         // timings) reuses it, so no per-step thread spawning ever lands in
-        // a timed training step.
-        let _pool_width = crate::util::threads::global().width();
+        // a timed training step. warm_tiled additionally pre-allocates the
+        // per-lane pack buffers of the tiled GEMM (best effort) so first-
+        // step latency excludes those allocations too.
+        crate::kernels::gemm::warm_tiled();
         let train_art = engine
             .manifest()
             .find(&cfg.model, "train", &cfg.mode)
@@ -94,6 +96,12 @@ impl<'e> Trainer<'e> {
             } else {
                 MantissaLut::generate(model.as_ref())
             };
+            // a structurally invalid table would silently corrupt every
+            // simulated multiply (AmSim elides its bounds check on the
+            // strength of these invariants) — fail loudly instead
+            table
+                .validate()
+                .map_err(|e| anyhow!("LUT for {} failed validation: {e}", cfg.mult))?;
             Some(table.entries)
         } else {
             None

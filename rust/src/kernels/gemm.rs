@@ -1,45 +1,97 @@
 //! GEMM kernel — the paper's workhorse (§VI-D "GEMM kernel").
 //!
 //! The CUDA version fetches 16x16 tiles of both operands into on-chip
-//! shared memory; the CPU analog is cache blocking: pack a `BK x BN` panel
-//! of `B` once per tile row and walk `A` rows through it, accumulating in
-//! FP32. The multiply itself is pluggable ([`MulKernel`]) and the inner
-//! loop runs on the batched [`MulBackend`] panel ops, so strategy dispatch
-//! is paid once per packed panel column instead of once per multiply —
-//! the AMSim path becomes a tight LUT-gather loop, the native path a
-//! plain FMA loop. [`gemm_scalar_reference`] preserves the old
-//! per-element-dispatch implementation as the bench baseline and the
-//! bit-exactness oracle.
+//! shared memory; the CPU analog is the hierarchical cache-blocked kernel
+//! [`gemm_tiled`]: `A` is packed into `MC x KC` row-panels and `B` into
+//! `KC x NC` column-panels (reusable per-thread buffers, see
+//! [`super::with_pack_buffers`]), so the batched [`MulBackend`] panel ops
+//! — and in particular the AMSim LUT-gather loop — stream over contiguous
+//! memory instead of striding through `B`. The output is partitioned into
+//! a 2D grid of `MC x NC` tiles scheduled over the persistent worker pool
+//! ([`crate::util::threads`]) with work-stealing over a shared tile queue
+//! (the pool's atomic chunk cursor); every tile owns a disjoint rectangle
+//! of `C`, so results are deterministic for any lane count.
 //!
-//! Threading goes through the persistent pool in [`crate::util::threads`]
-//! (row-blocks over lanes, the coarse-grained parallelism axis of the
-//! CUDA grid); per-call `thread::scope` spawning is gone from the hot
-//! path. Results are bit-identical for any thread count: each output row
-//! is computed by exactly one lane with the same per-row arithmetic.
+//! ## The accumulation contract
+//!
+//! Every GEMM path in this module computes each output element with a
+//! **single running FP32 accumulator, adding products in ascending
+//! contraction (`k`) order** — cache blocks continue the accumulator via
+//! [`MulBackend::dot_panel_acc`] instead of reducing block-local partial
+//! sums. FP addition is not associative, so this is what makes the
+//! result *independent of blocking*: [`gemm_tiled`] is bit-identical to
+//! the per-element scalar oracle [`gemm_scalar_reference`] for **all
+//! three strategies** (native included — same op sequence, and rustc
+//! neither reassociates nor FMA-contracts f32 arithmetic), at every tile
+//! size and thread count. `tests/batched_vs_scalar.rs` and the in-module
+//! property tests enforce this.
+//!
+//! The pre-tiling row-sliced path is kept as [`gemm_panel`] /
+//! [`gemm_panel_threaded`]: same contract, no `A` packing, 1D row-block
+//! threading — the bench's "panel vs tiled" comparison partner.
 
-use super::{MulBackend, MulKernel};
+use super::{with_pack_buffers, MulBackend, MulKernel};
 use crate::util::threads::{self, SendMutPtr};
 
-/// Cache-block sizes. 64x64 f32 panels are 16 KiB — two fit in a typical
-/// 32 KiB L1D the way two 16x16 tiles fit in a CUDA SM's shared memory.
-pub const BM: usize = 64;
+/// Cache-block sizes of the row-sliced [`gemm_panel`] path. 64x64 f32
+/// panels are 16 KiB — two fit in a typical 32 KiB L1D the way two 16x16
+/// tiles fit in a CUDA SM's shared memory.
 pub const BN: usize = 64;
 pub const BK: usize = 64;
 
 /// MAC-count threshold above which [`gemm_auto`] fans out over the pool.
-/// Below it, panel packing + chunk handoff costs more than it saves.
+/// Below it, panel packing + tile handoff costs more than it saves.
 pub const AUTO_THREAD_MACS: usize = 1 << 18;
 
-/// `c[M,N] = a[M,K] * b[K,N]` (row-major, C overwritten), multiplications
-/// routed through `mul`, accumulation in FP32.
-pub fn gemm(mul: &MulKernel, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    gemm_threaded(mul, a, b, c, m, k, n, 1);
+/// Tile geometry of the hierarchical cache-blocked [`gemm_tiled`] path:
+/// `A` row-panels are `mc x kc`, `B` column-panels `kc x nc`, and the
+/// output is computed in `mc x nc` tiles.
+///
+/// Thanks to the running-accumulator contract (module docs) the choice
+/// only affects speed, never a single output bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
 }
 
-/// [`gemm`] that picks its own thread count: the persistent pool's full
+impl TileConfig {
+    /// Default geometry: a 64x128 `A` panel and a 128x64 `B` panel are
+    /// 32 KiB each (both L2-resident; one 128-element `B` column is 512
+    /// bytes, comfortably L1-resident under the gather loop).
+    pub const DEFAULT: TileConfig = TileConfig { mc: 64, kc: 128, nc: 64 };
+
+    /// Geometries probed by the bench autotune (`bench-gemm` records the
+    /// fastest into `BENCH_gemm.json`). Bit-exactness is unaffected by
+    /// the choice; only cache behaviour differs per machine.
+    pub const AUTOTUNE_CANDIDATES: [TileConfig; 5] = [
+        TileConfig { mc: 32, kc: 64, nc: 32 },
+        TileConfig { mc: 64, kc: 64, nc: 64 },
+        TileConfig::DEFAULT,
+        TileConfig { mc: 64, kc: 256, nc: 64 },
+        TileConfig { mc: 128, kc: 128, nc: 128 },
+    ];
+
+    fn assert_valid(&self) {
+        assert!(
+            self.mc > 0 && self.kc > 0 && self.nc > 0,
+            "tile dims must be positive: {self:?}"
+        );
+    }
+}
+
+/// `c[M,N] = a[M,K] * b[K,N]` (row-major, C overwritten), multiplications
+/// routed through `mul`, accumulation in FP32. Single-lane tiled kernel
+/// with the default [`TileConfig`].
+pub fn gemm(mul: &MulKernel, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_tiled(mul, a, b, c, m, k, n);
+}
+
+/// [`gemm`] that picks its own parallelism: the persistent pool's full
 /// width for large problems, single-lane for small ones. The layers
 /// (conv/dense) call this so every model forward/backward shares the same
-/// warm pool.
+/// warm pool and the same tiled hot path.
 pub fn gemm_auto(
     mul: &MulKernel,
     a: &[f32],
@@ -51,14 +103,212 @@ pub fn gemm_auto(
 ) {
     let lanes = threads::global().width();
     let big = m.saturating_mul(k).saturating_mul(n) >= AUTO_THREAD_MACS;
-    gemm_threaded(mul, a, b, c, m, k, n, if big { lanes } else { 1 });
+    let threads = if big { lanes } else { 1 };
+    gemm_tiled_with(mul, TileConfig::DEFAULT, a, b, c, m, k, n, threads);
 }
 
-/// Threaded variant: output row-blocks are distributed over `threads`
-/// lanes of the persistent worker pool (the coarse-grained parallelism
-/// axis of the CUDA grid). Bit-identical to the single-threaded result
-/// for every strategy and thread count.
-pub fn gemm_threaded(
+/// Single-lane cache-blocked GEMM with the default [`TileConfig`].
+pub fn gemm_tiled(
+    mul: &MulKernel,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm_tiled_with(mul, TileConfig::DEFAULT, a, b, c, m, k, n, 1);
+}
+
+/// Cache-blocked GEMM with the default [`TileConfig`], fanned out over
+/// the persistent pool when `threads > 1`.
+pub fn gemm_tiled_threaded(
+    mul: &MulKernel,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    gemm_tiled_with(mul, TileConfig::DEFAULT, a, b, c, m, k, n, threads);
+}
+
+/// The hierarchical cache-blocked GEMM. `threads <= 1` runs inline. At
+/// `threads >= ` the pool width, every `MC x NC` output tile is its own
+/// queue entry drained by all lanes plus the submitting thread
+/// (work-stealing: fast lanes naturally take more tiles); a smaller
+/// `threads` caps concurrency by splitting the tile range into that many
+/// chunks, so at most `threads` lanes execute. Scheduling never affects
+/// output: bit-identical to [`gemm_scalar_reference`] for every
+/// strategy, tile geometry and lane count — see the module-level
+/// accumulation contract.
+pub fn gemm_tiled_with(
+    mul: &MulKernel,
+    cfg: TileConfig,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    assert_eq!(c.len(), m * n, "C shape");
+    cfg.assert_valid();
+    c.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let tile_cols = n.div_ceil(cfg.nc);
+    let tiles = m.div_ceil(cfg.mc) * tile_cols;
+    let base = SendMutPtr(c.as_mut_ptr());
+    let threads = threads.max(1).min(tiles);
+    if threads == 1 {
+        for t in 0..tiles {
+            tile_into(mul, cfg, a, b, base, m, k, n, t, tile_cols);
+        }
+        return;
+    }
+    // at full width, chunk = one tile (the finest-grained stealing queue);
+    // below it, `threads` chunks bound how many lanes can pick up work
+    let pool = threads::global();
+    let chunks = if threads >= pool.width() { tiles } else { threads };
+    pool.run_chunks(tiles, chunks, |_, t0, t1| {
+        for t in t0..t1 {
+            tile_into(mul, cfg, a, b, base, m, k, n, t, tile_cols);
+        }
+    });
+}
+
+/// Compute one `MC x NC` output tile. For each `KC` block of the
+/// contraction dimension, the `A` rows and `B` columns of the block are
+/// packed into this thread's reusable buffers (the CUDA "shared-memory
+/// fetch"), then the batched dot walks both packed panels with stride 1,
+/// continuing each output element's running accumulator.
+///
+/// Deliberate trade-off: each tile packs its own operand panels, so a
+/// `B` panel is re-packed once per tile *row* (and an `A` panel once per
+/// tile *column*) — ~`1/mc + 1/nc` of the MAC count in cheap copies.
+/// The payoff is that tiles stay fully independent (no shared packed
+/// panel, no synchronization), which is what lets the scheduler hand
+/// them out as a free-form work-stealing queue.
+#[allow(clippy::too_many_arguments)]
+fn tile_into(
+    mul: &MulKernel,
+    cfg: TileConfig,
+    a: &[f32],
+    b: &[f32],
+    c: SendMutPtr,
+    m: usize,
+    k: usize,
+    n: usize,
+    tile: usize,
+    tile_cols: usize,
+) {
+    let i0 = (tile / tile_cols) * cfg.mc;
+    let i1 = (i0 + cfg.mc).min(m);
+    let j0 = (tile % tile_cols) * cfg.nc;
+    let j1 = (j0 + cfg.nc).min(n);
+    let (ih, jw) = (i1 - i0, j1 - j0);
+    with_pack_buffers(cfg.mc * cfg.kc, cfg.kc * cfg.nc, |apack, bpack| {
+        for k0 in (0..k).step_by(cfg.kc) {
+            let kn = (k0 + cfg.kc).min(k);
+            let kw = kn - k0;
+            // pack the A row-panel: kw contiguous elements per tile row
+            for i in 0..ih {
+                let src = (i0 + i) * k;
+                apack[i * kw..(i + 1) * kw].copy_from_slice(&a[src + k0..src + kn]);
+            }
+            // pack the B column-panel transposed: each output column's kw
+            // elements become contiguous, so the gather loop is stride-1
+            // on both operands
+            for j in 0..jw {
+                for kk in 0..kw {
+                    bpack[j * kw + kk] = b[(k0 + kk) * n + j0 + j];
+                }
+            }
+            for i in 0..ih {
+                let a_row = &apack[i * kw..(i + 1) * kw];
+                // SAFETY: this row segment (row i0+i, cols j0..j1) lies
+                // inside the tile's rectangle. Tiles partition C into
+                // disjoint rectangles, the pool's chunk cursor dispenses
+                // each tile index to exactly one lane, and run_chunks
+                // blocks until every tile completes — so no two live
+                // `&mut` slices ever overlap while `c` is borrowed.
+                let c_row =
+                    unsafe { std::slice::from_raw_parts_mut(c.0.add((i0 + i) * n + j0), jw) };
+                for (jj, c_val) in c_row.iter_mut().enumerate() {
+                    *c_val = mul.dot_panel_acc(*c_val, a_row, &bpack[jj * kw..(jj + 1) * kw]);
+                }
+            }
+        }
+    });
+}
+
+/// Warm-up: fan one rendezvous chunk per pool lane so each lane
+/// allocates its thread-local pack buffers for the default
+/// [`TileConfig`] before the first timed step. Without the rendezvous
+/// the submitting thread would drain all the no-op chunks before the
+/// parked workers even wake, leaving their buffers unallocated until
+/// the first real (timed) tile. Called from the trainer and the
+/// batching server right after they touch the global pool.
+pub fn warm_tiled() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    // Serialize rendezvous jobs: two *concurrent* warms on the shared
+    // global pool could otherwise each pin a subset of the lanes and
+    // wait on the other forever (worker channels can receive the two
+    // jobs in crossed orders). One warm at a time always completes:
+    // every worker eventually drains its queue down to this job.
+    static WARM_LOCK: Mutex<()> = Mutex::new(());
+    let _guard = WARM_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let pool = threads::global();
+    let lanes = pool.width();
+    let cfg = TileConfig::DEFAULT;
+    let arrived = AtomicUsize::new(0);
+    pool.run_chunks(lanes, lanes, |_, _, _| {
+        with_pack_buffers(cfg.mc * cfg.kc, cfg.kc * cfg.nc, |_, _| {});
+        // Hold this chunk until every lane has claimed one, so exactly
+        // one chunk runs on each distinct lane (otherwise the submitting
+        // thread drains the whole no-op queue before workers wake). The
+        // wait is normally worker wake-up latency (microseconds); the
+        // iteration bound turns any unforeseen schedule into a benign
+        // partial warm instead of a hang.
+        arrived.fetch_add(1, Ordering::SeqCst);
+        let mut spins = 0u32;
+        while arrived.load(Ordering::SeqCst) < lanes && spins < 100_000 {
+            std::thread::yield_now();
+            spins += 1;
+        }
+    });
+}
+
+/// Row-sliced panel GEMM — the pre-tiling hot path, kept as the bench's
+/// comparison partner for [`gemm_tiled`]. Packs only `B` (per `BK x BN`
+/// block, re-packed once per row-slice) and walks `A` in place. Same
+/// running-accumulator contract, so it is also bit-identical to
+/// [`gemm_scalar_reference`].
+pub fn gemm_panel(
+    mul: &MulKernel,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm_panel_threaded(mul, a, b, c, m, k, n, 1);
+}
+
+/// [`gemm_panel`] with output row-blocks distributed over `threads` lanes
+/// of the persistent pool (the 1D threading scheme [`gemm_tiled_with`]
+/// replaces). Bit-identical to the single-threaded result for every
+/// strategy and thread count.
+pub fn gemm_panel_threaded(
     mul: &MulKernel,
     a: &[f32],
     b: &[f32],
@@ -92,8 +342,9 @@ pub fn gemm_threaded(
 
 /// Blocked GEMM of global rows `[m0, m1)` written into a C sub-slice that
 /// starts at row `m0`. The B panel `[k0..kn, j0..jn]` is packed
-/// contiguously (the CUDA "shared-memory fetch") and transposed so the
-/// inner `dot_panel` walks both operands with stride 1.
+/// contiguously and transposed so the inner dot walks both operands with
+/// stride 1; each output element's accumulator is continued across `BK`
+/// blocks (`dot_panel_acc`), preserving the crate-wide ascending-k order.
 fn gemm_rows_into(
     mul: &MulKernel,
     a: &[f32],
@@ -120,27 +371,23 @@ fn gemm_rows_into(
                 let c_row = &mut c_block[(i - m0) * n + j0..(i - m0) * n + jn];
                 for (jj, c_val) in c_row.iter_mut().enumerate() {
                     let b_col = &b_panel[jj * kw..jj * kw + kw];
-                    *c_val += mul.dot_panel(a_row, b_col);
+                    *c_val = mul.dot_panel_acc(*c_val, a_row, b_col);
                 }
             }
         }
     }
 }
 
-/// Per-element-dispatch reference: identical blocking and accumulation
-/// order, but every multiply goes through the scalar [`MulKernel::mul`]
-/// enum dispatch with none of the panel hoisting/unrolling.
+/// The per-element-dispatch oracle: a naive row-major triple loop where
+/// every multiply goes through the scalar [`MulKernel::mul`] enum
+/// dispatch and every output element is one running FP32 accumulator
+/// over ascending `k`. This *defines* the accumulation order of the
+/// crate-wide contract (module docs); [`gemm_panel`] and [`gemm_tiled`]
+/// must reproduce it bit for bit.
 ///
-/// Scope note for the bench record: the pre-panel GEMM already hoisted
-/// dispatch once per packed column (via the old `MulKernel::dot`), so
-/// this is *not* a faithful replay of the old GEMM — it is the fully
-/// unamortized per-multiply dispatch cost that the AdaPT-style argument
-/// is about, and that the old dense weight-gradient inner loop
-/// (`row[o] += mul.mul(..)`) actually paid. Kept deliberately:
-///
-/// * benches measure the dispatch-amortization headroom against it
-///   (`BENCH_gemm.json`, strategy `lut_scalar_dispatch`);
-/// * `tests/batched_vs_scalar.rs` uses it as the bit-exactness oracle.
+/// Doubles as the bench baseline (`BENCH_gemm.json`, strategy
+/// `lut_scalar_dispatch`): unamortized per-multiply dispatch with no
+/// cache blocking — the AdaPT-style cost the batched tiled panels close.
 pub fn gemm_scalar_reference(
     mul: &MulKernel,
     a: &[f32],
@@ -157,31 +404,13 @@ pub fn gemm_scalar_reference(
     if m == 0 || n == 0 || k == 0 {
         return;
     }
-    let mut b_panel = vec![0.0f32; BK * BN];
-    for j0 in (0..n).step_by(BN) {
-        let jn = (j0 + BN).min(n);
-        for k0 in (0..k).step_by(BK) {
-            let kn = (k0 + BK).min(k);
-            let kw = kn - k0;
-            for j in j0..jn {
-                for kk in k0..kn {
-                    b_panel[(j - j0) * kw + (kk - k0)] = b[kk * n + j];
-                }
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += mul.mul(a[i * k + kk], b[kk * n + j]);
             }
-            for i in 0..m {
-                let a_row = &a[i * k + k0..i * k + kn];
-                let c_row = &mut c[i * n + j0..i * n + jn];
-                for (jj, c_val) in c_row.iter_mut().enumerate() {
-                    let b_col = &b_panel[jj * kw..jj * kw + kw];
-                    // per-element dispatch + the same two-level sequential
-                    // accumulation as dot_panel
-                    let mut acc = 0.0f32;
-                    for t in 0..kw {
-                        acc += mul.mul(a_row[t], b_col[t]);
-                    }
-                    *c_val += acc;
-                }
-            }
+            c[i * n + j] = acc;
         }
     }
 }
@@ -209,6 +438,10 @@ mod tests {
         c
     }
 
+    fn rand_vec(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.range(-2.0, 2.0)).collect()
+    }
+
     #[test]
     fn native_matches_naive() {
         let mut rng = Pcg32::seeded(21);
@@ -219,13 +452,66 @@ mod tests {
             gemm(&MulKernel::Native, &a, &b, &mut c, m, k, n);
             let want = naive_gemm(&a, &b, m, k, n);
             for i in 0..m * n {
-                assert!(
-                    (c[i] - want[i]).abs() <= 1e-4 * want[i].abs().max(1.0),
+                assert_eq!(
+                    c[i].to_bits(),
+                    want[i].to_bits(),
                     "({m},{k},{n}) idx {i}: {} vs {}",
                     c[i],
                     want[i]
                 );
             }
+        }
+    }
+
+    /// Smoke version of the acceptance contract (the full shape x
+    /// geometry sweep lives in `tests/batched_vs_scalar.rs`): bit-identity
+    /// to the scalar oracle for all three strategies at a degenerate and
+    /// a block-straddling shape, with degenerate and oversized tiles.
+    #[test]
+    fn every_path_matches_scalar_reference_bitwise() {
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let shapes = [(5, 17, 9), (21, 65, 19)];
+        let configs = [
+            TileConfig { mc: 3, kc: 5, nc: 2 },
+            TileConfig::DEFAULT,
+            TileConfig { mc: 256, kc: 512, nc: 256 },
+        ];
+        for &(m, k, n) in &shapes {
+            let mut rng = Pcg32::seeded(2100 + (m * k * n) as u64);
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            for mul in [
+                MulKernel::Native,
+                MulKernel::Direct(model.as_ref()),
+                MulKernel::Lut(AmSim::new(&lut)),
+            ] {
+                let mut want = vec![0.0f32; m * n];
+                gemm_scalar_reference(&mul, &a, &b, &mut want, m, k, n);
+                let mut got = vec![0.0f32; m * n];
+                gemm_panel(&mul, &a, &b, &mut got, m, k, n);
+                assert_bits_eq(&got, &want, &format!("panel {} ({m},{k},{n})", mul.describe()));
+                for cfg in configs {
+                    gemm_tiled_with(&mul, cfg, &a, &b, &mut got, m, k, n, 1);
+                    assert_bits_eq(
+                        &got,
+                        &want,
+                        &format!("tiled {cfg:?} {} ({m},{k},{n})", mul.describe()),
+                    );
+                }
+            }
+        }
+    }
+
+    fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+        for i in 0..got.len() {
+            assert_eq!(
+                got[i].to_bits(),
+                want[i].to_bits(),
+                "{what} idx {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
         }
     }
 
@@ -274,7 +560,7 @@ mod tests {
     }
 
     #[test]
-    fn threaded_pool_matches_single_thread_bitwise() {
+    fn tiled_pool_matches_single_lane_bitwise() {
         let model = registry::by_name("afm16").unwrap();
         let lut = MantissaLut::generate(model.as_ref());
         let mut rng = Pcg32::seeded(24);
@@ -283,16 +569,19 @@ mod tests {
             (0..m * k).map(|_| quantize_mantissa(rng.range(-2.0, 2.0), 7)).collect();
         let b: Vec<f32> =
             (0..k * n).map(|_| quantize_mantissa(rng.range(-2.0, 2.0), 7)).collect();
+        // a small-tile config so the threaded run has plenty of tiles to
+        // race over even on a narrow pool
+        let cfg = TileConfig { mc: 8, kc: 16, nc: 8 };
         for mul in [
             MulKernel::Native,
             MulKernel::Direct(model.as_ref()),
             MulKernel::Lut(AmSim::new(&lut)),
         ] {
             let mut c1 = vec![0.0f32; m * n];
-            gemm_threaded(&mul, &a, &b, &mut c1, m, k, n, 1);
+            gemm_tiled_with(&mul, cfg, &a, &b, &mut c1, m, k, n, 1);
             for threads in [2, 3, 8, 64] {
                 let mut ct = vec![0.0f32; m * n];
-                gemm_threaded(&mul, &a, &b, &mut ct, m, k, n, threads);
+                gemm_tiled_with(&mul, cfg, &a, &b, &mut ct, m, k, n, threads);
                 for i in 0..m * n {
                     assert_eq!(
                         c1[i].to_bits(),
@@ -301,6 +590,26 @@ mod tests {
                         mul.describe()
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_pool_matches_single_thread_bitwise() {
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let mut rng = Pcg32::seeded(26);
+        let (m, k, n) = (37, 41, 29);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mul = MulKernel::Lut(AmSim::new(&lut));
+        let mut c1 = vec![0.0f32; m * n];
+        gemm_panel_threaded(&mul, &a, &b, &mut c1, m, k, n, 1);
+        for threads in [2, 3, 8, 64] {
+            let mut ct = vec![0.0f32; m * n];
+            gemm_panel_threaded(&mul, &a, &b, &mut ct, m, k, n, threads);
+            for i in 0..m * n {
+                assert_eq!(c1[i].to_bits(), ct[i].to_bits(), "threads={threads} idx {i}");
             }
         }
     }
@@ -322,9 +631,17 @@ mod tests {
     }
 
     #[test]
+    fn warm_tiled_is_idempotent() {
+        warm_tiled();
+        warm_tiled();
+    }
+
+    #[test]
     fn empty_dims() {
         let mut c = vec![0.0f32; 0];
         gemm(&MulKernel::Native, &[], &[], &mut c, 0, 5, 0);
+        gemm_panel(&MulKernel::Native, &[], &[], &mut c, 0, 5, 0);
         gemm_scalar_reference(&MulKernel::Native, &[], &[], &mut c, 0, 5, 0);
+        gemm_tiled_with(&MulKernel::Native, TileConfig::DEFAULT, &[], &[], &mut c, 0, 5, 0, 4);
     }
 }

@@ -1,29 +1,45 @@
 //! Matrix–vector multiplication kernel for the dense layer (paper §VI-C):
-//! "shared-memory-based tiling is superfluous for a 1-D vector", so the
-//! dense layer gets its own simpler kernel instead of the GEMM kernel.
-//! Batched over samples because the coordinator feeds mini-batches.
+//! "shared-memory-based tiling is superfluous for a 1-D vector", so small
+//! dense problems get their own simpler kernel instead of the GEMM
+//! kernel. Batched over samples because the coordinator feeds
+//! mini-batches — and once a mini-batch is large enough the problem *is*
+//! a GEMM, so every dense entry point falls back to the tiled
+//! cache-blocked [`gemm_auto`] above [`DENSE_GEMM_MIN_MACS`].
 //!
 //! All inner loops run on the batched [`MulBackend`] panel ops: row dots
 //! through `dot_panel`, the weight-gradient rank-1 update through
 //! `fma_row` (strategy dispatch and the broadcast operand's decomposition
-//! hoisted out of the per-element loop). Bit-identical to the scalar
-//! per-element reference — see `tests/batched_vs_scalar.rs`.
+//! hoisted out of the per-element loop). Both regimes follow the
+//! crate-wide accumulation contract (one running FP32 accumulator,
+//! ascending contraction order, `mul(activation, weight)` operand order),
+//! so the matvec path and the GEMM fallback are bit-identical to each
+//! other and to the scalar per-element reference — see
+//! `tests/batched_vs_scalar.rs`.
 
-use super::{MulBackend, MulKernel};
+use super::gemm::gemm_auto;
+use super::{transpose_into, with_scratch, MulBackend, MulKernel};
 
-/// `y[o] = sum_i w[o, i] * x[i]` — one sample. `w` is row-major `[out, in]`.
+/// MAC count above which the dense kernels route to the tiled GEMM
+/// instead of per-row matvec dots (the packing overhead amortizes and
+/// the 2D-parallel tiling engages).
+pub const DENSE_GEMM_MIN_MACS: usize = 1 << 16;
+
+/// `y[o] = sum_i x[i] * w[o, i]` — one sample. `w` is row-major
+/// `[out, in]`. Products are `mul(x, w)` (activation first), matching the
+/// GEMM fallback's operand order.
 pub fn matvec(mul: &MulKernel, w: &[f32], x: &[f32], y: &mut [f32]) {
     let n_in = x.len();
     let n_out = y.len();
     assert_eq!(w.len(), n_in * n_out, "W shape");
     for (o, y_val) in y.iter_mut().enumerate() {
-        *y_val = mul.dot_panel(&w[o * n_in..(o + 1) * n_in], x);
+        *y_val = mul.dot_panel(x, &w[o * n_in..(o + 1) * n_in]);
     }
 }
 
 /// Batched forward: `y[b, o] = sum_i x[b, i] * w[i, o]` with `w` stored
-/// `[in, out]` (the L2 JAX convention). Internally transposes `w` once so
-/// the inner loop is the contiguous [`matvec`].
+/// `[in, out]` (the L2 JAX convention). Large batches go straight to the
+/// tiled GEMM (`x` is already the GEMM `A`, `w` the GEMM `B`); small ones
+/// transpose `w` once so the inner loop is the contiguous [`matvec`].
 pub fn dense_forward(
     mul: &MulKernel,
     x: &[f32],
@@ -36,21 +52,26 @@ pub fn dense_forward(
     assert_eq!(x.len(), batch * n_in);
     assert_eq!(w.len(), n_in * n_out);
     assert_eq!(y.len(), batch * n_out);
+    if batch * n_in * n_out >= DENSE_GEMM_MIN_MACS {
+        gemm_auto(mul, x, w, y, batch, n_in, n_out);
+        return;
+    }
     // transpose to [out, in] for unit-stride dots (the "memory coalescing"
-    // concern of the paper, CPU edition)
-    let mut wt = vec![0.0f32; w.len()];
-    for i in 0..n_in {
-        for o in 0..n_out {
-            wt[o * n_in + i] = w[i * n_out + o];
+    // concern of the paper, CPU edition); the scratch is recycled across
+    // calls so steady-state forward passes stay allocation-free
+    with_scratch(w.len(), |wt| {
+        transpose_into(w, n_in, n_out, wt);
+        for b in 0..batch {
+            matvec(mul, wt, &x[b * n_in..(b + 1) * n_in], &mut y[b * n_out..(b + 1) * n_out]);
         }
-    }
-    for b in 0..batch {
-        matvec(mul, &wt, &x[b * n_in..(b + 1) * n_in], &mut y[b * n_out..(b + 1) * n_out]);
-    }
+    });
 }
 
 /// Dense weight gradient: `dw[i, o] = sum_b x[b, i] * dy[b, o]`
-/// (paper §VI-C.1: outer product accumulated over the batch).
+/// (paper §VI-C.1: outer product accumulated over the batch). Large
+/// problems transpose `x` once and run the tiled GEMM `dw = x^T dy`; the
+/// ascending-batch accumulation and `mul(x, dy)` operand order match the
+/// `fma_row` path bit for bit.
 pub fn dense_weight_grad(
     mul: &MulKernel,
     x: &[f32],
@@ -63,6 +84,14 @@ pub fn dense_weight_grad(
     assert_eq!(x.len(), batch * n_in);
     assert_eq!(dy.len(), batch * n_out);
     assert_eq!(dw.len(), n_in * n_out);
+    if batch * n_in * n_out >= DENSE_GEMM_MIN_MACS {
+        // scratch, not a fresh Vec: this runs on every training step
+        with_scratch(x.len(), |xt| {
+            transpose_into(x, batch, n_in, xt);
+            gemm_auto(mul, xt, dy, dw, n_in, batch, n_out);
+        });
+        return;
+    }
     dw.fill(0.0);
     for b in 0..batch {
         let xb = &x[b * n_in..(b + 1) * n_in];
@@ -75,7 +104,9 @@ pub fn dense_weight_grad(
 }
 
 /// Dense input gradient: `dx[b, i] = sum_o dy[b, o] * w[i, o]`
-/// (paper §VI-C.2: the transposition is implicit in the indexing).
+/// (paper §VI-C.2: the transposition is implicit in the indexing). Large
+/// problems transpose `w` once and run the tiled GEMM `dx = dy w^T`;
+/// products are `mul(dy, w)` in ascending-`o` order in both regimes.
 pub fn dense_input_grad(
     mul: &MulKernel,
     dy: &[f32],
@@ -88,11 +119,19 @@ pub fn dense_input_grad(
     assert_eq!(dy.len(), batch * n_out);
     assert_eq!(w.len(), n_in * n_out);
     assert_eq!(dx.len(), batch * n_in);
+    if batch * n_in * n_out >= DENSE_GEMM_MIN_MACS {
+        // scratch, not a fresh Vec: this runs on every training step
+        with_scratch(w.len(), |wt| {
+            transpose_into(w, n_in, n_out, wt);
+            gemm_auto(mul, dy, wt, dx, batch, n_out, n_in);
+        });
+        return;
+    }
     for b in 0..batch {
         let dyb = &dy[b * n_out..(b + 1) * n_out];
         let dxb = &mut dx[b * n_in..(b + 1) * n_in];
         for (i, dx_val) in dxb.iter_mut().enumerate() {
-            *dx_val = mul.dot_panel(&w[i * n_out..(i + 1) * n_out], dyb);
+            *dx_val = mul.dot_panel(dyb, &w[i * n_out..(i + 1) * n_out]);
         }
     }
 }
@@ -152,7 +191,10 @@ mod tests {
     }
 
     #[test]
-    fn dense_forward_matches_gemm() {
+    fn dense_forward_matches_gemm_bitwise() {
+        // the matvec regime shares the GEMM's operand order and
+        // accumulation order, so even this small-batch shape (below the
+        // GEMM-fallback threshold) matches the tiled kernel bit for bit
         let mut rng = Pcg32::seeded(42);
         let (batch, n_in, n_out) = (4, 7, 6);
         let x: Vec<f32> = (0..batch * n_in).map(|_| rng.range(-1.0, 1.0)).collect();
@@ -162,7 +204,7 @@ mod tests {
         let mut y_gemm = vec![0.0f32; batch * n_out];
         crate::kernels::gemm::gemm(&MulKernel::Native, &x, &w, &mut y_gemm, batch, n_in, n_out);
         for i in 0..y.len() {
-            assert!((y[i] - y_gemm[i]).abs() < 1e-5);
+            assert_eq!(y[i].to_bits(), y_gemm[i].to_bits(), "idx {i}");
         }
     }
 }

@@ -15,11 +15,24 @@
 //! the compiler can treat as the cuBLAS stand-in baseline. Each panel op
 //! is bit-identical to its scalar per-element reference; see
 //! `tests/batched_vs_scalar.rs`.
+//!
+//! The GEMM hot path on top of the panel ops is the hierarchical
+//! cache-blocked kernel in [`gemm`] (`gemm_tiled`): `A` row-panels and
+//! `B` column-panels are packed into the reusable per-thread buffers of
+//! [`with_pack_buffers`] so LUT gathers stream over contiguous memory,
+//! and the output is partitioned into 2D tiles scheduled over the
+//! persistent worker pool. Accumulation follows one crate-wide contract —
+//! a single running FP32 accumulator per output element, products added
+//! in ascending contraction order — so every blocking/threading choice is
+//! bit-identical to the per-element scalar oracle
+//! ([`gemm::gemm_scalar_reference`]).
 pub mod gemm;
 pub mod im2col;
 pub mod matvec;
 pub mod pool;
 pub mod transpose_reverse;
+
+use std::cell::Cell;
 
 use crate::amsim::AmSim;
 use crate::mult::ApproxMul;
@@ -67,12 +80,26 @@ impl<'a> MulKernel<'a> {
 /// this for all three strategies). What batching buys is *dispatch
 /// amortization*: the strategy `match` runs once per panel, not once per
 /// multiply.
+///
+/// [`MulBackend::dot_panel_acc`] is the blocking-independence primitive:
+/// it *continues* an accumulation from a caller-supplied running value,
+/// so a dot split across cache blocks of any size reproduces the exact
+/// add sequence of an unsplit dot. That is what lets the tiled GEMM claim
+/// bit-identity to the scalar oracle at every tile size.
 pub trait MulBackend {
     /// `out[i] = mul(a[i], b[i])` over a contiguous panel.
     fn mul_panel(&self, a: &[f32], b: &[f32], out: &mut [f32]);
 
-    /// `sum_i mul(a[i], b[i])` with sequential FP32 accumulation.
-    fn dot_panel(&self, a: &[f32], b: &[f32]) -> f32;
+    /// Continue a sequential FP32 accumulation: returns
+    /// `init + mul(a[0], b[0]) + mul(a[1], b[1]) + …` with the adds
+    /// applied strictly in ascending index order.
+    fn dot_panel_acc(&self, init: f32, a: &[f32], b: &[f32]) -> f32;
+
+    /// `sum_i mul(a[i], b[i])` with sequential FP32 accumulation
+    /// starting from `0.0`.
+    fn dot_panel(&self, a: &[f32], b: &[f32]) -> f32 {
+        self.dot_panel_acc(0.0, a, b)
+    }
 
     /// `acc[j] += mul(x, row[j])` — the rank-1-update inner loop, with the
     /// broadcast operand's decomposition hoisted out of the loop.
@@ -97,13 +124,13 @@ impl MulBackend for MulKernel<'_> {
         }
     }
 
-    fn dot_panel(&self, a: &[f32], b: &[f32]) -> f32 {
+    fn dot_panel_acc(&self, init: f32, a: &[f32], b: &[f32]) -> f32 {
         debug_assert_eq!(a.len(), b.len());
         match self {
             // native: plain sequential FMA loop — the baseline every
             // slowdown ratio is measured against
             MulKernel::Native => {
-                let mut acc = 0.0;
+                let mut acc = init;
                 for i in 0..a.len() {
                     acc += a[i] * b[i];
                 }
@@ -114,7 +141,7 @@ impl MulBackend for MulKernel<'_> {
             // unroll 4-wide so the calls pipeline, keep the adds ordered
             MulKernel::Direct(m) => {
                 let n = a.len();
-                let mut acc = 0.0f32;
+                let mut acc = init;
                 let mut i = 0;
                 while i + 4 <= n {
                     let p0 = m.mul(a[i], b[i]);
@@ -133,7 +160,7 @@ impl MulBackend for MulKernel<'_> {
                 }
                 acc
             }
-            MulKernel::Lut(sim) => sim.dot(a, b),
+            MulKernel::Lut(sim) => sim.dot_acc(init, a, b),
         }
     }
 
@@ -151,6 +178,79 @@ impl MulBackend for MulKernel<'_> {
                 }
             }
             MulKernel::Lut(sim) => sim.fma_row(acc, x, row),
+        }
+    }
+}
+
+/// Reusable per-thread packing buffers for the tiled GEMM: one `A`
+/// row-panel (`MC x KC`) and one `B` column-panel (`KC x NC`).
+#[derive(Default)]
+struct PackBuffers {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+thread_local! {
+    /// Every pool worker (and the submitting thread) keeps its own pack
+    /// buffers, so tile packing never allocates on the steady-state hot
+    /// path. Stored as a takeable `Cell` rather than a `RefCell`: a
+    /// re-entrant kernel call on the same thread (a layer running inside
+    /// another parallel region) just sees an empty slot and pays one
+    /// allocation instead of panicking on a double borrow.
+    static PACK_BUFFERS: Cell<Option<Box<PackBuffers>>> = const { Cell::new(None) };
+}
+
+/// Run `f` with this thread's packing buffers grown to at least
+/// (`a_len`, `b_len`) elements. The buffers are recycled across calls on
+/// the same thread; contents are unspecified on entry (callers pack
+/// before they read).
+pub fn with_pack_buffers<R>(
+    a_len: usize,
+    b_len: usize,
+    f: impl FnOnce(&mut [f32], &mut [f32]) -> R,
+) -> R {
+    let mut bufs = PACK_BUFFERS.with(|c| c.take()).unwrap_or_default();
+    if bufs.a.len() < a_len {
+        bufs.a.resize(a_len, 0.0);
+    }
+    if bufs.b.len() < b_len {
+        bufs.b.resize(b_len, 0.0);
+    }
+    let r = f(&mut bufs.a[..a_len], &mut bufs.b[..b_len]);
+    PACK_BUFFERS.with(|c| c.set(Some(bufs)));
+    r
+}
+
+thread_local! {
+    /// Per-thread scratch for operand transposes (dense-layer fallbacks).
+    /// Separate from [`PACK_BUFFERS`]: the transpose is alive *across* a
+    /// nested tiled-GEMM call, which takes the pack buffers itself.
+    static SCRATCH: Cell<Option<Vec<f32>>> = const { Cell::new(None) };
+}
+
+/// Run `f` with this thread's scratch buffer grown to at least `len`
+/// elements. Recycled across calls; contents unspecified on entry
+/// (callers must fully overwrite what they read). Re-entrant calls fall
+/// back to a fresh allocation, like [`with_pack_buffers`].
+pub fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    let mut buf = SCRATCH.with(|c| c.take()).unwrap_or_default();
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    let r = f(&mut buf[..len]);
+    SCRATCH.with(|c| c.set(Some(buf)));
+    r
+}
+
+/// `dst[c * rows + r] = src[r * cols + c]` — transpose a row-major
+/// `rows x cols` matrix into `dst` (which becomes row-major
+/// `cols x rows`). Shared by the dense-kernel fallbacks.
+pub fn transpose_into(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    assert_eq!(src.len(), rows * cols);
+    assert_eq!(dst.len(), rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            dst[c * rows + r] = src[r * cols + c];
         }
     }
 }
@@ -230,6 +330,66 @@ mod tests {
             pad: 1,
         };
         assert_eq!((g.out_h(), g.out_w()), (4, 4));
+    }
+
+    #[test]
+    fn pack_buffers_recycle_and_nest() {
+        // first call sizes the buffers…
+        with_pack_buffers(8, 4, |a, b| {
+            assert_eq!((a.len(), b.len()), (8, 4));
+            a[7] = 1.0;
+            // …a nested call on the same thread gets an independent
+            // (freshly allocated) pair instead of panicking
+            with_pack_buffers(2, 2, |na, nb| {
+                assert_eq!((na.len(), nb.len()), (2, 2));
+                na[0] = 9.0;
+            });
+        });
+        // the outer pair is recycled: a smaller request reuses it
+        with_pack_buffers(4, 2, |a, b| {
+            assert_eq!((a.len(), b.len()), (4, 2));
+        });
+    }
+
+    #[test]
+    fn scratch_recycles_and_nests() {
+        with_scratch(6, |s| {
+            assert_eq!(s.len(), 6);
+            s[5] = 3.0;
+            with_scratch(2, |inner| {
+                assert_eq!(inner.len(), 2);
+                inner[0] = 1.0;
+            });
+        });
+        with_scratch(3, |s| assert_eq!(s.len(), 3));
+    }
+
+    #[test]
+    fn dot_panel_acc_continues_sequential_accumulation() {
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let kernels = [
+            MulKernel::Native,
+            MulKernel::Direct(model.as_ref()),
+            MulKernel::Lut(crate::amsim::AmSim::new(&lut)),
+        ];
+        let a: Vec<f32> = (0..13).map(|i| 0.37 * i as f32 - 1.9).collect();
+        let b: Vec<f32> = (0..13).map(|i| -0.11 * i as f32 + 0.8).collect();
+        for mul in &kernels {
+            // splitting the dot at any point must reproduce the unsplit
+            // add sequence bit for bit (the tiled-GEMM contract)
+            let whole = mul.dot_panel(&a, &b);
+            for split in 0..=a.len() {
+                let head = mul.dot_panel_acc(0.0, &a[..split], &b[..split]);
+                let got = mul.dot_panel_acc(head, &a[split..], &b[split..]);
+                assert_eq!(
+                    got.to_bits(),
+                    whole.to_bits(),
+                    "{} split={split}",
+                    mul.describe()
+                );
+            }
+        }
     }
 
     #[test]

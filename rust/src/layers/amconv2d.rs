@@ -3,10 +3,14 @@
 //! dilation in the weight gradient and fused pad+dilate plus a
 //! transpose-and-reverse pre-pass in the preceding-layer gradient.
 //!
-//! All three GEMMs go through [`gemm_auto`]: the batched
-//! [`crate::kernels::MulBackend`] panel inner loops, fanned out over the
-//! persistent worker pool when the im2col matrices are large enough.
-//! Outputs are bit-identical regardless of lane count.
+//! All three GEMMs go through [`gemm_auto`]: the hierarchical
+//! cache-blocked tiled kernel (packed `A` row-panels / `B` column-panels,
+//! batched [`crate::kernels::MulBackend`] panel inner loops), 2D-tile
+//! parallel over the persistent worker pool when the im2col matrices are
+//! large enough. Outputs are bit-identical regardless of lane count and
+//! tile geometry, and bit-identical to
+//! [`crate::kernels::gemm::gemm_scalar_reference`] run over the same
+//! im2col matrices (`tests/conv_grads.rs`).
 
 use crate::kernels::gemm::gemm_auto;
 use crate::kernels::im2col::{im2col_forward, im2col_plg, im2col_weight_grad};

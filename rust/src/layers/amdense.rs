@@ -1,5 +1,10 @@
 //! AMDENSE — the approximate Dense (fully-connected) op (paper §VI-C),
-//! built on the matrix-vector kernel rather than the GEMM kernel.
+//! built on the matrix-vector kernel for small mini-batches. Above
+//! [`crate::kernels::matvec::DENSE_GEMM_MIN_MACS`] the matvec entry
+//! points route to the tiled cache-blocked GEMM
+//! ([`crate::kernels::gemm::gemm_tiled`]) with 2D-parallel tiling over
+//! the persistent pool — bit-identical to the matvec regime by the
+//! crate-wide accumulation contract.
 
 use crate::kernels::matvec::{dense_forward, dense_input_grad, dense_weight_grad};
 use crate::kernels::MulKernel;

@@ -32,13 +32,20 @@
 //!
 //! The kernels consume these through the batched
 //! [`kernels::MulBackend`] panel operations (`mul_panel` / `dot_panel` /
-//! `fma_row`): strategy dispatch is paid once per contiguous panel, so
-//! the AMSim path is a tight LUT-gather loop with hoisted shift/mask and
-//! the native path a plain FMA loop — while staying bit-identical to the
-//! per-element scalar reference (enforced by `tests/batched_vs_scalar.rs`).
-//! Threaded GEMM runs on the persistent worker pool in [`util::threads`].
-//! `cargo bench -- gemm` (or `approxtrain bench-gemm`) times all three
-//! strategies and records `BENCH_gemm.json`; methodology in
+//! `dot_panel_acc` / `fma_row`): strategy dispatch is paid once per
+//! contiguous panel, so the AMSim path is a tight LUT-gather loop with
+//! hoisted shift/mask and the native path a plain FMA loop. The GEMM hot
+//! path is the hierarchical cache-blocked tiled kernel
+//! ([`kernels::gemm::gemm_tiled`]): packed `A` row-panels / `B`
+//! column-panels in reusable per-thread buffers, 2D output tiles
+//! scheduled work-stealing over the persistent worker pool in
+//! [`util::threads`]. One accumulation contract (running FP32
+//! accumulator, ascending contraction order) keeps every path
+//! bit-identical to the per-element scalar oracle at any tile geometry
+//! and thread count (enforced by `tests/batched_vs_scalar.rs` and
+//! `tests/golden_mults.rs`). `cargo bench -- gemm` (or `approxtrain
+//! bench-gemm`) times all strategies, panel vs tiled, plus a tile-size
+//! autotune probe, and records `BENCH_gemm.json`; methodology in
 //! `docs/BENCHMARKS.md`.
 //!
 //! ## Module map (`rust/src/`)

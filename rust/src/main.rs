@@ -87,6 +87,8 @@ fn gen_lut(args: &Args) -> Result<()> {
     let name = args.opt("mult").context("--mult required")?;
     let model = registry::by_name(name).with_context(|| format!("unknown multiplier {name}"))?;
     let lut = MantissaLut::generate(model.as_ref());
+    lut.validate()
+        .map_err(|e| anyhow::anyhow!("generated {name} LUT failed validation: {e}"))?;
     let out = args.opt_or("out", &format!("{name}.lut"));
     lut.save(Path::new(&out)).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
@@ -179,6 +181,8 @@ fn serve(args: &Args) -> Result<()> {
     let raw = Json::parse(&std::fs::read_to_string(dir.join("manifest.json"))?)?;
     let params = init_params(&art, 42, &raw)?;
     let lut = MantissaLut::load(&dir.join("luts/afm16.lut")).map_err(|e| anyhow::anyhow!("{e}"))?;
+    lut.validate()
+        .map_err(|e| anyhow::anyhow!("loaded afm16 LUT failed validation: {e}"))?;
     let x_spec = &art.inputs[art.input_indices(Role::Input)[0]];
     let batch = x_spec.shape[0];
     let image_elems = x_spec.elements() / batch;

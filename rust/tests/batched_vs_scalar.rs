@@ -1,15 +1,20 @@
-//! Property tests for the batched multiply backend: the panel kernels
-//! (GEMM / matvec / rank-1 update) must be *bit-identical* to the scalar
-//! `MulKernel::mul` per-element reference with sequential FP32
-//! accumulation — Direct and LUT exactly, Native modulo FP reassociation
-//! (in practice also exact, but the contract only promises a tolerance) —
-//! and the pool-threaded GEMM must equal the single-threaded one exactly
-//! for every strategy. Batching amortizes *dispatch*; it must never change
-//! *arithmetic*.
+//! Property tests for the batched multiply backend and the GEMM paths
+//! built on it. The crate-wide accumulation contract — one running FP32
+//! accumulator per output element, products added in ascending
+//! contraction order — makes **every** path (panel, tiled at any
+//! geometry, pool-threaded) *bit-identical* to the per-element scalar
+//! `MulKernel::mul` reference for **all three strategies**, native
+//! included: the op sequence is the same and rustc neither reassociates
+//! nor FMA-contracts f32 arithmetic. Batching amortizes *dispatch* and
+//! blocking improves *locality*; neither must ever change *arithmetic*.
 
 use approxtrain::amsim::AmSim;
-use approxtrain::kernels::gemm::{gemm, gemm_scalar_reference, gemm_threaded};
-use approxtrain::kernels::matvec::{dense_forward, dense_input_grad, dense_weight_grad};
+use approxtrain::kernels::gemm::{
+    gemm, gemm_panel, gemm_panel_threaded, gemm_scalar_reference, gemm_tiled_with, TileConfig,
+};
+use approxtrain::kernels::matvec::{
+    dense_forward, dense_input_grad, dense_weight_grad, DENSE_GEMM_MIN_MACS,
+};
 use approxtrain::kernels::{MulBackend, MulKernel};
 use approxtrain::lut::MantissaLut;
 use approxtrain::mult::registry;
@@ -19,52 +24,61 @@ fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.range(-2.0, 2.0)).collect()
 }
 
-/// Run `f` under all three strategies; `exact` says whether the comparison
-/// must be bitwise (Direct/LUT) or tolerance-based (Native).
-fn for_each_strategy(f: impl Fn(&MulKernel, bool, &str)) {
+/// Run `f` under all three strategies.
+fn for_each_strategy(f: impl Fn(&MulKernel, &str)) {
     let model = registry::by_name("afm16").unwrap();
     let lut = MantissaLut::generate(model.as_ref());
-    f(&MulKernel::Native, false, "native");
-    f(&MulKernel::Direct(model.as_ref()), true, "direct");
-    f(&MulKernel::Lut(AmSim::new(&lut)), true, "lut");
+    f(&MulKernel::Native, "native");
+    f(&MulKernel::Direct(model.as_ref()), "direct");
+    f(&MulKernel::Lut(AmSim::new(&lut)), "lut");
 }
 
-fn assert_same(got: &[f32], want: &[f32], exact: bool, what: &str) {
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
     assert_eq!(got.len(), want.len(), "{what}: length");
     for i in 0..got.len() {
-        if exact {
-            assert_eq!(
-                got[i].to_bits(),
-                want[i].to_bits(),
-                "{what} idx {i}: {} vs {}",
-                got[i],
-                want[i]
-            );
-        } else {
-            assert!(
-                (got[i] - want[i]).abs() <= 1e-5 * want[i].abs().max(1.0),
-                "{what} idx {i}: {} vs {}",
-                got[i],
-                want[i]
-            );
-        }
+        assert_eq!(
+            got[i].to_bits(),
+            want[i].to_bits(),
+            "{what} idx {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
     }
 }
 
 #[test]
-fn gemm_batched_equals_scalar_dispatch() {
-    // sizes straddling the BK=64 block boundary so the two-level
-    // accumulation is exercised across blocks
-    for (m, k, n) in [(1, 1, 1), (5, 17, 9), (33, 64, 20), (21, 65, 19), (16, 130, 24)] {
-        for_each_strategy(|mul, exact, name| {
+fn gemm_paths_equal_scalar_dispatch_at_every_tile_size() {
+    // shapes straddling the default block boundaries so accumulators are
+    // continued across blocks, plus tile geometries from degenerate to
+    // larger-than-matrix
+    let shapes = [(1, 1, 1), (5, 17, 9), (33, 64, 20), (21, 65, 19), (16, 130, 24)];
+    let configs = [
+        TileConfig { mc: 1, kc: 1, nc: 1 },
+        TileConfig { mc: 2, kc: 7, nc: 3 },
+        TileConfig { mc: 16, kc: 32, nc: 16 },
+        TileConfig::DEFAULT,
+        TileConfig { mc: 512, kc: 512, nc: 512 },
+    ];
+    for (m, k, n) in shapes {
+        for_each_strategy(|mul, name| {
             let mut rng = Pcg32::seeded(900 + (m * k * n) as u64);
             let a = rand_vec(&mut rng, m * k);
             let b = rand_vec(&mut rng, k * n);
-            let mut c = vec![0.0f32; m * n];
             let mut c_ref = vec![0.0f32; m * n];
-            gemm(mul, &a, &b, &mut c, m, k, n);
             gemm_scalar_reference(mul, &a, &b, &mut c_ref, m, k, n);
-            assert_same(&c, &c_ref, exact, &format!("gemm[{name}] ({m},{k},{n})"));
+            let mut c = vec![0.0f32; m * n];
+            gemm(mul, &a, &b, &mut c, m, k, n);
+            assert_bits(&c, &c_ref, &format!("gemm[{name}] ({m},{k},{n})"));
+            gemm_panel(mul, &a, &b, &mut c, m, k, n);
+            assert_bits(&c, &c_ref, &format!("gemm_panel[{name}] ({m},{k},{n})"));
+            for cfg in configs {
+                gemm_tiled_with(mul, cfg, &a, &b, &mut c, m, k, n, 1);
+                assert_bits(
+                    &c,
+                    &c_ref,
+                    &format!("gemm_tiled[{name}] {cfg:?} ({m},{k},{n})"),
+                );
+            }
         });
     }
 }
@@ -72,17 +86,21 @@ fn gemm_batched_equals_scalar_dispatch() {
 #[test]
 fn gemm_pool_threaded_equals_single_threaded() {
     let (m, k, n) = (43, 70, 31);
-    for_each_strategy(|mul, _exact, name| {
+    // small tiles so the pool has a deep queue to steal from
+    let cfg = TileConfig { mc: 8, kc: 16, nc: 8 };
+    for_each_strategy(|mul, name| {
         let mut rng = Pcg32::seeded(901);
         let a = rand_vec(&mut rng, m * k);
         let b = rand_vec(&mut rng, k * n);
         let mut c1 = vec![0.0f32; m * n];
-        gemm_threaded(mul, &a, &b, &mut c1, m, k, n, 1);
+        gemm_tiled_with(mul, cfg, &a, &b, &mut c1, m, k, n, 1);
         for threads in [2, 4, 7, 43] {
             let mut ct = vec![0.0f32; m * n];
-            gemm_threaded(mul, &a, &b, &mut ct, m, k, n, threads);
+            gemm_tiled_with(mul, cfg, &a, &b, &mut ct, m, k, n, threads);
             // thread count must never change a single bit, for ANY strategy
-            assert_same(&ct, &c1, true, &format!("gemm_threaded[{name}] t={threads}"));
+            assert_bits(&ct, &c1, &format!("gemm_tiled[{name}] t={threads}"));
+            gemm_panel_threaded(mul, &a, &b, &mut ct, m, k, n, threads);
+            assert_bits(&ct, &c1, &format!("gemm_panel_threaded[{name}] t={threads}"));
         }
     });
 }
@@ -90,16 +108,14 @@ fn gemm_pool_threaded_equals_single_threaded() {
 #[test]
 fn mul_panel_equals_elementwise_mul() {
     for n in [0usize, 1, 3, 4, 7, 64, 201] {
-        for_each_strategy(|mul, _exact, name| {
+        for_each_strategy(|mul, name| {
             let mut rng = Pcg32::seeded(902 + n as u64);
             let a = rand_vec(&mut rng, n);
             let b = rand_vec(&mut rng, n);
             let mut out = vec![0.0f32; n];
             mul.mul_panel(&a, &b, &mut out);
             let want: Vec<f32> = (0..n).map(|i| mul.mul(a[i], b[i])).collect();
-            // products themselves are always bitwise-identical, native
-            // included: there is no accumulation to reassociate
-            assert_same(&out, &want, true, &format!("mul_panel[{name}] n={n}"));
+            assert_bits(&out, &want, &format!("mul_panel[{name}] n={n}"));
         });
     }
 }
@@ -107,7 +123,7 @@ fn mul_panel_equals_elementwise_mul() {
 #[test]
 fn dot_panel_equals_sequential_scalar() {
     for n in [0usize, 1, 2, 3, 4, 5, 8, 63, 64, 65, 200] {
-        for_each_strategy(|mul, exact, name| {
+        for_each_strategy(|mul, name| {
             let mut rng = Pcg32::seeded(903 + n as u64);
             let a = rand_vec(&mut rng, n);
             let b = rand_vec(&mut rng, n);
@@ -116,74 +132,93 @@ fn dot_panel_equals_sequential_scalar() {
             for i in 0..n {
                 want += mul.mul(a[i], b[i]);
             }
-            assert_same(&[got], &[want], exact, &format!("dot_panel[{name}] n={n}"));
+            assert_bits(&[got], &[want], &format!("dot_panel[{name}] n={n}"));
+            // the seeded variant must continue an accumulation exactly
+            let split = n / 3;
+            let head = mul.dot_panel_acc(0.0, &a[..split], &b[..split]);
+            let cont = mul.dot_panel_acc(head, &a[split..], &b[split..]);
+            assert_bits(&[cont], &[want], &format!("dot_panel_acc[{name}] n={n}"));
         });
     }
 }
 
-#[test]
-fn dense_kernels_equal_scalar_reference() {
-    let (batch, n_in, n_out) = (5, 37, 23);
-    for_each_strategy(|mul, exact, name| {
-        let mut rng = Pcg32::seeded(904);
-        let x = rand_vec(&mut rng, batch * n_in);
-        let w = rand_vec(&mut rng, n_in * n_out);
-        let dy = rand_vec(&mut rng, batch * n_out);
-
-        // forward: reference mirrors the kernel's transpose-then-dot shape
-        let mut y = vec![0.0f32; batch * n_out];
-        dense_forward(mul, &x, &w, &mut y, batch, n_in, n_out);
-        let mut wt = vec![0.0f32; w.len()];
+/// Scalar references for the three dense kernels, in the kernels' operand
+/// order (`mul(activation, weight)` / `mul(x, dy)` / `mul(dy, w)`) and
+/// ascending-contraction accumulation. Both dense regimes — per-row
+/// matvec and the tiled-GEMM fallback — must reproduce these bit for bit.
+fn dense_refs(
+    mul: &MulKernel,
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    batch: usize,
+    n_in: usize,
+    n_out: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; batch * n_out];
+    for b in 0..batch {
+        for o in 0..n_out {
+            let mut acc = 0.0f32;
+            for i in 0..n_in {
+                acc += mul.mul(x[b * n_in + i], w[i * n_out + o]);
+            }
+            y[b * n_out + o] = acc;
+        }
+    }
+    let mut dw = vec![0.0f32; n_in * n_out];
+    for b in 0..batch {
         for i in 0..n_in {
             for o in 0..n_out {
-                wt[o * n_in + i] = w[i * n_out + o];
+                dw[i * n_out + o] += mul.mul(x[b * n_in + i], dy[b * n_out + o]);
             }
         }
-        let mut y_ref = vec![0.0f32; batch * n_out];
-        for b in 0..batch {
+    }
+    let mut dx = vec![0.0f32; batch * n_in];
+    for b in 0..batch {
+        for i in 0..n_in {
+            let mut acc = 0.0f32;
             for o in 0..n_out {
-                let mut acc = 0.0f32;
-                for i in 0..n_in {
-                    acc += mul.mul(wt[o * n_in + i], x[b * n_in + i]);
-                }
-                y_ref[b * n_out + o] = acc;
+                acc += mul.mul(dy[b * n_out + o], w[i * n_out + o]);
             }
+            dx[b * n_in + i] = acc;
         }
-        assert_same(&y, &y_ref, exact, &format!("dense_forward[{name}]"));
+    }
+    (y, dw, dx)
+}
 
-        // weight gradient: batched fma_row vs scalar rank-1 updates
-        let mut dw = vec![0.0f32; n_in * n_out];
-        dense_weight_grad(mul, &x, &dy, &mut dw, batch, n_in, n_out);
-        let mut dw_ref = vec![0.0f32; n_in * n_out];
-        for b in 0..batch {
-            for i in 0..n_in {
-                for o in 0..n_out {
-                    dw_ref[i * n_out + o] += mul.mul(x[b * n_in + i], dy[b * n_out + o]);
-                }
-            }
-        }
-        assert_same(&dw, &dw_ref, exact, &format!("dense_weight_grad[{name}]"));
+#[test]
+fn dense_kernels_equal_scalar_reference_in_both_regimes() {
+    // below DENSE_GEMM_MIN_MACS: matvec/fma_row regime; above: the tiled
+    // GEMM fallback. Both shapes run the identical reference.
+    let shapes = [(5usize, 37usize, 23usize), (40, 41, 41)];
+    assert!(shapes[0].0 * shapes[0].1 * shapes[0].2 < DENSE_GEMM_MIN_MACS);
+    assert!(shapes[1].0 * shapes[1].1 * shapes[1].2 >= DENSE_GEMM_MIN_MACS);
+    for (batch, n_in, n_out) in shapes {
+        for_each_strategy(|mul, name| {
+            let mut rng = Pcg32::seeded(904 + (batch * n_in) as u64);
+            let x = rand_vec(&mut rng, batch * n_in);
+            let w = rand_vec(&mut rng, n_in * n_out);
+            let dy = rand_vec(&mut rng, batch * n_out);
+            let (y_ref, dw_ref, dx_ref) = dense_refs(mul, &x, &w, &dy, batch, n_in, n_out);
 
-        // input gradient
-        let mut dx = vec![0.0f32; batch * n_in];
-        dense_input_grad(mul, &dy, &w, &mut dx, batch, n_in, n_out);
-        let mut dx_ref = vec![0.0f32; batch * n_in];
-        for b in 0..batch {
-            for i in 0..n_in {
-                let mut acc = 0.0f32;
-                for o in 0..n_out {
-                    acc += mul.mul(w[i * n_out + o], dy[b * n_out + o]);
-                }
-                dx_ref[b * n_in + i] = acc;
-            }
-        }
-        assert_same(&dx, &dx_ref, exact, &format!("dense_input_grad[{name}]"));
-    });
+            let mut y = vec![0.0f32; batch * n_out];
+            dense_forward(mul, &x, &w, &mut y, batch, n_in, n_out);
+            assert_bits(&y, &y_ref, &format!("dense_forward[{name}] b={batch}"));
+
+            let mut dw = vec![0.0f32; n_in * n_out];
+            dense_weight_grad(mul, &x, &dy, &mut dw, batch, n_in, n_out);
+            assert_bits(&dw, &dw_ref, &format!("dense_weight_grad[{name}] b={batch}"));
+
+            let mut dx = vec![0.0f32; batch * n_in];
+            dense_input_grad(mul, &dy, &w, &mut dx, batch, n_in, n_out);
+            assert_bits(&dx, &dx_ref, &format!("dense_input_grad[{name}] b={batch}"));
+        });
+    }
 }
 
 /// End-to-end: a whole conv layer (forward + both gradients) through the
-/// batched kernels under LUT vs Direct stays bit-identical — the paper's
-/// §VI footnote 2 validation, now running on the panel code path.
+/// tiled kernels under LUT vs Direct stays bit-identical — the paper's
+/// §VI footnote 2 validation, now running on the packed tiled code path.
 #[test]
 fn conv_layer_lut_equals_direct_through_batched_path() {
     use approxtrain::layers::amconv2d;
@@ -205,12 +240,12 @@ fn conv_layer_lut_equals_direct_through_batched_path() {
     let lut_k = MulKernel::Lut(AmSim::new(&lut));
     let y_d = amconv2d::forward(&direct, &x, &w, 2, 1);
     let y_l = amconv2d::forward(&lut_k, &x, &w, 2, 1);
-    assert_same(&y_l.data, &y_d.data, true, "conv forward");
+    assert_bits(&y_l.data, &y_d.data, "conv forward");
     let dy = q(&y_d.shape);
     let dw_d = amconv2d::weight_grad(&direct, &x, &dy, &w.shape, 2, 1);
     let dw_l = amconv2d::weight_grad(&lut_k, &x, &dy, &w.shape, 2, 1);
-    assert_same(&dw_l.data, &dw_d.data, true, "conv weight grad");
+    assert_bits(&dw_l.data, &dw_d.data, "conv weight grad");
     let dx_d = amconv2d::input_grad(&direct, &dy, &w, &x.shape, 2, 1);
     let dx_l = amconv2d::input_grad(&lut_k, &dy, &w, &x.shape, 2, 1);
-    assert_same(&dx_l.data, &dx_d.data, true, "conv input grad");
+    assert_bits(&dx_l.data, &dx_d.data, "conv input grad");
 }

@@ -1,0 +1,139 @@
+//! Checkpoint resume determinism: training interrupted by a
+//! save-to-disk / reload round trip must land on **bit-identical** final
+//! weights versus an uninterrupted run with the same `Pcg32` seed and the
+//! same batch stream. This is the invariant the Table IV cross-format
+//! machinery and the pruning flow (load, prune, retrain) rest on: a
+//! checkpoint is a *complete* capture of training state for the pure-SGD
+//! CPU nets, and the `.ckpt` container round-trips every f32 exactly.
+
+use approxtrain::amsim::AmSim;
+use approxtrain::kernels::MulKernel;
+use approxtrain::lut::MantissaLut;
+use approxtrain::mult::registry;
+use approxtrain::nn::checkpoint::Checkpoint;
+use approxtrain::nn::cpu_lenet::Lenet300;
+use approxtrain::tensor::Tensor;
+use approxtrain::util::rng::Pcg32;
+
+const N_IN: usize = 36;
+const CLASSES: usize = 10;
+const BATCH: usize = 16;
+const TOTAL_STEPS: usize = 8;
+const SPLIT_AT: usize = 4;
+
+/// Deterministic batch stream shared by both runs.
+fn batches(seed: u64) -> Vec<(Tensor, Vec<u32>)> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..TOTAL_STEPS)
+        .map(|_| {
+            let x = Tensor::from_vec(
+                &[BATCH, N_IN],
+                (0..BATCH * N_IN).map(|_| rng.range(-1.0, 1.0)).collect(),
+            );
+            let labels: Vec<u32> = (0..BATCH).map(|_| rng.below(CLASSES as u32)).collect();
+            (x, labels)
+        })
+        .collect()
+}
+
+fn params<'a>(net: &'a Lenet300) -> Vec<(&'static str, &'a Tensor)> {
+    vec![
+        ("w1", &net.w1),
+        ("b1", &net.b1),
+        ("w2", &net.w2),
+        ("b2", &net.b2),
+        ("w3", &net.w3),
+        ("b3", &net.b3),
+    ]
+}
+
+fn to_checkpoint(net: &Lenet300) -> Checkpoint {
+    let mut ckpt = Checkpoint::default();
+    for (name, t) in params(net) {
+        ckpt.insert(name, &t.shape, t.data.clone());
+    }
+    ckpt
+}
+
+fn restore(net: &mut Lenet300, ckpt: &Checkpoint) {
+    for (name, t) in [
+        ("w1", &mut net.w1),
+        ("b1", &mut net.b1),
+        ("w2", &mut net.w2),
+        ("b2", &mut net.b2),
+        ("w3", &mut net.w3),
+        ("b3", &mut net.b3),
+    ] {
+        let (shape, data) = ckpt.get(name).unwrap_or_else(|| panic!("missing {name}"));
+        assert_eq!(*shape, t.shape, "{name} shape");
+        t.data.clone_from(data);
+    }
+}
+
+#[test]
+fn resumed_training_is_bit_identical_to_uninterrupted() {
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    let mul = MulKernel::Lut(AmSim::new(&lut));
+    let data = batches(4242);
+    let seed = 77;
+    let lr = 0.05;
+
+    // run A: uninterrupted
+    let mut net_a = Lenet300::init(N_IN, CLASSES, seed);
+    for (x, labels) in &data {
+        net_a.train_step(&mul, x, labels, lr);
+    }
+
+    // run B: train to SPLIT_AT, checkpoint through disk, resume into a
+    // *differently-initialized* net (proves the restore overwrites
+    // everything), finish on the same batch stream
+    let mut net_b = Lenet300::init(N_IN, CLASSES, seed);
+    for (x, labels) in &data[..SPLIT_AT] {
+        net_b.train_step(&mul, x, labels, lr);
+    }
+    let path = std::env::temp_dir().join("approxtrain_resume_test/mid.ckpt");
+    to_checkpoint(&net_b).save(&path).unwrap();
+    drop(net_b);
+
+    let mut resumed = Lenet300::init(N_IN, CLASSES, seed + 999);
+    let ckpt = Checkpoint::load(&path).unwrap();
+    restore(&mut resumed, &ckpt);
+    for (x, labels) in &data[SPLIT_AT..] {
+        resumed.train_step(&mul, x, labels, lr);
+    }
+
+    for ((name, ta), (_, tb)) in params(&net_a).into_iter().zip(params(&resumed)) {
+        assert_eq!(ta.shape, tb.shape, "{name} shape");
+        for i in 0..ta.data.len() {
+            assert_eq!(
+                ta.data[i].to_bits(),
+                tb.data[i].to_bits(),
+                "{name}[{i}]: {} vs {} — resume diverged",
+                ta.data[i],
+                tb.data[i]
+            );
+        }
+    }
+}
+
+/// The checkpoint container must round-trip f32 payloads bit-exactly,
+/// including negative zero and values with no short decimal form.
+#[test]
+fn checkpoint_f32_roundtrip_is_exact() {
+    let mut ckpt = Checkpoint::default();
+    let vals = vec![
+        -0.0f32,
+        f32::MIN_POSITIVE,
+        1.0 + f32::EPSILON,
+        -3.141_592_7,
+        f32::MAX,
+        1e-40, // subnormal
+    ];
+    ckpt.insert("t", &[vals.len()], vals.clone());
+    let back = Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+    let (_, data) = back.get("t").unwrap();
+    for (i, (a, b)) in vals.iter().zip(data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "idx {i}");
+    }
+}

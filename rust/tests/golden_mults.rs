@@ -1,0 +1,258 @@
+//! Golden-vector bit-exactness suite for every tabulatable multiplier.
+//!
+//! For every registered multiplier with m <= 8, a structured operand grid
+//! (all exponent pairs at mantissa corners, the full mantissa x mantissa
+//! grid at boundary exponents, signed zeros, subnormals, the exp=254 +
+//! mantissa-carry overflow edge) is swept asserting that the three
+//! simulation paths agree **bit for bit**:
+//!
+//! 1. `AmSim::mul_bits` — Algorithm 2 over the generated LUT;
+//! 2. `mul_via_mantissa` — the direct functional model (ATxC);
+//! 3. the batched panel path (`MulBackend::mul_panel` for both the LUT
+//!    and Direct kernels) — the code the GEMM/conv/dense hot loops run.
+//!
+//! The single sanctioned difference: AMSim's flush-to-zero returns
+//! *unsigned* zero (Alg. 2 line 14) where the direct model keeps the
+//! product sign, so comparisons are modulo the sign of zero.
+//!
+//! AMSim's domain is finite operands (biased exponent fields 0..=254):
+//! Algorithm 2 has no Inf/NaN lanes, and an exp=255 operand would be
+//! treated as an ordinary huge exponent. Inf/NaN behaviour is therefore
+//! asserted against the *direct* model only (which delegates IEEE
+//! specials to hardware semantics) — see `direct_models_handle_ieee_specials`.
+
+use approxtrain::amsim::AmSim;
+use approxtrain::kernels::{MulBackend, MulKernel};
+use approxtrain::lut::MantissaLut;
+use approxtrain::mult::fpbits::{MANT_BITS, MANT_MASK};
+use approxtrain::mult::{registry, ApproxMul};
+
+/// Widest mantissa this suite sweeps exhaustively (m <= 8 keeps the full
+/// mantissa grid at 2^16 pairs per exponent pair).
+const MAX_GOLDEN_M: u32 = 8;
+
+fn golden_models() -> Vec<Box<dyn ApproxMul>> {
+    registry::names()
+        .iter()
+        .filter_map(|name| registry::by_name(name))
+        .filter(|m| m.mantissa_bits() <= MAX_GOLDEN_M)
+        .collect()
+}
+
+fn bits(sign: u32, exp: u32, mant: u32) -> u32 {
+    debug_assert!(sign <= 1 && exp <= 255 && mant <= MANT_MASK);
+    (sign << 31) | (exp << MANT_BITS) | mant
+}
+
+/// Representable m-bit mantissa fields at the corners of the range.
+fn mantissa_corners(m: u32) -> Vec<u32> {
+    let top = (1u32 << m) - 1;
+    let mut vals = vec![0, 1, top / 2, top.saturating_sub(1), top];
+    vals.sort_unstable();
+    vals.dedup();
+    vals.iter().map(|v| v << (MANT_BITS - m)).collect()
+}
+
+/// Equal bit patterns, treating +0.0 and -0.0 as equal (the sanctioned
+/// AMSim flush-to-zero sign difference).
+fn eq_mod_zero_sign(x: u32, y: u32) -> bool {
+    x == y || (x & 0x7FFF_FFFF == 0 && y & 0x7FFF_FFFF == 0)
+}
+
+/// The three-way golden check over a list of operand bit-pairs: scalar
+/// LUT vs scalar direct, then both batched panel kernels vs their scalar
+/// counterparts (in 4096-pair panels, the hot-loop shape).
+fn check_golden(name: &str, model: &dyn ApproxMul, lut: &MantissaLut, pairs: &[(u32, u32)]) {
+    let sim = AmSim::new(lut);
+    for &(ab, bb) in pairs {
+        let via_lut = sim.mul_bits(ab, bb);
+        let direct = model.mul(f32::from_bits(ab), f32::from_bits(bb)).to_bits();
+        assert!(
+            eq_mod_zero_sign(via_lut, direct),
+            "{name}: {:e} ({ab:#010x}) * {:e} ({bb:#010x}): lut {via_lut:#010x} != direct {direct:#010x}",
+            f32::from_bits(ab),
+            f32::from_bits(bb),
+        );
+    }
+    let lut_kernel = MulKernel::Lut(AmSim::new(lut));
+    let direct_kernel = MulKernel::Direct(model);
+    for chunk in pairs.chunks(4096) {
+        let av: Vec<f32> = chunk.iter().map(|&(a, _)| f32::from_bits(a)).collect();
+        let bv: Vec<f32> = chunk.iter().map(|&(_, b)| f32::from_bits(b)).collect();
+        let mut out = vec![0.0f32; chunk.len()];
+        lut_kernel.mul_panel(&av, &bv, &mut out);
+        for (i, &(ab, bb)) in chunk.iter().enumerate() {
+            assert_eq!(
+                out[i].to_bits(),
+                sim.mul_bits(ab, bb),
+                "{name}: batched LUT panel diverged from mul_bits at {ab:#010x} * {bb:#010x}"
+            );
+        }
+        direct_kernel.mul_panel(&av, &bv, &mut out);
+        for (i, (&(ab, bb), (&a, &b))) in
+            chunk.iter().zip(av.iter().zip(bv.iter())).enumerate()
+        {
+            assert_eq!(
+                out[i].to_bits(),
+                model.mul(a, b).to_bits(),
+                "{name}: batched Direct panel diverged from scalar mul at {ab:#010x} * {bb:#010x}"
+            );
+        }
+    }
+}
+
+/// All exponent pairs (1..=254 on each side) at mantissa corners — the
+/// flush-to-zero (`ea + eb - 127 <= 0`) and overflow (`>= 255`, with and
+/// without carry) boundaries are all crossed, for every model.
+#[test]
+fn all_exponent_pairs_at_mantissa_corners() {
+    for model in golden_models() {
+        let m = model.mantissa_bits();
+        let lut = MantissaLut::generate(model.as_ref());
+        // two corners keep the grid at 254^2 * 4 * 2 pairs per model;
+        // zero mantissa exercises no-carry, full mantissa forces the
+        // carry wherever the design produces one
+        let corners = [0u32, MANT_MASK & (MANT_MASK << (MANT_BITS - m))];
+        let mut pairs = Vec::with_capacity(254 * 254 * corners.len() * corners.len() * 2);
+        for ea in 1..=254u32 {
+            for eb in 1..=254u32 {
+                for &ma in &corners {
+                    for &mb in &corners {
+                        pairs.push((bits(0, ea, ma), bits(0, eb, mb)));
+                        pairs.push((bits(1, ea, ma), bits(0, eb, mb)));
+                    }
+                }
+            }
+        }
+        // densify at the boundary exponents: the full 5x5 mantissa-corner
+        // cross (both signs) where flush/overflow behaviour pivots
+        let dense_corners = mantissa_corners(m);
+        for (ea, eb) in
+            [(1u32, 1u32), (1, 126), (2, 125), (126, 127), (127, 127), (127, 128), (253, 254), (254, 254)]
+        {
+            for &ma in &dense_corners {
+                for &mb in &dense_corners {
+                    for (sa, sb) in [(0u32, 0u32), (1, 0), (1, 1)] {
+                        pairs.push((bits(sa, ea, ma), bits(sb, eb, mb)));
+                    }
+                }
+            }
+        }
+        check_golden(model.name(), model.as_ref(), &lut, &pairs);
+    }
+}
+
+/// The full m-bit mantissa x mantissa grid at boundary exponent pairs:
+/// mid-range (127,127), the flush boundary (1,127 — product exponent 1),
+/// and the overflow boundary (254,127 — exponent 254, so any mantissa
+/// carry must saturate to infinity, the Algorithm-2 edge case).
+#[test]
+fn full_mantissa_grid_at_boundary_exponents() {
+    for model in golden_models() {
+        let m = model.mantissa_bits();
+        let lut = MantissaLut::generate(model.as_ref());
+        let shift = MANT_BITS - m;
+        let mut pairs = Vec::with_capacity((1usize << (2 * m)) * 3);
+        for (ea, eb) in [(127u32, 127u32), (1, 127), (254, 127)] {
+            for ka in 0..(1u32 << m) {
+                for kb in 0..(1u32 << m) {
+                    pairs.push((bits(0, ea, ka << shift), bits(0, eb, kb << shift)));
+                }
+            }
+        }
+        check_golden(model.name(), model.as_ref(), &lut, &pairs);
+    }
+}
+
+/// Signed zeros, subnormals (which AMSim and the models both flush) and
+/// the exp=254 + carry overflow edge, against normal partners.
+#[test]
+fn special_operands_and_overflow_edge() {
+    for model in golden_models() {
+        let m = model.mantissa_bits();
+        let lut = MantissaLut::generate(model.as_ref());
+        let top_mant = MANT_MASK & (MANT_MASK << (MANT_BITS - m));
+        let specials = [
+            bits(0, 0, 0),             // +0.0
+            bits(1, 0, 0),             // -0.0
+            bits(0, 0, 1),             // smallest positive subnormal
+            bits(1, 0, top_mant),      // large negative subnormal
+            bits(0, 1, 0),             // smallest positive normal
+            bits(0, 254, top_mant),    // largest finite (m-bit)
+            bits(1, 254, top_mant),    // most negative finite (m-bit)
+            bits(0, 127, top_mant),    // just under 2.0
+            bits(1, 100, 1 << (MANT_BITS - m)),
+        ];
+        let mut pairs = Vec::new();
+        for &a in &specials {
+            for &b in &specials {
+                pairs.push((a, b));
+            }
+        }
+        check_golden(model.name(), model.as_ref(), &lut, &pairs);
+
+        // the documented Algorithm-2 deviation: exponent sum 254 plus a
+        // mantissa carry must saturate to +-inf (with the product sign),
+        // never assemble exp=255 with a nonzero (NaN) mantissa — on every
+        // path. Whether this operand pair carries is the model's own
+        // business, so ask its mantissa_product for the expected outcome.
+        let sim = AmSim::new(&lut);
+        let a = bits(0, 190, top_mant);
+        let b = bits(1, 191, top_mant); // exponent sum 190 + 191 - 127 = 254
+        let (carry, _) = model.mantissa_product(top_mant, top_mant);
+        for got in [
+            sim.mul_bits(a, b),
+            model.mul(f32::from_bits(a), f32::from_bits(b)).to_bits(),
+        ] {
+            let v = f32::from_bits(got);
+            assert!(!v.is_nan(), "{}: overflow edge produced NaN {got:#010x}", model.name());
+            if carry == 1 {
+                assert!(
+                    v.is_infinite() && v < 0.0,
+                    "{}: exp 254 + carry must saturate to -inf, got {v} ({got:#010x})",
+                    model.name()
+                );
+            } else {
+                assert!(
+                    v.is_finite(),
+                    "{}: exp 254 without carry must stay finite, got {v}",
+                    model.name()
+                );
+            }
+        }
+    }
+}
+
+/// Inf/NaN operands are outside AMSim's domain (module docs); the direct
+/// functional models delegate them to IEEE hardware semantics.
+#[test]
+fn direct_models_handle_ieee_specials() {
+    for model in golden_models() {
+        let name = model.name();
+        assert_eq!(model.mul(f32::INFINITY, 2.0), f32::INFINITY, "{name}");
+        assert_eq!(model.mul(f32::NEG_INFINITY, 2.0), f32::NEG_INFINITY, "{name}");
+        assert_eq!(model.mul(f32::INFINITY, -3.0), f32::NEG_INFINITY, "{name}");
+        assert!(model.mul(f32::INFINITY, 0.0).is_nan(), "{name}: inf*0");
+        assert!(model.mul(f32::NAN, 1.5).is_nan(), "{name}: nan*x");
+        assert!(model.mul(2.5, f32::NAN).is_nan(), "{name}: x*nan");
+    }
+}
+
+/// Every tabulatable registry multiplier yields a LUT with the full
+/// `2^(2m)` entry payload (`payload_bytes() == 4 * 2^(2m)`) that passes
+/// structural validation — the invariant `AmSim::new` relies on to elide
+/// its per-gather bounds check.
+#[test]
+fn registry_luts_have_full_payload_and_validate() {
+    for name in registry::names() {
+        if !registry::lut_able(name) {
+            continue;
+        }
+        let model = registry::by_name(name).unwrap();
+        let m = model.mantissa_bits();
+        let lut = MantissaLut::generate(model.as_ref());
+        assert_eq!(lut.len(), 1usize << (2 * m), "{name}: entry count");
+        assert_eq!(lut.payload_bytes(), 4usize << (2 * m), "{name}: payload bytes");
+        lut.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
