@@ -43,8 +43,15 @@ step "cargo test --release -q (full suite incl. integration, release mode)"
 # speed; running them optimized also exercises the code the benches ship
 cargo test --release -q || fail=1
 
-step "bench smoke (tiny sizes; does not touch the committed BENCH_gemm.json)"
+step "conv bit-exactness suite (release): implicit-GEMM == materialized == scalar oracle"
+# already part of the full release suite above, but pinned here explicitly
+# so the implicit-conv acceptance sweep can never silently drop out of the
+# release-mode pass
+cargo test --release -q --test conv_grads --test batched_vs_scalar || fail=1
+
+step "bench smoke (tiny sizes; does not touch the committed BENCH records)"
 cargo bench --bench paper_benches -- gemm --smoke || fail=1
+cargo bench --bench paper_benches -- conv --smoke || fail=1
 
 echo
 if [ "$fail" -ne 0 ]; then

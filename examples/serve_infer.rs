@@ -16,7 +16,6 @@ use approxtrain::nn::init::init_params;
 use approxtrain::runtime::artifact::Role;
 use approxtrain::runtime::executor::Engine;
 use approxtrain::util::json::Json;
-use approxtrain::util::stats::percentile;
 
 fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
@@ -66,19 +65,16 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
     let wall = t0.elapsed().as_secs_f64();
-    let lats = &stats.latencies_s;
     println!("served {} requests in {} batches over {:.2}s", stats.requests, stats.batches, wall);
     println!("throughput: {:.0} req/s", stats.requests as f64 / wall);
     println!(
-        "latency: p50 {:.1} ms | p90 {:.1} ms | p99 {:.1} ms",
-        percentile(lats, 50.0) * 1e3,
-        percentile(lats, 90.0) * 1e3,
-        percentile(lats, 99.0) * 1e3
+        "latency: p50 {:.1} ms | p90 {:.1} ms | p99 {:.1} ms (mean {:.1} ms, max {:.1} ms)",
+        stats.latency_percentile_s(50.0) * 1e3,
+        stats.latency_percentile_s(90.0) * 1e3,
+        stats.latency_percentile_s(99.0) * 1e3,
+        stats.mean_latency_s() * 1e3,
+        stats.max_latency_s() * 1e3
     );
-    println!(
-        "mean batch fill: {:.1}/{}",
-        stats.fills.iter().sum::<usize>() as f64 / stats.batches.max(1) as f64,
-        batch
-    );
+    println!("mean batch fill: {:.1}/{}", stats.mean_fill(), batch);
     Ok(())
 }

@@ -7,6 +7,7 @@
 //! cargo bench -- gemm         # CPU GEMM perf record -> results/BENCH_gemm.json
 //! cargo bench -- gemm --full  # ...and refresh the committed root BENCH_gemm.json
 //! cargo bench -- gemm --smoke # tiny CI smoke sizes (results/ only)
+//! cargo bench -- conv         # implicit vs materialized conv -> results/BENCH_conv.json
 //! cargo bench -- fig6         # one experiment
 //! cargo bench -- all --full   # full (slow) settings
 //! ```
@@ -50,8 +51,15 @@ fn main() -> anyhow::Result<()> {
         out.push_str(&exp::bench_gemm(results, size, quick || smoke, record_root)?);
     }
 
+    if wants("conv") {
+        // Implicit-GEMM conv vs the materialized-im2col route (pure CPU,
+        // bit-exactness-gated). Same root-record policy as `gemm`.
+        let record_root = which == "conv" && !smoke && !quick;
+        out.push_str(&exp::bench_conv(results, quick || smoke, record_root)?);
+    }
+
     if !artifacts.join("manifest.json").exists() {
-        println!("artifacts/ not built — only fig1/gemm available. Run `make artifacts`.");
+        println!("artifacts/ not built — only fig1/gemm/conv available. Run `make artifacts`.");
         print!("{out}");
         approxtrain::coordinator::report::write_result(results, "bench_report.md", &out)?;
         return Ok(());

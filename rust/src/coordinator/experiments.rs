@@ -357,18 +357,7 @@ pub fn bench_gemm(
     let payload = record.to_string();
     write_result(results_dir, "BENCH_gemm.json", &payload)?;
     if record_root {
-        // the committed record lives at the repo root. CARGO_MANIFEST_DIR
-        // is exactly that for the documented `cargo run`/`cargo bench`
-        // flows regardless of invocation cwd; an installed binary on a
-        // machine without the source tree falls back to the cwd.
-        let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
-        let root_record = if manifest_dir.is_dir() {
-            manifest_dir.join("BENCH_gemm.json")
-        } else {
-            Path::new("BENCH_gemm.json").to_path_buf()
-        };
-        std::fs::write(&root_record, &payload)
-            .map_err(|e| anyhow!("writing {}: {e}", root_record.display()))?;
+        super::report::write_root_record("BENCH_gemm.json", &payload)?;
     }
     let mut md = table.to_markdown();
     md.push_str(&format!(
@@ -378,6 +367,221 @@ pub fn bench_gemm(
         "Tiled vs panel LUT kernel at {last_size}: {tiled_vs_panel:.2}x \
          (autotune best: mc={} kc={} nc={})\n\n",
         best.mc, best.kc, best.nc
+    ));
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
+// BENCH_conv — implicit-GEMM conv vs materialized im2col (§VI-B fusion,
+// completed: not even the fused-index cols matrix is materialized)
+// ---------------------------------------------------------------------------
+
+/// Benchmark the three conv GEMMs (forward, weight-grad, preceding-layer
+/// grad) through the **implicit-GEMM** path — tiled panels packed
+/// straight from the NHWC tensors via the fused im2col indexing — against
+/// the kept materialized-im2col route, for the native and LUT strategies,
+/// emitting the `BENCH_conv.json` perf record.
+///
+/// Before any timing, every (geometry, strategy, op) is gated bit-exact:
+/// the implicit result must equal the materialized result to the last
+/// bit, so the record can never report a fast-but-wrong kernel (same
+/// policy as [`bench_gemm`]).
+pub fn bench_conv(results_dir: &Path, quick: bool, record_root: bool) -> Result<String> {
+    use crate::amsim::AmSim;
+    use crate::kernels::{Conv2dGeom, MulKernel};
+    use crate::layers::amconv2d;
+    use crate::util::json::Json;
+
+    let budget = if quick { 0.1 } else { 0.75 };
+    let geoms: Vec<(&str, Conv2dGeom)> = if quick {
+        vec![
+            (
+                "14x14x8_s1",
+                Conv2dGeom {
+                    batch: 4,
+                    in_h: 14,
+                    in_w: 14,
+                    in_c: 8,
+                    k_h: 3,
+                    k_w: 3,
+                    out_c: 16,
+                    stride: 1,
+                    pad: 1,
+                },
+            ),
+            (
+                "14x14x8_s2",
+                Conv2dGeom {
+                    batch: 4,
+                    in_h: 14,
+                    in_w: 14,
+                    in_c: 8,
+                    k_h: 3,
+                    k_w: 3,
+                    out_c: 16,
+                    stride: 2,
+                    pad: 1,
+                },
+            ),
+        ]
+    } else {
+        vec![
+            (
+                "28x28x8_s1",
+                Conv2dGeom {
+                    batch: 16,
+                    in_h: 28,
+                    in_w: 28,
+                    in_c: 8,
+                    k_h: 3,
+                    k_w: 3,
+                    out_c: 16,
+                    stride: 1,
+                    pad: 1,
+                },
+            ),
+            (
+                "28x28x8_s2",
+                Conv2dGeom {
+                    batch: 16,
+                    in_h: 28,
+                    in_w: 28,
+                    in_c: 8,
+                    k_h: 3,
+                    k_w: 3,
+                    out_c: 16,
+                    stride: 2,
+                    pad: 1,
+                },
+            ),
+        ]
+    };
+
+    let model = registry::by_name("afm16").ok_or_else(|| anyhow!("afm16 not registered"))?;
+    let lut = MantissaLut::generate(model.as_ref());
+    lut.validate().map_err(|e| anyhow!("generated afm16 LUT failed validation: {e}"))?;
+
+    let mut table = Table::new(
+        "BENCH_conv — implicit-GEMM conv vs materialized im2col",
+        &["geometry", "op", "strategy", "implicit", "materialized", "materialized/implicit"],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    let mut lut_speedups: Vec<f64> = Vec::new();
+    for (glabel, g) in &geoms {
+        let mut rng = Pcg32::seeded(2700);
+        let x = Tensor::from_vec(
+            &[g.batch, g.in_h, g.in_w, g.in_c],
+            (0..g.batch * g.in_h * g.in_w * g.in_c).map(|_| rng.range(-1.0, 1.0)).collect(),
+        );
+        let w = Tensor::from_vec(
+            &[g.k_h, g.k_w, g.in_c, g.out_c],
+            (0..g.k_h * g.k_w * g.in_c * g.out_c).map(|_| rng.range(-1.0, 1.0)).collect(),
+        );
+        let dy_len = g.batch * g.out_h() * g.out_w() * g.out_c;
+        let dy = Tensor::from_vec(
+            &[g.batch, g.out_h(), g.out_w(), g.out_c],
+            (0..dy_len).map(|_| rng.range(-1.0, 1.0)).collect(),
+        );
+        for (sname, mul) in [
+            ("native", MulKernel::Native),
+            ("lut_afm16", MulKernel::Lut(AmSim::new(&lut))),
+        ] {
+            // correctness gate: implicit == materialized, bit for bit
+            #[allow(clippy::type_complexity)]
+            let ops: [(&str, Box<dyn Fn() -> Tensor + '_>, Box<dyn Fn() -> Tensor + '_>); 3] = [
+                (
+                    "forward",
+                    Box::new(|| amconv2d::forward(&mul, &x, &w, g.stride, g.pad)),
+                    Box::new(|| amconv2d::forward_materialized(&mul, &x, &w, g.stride, g.pad)),
+                ),
+                (
+                    "weight_grad",
+                    Box::new(|| amconv2d::weight_grad(&mul, &x, &dy, &w.shape, g.stride, g.pad)),
+                    Box::new(|| {
+                        amconv2d::weight_grad_materialized(&mul, &x, &dy, &w.shape, g.stride, g.pad)
+                    }),
+                ),
+                (
+                    "input_grad",
+                    Box::new(|| amconv2d::input_grad(&mul, &dy, &w, &x.shape, g.stride, g.pad)),
+                    Box::new(|| {
+                        amconv2d::input_grad_materialized(&mul, &dy, &w, &x.shape, g.stride, g.pad)
+                    }),
+                ),
+            ];
+            for (op, implicit, materialized) in &ops {
+                let got = implicit();
+                let want = materialized();
+                for i in 0..want.len() {
+                    if got.data[i].to_bits() != want.data[i].to_bits() {
+                        return Err(anyhow!(
+                            "bench aborted: implicit {op} diverged from materialized \
+                             at {glabel}/{sname} idx {i}"
+                        ));
+                    }
+                }
+                let t_imp = bench_budget(&format!("{op}/implicit"), 1, 3, budget, || {
+                    std::hint::black_box(implicit());
+                })
+                .median_s();
+                let t_mat = bench_budget(&format!("{op}/materialized"), 1, 3, budget, || {
+                    std::hint::black_box(materialized());
+                })
+                .median_s();
+                table.row(vec![
+                    (*glabel).into(),
+                    (*op).into(),
+                    sname.into(),
+                    fmt_time(t_imp),
+                    fmt_time(t_mat),
+                    fmt_ratio(t_mat / t_imp),
+                ]);
+                for (route, t) in [("implicit", t_imp), ("materialized", t_mat)] {
+                    records.push(Json::obj(vec![
+                        ("geometry", Json::str(glabel)),
+                        ("batch", Json::num(g.batch as f64)),
+                        ("stride", Json::num(g.stride as f64)),
+                        ("pad", Json::num(g.pad as f64)),
+                        ("op", Json::str(op)),
+                        ("strategy", Json::str(sname)),
+                        ("route", Json::str(route)),
+                        ("seconds_median", Json::num(t)),
+                    ]));
+                }
+                if sname == "lut_afm16" {
+                    lut_speedups.push(t_mat / t_imp);
+                }
+            }
+        }
+    }
+    let headline = stats::geomean(&lut_speedups);
+    let record = Json::obj(vec![
+        ("schema", Json::str("approxtrain/bench_conv/v1")),
+        (
+            "description",
+            Json::str(
+                "conv forward/weight-grad/input-grad time per call: implicit-GEMM \
+                 (im2col fused into tiled-GEMM packing, no cols matrix) vs the \
+                 materialized im2col route (paper §VI-B fusion, completed)",
+            ),
+        ),
+        ("multiplier", Json::str("afm16")),
+        (
+            "provenance",
+            Json::str("measured in-process by approxtrain bench_conv on this machine"),
+        ),
+        ("quick", Json::Bool(quick)),
+        ("materialized_over_implicit_geomean_lut", Json::num(headline)),
+        ("records", Json::Arr(records)),
+    ]);
+    let payload = record.to_string();
+    write_result(results_dir, "BENCH_conv.json", &payload)?;
+    if record_root {
+        super::report::write_root_record("BENCH_conv.json", &payload)?;
+    }
+    let mut md = table.to_markdown();
+    md.push_str(&format!(
+        "Materialized-over-implicit geomean (LUT strategy, all ops): {headline:.2}x\n\n"
     ));
     Ok(md)
 }
@@ -686,8 +890,9 @@ fn time_fwd(
     let r = bench_budget(&format!("{model}/{mode}/fwd"), 1, 3, budget, || {
         tr.evaluate(&test).unwrap();
     });
-    // evaluate runs test.n / batch batches; normalize to one batch
-    let batches = (test.n / batch).max(1) as f64;
+    // evaluate covers the whole test set in ceil(n / batch) fixed-shape
+    // batches (trailing batch padded); normalize to one batch
+    let batches = test.n.div_ceil(batch).max(1) as f64;
     Ok(r.median_s() / batches)
 }
 

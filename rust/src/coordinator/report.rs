@@ -56,6 +56,24 @@ pub fn write_result(results_dir: &Path, name: &str, content: &str) -> Result<()>
     Ok(())
 }
 
+/// Write a committed perf record (`BENCH_*.json`) at the repo root — the
+/// policy shared by `bench-gemm` and `bench-conv`: only explicit
+/// full-budget runs call this; quick/smoke runs stay in `results/`.
+/// `CARGO_MANIFEST_DIR` is exactly the repo root for the documented
+/// `cargo run`/`cargo bench` flows regardless of invocation cwd; an
+/// installed binary on a machine without the source tree falls back to
+/// the cwd.
+pub fn write_root_record(name: &str, payload: &str) -> Result<()> {
+    let manifest_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root_record = if manifest_dir.is_dir() {
+        manifest_dir.join(name)
+    } else {
+        Path::new(name).to_path_buf()
+    };
+    std::fs::write(&root_record, payload)
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", root_record.display()))
+}
+
 /// Format a seconds value the way the paper's tables do.
 pub fn fmt_time(s: f64) -> String {
     crate::util::fmt_duration(s)

@@ -17,6 +17,8 @@ use anyhow::Result;
 
 use crate::nn::metrics::accuracy_from_logits;
 use crate::runtime::executor::{Engine, Value};
+use crate::util::rng::Pcg32;
+use crate::util::stats as ustats;
 
 /// One inference request: an image and a oneshot-style reply channel.
 /// (fields used by the serve loop)
@@ -55,13 +57,128 @@ impl Client {
     }
 }
 
-/// Server statistics.
-#[derive(Clone, Debug, Default)]
+/// Default sample capacity of the latency [`Reservoir`]: 4096 `f64`s =
+/// 32 KiB, enough for stable tail percentiles, constant forever.
+pub const LATENCY_RESERVOIR_CAP: usize = 4096;
+
+/// Bounded uniform reservoir sample (Vitter's Algorithm R): after any
+/// number of `push`es it holds a uniform random sample of at most `cap`
+/// of the values seen, so a long-lived server keeps O(1) stats memory
+/// while percentiles stay representative. Deterministically seeded — two
+/// servers fed the same stream report the same percentiles.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    samples: Vec<f64>,
+    seen: u64,
+    cap: usize,
+    rng: Pcg32,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Reservoir {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Reservoir { samples: Vec::new(), seen: 0, cap, rng: Pcg32::new(0x5EED, 0x4E5) }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+            return;
+        }
+        // replace a random slot with probability cap/seen (Algorithm R)
+        let j = if self.seen <= u32::MAX as u64 {
+            self.rng.below(self.seen as u32) as u64
+        } else {
+            self.rng.next_u64() % self.seen
+        };
+        if (j as usize) < self.cap {
+            self.samples[j as usize] = v;
+        }
+    }
+
+    /// Total values offered (not the retained sample count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// The retained sample (≤ cap values, unordered).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Percentile over the retained sample; exact until `cap` values have
+    /// been seen, an unbiased estimate after. 0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            ustats::percentile(&self.samples, p)
+        }
+    }
+}
+
+/// Server statistics — O(1) memory regardless of lifetime: latencies go
+/// into a bounded [`Reservoir`] plus exact streaming sum/max accumulators,
+/// batch fills into a streaming sum. (Earlier revisions pushed one `f64`
+/// per request forever.)
+#[derive(Clone, Debug)]
 pub struct Stats {
     pub requests: usize,
     pub batches: usize,
-    pub latencies_s: Vec<f64>,
-    pub fills: Vec<usize>,
+    /// bounded latency sample, seconds (percentile queries)
+    pub latencies: Reservoir,
+    latency_sum_s: f64,
+    latency_max_s: f64,
+    fill_sum: u64,
+}
+
+impl Default for Stats {
+    fn default() -> Stats {
+        Stats {
+            requests: 0,
+            batches: 0,
+            latencies: Reservoir::new(LATENCY_RESERVOIR_CAP),
+            latency_sum_s: 0.0,
+            latency_max_s: 0.0,
+            fill_sum: 0,
+        }
+    }
+}
+
+impl Stats {
+    fn record_request(&mut self, latency_s: f64) {
+        self.requests += 1;
+        self.latencies.push(latency_s);
+        self.latency_sum_s += latency_s;
+        self.latency_max_s = self.latency_max_s.max(latency_s);
+    }
+
+    fn record_batch(&mut self, fill: usize) {
+        self.batches += 1;
+        self.fill_sum += fill as u64;
+    }
+
+    /// Latency percentile in seconds (reservoir estimate; exact for the
+    /// first [`LATENCY_RESERVOIR_CAP`] requests).
+    pub fn latency_percentile_s(&self, p: f64) -> f64 {
+        self.latencies.percentile(p)
+    }
+
+    /// Exact mean latency in seconds (streaming, not reservoir-based).
+    pub fn mean_latency_s(&self) -> f64 {
+        self.latency_sum_s / (self.requests.max(1)) as f64
+    }
+
+    /// Exact maximum latency in seconds.
+    pub fn max_latency_s(&self) -> f64 {
+        self.latency_max_s
+    }
+
+    /// Exact mean batch fill (real requests per executed batch).
+    pub fn mean_fill(&self) -> f64 {
+        self.fill_sum as f64 / (self.batches.max(1)) as f64
+    }
 }
 
 /// Run the batching server loop until the request channel closes.
@@ -120,16 +237,14 @@ pub fn serve(
         let logits = out[0].as_f32()?;
         for (i, r) in pending.into_iter().enumerate() {
             let latency = r.submitted.elapsed();
-            stats.requests += 1;
-            stats.latencies_s.push(latency.as_secs_f64());
+            stats.record_request(latency.as_secs_f64());
             let _ = r.reply.send(Reply {
                 logits: logits[i * classes..(i + 1) * classes].to_vec(),
                 latency,
                 batch_fill: fill,
             });
         }
-        stats.batches += 1;
-        stats.fills.push(fill);
+        stats.record_batch(fill);
     }
     Ok(stats)
 }
@@ -166,4 +281,70 @@ where
 /// Classify a reply against a label (test helper + example metric).
 pub fn reply_correct(reply: &Reply, label: u32) -> bool {
     accuracy_from_logits(&reply.logits, &[label], reply.logits.len()) > 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_is_bounded_and_exact_below_cap() {
+        let mut r = Reservoir::new(8);
+        for i in 0..5 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.seen(), 5);
+        assert_eq!(r.samples().len(), 5);
+        // below cap the sample is the full stream: percentiles are exact
+        assert_eq!(r.percentile(0.0), 0.0);
+        assert_eq!(r.percentile(100.0), 4.0);
+        assert_eq!(r.percentile(50.0), 2.0);
+        for i in 5..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.seen(), 10_000);
+        assert_eq!(r.samples().len(), 8, "memory stays bounded at cap");
+        for &s in r.samples() {
+            assert!((0.0..10_000.0).contains(&s));
+        }
+    }
+
+    #[test]
+    fn reservoir_sample_stays_representative() {
+        // push a stream whose median is ~500; the reservoir median of a
+        // 256-sample reservoir must land in the right region
+        let mut r = Reservoir::new(256);
+        for i in 0..100_000u64 {
+            r.push((i % 1000) as f64);
+        }
+        let p50 = r.percentile(50.0);
+        assert!((300.0..700.0).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn stats_memory_is_constant_and_report_fields_exact() {
+        let n = LATENCY_RESERVOIR_CAP * 3;
+        let mut s = Stats::default();
+        let mut sum = 0.0f64;
+        for i in 0..n {
+            let v = 0.001 * (i % 100) as f64;
+            s.record_request(v);
+            sum += v;
+            if i % 4 == 3 {
+                s.record_batch(4);
+            }
+        }
+        assert_eq!(s.requests, n);
+        assert_eq!(s.latencies.samples().len(), LATENCY_RESERVOIR_CAP);
+        // streaming fields are exact regardless of the reservoir
+        assert_eq!(s.batches, n / 4);
+        assert_eq!(s.mean_fill(), 4.0);
+        assert!((s.max_latency_s() - 0.099).abs() < 1e-12);
+        assert!((s.mean_latency_s() - sum / n as f64).abs() < 1e-12);
+        // empty stats report zeros, not NaN/panic
+        let empty = Stats::default();
+        assert_eq!(empty.latency_percentile_s(99.0), 0.0);
+        assert_eq!(empty.mean_latency_s(), 0.0);
+        assert_eq!(empty.mean_fill(), 0.0);
+    }
 }

@@ -7,12 +7,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::data::{Batcher, Dataset};
+use crate::data::{Batcher, Dataset, EvalBatcher};
 use crate::lut::MantissaLut;
 use crate::mult::registry;
 use crate::nn::checkpoint::Checkpoint;
 use crate::nn::init::{init_params, init_velocities};
-use crate::nn::metrics::{accuracy_from_logits, EpochRecord, RunLog};
+use crate::nn::metrics::{correct_from_logits, EpochRecord, RunLog};
 use crate::runtime::artifact::Role;
 use crate::runtime::executor::{Engine, Value};
 use crate::util::json::Json;
@@ -153,11 +153,20 @@ impl<'e> Trainer<'e> {
         Ok((loss, acc))
     }
 
-    /// Test-set accuracy via the forward artifact (full batches only).
+    /// Test-set accuracy via the forward artifact. Walks the test set in
+    /// dataset order (no shuffle — evaluation is order-independent, and
+    /// determinism is clearer unshuffled), pads the trailing partial
+    /// batch to the artifact's fixed batch shape by cycling its real
+    /// samples (so batch-statistics layers never see artificial zero
+    /// rows), and scores only the real samples, weighted per sample — so
+    /// 100% of the test set contributes exactly once, including test
+    /// sets smaller than one batch. Only an *empty* test set is an error.
     pub fn evaluate(&mut self, ds: &Dataset) -> Result<f32> {
-        let mut correct_weighted = 0.0f32;
-        let mut batches = 0usize;
-        for (images, labels) in Batcher::new(ds, self.batch, self.cfg.seed, 0) {
+        if ds.n == 0 {
+            bail!("cannot evaluate: test set is empty");
+        }
+        let mut correct = 0usize;
+        for (images, labels) in EvalBatcher::new(ds, self.batch) {
             let mut inputs: Vec<Value> = self.params.clone();
             inputs.push(Value::F32(images));
             if let Some(lut) = &self.lut {
@@ -165,13 +174,11 @@ impl<'e> Trainer<'e> {
             }
             let out = self.engine.run(&self.fwd_art, &inputs)?;
             let logits = out[0].as_f32()?;
-            correct_weighted += accuracy_from_logits(logits, &labels, self.classes);
-            batches += 1;
+            // padded rows sit at the tail; score only the real ones
+            correct +=
+                correct_from_logits(&logits[..labels.len() * self.classes], labels, self.classes);
         }
-        if batches == 0 {
-            bail!("test set smaller than one batch");
-        }
-        Ok(correct_weighted / batches as f32)
+        Ok(correct as f32 / ds.n as f32)
     }
 
     /// Full training loop over `train`/`test`; returns the per-epoch log.

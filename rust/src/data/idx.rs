@@ -61,8 +61,15 @@ pub fn parse_idx(data: &[u8]) -> Result<(Vec<usize>, &[u8]), IdxError> {
     Ok((dims, &data[header..]))
 }
 
+/// Number of classes an MNIST-format label file may reference (digits
+/// 0-9). Validated at load time: an out-of-range label would otherwise
+/// survive until it trips the softmax `assert!(y < c)` deep inside a
+/// training step, long after the corrupt file was read.
+pub const MNIST_CLASSES: usize = 10;
+
 /// Load an images + labels IDX pair as a [`Dataset`] (pixels scaled to
-/// [0, 1]).
+/// [0, 1]). Labels are validated against [`MNIST_CLASSES`]; a corrupt
+/// label payload is an [`IdxError::Shape`] here, not a panic mid-training.
 pub fn load_pair(images_path: &Path, labels_path: &Path, name: &str) -> Result<Dataset, IdxError> {
     let mut img_bytes = Vec::new();
     std::fs::File::open(images_path)?.read_to_end(&mut img_bytes)?;
@@ -73,6 +80,13 @@ pub fn load_pair(images_path: &Path, labels_path: &Path, name: &str) -> Result<D
     if idims.len() != 3 || ldims.len() != 1 || idims[0] != ldims[0] {
         return Err(IdxError::Shape(format!("dims {:?} / {:?}", idims, ldims)));
     }
+    if let Some((i, &bad)) =
+        lpay.iter().enumerate().find(|&(_, &b)| b as usize >= MNIST_CLASSES)
+    {
+        return Err(IdxError::Shape(format!(
+            "label[{i}] = {bad} out of range (classes = {MNIST_CLASSES})"
+        )));
+    }
     let (n, h, w) = (idims[0], idims[1], idims[2]);
     Ok(Dataset {
         name: name.to_string(),
@@ -82,7 +96,7 @@ pub fn load_pair(images_path: &Path, labels_path: &Path, name: &str) -> Result<D
         h,
         w,
         c: 1,
-        classes: 10,
+        classes: MNIST_CLASSES,
     })
 }
 
@@ -113,6 +127,28 @@ mod tests {
         let mut data = make_idx(&[2], &[1, 2]);
         data.push(99); // extra byte
         assert!(parse_idx(&data).is_err());
+    }
+
+    /// A label byte ≥ classes must be rejected at load time with a Shape
+    /// error naming the offending index/value — not die later in the
+    /// softmax assert of a training step.
+    #[test]
+    fn load_pair_rejects_out_of_range_labels() {
+        let dir = std::env::temp_dir().join("approxtrain_idx_badlabel_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let imgs = make_idx(&[2, 2, 2], &[0, 255, 0, 255, 255, 0, 255, 0]);
+        let lbls = make_idx(&[2], &[3, 10]); // 10 >= MNIST_CLASSES
+        let ip = dir.join("imgs.idx");
+        let lp = dir.join("lbls.idx");
+        std::fs::write(&ip, &imgs).unwrap();
+        std::fs::write(&lp, &lbls).unwrap();
+        let err = load_pair(&ip, &lp, "mnist").unwrap_err();
+        match &err {
+            IdxError::Shape(msg) => {
+                assert!(msg.contains("label[1]") && msg.contains("10"), "{msg}");
+            }
+            other => panic!("expected Shape error, got {other}"),
+        }
     }
 
     #[test]

@@ -115,6 +115,60 @@ impl<'a> Iterator for Batcher<'a> {
     }
 }
 
+/// Evaluation batch iterator: walks the dataset **in order** (no shuffle —
+/// evaluation is order-independent, and determinism is clearer unshuffled)
+/// and always yields full `batch`-shaped image buffers, padding the
+/// trailing partial batch by **cycling that batch's real samples** (not
+/// zeros: a forward artifact whose batchnorm uses batch statistics would
+/// fold all-zero rows into every real sample's normalization — repeated
+/// real images keep the padded batch drawn from the data distribution).
+/// The label slice only covers the *real* samples, so callers can weight
+/// metrics per sample and never score padding rows.
+///
+/// Unlike [`Batcher`] this covers 100% of the dataset (including a final
+/// partial batch, and datasets smaller than one batch) — the shape the
+/// fixed-batch compiled forward artifacts need for test-set evaluation.
+pub struct EvalBatcher<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> EvalBatcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize) -> EvalBatcher<'a> {
+        assert!(batch > 0, "batch must be positive");
+        EvalBatcher { ds, batch, pos: 0 }
+    }
+
+    /// Number of batches the iterator will yield (`ceil(n / batch)`).
+    pub fn batches(&self) -> usize {
+        self.ds.n.div_ceil(self.batch)
+    }
+}
+
+impl<'a> Iterator for EvalBatcher<'a> {
+    /// (images `[batch, h, w, c]` flattened, padded by cycling the real
+    /// samples; real labels `[1..=batch]`)
+    type Item = (Vec<f32>, &'a [u32]);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.ds.n {
+            return None;
+        }
+        let real = (self.ds.n - self.pos).min(self.batch);
+        let sz = self.ds.image_len();
+        let mut images = Vec::with_capacity(self.batch * sz);
+        images.extend_from_slice(&self.ds.images[self.pos * sz..(self.pos + real) * sz]);
+        for pad in 0..self.batch - real {
+            let src = (self.pos + pad % real) * sz;
+            images.extend_from_slice(&self.ds.images[src..src + sz]);
+        }
+        let labels = &self.ds.labels[self.pos..self.pos + real];
+        self.pos += real;
+        Some((images, labels))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::synth::{mnist_like, SynthSpec};
@@ -162,5 +216,60 @@ mod tests {
         let ds = tiny();
         let b: Vec<_> = Batcher::new(&ds, 30, 1, 0).collect();
         assert_eq!(b.len(), 2);
+    }
+
+    /// The evaluation iterator must cover every sample exactly once, in
+    /// dataset order, padding only the final batch — the `Batcher`
+    /// trailing-sample drop this replaces was a silent evaluation bug.
+    #[test]
+    fn eval_batcher_covers_everything_with_padded_tail() {
+        let ds = tiny(); // n = 64
+        let eb = EvalBatcher::new(&ds, 30);
+        assert_eq!(eb.batches(), 3);
+        let batches: Vec<_> = eb.collect();
+        assert_eq!(batches.len(), 3);
+        let sz = ds.image_len();
+        let mut label_count = 0usize;
+        for (bi, (images, labels)) in batches.iter().enumerate() {
+            assert_eq!(images.len(), 30 * sz, "batch {bi}: fixed image shape");
+            // labels are the real samples, in order
+            for (j, &l) in labels.iter().enumerate() {
+                assert_eq!(l, ds.labels[bi * 30 + j], "batch {bi} label {j}");
+            }
+            label_count += labels.len();
+        }
+        assert_eq!(label_count, ds.n, "every sample scored exactly once");
+        // final batch: 4 real samples, the rest pads by cycling those 4
+        let (last_imgs, last_labels) = &batches[2];
+        assert_eq!(last_labels.len(), 4);
+        for pad in 0..30 - 4 {
+            let want = ds.image(60 + pad % 4);
+            assert_eq!(&last_imgs[(4 + pad) * sz..(5 + pad) * sz], want, "pad row {pad}");
+        }
+        // real image data is copied through unchanged
+        assert_eq!(&last_imgs[..sz], ds.image(60));
+    }
+
+    /// A dataset smaller than one batch — which used to panic in
+    /// `Batcher::new` — evaluates as a single padded batch.
+    #[test]
+    fn eval_batcher_handles_dataset_smaller_than_batch() {
+        let ds = tiny();
+        let batches: Vec<_> = EvalBatcher::new(&ds, 100).collect();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].1.len(), 64);
+        assert_eq!(batches[0].0.len(), 100 * ds.image_len());
+        // and an empty dataset yields no batches at all
+        let empty = Dataset {
+            name: "empty".into(),
+            images: Vec::new(),
+            labels: Vec::new(),
+            n: 0,
+            h: ds.h,
+            w: ds.w,
+            c: ds.c,
+            classes: ds.classes,
+        };
+        assert_eq!(EvalBatcher::new(&empty, 8).count(), 0);
     }
 }

@@ -29,9 +29,86 @@
 //! The pre-tiling row-sliced path is kept as [`gemm_panel`] /
 //! [`gemm_panel_threaded`]: same contract, no `A` packing, 1D row-block
 //! threading — the bench's "panel vs tiled" comparison partner.
+//!
+//! ## Panel sources (implicit GEMM)
+//!
+//! Operand packing is abstracted behind the [`PackA`] / [`PackB`] traits:
+//! [`gemm_tiled_src`] packs its `MC x KC` / `KC x NC` panels from
+//! whatever source it is handed. [`SliceA`] / [`SliceB`] reproduce the
+//! materialized-matrix packing (and [`gemm_tiled_with`] is exactly that),
+//! while the im2col sources in [`super::im2col`] pack panels *directly
+//! from the NHWC tensors* using the fused dilation/padding index
+//! computations — the implicit-GEMM convolution: no `col_rows x
+//! col_cols` matrix ever exists, memory is `O(tile)` via the recycled
+//! [`super::with_pack_buffers`] buffers. Because a source only defines
+//! *values* and the dot/accumulation code is shared, the implicit route
+//! is bit-identical to the materialized route by construction (enforced
+//! in `tests/conv_grads.rs` and `tests/batched_vs_scalar.rs`).
 
 use super::{with_pack_buffers, MulBackend, MulKernel};
 use crate::util::threads::{self, SendMutPtr};
+
+/// Source of `A`-operand row-panels for the tiled GEMM — the packing half
+/// of the "implicit GEMM" generalization (paper §VI-B: dilation/padding
+/// fused into IM2COL indexing instead of materialized arrays).
+///
+/// `pack_a` must fill `out` (row-major, `ih` rows of `kw` elements) with
+/// the rectangle of the *logical* `M x K` matrix whose top-left element is
+/// `(i0, k0)`. [`gemm_tiled_src`] only ever reads what it packed, so the
+/// values a source produces fully define its logical matrix; a source that
+/// computes elements on the fly (the im2col sources in
+/// [`super::im2col`]) is indistinguishable — bit for bit — from a
+/// [`SliceA`] over the materialized matrix.
+///
+/// `Sync` is a supertrait because panels are packed concurrently by the
+/// worker pool's lanes (each into its own thread-local buffer).
+pub trait PackA: Sync {
+    fn pack_a(&self, i0: usize, ih: usize, k0: usize, kw: usize, out: &mut [f32]);
+}
+
+/// Source of `B`-operand column-panels for the tiled GEMM.
+///
+/// `pack_b` must fill `out` with the *transposed* `jw x kw` panel of the
+/// logical `K x N` matrix: `out[j * kw + kk] = B[k0 + kk, j0 + j]`, so
+/// the inner gather loop walks both packed operands with stride 1.
+pub trait PackB: Sync {
+    fn pack_b(&self, j0: usize, jw: usize, k0: usize, kw: usize, out: &mut [f32]);
+}
+
+/// [`PackA`] over a materialized row-major `M x K` slice (`k` = row
+/// stride). The packing loop previously hard-wired into `tile_into`.
+pub struct SliceA<'a> {
+    pub data: &'a [f32],
+    pub k: usize,
+}
+
+impl PackA for SliceA<'_> {
+    fn pack_a(&self, i0: usize, ih: usize, k0: usize, kw: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), ih * kw);
+        for i in 0..ih {
+            let src = (i0 + i) * self.k + k0;
+            out[i * kw..(i + 1) * kw].copy_from_slice(&self.data[src..src + kw]);
+        }
+    }
+}
+
+/// [`PackB`] over a materialized row-major `K x N` slice (`n` = row
+/// stride), packed transposed.
+pub struct SliceB<'a> {
+    pub data: &'a [f32],
+    pub n: usize,
+}
+
+impl PackB for SliceB<'_> {
+    fn pack_b(&self, j0: usize, jw: usize, k0: usize, kw: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), jw * kw);
+        for j in 0..jw {
+            for kk in 0..kw {
+                out[j * kw + kk] = self.data[(k0 + kk) * self.n + j0 + j];
+            }
+        }
+    }
+}
 
 /// Cache-block sizes of the row-sliced [`gemm_panel`] path. 64x64 f32
 /// panels are 16 KiB — two fit in a typical 32 KiB L1D the way two 16x16
@@ -101,10 +178,9 @@ pub fn gemm_auto(
     k: usize,
     n: usize,
 ) {
-    let lanes = threads::global().width();
-    let big = m.saturating_mul(k).saturating_mul(n) >= AUTO_THREAD_MACS;
-    let threads = if big { lanes } else { 1 };
-    gemm_tiled_with(mul, TileConfig::DEFAULT, a, b, c, m, k, n, threads);
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    gemm_auto_src(mul, &SliceA { data: a, k }, &SliceB { data: b, n }, c, m, k, n);
 }
 
 /// Single-lane cache-blocked GEMM with the default [`TileConfig`].
@@ -157,6 +233,27 @@ pub fn gemm_tiled_with(
 ) {
     assert_eq!(a.len(), m * k, "A shape");
     assert_eq!(b.len(), k * n, "B shape");
+    gemm_tiled_src(mul, cfg, &SliceA { data: a, k }, &SliceB { data: b, n }, c, m, k, n, threads);
+}
+
+/// [`gemm_tiled_with`] generalized over [`PackA`]/[`PackB`] panel sources
+/// — the implicit-GEMM entry point. The tiling, scheduling and inner dot
+/// loops are byte-for-byte the slice path's (that path *is* this one with
+/// [`SliceA`]/[`SliceB`]), so any source producing the same logical
+/// matrix values yields bit-identical output at every tile geometry and
+/// thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tiled_src(
+    mul: &MulKernel,
+    cfg: TileConfig,
+    a: &dyn PackA,
+    b: &dyn PackB,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
     assert_eq!(c.len(), m * n, "C shape");
     cfg.assert_valid();
     c.fill(0.0);
@@ -184,11 +281,33 @@ pub fn gemm_tiled_with(
     });
 }
 
+/// [`gemm_tiled_src`] that picks its own parallelism: pool width above
+/// [`AUTO_THREAD_MACS`] MACs, single lane below. The single home of the
+/// auto-threading policy — [`gemm_auto`] delegates here with slice
+/// sources, so the implicit conv path and the slice path can never
+/// diverge in parallelism.
+pub fn gemm_auto_src(
+    mul: &MulKernel,
+    a: &dyn PackA,
+    b: &dyn PackB,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let lanes = threads::global().width();
+    let big = m.saturating_mul(k).saturating_mul(n) >= AUTO_THREAD_MACS;
+    let threads = if big { lanes } else { 1 };
+    gemm_tiled_src(mul, TileConfig::DEFAULT, a, b, c, m, k, n, threads);
+}
+
 /// Compute one `MC x NC` output tile. For each `KC` block of the
 /// contraction dimension, the `A` rows and `B` columns of the block are
 /// packed into this thread's reusable buffers (the CUDA "shared-memory
-/// fetch"), then the batched dot walks both packed panels with stride 1,
-/// continuing each output element's running accumulator.
+/// fetch") by the panel sources — a memcpy for slice operands, on-the-fly
+/// im2col indexing for implicit conv operands — then the batched dot
+/// walks both packed panels with stride 1, continuing each output
+/// element's running accumulator.
 ///
 /// Deliberate trade-off: each tile packs its own operand panels, so a
 /// `B` panel is re-packed once per tile *row* (and an `A` panel once per
@@ -200,8 +319,8 @@ pub fn gemm_tiled_with(
 fn tile_into(
     mul: &MulKernel,
     cfg: TileConfig,
-    a: &[f32],
-    b: &[f32],
+    a: &dyn PackA,
+    b: &dyn PackB,
     c: SendMutPtr,
     m: usize,
     k: usize,
@@ -218,19 +337,8 @@ fn tile_into(
         for k0 in (0..k).step_by(cfg.kc) {
             let kn = (k0 + cfg.kc).min(k);
             let kw = kn - k0;
-            // pack the A row-panel: kw contiguous elements per tile row
-            for i in 0..ih {
-                let src = (i0 + i) * k;
-                apack[i * kw..(i + 1) * kw].copy_from_slice(&a[src + k0..src + kn]);
-            }
-            // pack the B column-panel transposed: each output column's kw
-            // elements become contiguous, so the gather loop is stride-1
-            // on both operands
-            for j in 0..jw {
-                for kk in 0..kw {
-                    bpack[j * kw + kk] = b[(k0 + kk) * n + j0 + j];
-                }
-            }
+            a.pack_a(i0, ih, k0, kw, &mut apack[..ih * kw]);
+            b.pack_b(j0, jw, k0, kw, &mut bpack[..jw * kw]);
             for i in 0..ih {
                 let a_row = &apack[i * kw..(i + 1) * kw];
                 // SAFETY: this row segment (row i0+i, cols j0..j1) lies
@@ -627,6 +735,63 @@ mod tests {
         gemm(&MulKernel::Native, &a, &b, &mut c_one, m, k, n);
         for i in 0..m * n {
             assert_eq!(c_auto[i].to_bits(), c_one[i].to_bits(), "idx {i}");
+        }
+    }
+
+    /// A logical `A` computed on the fly must behave exactly like a
+    /// `SliceA` over its materialization — the implicit-GEMM guarantee at
+    /// the GEMM level, independent of the im2col sources.
+    #[test]
+    fn computed_panel_source_matches_materialized_slice_bitwise() {
+        struct Gen {
+            k: usize,
+        }
+        impl PackA for Gen {
+            fn pack_a(&self, i0: usize, ih: usize, k0: usize, kw: usize, out: &mut [f32]) {
+                for i in 0..ih {
+                    for kk in 0..kw {
+                        out[i * kw + kk] =
+                            ((i0 + i) * self.k + k0 + kk) as f32 * 0.37 - 2.1;
+                    }
+                }
+            }
+        }
+        let (m, k, n) = (23, 39, 17);
+        let gen = Gen { k };
+        let mut a = vec![0.0f32; m * k];
+        gen.pack_a(0, m, 0, k, &mut a);
+        let mut rng = Pcg32::seeded(27);
+        let b = rand_vec(&mut rng, k * n);
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        for mul in [
+            MulKernel::Native,
+            MulKernel::Direct(model.as_ref()),
+            MulKernel::Lut(AmSim::new(&lut)),
+        ] {
+            let mut want = vec![0.0f32; m * n];
+            gemm_scalar_reference(&mul, &a, &b, &mut want, m, k, n);
+            for cfg in [TileConfig { mc: 5, kc: 7, nc: 4 }, TileConfig::DEFAULT] {
+                for threads in [1, 4] {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_tiled_src(
+                        &mul,
+                        cfg,
+                        &gen,
+                        &SliceB { data: &b, n },
+                        &mut got,
+                        m,
+                        k,
+                        n,
+                        threads,
+                    );
+                    assert_bits_eq(
+                        &got,
+                        &want,
+                        &format!("src {cfg:?} t={threads} {}", mul.describe()),
+                    );
+                }
+            }
         }
     }
 

@@ -1,149 +1,258 @@
-//! The three IM2COL kernels (paper §VI-D).
+//! The three IM2COL kernels (paper §VI-D), each available in two forms
+//! sharing one set of index computations:
 //!
-//! * [`im2col_forward`] — standard patch extraction for the forward pass.
-//! * [`im2col_weight_grad`] — patch extraction for the weight gradient with
-//!   the paper's key optimization: the dilation of `Errors^{l+1}` implied by
-//!   stride > 1 is **fused** by *skipping* input elements instead of
-//!   materializing a dilated array (§VI-B.1).
-//! * [`im2col_plg`] — patch extraction over the *logical*
-//!   `PaddedDilatedErrors^{l+1}` for the preceding-layer gradient: each
-//!   element checks whether its position is a dilated (zero) position and
-//!   reads the undilated error array otherwise (§VI-B.2).
+//! * **Implicit panel sources** ([`Im2colForwardSrc`],
+//!   [`Im2colWeightGradSrc`], [`Im2colPlgSrc`]) — [`PackA`]
+//!   implementations that pack tiled-GEMM panels *directly from the NHWC
+//!   tensors*; the cols matrix exists only logically ("implicit GEMM",
+//!   the completion of the paper's fusion idea: not even the fused-index
+//!   result array is materialized).
+//! * **Materialized functions** ([`im2col_forward`],
+//!   [`im2col_weight_grad`], [`im2col_plg`]) — fill the full cols matrix
+//!   by packing the whole logical range through the same source; kept as
+//!   the oracle / bench comparison partner for the implicit route.
+//!
+//! The per-element semantics are the paper's:
+//!
+//! * forward — standard patch extraction;
+//! * weight grad — the dilation of `Errors^{l+1}` implied by stride > 1
+//!   is **fused** by *skipping* input elements instead of materializing a
+//!   dilated array (§VI-B.1);
+//! * preceding-layer grad — each element checks whether its position in
+//!   the logical `PaddedDilatedErrors^{l+1}` is a dilated/padded (zero)
+//!   position and reads the undilated error array otherwise (§VI-B.2).
 //! * [`dilate_explicit`] — the naive separate-dilation baseline the paper
 //!   argues against; kept for the ablation benchmark.
 
+use super::gemm::PackA;
 use super::Conv2dGeom;
 
-/// Forward im2col: `cols[b*oh*ow, kh*kw*c]`, NHWC input, zero padding.
-pub fn im2col_forward(g: &Conv2dGeom, input: &[f32], cols: &mut [f32]) {
-    assert_eq!(input.len(), g.batch * g.in_h * g.in_w * g.in_c);
-    assert_eq!(cols.len(), g.col_rows() * g.col_cols());
-    let (oh, ow) = (g.out_h(), g.out_w());
-    let mut idx = 0;
-    for b in 0..g.batch {
+/// Implicit forward-im2col source: the logical matrix
+/// `cols[b*oh*ow, kh*kw*c]` over an NHWC `input`, packed panel-by-panel
+/// with zero padding fused into the indexing.
+pub struct Im2colForwardSrc<'a> {
+    g: Conv2dGeom,
+    input: &'a [f32],
+    oh: usize,
+    ow: usize,
+}
+
+impl<'a> Im2colForwardSrc<'a> {
+    pub fn new(g: &Conv2dGeom, input: &'a [f32]) -> Im2colForwardSrc<'a> {
+        assert_eq!(input.len(), g.batch * g.in_h * g.in_w * g.in_c);
+        Im2colForwardSrc { g: *g, input, oh: g.out_h(), ow: g.out_w() }
+    }
+
+    /// Fill `out` with logical row `r`, columns `[k0, k0 + kw)`. Columns
+    /// decompose as `(ky, kx, ci)`; each `(ky, kx)` cell is an `in_c` run
+    /// that is either a contiguous copy or fused-padding zeros.
+    fn fill_row(&self, r: usize, k0: usize, kw: usize, out: &mut [f32]) {
+        let g = &self.g;
+        let b = r / (self.oh * self.ow);
+        let rem = r % (self.oh * self.ow);
+        let (oy, ox) = (rem / self.ow, rem % self.ow);
         let in_base = b * g.in_h * g.in_w * g.in_c;
-        for oy in 0..oh {
-            for ox in 0..ow {
-                for ky in 0..g.k_h {
-                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
-                    for kx in 0..g.k_w {
-                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
-                        if iy < 0 || iy >= g.in_h as isize || ix < 0 || ix >= g.in_w as isize {
-                            for _ in 0..g.in_c {
-                                cols[idx] = 0.0;
-                                idx += 1;
-                            }
-                        } else {
-                            let src =
-                                in_base + (iy as usize * g.in_w + ix as usize) * g.in_c;
-                            cols[idx..idx + g.in_c]
-                                .copy_from_slice(&input[src..src + g.in_c]);
-                            idx += g.in_c;
-                        }
-                    }
+        let mut col = k0;
+        let mut o = 0;
+        while o < kw {
+            let ky = col / (g.k_w * g.in_c);
+            let rem = col % (g.k_w * g.in_c);
+            let (kx, ci) = (rem / g.in_c, rem % g.in_c);
+            let run = (g.in_c - ci).min(kw - o);
+            let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+            let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+            if iy < 0 || iy >= g.in_h as isize || ix < 0 || ix >= g.in_w as isize {
+                out[o..o + run].fill(0.0);
+            } else {
+                let src = in_base + (iy as usize * g.in_w + ix as usize) * g.in_c + ci;
+                out[o..o + run].copy_from_slice(&self.input[src..src + run]);
+            }
+            col += run;
+            o += run;
+        }
+    }
+}
+
+impl PackA for Im2colForwardSrc<'_> {
+    fn pack_a(&self, i0: usize, ih: usize, k0: usize, kw: usize, out: &mut [f32]) {
+        for i in 0..ih {
+            self.fill_row(i0 + i, k0, kw, &mut out[i * kw..(i + 1) * kw]);
+        }
+    }
+}
+
+/// Forward im2col: `cols[b*oh*ow, kh*kw*c]`, NHWC input, zero padding.
+/// Materializes [`Im2colForwardSrc`]'s full logical matrix.
+pub fn im2col_forward(g: &Conv2dGeom, input: &[f32], cols: &mut [f32]) {
+    assert_eq!(cols.len(), g.col_rows() * g.col_cols());
+    Im2colForwardSrc::new(g, input).pack_a(0, g.col_rows(), 0, g.col_cols(), cols);
+}
+
+/// Implicit weight-gradient im2col source with fused dilation (paper
+/// §VI-B.1): the logical matrix `cols[kh*kw*c, b*oh*ow]` such that
+/// `dW[kh*kw*c, oc] = cols x dY[b*oh*ow, oc]`. The stride-induced
+/// dilation of the error map is realized by *reading the activation at
+/// strided positions* — no dilated array (and now no cols matrix) is
+/// ever built.
+pub struct Im2colWeightGradSrc<'a> {
+    g: Conv2dGeom,
+    activation: &'a [f32],
+    oh: usize,
+    ow: usize,
+}
+
+impl<'a> Im2colWeightGradSrc<'a> {
+    pub fn new(g: &Conv2dGeom, activation: &'a [f32]) -> Im2colWeightGradSrc<'a> {
+        assert_eq!(activation.len(), g.batch * g.in_h * g.in_w * g.in_c);
+        Im2colWeightGradSrc { g: *g, activation, oh: g.out_h(), ow: g.out_w() }
+    }
+
+    /// Fill `out` with logical row `r = (ky*kw + kx)*in_c + c`, columns
+    /// (output positions) `[q0, q0 + qw)`; `iy` is hoisted per `oy` run.
+    fn fill_row(&self, r: usize, q0: usize, qw: usize, out: &mut [f32]) {
+        let g = &self.g;
+        let ky = r / (g.k_w * g.in_c);
+        let rem = r % (g.k_w * g.in_c);
+        let (kx, c) = (rem / g.in_c, rem % g.in_c);
+        let mut q = q0;
+        let mut o = 0;
+        while o < qw {
+            let b = q / (self.oh * self.ow);
+            let rem = q % (self.oh * self.ow);
+            let (oy, ox0) = (rem / self.ow, rem % self.ow);
+            let run = (self.ow - ox0).min(qw - o);
+            // fused dilation: stride positions are *skipped reads* of the
+            // activation, exactly the paper's IM2COL_Weight_Kernel
+            // element skipping
+            let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+            if iy < 0 || iy >= g.in_h as isize {
+                out[o..o + run].fill(0.0);
+            } else {
+                let row_base =
+                    (b * g.in_h + iy as usize) * g.in_w * g.in_c + c;
+                for (t, ox) in (ox0..ox0 + run).enumerate() {
+                    let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                    out[o + t] = if ix < 0 || ix >= g.in_w as isize {
+                        0.0
+                    } else {
+                        self.activation[row_base + ix as usize * g.in_c]
+                    };
                 }
             }
+            q += run;
+            o += run;
+        }
+    }
+}
+
+impl PackA for Im2colWeightGradSrc<'_> {
+    fn pack_a(&self, i0: usize, ih: usize, k0: usize, kw: usize, out: &mut [f32]) {
+        for i in 0..ih {
+            self.fill_row(i0 + i, k0, kw, &mut out[i * kw..(i + 1) * kw]);
         }
     }
 }
 
 /// Weight-gradient im2col with fused dilation (paper §VI-B.1).
-///
-/// Produces `cols[kh*kw*c, b*oh*ow]` such that
-/// `dW[kh*kw*c, oc] = cols x dY[b*oh*ow, oc]`.
-/// The stride-induced dilation of the error map is realized by *reading the
-/// activation at strided positions* — no dilated array is ever built.
+/// Materializes [`Im2colWeightGradSrc`]'s full logical matrix.
 pub fn im2col_weight_grad(g: &Conv2dGeom, activation: &[f32], cols: &mut [f32]) {
-    assert_eq!(activation.len(), g.batch * g.in_h * g.in_w * g.in_c);
-    let (oh, ow) = (g.out_h(), g.out_w());
-    let q_len = g.batch * oh * ow;
+    let q_len = g.batch * g.out_h() * g.out_w();
     assert_eq!(cols.len(), g.col_cols() * q_len);
-    for ky in 0..g.k_h {
-        for kx in 0..g.k_w {
-            for c in 0..g.in_c {
-                let r = (ky * g.k_w + kx) * g.in_c + c;
-                let row = &mut cols[r * q_len..(r + 1) * q_len];
-                let mut q = 0;
-                for b in 0..g.batch {
-                    let in_base = b * g.in_h * g.in_w * g.in_c;
-                    for oy in 0..oh {
-                        // fused dilation: stride positions are *skipped
-                        // reads* of the activation, exactly the paper's
-                        // IM2COL_Weight_Kernel element skipping
-                        let iy = (oy * g.stride + ky) as isize - g.pad as isize;
-                        for ox in 0..ow {
-                            let ix = (ox * g.stride + kx) as isize - g.pad as isize;
-                            row[q] = if iy < 0
-                                || iy >= g.in_h as isize
-                                || ix < 0
-                                || ix >= g.in_w as isize
-                            {
-                                0.0
-                            } else {
-                                activation
-                                    [in_base + (iy as usize * g.in_w + ix as usize) * g.in_c + c]
-                            };
-                            q += 1;
-                        }
-                    }
-                }
+    Im2colWeightGradSrc::new(g, activation).pack_a(0, g.col_cols(), 0, q_len, cols);
+}
+
+/// Implicit preceding-layer-gradient im2col source (paper §VI-B.2 /
+/// IM2COL_PLG_Kernel): the logical matrix `cols[b*in_h*in_w, kh*kw*oc]`
+/// so that `dX = cols x TransposedReversedW[kh*kw*oc, c]`.
+///
+/// Logically: pad and dilate `errors[b, oh, ow, oc]` to
+/// `PD[b, (oh-1)*s+1 + 2*(kh-1-pad), ...]`, then im2col with stride 1 and
+/// a `kh x kw` window. Physically: each element computes its position
+/// inside the logical padded-dilated array and either copies a zero
+/// (dilated/padded position) or reads the original `errors` — the fused
+/// pad+dilate of the paper, now without materializing the cols matrix
+/// either.
+pub struct Im2colPlgSrc<'a> {
+    g: Conv2dGeom,
+    errors: &'a [f32],
+    oh: usize,
+    ow: usize,
+    /// full-correlation padding of the dilated map
+    pad_h: isize,
+    pad_w: isize,
+}
+
+impl<'a> Im2colPlgSrc<'a> {
+    pub fn new(g: &Conv2dGeom, errors: &'a [f32]) -> Im2colPlgSrc<'a> {
+        let (oh, ow) = (g.out_h(), g.out_w());
+        assert_eq!(errors.len(), g.batch * oh * ow * g.out_c);
+        Im2colPlgSrc {
+            g: *g,
+            errors,
+            oh,
+            ow,
+            pad_h: g.k_h as isize - 1 - g.pad as isize,
+            pad_w: g.k_w as isize - 1 - g.pad as isize,
+        }
+    }
+
+    /// Fill `out` with logical row `r = (b*in_h + y)*in_w + x`, columns
+    /// `[k0, k0 + kw)`; each `(ky, kx)` cell is an `out_c` run that is
+    /// either a contiguous error copy or a fused pad/dilate zero.
+    fn fill_row(&self, r: usize, k0: usize, kw: usize, out: &mut [f32]) {
+        let g = &self.g;
+        let b = r / (g.in_h * g.in_w);
+        let rem = r % (g.in_h * g.in_w);
+        let (y, x) = ((rem / g.in_w) as isize, (rem % g.in_w) as isize);
+        let e_base = b * self.oh * self.ow * g.out_c;
+        let s = g.stride as isize;
+        let mut col = k0;
+        let mut o = 0;
+        while o < kw {
+            let ky = col / (g.k_w * g.out_c);
+            let rem = col % (g.k_w * g.out_c);
+            let (kx, ch) = (rem / g.out_c, rem % g.out_c);
+            let run = (g.out_c - ch).min(kw - o);
+            // position inside the logical dilated (stride-spaced) map: a
+            // real error element sits at (oy*s, ox*s); everything else is
+            // a fused zero
+            let dy = y + ky as isize - self.pad_h;
+            let dx = x + kx as isize - self.pad_w;
+            let valid = dy >= 0
+                && dx >= 0
+                && dy % s == 0
+                && dx % s == 0
+                && dy / s < self.oh as isize
+                && dx / s < self.ow as isize;
+            if valid {
+                let src = e_base
+                    + ((dy / s) as usize * self.ow + (dx / s) as usize) * g.out_c
+                    + ch;
+                out[o..o + run].copy_from_slice(&self.errors[src..src + run]);
+            } else {
+                out[o..o + run].fill(0.0);
             }
+            col += run;
+            o += run;
+        }
+    }
+}
+
+impl PackA for Im2colPlgSrc<'_> {
+    fn pack_a(&self, i0: usize, ih: usize, k0: usize, kw: usize, out: &mut [f32]) {
+        for i in 0..ih {
+            self.fill_row(i0 + i, k0, kw, &mut out[i * kw..(i + 1) * kw]);
         }
     }
 }
 
 /// Preceding-layer-gradient im2col (paper §VI-B.2 / IM2COL_PLG_Kernel).
-///
-/// Logically: pad and dilate `errors[b, oh, ow, oc]` to
-/// `PD[b, (oh-1)*s+1 + 2*(kh-1-pad), ...]`, then im2col with stride 1 and a
-/// `kh x kw` window, yielding `cols[b*in_h*in_w, kh*kw*oc]` so that
-/// `dX = cols x TransposedReversedW[kh*kw*oc, c]`.
-///
-/// Physically: each output element computes its position inside the logical
-/// padded-dilated array and either copies a zero (dilated/padded position)
-/// or reads the original `errors` — the fused pad+dilate of the paper.
+/// Materializes [`Im2colPlgSrc`]'s full logical matrix.
 pub fn im2col_plg(g: &Conv2dGeom, errors: &[f32], cols: &mut [f32]) {
-    let (oh, ow) = (g.out_h(), g.out_w());
-    assert_eq!(errors.len(), g.batch * oh * ow * g.out_c);
     let rows = g.batch * g.in_h * g.in_w;
     let rlen = g.k_h * g.k_w * g.out_c;
     assert_eq!(cols.len(), rows * rlen);
-    // full-correlation padding of the dilated map
-    let pad_h = g.k_h as isize - 1 - g.pad as isize;
-    let pad_w = g.k_w as isize - 1 - g.pad as isize;
-    let mut idx = 0;
-    for b in 0..g.batch {
-        let e_base = b * oh * ow * g.out_c;
-        for y in 0..g.in_h as isize {
-            for x in 0..g.in_w as isize {
-                for ky in 0..g.k_h as isize {
-                    // position inside the logical dilated (stride-spaced) map
-                    let dy = y + ky - pad_h;
-                    for kx in 0..g.k_w as isize {
-                        let dx = x + kx - pad_w;
-                        // a real error element sits at dilated position
-                        // (oy*s, ox*s); everything else is a fused zero
-                        let s = g.stride as isize;
-                        let valid = dy >= 0
-                            && dx >= 0
-                            && dy % s == 0
-                            && dx % s == 0
-                            && dy / s < oh as isize
-                            && dx / s < ow as isize;
-                        if valid {
-                            let src = e_base
-                                + ((dy / s) as usize * ow + (dx / s) as usize) * g.out_c;
-                            cols[idx..idx + g.out_c]
-                                .copy_from_slice(&errors[src..src + g.out_c]);
-                        } else {
-                            cols[idx..idx + g.out_c].fill(0.0);
-                        }
-                        idx += g.out_c;
-                    }
-                }
-            }
-        }
-    }
+    Im2colPlgSrc::new(g, errors).pack_a(0, rows, 0, rlen, cols);
 }
 
 /// Naive explicit dilation (the baseline the paper's fused approach
@@ -307,10 +416,78 @@ mod tests {
         }
     }
 
+    /// Every implicit source must pack any panel window with exactly the
+    /// values a `SliceA` over the materialized cols matrix packs — the
+    /// foundation of the implicit-GEMM bit-identity claim.
+    #[test]
+    fn implicit_sources_pack_identically_to_materialized_slices() {
+        use crate::kernels::gemm::SliceA;
+        use crate::util::rng::Pcg32;
+        for (stride, pad) in [(1, 0), (1, 1), (2, 1), (2, 0), (3, 1)] {
+            let g = Conv2dGeom { in_h: 7, in_w: 9, ..geom(stride, pad) };
+            let mut rng = Pcg32::seeded(33 + stride as u64);
+            let input: Vec<f32> =
+                (0..g.batch * g.in_h * g.in_w * g.in_c).map(|_| rng.range(-1.0, 1.0)).collect();
+            let errors: Vec<f32> = (0..g.batch * g.out_h() * g.out_w() * g.out_c)
+                .map(|_| rng.range(-1.0, 1.0))
+                .collect();
+            let q_len = g.batch * g.out_h() * g.out_w();
+            let plg_rows = g.batch * g.in_h * g.in_w;
+            let plg_rlen = g.k_h * g.k_w * g.out_c;
+
+            let mut fwd = vec![0.0f32; g.col_rows() * g.col_cols()];
+            im2col_forward(&g, &input, &mut fwd);
+            let mut wg = vec![0.0f32; g.col_cols() * q_len];
+            im2col_weight_grad(&g, &input, &mut wg);
+            let mut plg = vec![0.0f32; plg_rows * plg_rlen];
+            im2col_plg(&g, &errors, &mut plg);
+
+            let fwd_src = Im2colForwardSrc::new(&g, &input);
+            let wg_src = Im2colWeightGradSrc::new(&g, &input);
+            let plg_src = Im2colPlgSrc::new(&g, &errors);
+            let cases: [(&dyn PackA, &dyn PackA, usize, usize, &str); 3] = [
+                (
+                    &fwd_src,
+                    &SliceA { data: &fwd, k: g.col_cols() },
+                    g.col_rows(),
+                    g.col_cols(),
+                    "forward",
+                ),
+                (&wg_src, &SliceA { data: &wg, k: q_len }, g.col_cols(), q_len, "weight_grad"),
+                (&plg_src, &SliceA { data: &plg, k: plg_rlen }, plg_rows, plg_rlen, "plg"),
+            ];
+            for (implicit, slice, m, k, what) in cases {
+                // windows chosen to straddle in_c/out_c runs, row starts,
+                // and the matrix edges
+                for &(i0, ih, k0, kw) in &[
+                    (0usize, m, 0usize, k),
+                    (0, 1.min(m), 0, 1.min(k)),
+                    (m / 3, (m - m / 3).min(5), k / 2, k - k / 2),
+                    (m.saturating_sub(2), 2.min(m), 1.min(k - 1), (k - 1).max(1).min(3)),
+                ] {
+                    if ih == 0 || kw == 0 {
+                        continue;
+                    }
+                    let mut got = vec![-7.0f32; ih * kw];
+                    let mut want = vec![7.0f32; ih * kw];
+                    implicit.pack_a(i0, ih, k0, kw, &mut got);
+                    slice.pack_a(i0, ih, k0, kw, &mut want);
+                    for i in 0..got.len() {
+                        assert_eq!(
+                            got[i].to_bits(),
+                            want[i].to_bits(),
+                            "{what} s{stride}p{pad} window ({i0},{ih},{k0},{kw}) idx {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
     /// PLG columns must reproduce the logical pad+dilate+im2col composition.
     #[test]
     fn plg_fusion_equals_explicit_composition() {
-        for (stride, pad) in [(1, 0), (1, 1), (2, 1), (2, 0)] {
+        for (stride, pad) in [(1, 0), (1, 1), (2, 1), (2, 0), (3, 1), (3, 0)] {
             let g = geom(stride, pad);
             let (oh, ow) = (g.out_h(), g.out_w());
             let mut rng = Pcg32::seeded(32);

@@ -21,7 +21,11 @@
 //! `B` column-panels are packed into the reusable per-thread buffers of
 //! [`with_pack_buffers`] so LUT gathers stream over contiguous memory,
 //! and the output is partitioned into 2D tiles scheduled over the
-//! persistent worker pool. Accumulation follows one crate-wide contract —
+//! persistent worker pool. Packing is generalized over
+//! [`gemm::PackA`]/[`gemm::PackB`] panel sources: the conv layer's
+//! *implicit GEMM* packs its panels straight from the NHWC tensors via
+//! the fused im2col index computations ([`im2col`]), so no cols matrix
+//! is ever materialized. Accumulation follows one crate-wide contract —
 //! a single running FP32 accumulator per output element, products added
 //! in ascending contraction order — so every blocking/threading choice is
 //! bit-identical to the per-element scalar oracle
@@ -200,6 +204,25 @@ thread_local! {
     static PACK_BUFFERS: Cell<Option<Box<PackBuffers>>> = const { Cell::new(None) };
 }
 
+thread_local! {
+    /// Count of recycled-buffer *growth* events on this thread (pack
+    /// buffers or scratch needing a larger allocation). Steady-state hot
+    /// paths — e.g. a second conv forward at the same geometry — must not
+    /// advance it; `tests/conv_grads.rs` smoke-checks exactly that.
+    static BUFFER_GROWTHS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// This thread's recycled-buffer growth count (see [`with_pack_buffers`] /
+/// [`with_scratch`]). Only meaningful as a *delta* around a single-lane
+/// region on the calling thread; pool workers keep their own counters.
+pub fn buffer_growth_events() -> usize {
+    BUFFER_GROWTHS.with(|c| c.get())
+}
+
+fn note_buffer_growth() {
+    BUFFER_GROWTHS.with(|c| c.set(c.get() + 1));
+}
+
 /// Run `f` with this thread's packing buffers grown to at least
 /// (`a_len`, `b_len`) elements. The buffers are recycled across calls on
 /// the same thread; contents are unspecified on entry (callers pack
@@ -212,9 +235,11 @@ pub fn with_pack_buffers<R>(
     let mut bufs = PACK_BUFFERS.with(|c| c.take()).unwrap_or_default();
     if bufs.a.len() < a_len {
         bufs.a.resize(a_len, 0.0);
+        note_buffer_growth();
     }
     if bufs.b.len() < b_len {
         bufs.b.resize(b_len, 0.0);
+        note_buffer_growth();
     }
     let r = f(&mut bufs.a[..a_len], &mut bufs.b[..b_len]);
     PACK_BUFFERS.with(|c| c.set(Some(bufs)));
@@ -236,6 +261,7 @@ pub fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
     let mut buf = SCRATCH.with(|c| c.take()).unwrap_or_default();
     if buf.len() < len {
         buf.resize(len, 0.0);
+        note_buffer_growth();
     }
     let r = f(&mut buf[..len]);
     SCRATCH.with(|c| c.set(Some(buf)));
@@ -349,6 +375,23 @@ mod tests {
         with_pack_buffers(4, 2, |a, b| {
             assert_eq!((a.len(), b.len()), (4, 2));
         });
+    }
+
+    #[test]
+    fn buffer_growth_counter_quiet_at_steady_state() {
+        // warm this test thread's buffers…
+        with_pack_buffers(64, 32, |_, _| {});
+        with_scratch(48, |_| {});
+        let before = buffer_growth_events();
+        // …then same-or-smaller requests must not grow anything
+        with_pack_buffers(64, 32, |_, _| {});
+        with_pack_buffers(16, 8, |_, _| {});
+        with_scratch(48, |_| {});
+        with_scratch(7, |_| {});
+        assert_eq!(buffer_growth_events(), before);
+        // a larger request is a growth event
+        with_scratch(49, |_| {});
+        assert_eq!(buffer_growth_events(), before + 1);
     }
 
     #[test]

@@ -15,8 +15,24 @@ pub fn transpose_reverse(
     in_c: usize,
     out_c: usize,
 ) -> Vec<f32> {
-    assert_eq!(w.len(), k_h * k_w * in_c * out_c);
     let mut out = vec![0.0f32; w.len()];
+    transpose_reverse_into(w, k_h, k_w, in_c, out_c, &mut out);
+    out
+}
+
+/// [`transpose_reverse`] writing into a caller-provided buffer (the conv
+/// layer's implicit path routes this through a recycled scratch so the
+/// steady-state backward pass stays allocation-free).
+pub fn transpose_reverse_into(
+    w: &[f32],
+    k_h: usize,
+    k_w: usize,
+    in_c: usize,
+    out_c: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(w.len(), k_h * k_w * in_c * out_c);
+    assert_eq!(out.len(), w.len());
     for ky in 0..k_h {
         for kx in 0..k_w {
             let src_spatial = ((k_h - 1 - ky) * k_w + (k_w - 1 - kx)) * in_c * out_c;
@@ -28,7 +44,6 @@ pub fn transpose_reverse(
             }
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -3,24 +3,58 @@
 //! dilation in the weight gradient and fused pad+dilate plus a
 //! transpose-and-reverse pre-pass in the preceding-layer gradient.
 //!
-//! All three GEMMs go through [`gemm_auto`]: the hierarchical
-//! cache-blocked tiled kernel (packed `A` row-panels / `B` column-panels,
-//! batched [`crate::kernels::MulBackend`] panel inner loops), 2D-tile
-//! parallel over the persistent worker pool when the im2col matrices are
-//! large enough. Outputs are bit-identical regardless of lane count and
-//! tile geometry, and bit-identical to
-//! [`crate::kernels::gemm::gemm_scalar_reference`] run over the same
-//! im2col matrices (`tests/conv_grads.rs`).
+//! All three GEMMs run as **implicit GEMMs** ([`gemm_auto_src`]): the
+//! tiled kernel packs its `MC x KC` panels *directly from the NHWC
+//! tensors* through the im2col panel sources
+//! ([`crate::kernels::im2col`]), so no `col_rows x col_cols` matrix is
+//! ever materialized — conv memory overhead drops from `O(cols)` to
+//! `O(tile)` and the steady-state forward/backward packs through the
+//! recycled per-thread buffers with no per-call cols allocation. The
+//! pre-fusion route is kept as [`forward_materialized`] /
+//! [`weight_grad_materialized`] / [`input_grad_materialized`] — the
+//! oracle and bench comparison partner (`bench-conv`).
+//!
+//! Outputs are bit-identical between the implicit and materialized
+//! routes, regardless of lane count and tile geometry, and bit-identical
+//! to [`crate::kernels::gemm::gemm_scalar_reference`] run over the
+//! materialized im2col matrices (`tests/conv_grads.rs`).
 
-use crate::kernels::gemm::gemm_auto;
-use crate::kernels::im2col::{im2col_forward, im2col_plg, im2col_weight_grad};
-use crate::kernels::transpose_reverse::transpose_reverse;
-use crate::kernels::{Conv2dGeom, MulKernel};
+use crate::kernels::gemm::{gemm_auto, gemm_auto_src, SliceB};
+use crate::kernels::im2col::{
+    im2col_forward, im2col_plg, im2col_weight_grad, Im2colForwardSrc, Im2colPlgSrc,
+    Im2colWeightGradSrc,
+};
+use crate::kernels::transpose_reverse::{transpose_reverse, transpose_reverse_into};
+use crate::kernels::{with_scratch, Conv2dGeom, MulKernel};
 use crate::tensor::Tensor;
 
 /// Forward propagation (paper Alg. 3): `y = conv2d(x, w)` with NHWC input
-/// `[b, h, w, c]` and HWIO filter `[kh, kw, c, oc]`.
+/// `[b, h, w, c]` and HWIO filter `[kh, kw, c, oc]`. Implicit GEMM:
+/// `y = im2col(x) * w` with the im2col packed on the fly.
 pub fn forward(mul: &MulKernel, x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Tensor {
+    let g = geom(x, w, stride, pad);
+    let mut y = Tensor::zeros(&[g.batch, g.out_h(), g.out_w(), g.out_c]);
+    gemm_auto_src(
+        mul,
+        &Im2colForwardSrc::new(&g, &x.data),
+        &SliceB { data: &w.data, n: g.out_c },
+        &mut y.data,
+        g.col_rows(),
+        g.col_cols(),
+        g.out_c,
+    );
+    y
+}
+
+/// [`forward`] through the pre-fusion materialized-im2col route (full
+/// cols matrix + slice GEMM) — bit-identical oracle / bench partner.
+pub fn forward_materialized(
+    mul: &MulKernel,
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    pad: usize,
+) -> Tensor {
     let g = geom(x, w, stride, pad);
     let mut cols = vec![0.0f32; g.col_rows() * g.col_cols()];
     im2col_forward(&g, &x.data, &mut cols);
@@ -31,7 +65,7 @@ pub fn forward(mul: &MulKernel, x: &Tensor, w: &Tensor, stride: usize, pad: usiz
 
 /// Weight gradient (paper Alg. 4 lines 4-5): `dw[kh, kw, c, oc]` from the
 /// layer input `x` and the back-propagated error `dy`, with the dilation of
-/// `dy` fused into the im2col indexing.
+/// `dy` fused into the (implicitly packed) im2col indexing.
 pub fn weight_grad(
     mul: &MulKernel,
     x: &Tensor,
@@ -40,6 +74,94 @@ pub fn weight_grad(
     stride: usize,
     pad: usize,
 ) -> Tensor {
+    let g = wg_geom(x, dy, w_shape, stride, pad);
+    let q = g.batch * g.out_h() * g.out_w();
+    let mut dw = Tensor::zeros(w_shape);
+    gemm_auto_src(
+        mul,
+        &Im2colWeightGradSrc::new(&g, &x.data),
+        &SliceB { data: &dy.data, n: g.out_c },
+        &mut dw.data,
+        g.col_cols(),
+        q,
+        g.out_c,
+    );
+    dw
+}
+
+/// [`weight_grad`] through the materialized-im2col route — bit-identical
+/// oracle / bench partner.
+pub fn weight_grad_materialized(
+    mul: &MulKernel,
+    x: &Tensor,
+    dy: &Tensor,
+    w_shape: &[usize],
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let g = wg_geom(x, dy, w_shape, stride, pad);
+    let q = g.batch * g.out_h() * g.out_w();
+    let mut cols = vec![0.0f32; g.col_cols() * q];
+    im2col_weight_grad(&g, &x.data, &mut cols);
+    let mut dw = Tensor::zeros(w_shape);
+    gemm_auto(mul, &cols, &dy.data, &mut dw.data, g.col_cols(), q, g.out_c);
+    dw
+}
+
+/// Preceding-layer gradient (paper Alg. 4 lines 6-8): `dx[b, h, w, c]` via
+/// fused pad+dilate im2col of `dy` (packed implicitly) and a GEMM against
+/// the transposed-and-reversed weights (built once per call into the
+/// recycled scratch — paper §VI-B.2: a separate rearranging pass is worth
+/// it for coalesced GEMM reads).
+pub fn input_grad(
+    mul: &MulKernel,
+    dy: &Tensor,
+    w: &Tensor,
+    x_shape: &[usize],
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let g = plg_geom(dy, w, x_shape, stride, pad);
+    let rows = g.batch * g.in_h * g.in_w;
+    let rlen = g.k_h * g.k_w * g.out_c;
+    let mut dx = Tensor::zeros(x_shape);
+    with_scratch(w.data.len(), |wrt| {
+        transpose_reverse_into(&w.data, g.k_h, g.k_w, g.in_c, g.out_c, wrt);
+        gemm_auto_src(
+            mul,
+            &Im2colPlgSrc::new(&g, &dy.data),
+            &SliceB { data: wrt, n: g.in_c },
+            &mut dx.data,
+            rows,
+            rlen,
+            g.in_c,
+        );
+    });
+    dx
+}
+
+/// [`input_grad`] through the materialized-im2col route — bit-identical
+/// oracle / bench partner.
+pub fn input_grad_materialized(
+    mul: &MulKernel,
+    dy: &Tensor,
+    w: &Tensor,
+    x_shape: &[usize],
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let g = plg_geom(dy, w, x_shape, stride, pad);
+    let rows = g.batch * g.in_h * g.in_w;
+    let rlen = g.k_h * g.k_w * g.out_c;
+    let mut cols = vec![0.0f32; rows * rlen];
+    im2col_plg(&g, &dy.data, &mut cols);
+    let wrt = transpose_reverse(&w.data, g.k_h, g.k_w, g.in_c, g.out_c);
+    let mut dx = Tensor::zeros(x_shape);
+    gemm_auto(mul, &cols, &wrt, &mut dx.data, rows, rlen, g.in_c);
+    dx
+}
+
+fn wg_geom(x: &Tensor, dy: &Tensor, w_shape: &[usize], stride: usize, pad: usize) -> Conv2dGeom {
     let g = Conv2dGeom {
         batch: x.shape[0],
         in_h: x.shape[1],
@@ -52,25 +174,10 @@ pub fn weight_grad(
         pad,
     };
     debug_assert_eq!(dy.shape, vec![g.batch, g.out_h(), g.out_w(), g.out_c]);
-    let q = g.batch * g.out_h() * g.out_w();
-    let mut cols = vec![0.0f32; g.col_cols() * q];
-    im2col_weight_grad(&g, &x.data, &mut cols);
-    let mut dw = Tensor::zeros(w_shape);
-    gemm_auto(mul, &cols, &dy.data, &mut dw.data, g.col_cols(), q, g.out_c);
-    dw
+    g
 }
 
-/// Preceding-layer gradient (paper Alg. 4 lines 6-8): `dx[b, h, w, c]` via
-/// fused pad+dilate im2col of `dy` and a GEMM against the
-/// transposed-and-reversed weights.
-pub fn input_grad(
-    mul: &MulKernel,
-    dy: &Tensor,
-    w: &Tensor,
-    x_shape: &[usize],
-    stride: usize,
-    pad: usize,
-) -> Tensor {
+fn plg_geom(dy: &Tensor, w: &Tensor, x_shape: &[usize], stride: usize, pad: usize) -> Conv2dGeom {
     let g = Conv2dGeom {
         batch: x_shape[0],
         in_h: x_shape[1],
@@ -83,16 +190,7 @@ pub fn input_grad(
         pad,
     };
     debug_assert_eq!(dy.shape, vec![g.batch, g.out_h(), g.out_w(), g.out_c]);
-    let rows = g.batch * g.in_h * g.in_w;
-    let rlen = g.k_h * g.k_w * g.out_c;
-    let mut cols = vec![0.0f32; rows * rlen];
-    im2col_plg(&g, &dy.data, &mut cols);
-    // paper §VI-B.2: a separate kernel invocation is worth it for coalesced
-    // GEMM reads
-    let wrt = transpose_reverse(&w.data, g.k_h, g.k_w, g.in_c, g.out_c);
-    let mut dx = Tensor::zeros(x_shape);
-    gemm_auto(mul, &cols, &wrt, &mut dx.data, rows, rlen, g.in_c);
-    dx
+    g
 }
 
 fn geom(x: &Tensor, w: &Tensor, stride: usize, pad: usize) -> Conv2dGeom {
@@ -156,6 +254,37 @@ mod tests {
             }
         }
         y
+    }
+
+    /// Smoke version of the implicit-vs-materialized contract (the full
+    /// stride/pad/strategy/tile sweep lives in `tests/conv_grads.rs`).
+    #[test]
+    fn implicit_route_matches_materialized_bitwise() {
+        let mut rng = Pcg32::seeded(64);
+        for (stride, pad) in [(1, 0), (2, 1)] {
+            let x = rand_tensor(&[2, 7, 9, 3], &mut rng);
+            let w = rand_tensor(&[3, 3, 3, 4], &mut rng);
+            let mul = MulKernel::Native;
+            let y = forward(&mul, &x, &w, stride, pad);
+            let y_m = forward_materialized(&mul, &x, &w, stride, pad);
+            assert_eq!(y.shape, y_m.shape);
+            let dy = rand_tensor(&y.shape, &mut rng);
+            let dw = weight_grad(&mul, &x, &dy, &w.shape, stride, pad);
+            let dw_m = weight_grad_materialized(&mul, &x, &dy, &w.shape, stride, pad);
+            let dx = input_grad(&mul, &dy, &w, &x.shape, stride, pad);
+            let dx_m = input_grad_materialized(&mul, &dy, &w, &x.shape, stride, pad);
+            for (got, want, what) in
+                [(&y, &y_m, "fwd"), (&dw, &dw_m, "dw"), (&dx, &dx_m, "dx")]
+            {
+                for i in 0..want.len() {
+                    assert_eq!(
+                        got.data[i].to_bits(),
+                        want.data[i].to_bits(),
+                        "{what} s{stride}p{pad} idx {i}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

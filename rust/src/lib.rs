@@ -39,13 +39,20 @@
 //! ([`kernels::gemm::gemm_tiled`]): packed `A` row-panels / `B`
 //! column-panels in reusable per-thread buffers, 2D output tiles
 //! scheduled work-stealing over the persistent worker pool in
-//! [`util::threads`]. One accumulation contract (running FP32
-//! accumulator, ascending contraction order) keeps every path
-//! bit-identical to the per-element scalar oracle at any tile geometry
-//! and thread count (enforced by `tests/batched_vs_scalar.rs` and
+//! [`util::threads`]. Packing is generalized over
+//! [`kernels::gemm::PackA`]/[`kernels::gemm::PackB`] panel sources
+//! ([`kernels::gemm::gemm_tiled_src`]), which is how the conv layer runs
+//! its three GEMMs *implicitly* — panels packed straight from the NHWC
+//! tensors through the fused im2col indexing, no cols matrix ever
+//! materialized. One accumulation contract (running FP32 accumulator,
+//! ascending contraction order) keeps every path bit-identical to the
+//! per-element scalar oracle at any tile geometry and thread count
+//! (enforced by `tests/batched_vs_scalar.rs`, `tests/conv_grads.rs` and
 //! `tests/golden_mults.rs`). `cargo bench -- gemm` (or `approxtrain
 //! bench-gemm`) times all strategies, panel vs tiled, plus a tile-size
-//! autotune probe, and records `BENCH_gemm.json`; methodology in
+//! autotune probe, and records `BENCH_gemm.json`; `cargo bench -- conv`
+//! (or `approxtrain bench-conv`) records the implicit-vs-materialized
+//! conv comparison into `BENCH_conv.json`; methodology in
 //! `docs/BENCHMARKS.md`.
 //!
 //! ## Module map (`rust/src/`)

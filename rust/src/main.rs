@@ -7,6 +7,7 @@
 //! approxtrain infer --model lenet5 --mode lut --mult afm16
 //! approxtrain serve --model lenet300 --requests 64
 //! approxtrain bench-gemm --size 256
+//! approxtrain bench-conv
 //! approxtrain experiment fig6|fig10|table3|table4|table5|table6|fig11|fig12|all [--quick]
 //! approxtrain list-artifacts
 //! ```
@@ -55,6 +56,14 @@ fn main() -> Result<()> {
             println!("{out}");
             Ok(())
         }
+        "bench-conv" => {
+            // implicit-GEMM vs materialized-im2col conv benchmark; pure
+            // CPU path, same root-record policy as bench-gemm
+            let quick = args.has_flag("quick");
+            let out = experiments::bench_conv(&results_dir(&args), quick, !quick)?;
+            println!("{out}");
+            Ok(())
+        }
         "experiment" => experiment(&args),
         "list-artifacts" => list_artifacts(&args),
         "" | "help" => {
@@ -77,6 +86,7 @@ commands:
   infer --model <m> --mode <...> --mult <name> [--samples N] [--ckpt f]
   serve --model <m> [--requests N] [--batch-wait-ms N]
   bench-gemm [--size N] [--quick]          CPU GEMM perf record (BENCH_gemm.json)
+  bench-conv [--quick]                     implicit vs materialized conv (BENCH_conv.json)
   experiment <fig1|fig6|fig10|table3|table4|table5|table6|fig11|fig12|all>
         [--quick]
   list-artifacts
@@ -214,14 +224,13 @@ fn serve(args: &Args) -> Result<()> {
             });
         },
     )?;
-    let lats = &stats.latencies_s;
     println!(
         "served {} requests in {} batches | p50 {:.1} ms p99 {:.1} ms | mean fill {:.1}/{batch}",
         stats.requests,
         stats.batches,
-        approxtrain::util::stats::percentile(lats, 50.0) * 1e3,
-        approxtrain::util::stats::percentile(lats, 99.0) * 1e3,
-        stats.fills.iter().sum::<usize>() as f64 / stats.batches.max(1) as f64,
+        stats.latency_percentile_s(50.0) * 1e3,
+        stats.latency_percentile_s(99.0) * 1e3,
+        stats.mean_fill(),
     );
     Ok(())
 }

@@ -48,8 +48,11 @@ impl RunLog {
     }
 }
 
-/// Compute classification accuracy from logits (row-major `[batch, classes]`).
-pub fn accuracy_from_logits(logits: &[f32], labels: &[u32], classes: usize) -> f32 {
+/// Count of correctly-classified rows (argmax == label) from logits
+/// (row-major `[batch, classes]`). The count form lets callers weight
+/// accuracy per *sample* across unevenly-filled batches — a per-batch
+/// average of rates would overweight a padded final batch.
+pub fn correct_from_logits(logits: &[f32], labels: &[u32], classes: usize) -> usize {
     assert_eq!(logits.len(), labels.len() * classes);
     let mut correct = 0usize;
     for (i, &label) in labels.iter().enumerate() {
@@ -64,7 +67,12 @@ pub fn accuracy_from_logits(logits: &[f32], labels: &[u32], classes: usize) -> f
             correct += 1;
         }
     }
-    correct as f32 / labels.len() as f32
+    correct
+}
+
+/// Compute classification accuracy from logits (row-major `[batch, classes]`).
+pub fn accuracy_from_logits(logits: &[f32], labels: &[u32], classes: usize) -> f32 {
+    correct_from_logits(logits, labels, classes) as f32 / labels.len() as f32
 }
 
 #[cfg(test)]

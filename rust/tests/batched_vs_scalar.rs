@@ -10,7 +10,8 @@
 
 use approxtrain::amsim::AmSim;
 use approxtrain::kernels::gemm::{
-    gemm, gemm_panel, gemm_panel_threaded, gemm_scalar_reference, gemm_tiled_with, TileConfig,
+    gemm, gemm_panel, gemm_panel_threaded, gemm_scalar_reference, gemm_tiled_src,
+    gemm_tiled_with, SliceA, SliceB, TileConfig,
 };
 use approxtrain::kernels::matvec::{
     dense_forward, dense_input_grad, dense_weight_grad, DENSE_GEMM_MIN_MACS,
@@ -81,6 +82,40 @@ fn gemm_paths_equal_scalar_dispatch_at_every_tile_size() {
             }
         });
     }
+}
+
+/// The generalized panel-source entry point with slice sources IS the
+/// slice path: `gemm_tiled_src(SliceA, SliceB)` must equal the scalar
+/// oracle (and hence `gemm_tiled_with`) bit for bit at any tile geometry
+/// and thread count. The implicit im2col sources are swept against the
+/// same oracle in `tests/conv_grads.rs`.
+#[test]
+fn gemm_tiled_src_with_slice_sources_equals_slice_path() {
+    let (m, k, n) = (21, 65, 19);
+    for_each_strategy(|mul, name| {
+        let mut rng = Pcg32::seeded(906);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut want = vec![0.0f32; m * n];
+        gemm_scalar_reference(mul, &a, &b, &mut want, m, k, n);
+        for cfg in [TileConfig { mc: 7, kc: 16, nc: 5 }, TileConfig::DEFAULT] {
+            for threads in [1, 3, 8] {
+                let mut got = vec![0.0f32; m * n];
+                gemm_tiled_src(
+                    mul,
+                    cfg,
+                    &SliceA { data: &a, k },
+                    &SliceB { data: &b, n },
+                    &mut got,
+                    m,
+                    k,
+                    n,
+                    threads,
+                );
+                assert_bits(&got, &want, &format!("gemm_tiled_src[{name}] {cfg:?} t={threads}"));
+            }
+        }
+    });
 }
 
 #[test]

@@ -1,20 +1,28 @@
-//! Conv-layer gradient correctness and tiled-GEMM bit-identity.
+//! Conv-layer gradient correctness and implicit-GEMM bit-identity.
 //!
-//! Two nets:
+//! Three nets:
 //! 1. finite-difference checks of `amconv2d::weight_grad` and
 //!    `amconv2d::input_grad` under the *fp32 multiplier* (the exact
-//!    `MulKernel::Direct(fp32)` functional model), tolerance-based;
+//!    `MulKernel::Direct(fp32)` functional model), tolerance-based —
+//!    running on the implicit-GEMM path the layers now use;
 //! 2. bit-identity of all three conv GEMMs (forward, weight-grad,
-//!    preceding-layer-grad) against `gemm_scalar_reference` run over the
-//!    same im2col matrices, at odd geometries (stride 2, pad 1,
-//!    non-square input) — for every simulation strategy, on the tiled
-//!    packed GEMM path the layers actually use (`gemm_auto`).
+//!    preceding-layer-grad) against both the materialized-im2col route
+//!    and `gemm_scalar_reference` run over the materialized im2col
+//!    matrices — for every simulation strategy, across the
+//!    `(stride, pad)` grid of the acceptance sweep, on non-square inputs;
+//! 3. the same bit-identity at degenerate and oversized `TileConfig`s and
+//!    several thread counts through `gemm_tiled_src` directly, plus a
+//!    no-allocation smoke check that a second conv pass reuses the
+//!    recycled thread-local pack/scratch buffers.
 
 use approxtrain::amsim::AmSim;
-use approxtrain::kernels::gemm::gemm_scalar_reference;
-use approxtrain::kernels::im2col::{im2col_forward, im2col_plg, im2col_weight_grad};
+use approxtrain::kernels::gemm::{gemm_scalar_reference, gemm_tiled_src, SliceB, TileConfig};
+use approxtrain::kernels::im2col::{
+    im2col_forward, im2col_plg, im2col_weight_grad, Im2colForwardSrc, Im2colPlgSrc,
+    Im2colWeightGradSrc,
+};
 use approxtrain::kernels::transpose_reverse::transpose_reverse;
-use approxtrain::kernels::{Conv2dGeom, MulKernel};
+use approxtrain::kernels::{buffer_growth_events, Conv2dGeom, MulKernel};
 use approxtrain::layers::amconv2d;
 use approxtrain::lut::MantissaLut;
 use approxtrain::mult::registry;
@@ -24,6 +32,64 @@ use approxtrain::util::rng::Pcg32;
 fn rand_tensor(shape: &[usize], rng: &mut Pcg32) -> Tensor {
     let n = shape.iter().product();
     Tensor::from_vec(shape, (0..n).map(|_| rng.range(-1.0, 1.0)).collect())
+}
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for i in 0..got.len() {
+        assert_eq!(
+            got[i].to_bits(),
+            want[i].to_bits(),
+            "{what} idx {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+/// The acceptance contract for one geometry and one strategy: all three
+/// conv GEMMs must agree bit for bit between the implicit route (what the
+/// layers run), the materialized-im2col route (the kept oracle), and the
+/// per-element scalar reference over the materialized cols matrices.
+fn check_conv_bitwise(mul: &MulKernel, g: &Conv2dGeom, x: &Tensor, w: &Tensor, label: &str) {
+    let (stride, pad) = (g.stride, g.pad);
+
+    // forward
+    let y = amconv2d::forward(mul, x, w, stride, pad);
+    let y_mat = amconv2d::forward_materialized(mul, x, w, stride, pad);
+    assert_bits(&y.data, &y_mat.data, &format!("{label}: fwd implicit vs materialized"));
+    let mut cols = vec![0.0f32; g.col_rows() * g.col_cols()];
+    im2col_forward(g, &x.data, &mut cols);
+    let mut y_ref = vec![0.0f32; g.col_rows() * g.out_c];
+    gemm_scalar_reference(mul, &cols, &w.data, &mut y_ref, g.col_rows(), g.col_cols(), g.out_c);
+    assert_bits(&y.data, &y_ref, &format!("{label}: fwd vs scalar oracle"));
+
+    let dy = rand_tensor(&y.shape, &mut Pcg32::seeded(7300 + (stride * 10 + pad) as u64));
+
+    // weight grad
+    let dw = amconv2d::weight_grad(mul, x, &dy, &w.shape, stride, pad);
+    let dw_mat = amconv2d::weight_grad_materialized(mul, x, &dy, &w.shape, stride, pad);
+    assert_bits(&dw.data, &dw_mat.data, &format!("{label}: dw implicit vs materialized"));
+    let q = g.batch * g.out_h() * g.out_w();
+    let mut wg_cols = vec![0.0f32; g.col_cols() * q];
+    im2col_weight_grad(g, &x.data, &mut wg_cols);
+    let mut dw_ref = vec![0.0f32; g.col_cols() * g.out_c];
+    gemm_scalar_reference(mul, &wg_cols, &dy.data, &mut dw_ref, g.col_cols(), q, g.out_c);
+    assert_bits(&dw.data, &dw_ref, &format!("{label}: dw vs scalar oracle"));
+
+    // preceding-layer grad
+    let x_shape = [g.batch, g.in_h, g.in_w, g.in_c];
+    let dx = amconv2d::input_grad(mul, &dy, w, &x_shape, stride, pad);
+    let dx_mat = amconv2d::input_grad_materialized(mul, &dy, w, &x_shape, stride, pad);
+    assert_bits(&dx.data, &dx_mat.data, &format!("{label}: dx implicit vs materialized"));
+    let rows = g.batch * g.in_h * g.in_w;
+    let rlen = g.k_h * g.k_w * g.out_c;
+    let mut plg_cols = vec![0.0f32; rows * rlen];
+    im2col_plg(g, &dy.data, &mut plg_cols);
+    let wrt = transpose_reverse(&w.data, g.k_h, g.k_w, g.in_c, g.out_c);
+    let mut dx_ref = vec![0.0f32; rows * g.in_c];
+    gemm_scalar_reference(mul, &plg_cols, &wrt, &mut dx_ref, rows, rlen, g.in_c);
+    assert_bits(&dx.data, &dx_ref, &format!("{label}: dx vs scalar oracle"));
 }
 
 /// Finite-difference check of both backward kernels under the fp32
@@ -145,6 +211,154 @@ fn conv_gemms_bitwise_match_scalar_reference_at_odd_shapes() {
             assert_eq!(dx.data[i].to_bits(), dx_ref[i].to_bits(), "{label}: dx idx {i}");
         }
     }
+}
+
+/// The acceptance sweep: implicit-GEMM conv == materialized-im2col conv
+/// == `gemm_scalar_reference` for native / direct / LUT across the full
+/// `(stride, pad)` grid on a non-square input.
+#[test]
+fn implicit_equals_materialized_equals_scalar_across_stride_pad_grid() {
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    for (stride, pad) in [(1usize, 0usize), (1, 1), (2, 1), (2, 0), (3, 1)] {
+        let g = Conv2dGeom {
+            batch: 2,
+            in_h: 7,
+            in_w: 9,
+            in_c: 3,
+            k_h: 3,
+            k_w: 3,
+            out_c: 5,
+            stride,
+            pad,
+        };
+        let mut rng = Pcg32::seeded(750 + (stride * 10 + pad) as u64);
+        let x = rand_tensor(&[g.batch, g.in_h, g.in_w, g.in_c], &mut rng);
+        let w = rand_tensor(&[g.k_h, g.k_w, g.in_c, g.out_c], &mut rng);
+        for mul in [
+            MulKernel::Native,
+            MulKernel::Direct(model.as_ref()),
+            MulKernel::Lut(AmSim::new(&lut)),
+        ] {
+            let label = format!("s{stride}p{pad} {}", mul.describe());
+            check_conv_bitwise(&mul, &g, &x, &w, &label);
+        }
+    }
+}
+
+/// The implicit im2col panel sources through `gemm_tiled_src` must match
+/// the scalar oracle at degenerate, block-straddling and oversized
+/// `TileConfig`s and at several thread counts — the implicit analog of
+/// the slice-path geometry sweep in `batched_vs_scalar.rs`.
+#[test]
+fn implicit_sources_bitwise_stable_across_tile_geometries_and_threads() {
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    let g = Conv2dGeom {
+        batch: 2,
+        in_h: 7,
+        in_w: 9,
+        in_c: 3,
+        k_h: 3,
+        k_w: 3,
+        out_c: 5,
+        stride: 2,
+        pad: 1,
+    };
+    let mut rng = Pcg32::seeded(76);
+    let x = rand_tensor(&[g.batch, g.in_h, g.in_w, g.in_c], &mut rng);
+    let w = rand_tensor(&[g.k_h, g.k_w, g.in_c, g.out_c], &mut rng);
+    let dy = rand_tensor(&[g.batch, g.out_h(), g.out_w(), g.out_c], &mut rng);
+    let wrt = transpose_reverse(&w.data, g.k_h, g.k_w, g.in_c, g.out_c);
+
+    let q = g.batch * g.out_h() * g.out_w();
+    let rows = g.batch * g.in_h * g.in_w;
+    let rlen = g.k_h * g.k_w * g.out_c;
+    let mut fwd_cols = vec![0.0f32; g.col_rows() * g.col_cols()];
+    im2col_forward(&g, &x.data, &mut fwd_cols);
+    let mut wg_cols = vec![0.0f32; g.col_cols() * q];
+    im2col_weight_grad(&g, &x.data, &mut wg_cols);
+    let mut plg_cols = vec![0.0f32; rows * rlen];
+    im2col_plg(&g, &dy.data, &mut plg_cols);
+
+    let configs = [
+        TileConfig { mc: 1, kc: 1, nc: 1 },
+        TileConfig { mc: 3, kc: 5, nc: 2 },
+        TileConfig::DEFAULT,
+        TileConfig { mc: 512, kc: 512, nc: 512 },
+    ];
+    let fwd_src = Im2colForwardSrc::new(&g, &x.data);
+    let wg_src = Im2colWeightGradSrc::new(&g, &x.data);
+    let plg_src = Im2colPlgSrc::new(&g, &dy.data);
+    for mul in [
+        MulKernel::Native,
+        MulKernel::Direct(model.as_ref()),
+        MulKernel::Lut(AmSim::new(&lut)),
+    ] {
+        // (source, materialized cols, B operand, m, k, n, label)
+        #[allow(clippy::type_complexity)]
+        let gemms: [(&dyn approxtrain::kernels::gemm::PackA, &[f32], &[f32], usize, usize, usize, &str);
+            3] = [
+            (
+                &fwd_src,
+                fwd_cols.as_slice(),
+                w.data.as_slice(),
+                g.col_rows(),
+                g.col_cols(),
+                g.out_c,
+                "fwd",
+            ),
+            (&wg_src, wg_cols.as_slice(), dy.data.as_slice(), g.col_cols(), q, g.out_c, "wg"),
+            (&plg_src, plg_cols.as_slice(), wrt.as_slice(), rows, rlen, g.in_c, "plg"),
+        ];
+        for (src, cols, b, m, k, n, what) in gemms {
+            let mut want = vec![0.0f32; m * n];
+            gemm_scalar_reference(&mul, cols, b, &mut want, m, k, n);
+            for cfg in configs {
+                for threads in [1usize, 2, 8] {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_tiled_src(&mul, cfg, src, &SliceB { data: b, n }, &mut got, m, k, n, threads);
+                    assert_bits(
+                        &got,
+                        &want,
+                        &format!("{what} {} {cfg:?} t={threads}", mul.describe()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// No-allocation smoke check: after a warm first pass, a second conv
+/// forward + backward at the same geometry must not grow the recycled
+/// thread-local pack/scratch buffers — i.e. the implicit path performs no
+/// per-call cols-matrix allocation (the sizes are small enough that
+/// `gemm_auto_src` stays single-lane on this thread, so the thread-local
+/// growth counter observes every packing).
+#[test]
+fn second_conv_pass_reuses_recycled_buffers() {
+    let mut rng = Pcg32::seeded(77);
+    let x = rand_tensor(&[1, 8, 8, 2], &mut rng);
+    let w = rand_tensor(&[3, 3, 2, 3], &mut rng);
+    let mul = MulKernel::Native;
+    let run = |dy: &Tensor| {
+        let y = amconv2d::forward(&mul, &x, &w, 1, 1);
+        let dw = amconv2d::weight_grad(&mul, &x, dy, &w.shape, 1, 1);
+        let dx = amconv2d::input_grad(&mul, dy, &w, &x.shape, 1, 1);
+        (y, dw, dx)
+    };
+    let dy = rand_tensor(&[1, 8, 8, 3], &mut rng);
+    let first = run(&dy); // warms pack + scratch buffers
+    let before = buffer_growth_events();
+    let second = run(&dy);
+    assert_eq!(
+        buffer_growth_events(),
+        before,
+        "steady-state conv pass must not grow the recycled buffers"
+    );
+    assert_bits(&second.0.data, &first.0.data, "steady-state fwd determinism");
+    assert_bits(&second.1.data, &first.1.data, "steady-state dw determinism");
+    assert_bits(&second.2.data, &first.2.data, "steady-state dx determinism");
 }
 
 /// Same bit-identity at a second odd geometry — stride 1 with an even

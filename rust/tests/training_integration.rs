@@ -89,6 +89,52 @@ fn checkpoint_transfers_across_modes() {
     );
 }
 
+/// `evaluate` must cover 100% of the test set: a test set that is not a
+/// multiple of the batch size (including one *smaller than a single
+/// batch*, which used to panic in `Batcher::new`) evaluates every sample
+/// exactly once via a padded final batch (padding cycles the real
+/// samples), and only an empty test set is an error.
+#[test]
+fn evaluate_covers_partial_batches_and_errors_only_when_empty() {
+    use approxtrain::data::Dataset;
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(&dir).unwrap();
+    let ds = mnist_like(&SynthSpec { n: 256, ..SynthSpec::mnist_like_default() });
+    let mut tr = Trainer::new(&mut engine, cfg("lenet300", "lut", "afm16", 0), &dir).unwrap();
+    let batch = tr.batch_size();
+
+    // a test set of batch + 3 samples: the 3 trailing samples must count
+    let (_, test_odd) = ds.clone().split(batch + 3);
+    let acc = tr.evaluate(&test_odd).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+    // accuracy is a per-sample ratio over n, so acc * n is integral
+    let scaled = acc * test_odd.n as f32;
+    assert!((scaled - scaled.round()).abs() < 1e-3, "acc {acc} not k/{}", test_odd.n);
+
+    // smaller than one batch: one padded batch, no panic, same invariant
+    let (_, test_small) = ds.clone().split(batch / 2 + 1);
+    let acc_small = tr.evaluate(&test_small).unwrap();
+    let scaled = acc_small * test_small.n as f32;
+    assert!((scaled - scaled.round()).abs() < 1e-3);
+
+    // evaluation is deterministic (unshuffled, padding never scored)
+    assert_eq!(tr.evaluate(&test_odd).unwrap(), acc);
+
+    // empty test set: a proper error, not a panic
+    let empty = Dataset {
+        name: "empty".into(),
+        images: Vec::new(),
+        labels: Vec::new(),
+        n: 0,
+        h: ds.h,
+        w: ds.w,
+        c: ds.c,
+        classes: ds.classes,
+    };
+    let err = tr.evaluate(&empty).unwrap_err();
+    assert!(err.to_string().contains("empty"), "{err}");
+}
+
 /// The batching server answers every request exactly once with sane logits.
 #[test]
 fn server_round_trip() {
