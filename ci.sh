@@ -43,13 +43,16 @@ step "cargo test --release -q (full suite incl. integration, release mode)"
 # speed; running them optimized also exercises the code the benches ship
 cargo test --release -q || fail=1
 
-step "conv bit-exactness suite (release): implicit-GEMM == materialized == scalar oracle"
+step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel remainder edges"
 # already part of the full release suite above, but pinned here explicitly
-# so the implicit-conv acceptance sweep can never silently drop out of the
-# release-mode pass
-cargo test --release -q --test conv_grads --test batched_vs_scalar || fail=1
+# so neither the implicit-conv acceptance sweep nor the MRxNR micro-kernel
+# residue sweep can ever silently drop out of the release-mode pass
+cargo test --release -q --test conv_grads --test batched_vs_scalar --test microtile || fail=1
 
 step "bench smoke (tiny sizes; does not touch the committed BENCH records)"
+# the gemm smoke rows include the micro-kernel tiled path (and its mr1nr1
+# per-element-drain ablation row), each behind the bench's own
+# bit-exactness gate against the scalar oracle
 cargo bench --bench paper_benches -- gemm --smoke || fail=1
 cargo bench --bench paper_benches -- conv --smoke || fail=1
 

@@ -15,10 +15,13 @@
 //! Results are printed and written under `results/`. The `gemm` experiment
 //! needs no artifacts (pure CPU kernels): the native / direct / LUT
 //! comparison of paper Fig 6 for both the row-sliced panel kernel and the
-//! cache-blocked packed tiled kernel, the
-//! batched-panel-vs-per-element-dispatch and tiled-vs-panel speedups, and
-//! a tile-size autotune probe at the largest size. Only an explicit
-//! full-budget `gemm` run refreshes the committed repo-root
+//! cache-blocked packed tiled kernel (drained by the register-blocked
+//! MRxNR micro-kernel, with a 1x1 per-element-drain ablation row), the
+//! batched-panel-vs-per-element-dispatch, tiled-vs-panel and
+//! micro-vs-scalar-drain speedups, and an autotune probe sweeping the
+//! micro-tile shape alongside the tile shape at the largest size — every
+//! timed path bit-exactness-gated against the scalar oracle first. Only
+//! an explicit full-budget `gemm` run refreshes the committed repo-root
 //! `BENCH_gemm.json` (see docs/BENCHMARKS.md).
 
 use std::path::Path;

@@ -20,6 +20,35 @@
 use crate::lut::MantissaLut;
 use crate::mult::fpbits::{EXP_BIAS, EXP_MASK, MANT_BITS, MANT_MASK, SIGN_MASK};
 
+/// Hard ceiling on the micro-kernel's register-block height
+/// ([`AmSim::mul_microtile`]'s `mr`). Bounds the stack footprint of the
+/// hoisted per-step operand decompositions here and of the GEMM tile
+/// drain's accumulator block. Re-exported as `kernels::MR_MAX`.
+pub const MR_MAX: usize = 16;
+
+/// Hard ceiling on the micro-kernel's register-block width (`nr`).
+/// Re-exported as `kernels::NR_MAX`.
+pub const NR_MAX: usize = 16;
+
+/// Validate the shared `mul_microtile` operand contract (register-block
+/// bounds + slice shapes). The one home for these checks, used by the
+/// `MulBackend` trait default, the `MulKernel` dispatch arms and
+/// [`AmSim::mul_microtile`], so the paths cannot drift.
+#[inline]
+pub fn assert_microtile_shape(
+    acc: &[f32],
+    a: &[f32],
+    b: &[f32],
+    mr: usize,
+    nr: usize,
+    k_len: usize,
+) {
+    assert!(mr <= MR_MAX && nr <= NR_MAX, "micro-tile {mr}x{nr} exceeds max");
+    assert_eq!(acc.len(), mr * nr);
+    assert_eq!(a.len(), mr * k_len);
+    assert_eq!(b.len(), k_len * nr);
+}
+
 /// The simulator: a LUT plus the derived masks/shifts of Algorithm 2's
 /// "global variables".
 pub struct AmSim<'a> {
@@ -201,6 +230,83 @@ impl<'a> AmSim<'a> {
         }
     }
 
+    /// Register-blocked `mr x nr` micro-tile FMA — the
+    /// [`crate::kernels::MulBackend::mul_microtile`] hot path. `a` holds
+    /// `mr` rows of `k_len` operands (row-major), `b` the `k_len x nr`
+    /// strip interleaved k-major (`b[kk*nr + c]`).
+    ///
+    /// Per contraction step the `mr` `A` operands and `nr` `B` operands
+    /// are decomposed **once** — pre-shifted LUT row bases, hoisted
+    /// exponents and signs, exactly what [`AmSim::fma_row`] does for its
+    /// single broadcast operand — and then feed `mr * nr` LUT gathers
+    /// into `mr * nr` *independent* FP32 accumulator chains. Relative to
+    /// draining each output element with its own [`AmSim::dot_acc`], this
+    /// cuts per-MAC decomposition cost by ~`mr*nr / (mr + nr)` and hides
+    /// the FP-add latency the single serial chain exposes. Each
+    /// accumulator still receives its products strictly in ascending `kk`
+    /// order, so the result is bit-identical to the scalar
+    /// `acc += amsim(a, b)` sequence (including the `+= 0.0` flush-adds
+    /// for zero/subnormal operands and underflow).
+    pub fn mul_microtile(
+        &self,
+        acc: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        mr: usize,
+        nr: usize,
+        k_len: usize,
+    ) {
+        assert_microtile_shape(acc, a, b, mr, nr, k_len);
+        let (lut, m, shift) = (self.lut, self.m, self.shift);
+        // hoisted per-step operand decompositions (Algorithm 2 lines 7-8
+        // and 11-12, paid once per operand instead of once per product)
+        let mut a_row = [0u32; MR_MAX]; // pre-shifted LUT row base
+        let mut a_sign = [0u32; MR_MAX];
+        let mut a_exp = [0i32; MR_MAX];
+        let mut b_mnt = [0u32; NR_MAX];
+        let mut b_sign = [0u32; NR_MAX];
+        let mut b_exp = [0i32; NR_MAX];
+        for kk in 0..k_len {
+            for r in 0..mr {
+                let bits = a[r * k_len + kk].to_bits();
+                a_row[r] = (bits & MANT_MASK) >> shift << m;
+                a_sign[r] = bits & SIGN_MASK;
+                a_exp[r] = ((bits & EXP_MASK) >> MANT_BITS) as i32;
+            }
+            let b_step = &b[kk * nr..(kk + 1) * nr];
+            for (c, bv) in b_step.iter().enumerate() {
+                let bits = bv.to_bits();
+                b_mnt[c] = (bits & MANT_MASK) >> shift;
+                b_sign[c] = bits & SIGN_MASK;
+                b_exp[c] = ((bits & EXP_MASK) >> MANT_BITS) as i32;
+            }
+            for r in 0..mr {
+                let (ea, ar, asg) = (a_exp[r], a_row[r], a_sign[r]);
+                let acc_row = &mut acc[r * nr..(r + 1) * nr];
+                for (c, av) in acc_row.iter_mut().enumerate() {
+                    let eb = b_exp[c];
+                    let exp = ea + eb - EXP_BIAS;
+                    // SAFETY: same invariant as `gather` (see AmSim::new).
+                    let entry = unsafe { *lut.get_unchecked((ar | b_mnt[c]) as usize) };
+                    let bits = if exp <= 0 || ea == 0 || eb == 0 {
+                        0
+                    } else {
+                        let sign = asg ^ b_sign[c];
+                        let exp = exp + ((entry >> MANT_BITS) & 1) as i32;
+                        if exp >= 255 {
+                            sign | EXP_MASK
+                        } else {
+                            sign | ((exp as u32) << MANT_BITS) | (entry & MANT_MASK)
+                        }
+                    };
+                    // mr*nr independent chains; each chain's adds stay in
+                    // ascending kk order (bit-exactness)
+                    *av += f32::from_bits(bits);
+                }
+            }
+        }
+    }
+
     pub fn mantissa_bits(&self) -> u32 {
         self.m
     }
@@ -335,6 +441,49 @@ mod tests {
                         "fma_row x={x} n={n} idx {i}"
                     );
                 }
+            }
+        }
+    }
+
+    /// The hoisted-decomposition micro-tile must reproduce the scalar
+    /// `acc += mul(a, b)` sequence bit for bit — for full and remainder
+    /// block shapes, with zero operands on both sides, and continuing
+    /// non-zero incoming accumulators (the tiled-GEMM drain contract).
+    #[test]
+    fn mul_microtile_matches_scalar_bitwise() {
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let sim = AmSim::new(&lut);
+        let mk = |seed: u64, n: usize| {
+            let mut r = crate::util::rng::Pcg32::seeded(seed);
+            (0..n).map(|_| quantize_mantissa(r.range(-3.0, 3.0), 7)).collect::<Vec<f32>>()
+        };
+        for (mr, nr, k_len) in [(1usize, 1usize, 9usize), (4, 8, 16), (3, 7, 5), (8, 8, 0)] {
+            let mut a = mk(500 + mr as u64, mr * k_len);
+            let mut b = mk(600 + nr as u64, k_len * nr);
+            if !a.is_empty() {
+                a[0] = 0.0;
+            }
+            if b.len() > 1 {
+                b[1] = -0.0;
+            }
+            let init = mk(700 + k_len as u64, mr * nr);
+            let mut got = init.clone();
+            sim.mul_microtile(&mut got, &a, &b, mr, nr, k_len);
+            let mut want = init;
+            for kk in 0..k_len {
+                for r in 0..mr {
+                    for c in 0..nr {
+                        want[r * nr + c] += sim.mul(a[r * k_len + kk], b[kk * nr + c]);
+                    }
+                }
+            }
+            for i in 0..mr * nr {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "{mr}x{nr} k={k_len} idx {i}"
+                );
             }
         }
     }

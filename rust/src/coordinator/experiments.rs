@@ -86,21 +86,26 @@ pub fn fig1(results_dir: &Path) -> Result<String> {
 /// emit the `BENCH_gemm.json` perf record (the repo's bench trajectory).
 ///
 /// Rows per size — the panel (1D row-sliced, PR 1) and tiled (2D
-/// cache-blocked packed) kernels for each strategy:
+/// cache-blocked packed, micro-kernel-drained) kernels for each strategy:
 /// * `native` / `native_tiled` — hardware `*` (the ATnG baseline);
 /// * `direct_afm16` / `direct_afm16_tiled` — per-multiply
 ///   functional-model calls (ATxC / "direct C simulation");
 /// * `lut_afm16` / `lut_afm16_tiled` — batched AMSim LUT-gather panels
-///   (ATxG), single lane;
+///   (ATxG), single lane; the tiled row drains through the default
+///   `MR x NR` register-blocked micro-kernel;
+/// * `lut_afm16_tiled_mr1nr1` — the tiled kernel with the micro-kernel
+///   degenerated to `1 x 1` (the pre-micro-kernel per-element drain),
+///   isolating the register-blocking win;
 /// * `lut_scalar_dispatch` — the per-element-dispatch naive-loop oracle
 ///   ([`crate::kernels::gemm::gemm_scalar_reference`]), measuring the
 ///   dispatch + cache-blocking headroom the batched kernels close;
 /// * `lut_pool` / `lut_tiled_pool` — the LUT paths over the persistent
 ///   worker pool's full width (row-blocks vs the 2D tile queue).
 ///
-/// At the largest size a tile-size autotune probe times the LUT tiled
-/// path over [`crate::kernels::gemm::TileConfig::AUTOTUNE_CANDIDATES`]
-/// and records the winner.
+/// At the largest size an autotune probe times the LUT tiled path over
+/// [`crate::kernels::gemm::TileConfig::AUTOTUNE_CANDIDATES`] — sweeping
+/// the micro-tile shape `(mr, nr)` alongside the cache-tile shape — and
+/// records the winner.
 ///
 /// Before timing, every optimized path (panel, tiled at each probed
 /// geometry, pool-threaded tiled) is asserted bit-identical to the scalar
@@ -137,7 +142,7 @@ pub fn bench_gemm(
     let lanes = threads::global().width();
 
     let mut table = Table::new(
-        "BENCH_gemm — CPU GEMM simulation strategies (panel vs tiled kernels)",
+        "BENCH_gemm — CPU GEMM simulation strategies (panel vs micro-kernel tiled)",
         &["size", "strategy", "time", "vs native", "vs scalar-dispatch LUT"],
     );
     let mut records: Vec<Json> = Vec::new();
@@ -145,6 +150,10 @@ pub fn bench_gemm(
     let mut best_cfg: Option<(f64, TileConfig)> = None;
     let mut headline_speedup = 0.0f64;
     let mut tiled_vs_panel = 0.0f64;
+    let mut micro_vs_scalar_drain = 0.0f64;
+    // the default tile geometry with the micro-kernel degenerated to the
+    // per-element drain — the ablation partner for the micro-kernel rows
+    let cfg_mr1 = TileConfig { mr: 1, nr: 1, ..TileConfig::DEFAULT };
     let last_size = *sizes.last().unwrap();
     for &n in &sizes {
         let mut rng = Pcg32::seeded(2600 + n as u64);
@@ -180,7 +189,9 @@ pub fn bench_gemm(
             n,
             1,
         );
-        gate("tiled", &c)?;
+        gate("tiled (micro-kernel)", &c)?;
+        gemm_tiled_with(&MulKernel::Lut(AmSim::new(&lut)), cfg_mr1, &a, &b, &mut c, n, n, n, 1);
+        gate("tiled mr1nr1", &c)?;
         gemm_tiled_threaded(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n, lanes);
         gate("tiled_pool", &c)?;
 
@@ -232,6 +243,9 @@ pub fn bench_gemm(
                 1,
             );
         });
+        let t_lut_tiled_mr1 = timed("lut_afm16_tiled_mr1nr1", &mut || {
+            gemm_tiled_with(&MulKernel::Lut(AmSim::new(&lut)), cfg_mr1, &a, &b, &mut c, n, n, n, 1);
+        });
         let t_tiled_pool = timed("lut_tiled_pool", &mut || {
             gemm_tiled_threaded(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n, lanes);
         });
@@ -245,6 +259,7 @@ pub fn bench_gemm(
             ("native_tiled", t_native_tiled),
             ("direct_afm16_tiled", t_direct_tiled),
             ("lut_afm16_tiled", t_lut_tiled),
+            ("lut_afm16_tiled_mr1nr1", t_lut_tiled_mr1),
             ("lut_tiled_pool", t_tiled_pool),
         ] {
             table.row(vec![
@@ -266,14 +281,21 @@ pub fn bench_gemm(
         if n == last_size {
             headline_speedup = t_scalar / t_lut;
             tiled_vs_panel = t_lut / t_lut_tiled;
-            // tile-size autotune probe (LUT path, single lane): gate each
-            // candidate geometry bit-exactly, then time it. DEFAULT was
-            // already gated and timed above (`lut_afm16_tiled`), so its
-            // measurement is reused rather than re-run.
+            micro_vs_scalar_drain = t_lut_tiled_mr1 / t_lut_tiled;
+            // tile + micro-tile autotune probe (LUT path, single lane):
+            // gate each candidate geometry bit-exactly, then time it.
+            // DEFAULT and the mr1nr1 ablation geometry were already gated
+            // and timed above, so their measurements are reused.
             for cfg in TileConfig::AUTOTUNE_CANDIDATES {
                 let t = if cfg == TileConfig::DEFAULT {
                     t_lut_tiled
+                } else if cfg == cfg_mr1 {
+                    t_lut_tiled_mr1
                 } else {
+                    let label = format!(
+                        "tiled mc{} kc{} nc{} mr{} nr{}",
+                        cfg.mc, cfg.kc, cfg.nc, cfg.mr, cfg.nr
+                    );
                     gemm_tiled_with(
                         &MulKernel::Lut(AmSim::new(&lut)),
                         cfg,
@@ -285,8 +307,8 @@ pub fn bench_gemm(
                         n,
                         1,
                     );
-                    gate(&format!("tiled mc{} kc{} nc{}", cfg.mc, cfg.kc, cfg.nc), &c)?;
-                    timed(&format!("autotune mc{} kc{} nc{}", cfg.mc, cfg.kc, cfg.nc), &mut || {
+                    gate(&label, &c)?;
+                    timed(&format!("autotune {label}"), &mut || {
                         gemm_tiled_with(
                             &MulKernel::Lut(AmSim::new(&lut)),
                             cfg,
@@ -304,6 +326,8 @@ pub fn bench_gemm(
                     ("mc", Json::num(cfg.mc as f64)),
                     ("kc", Json::num(cfg.kc as f64)),
                     ("nc", Json::num(cfg.nc as f64)),
+                    ("mr", Json::num(cfg.mr as f64)),
+                    ("nr", Json::num(cfg.nr as f64)),
                     ("seconds_median", Json::num(t)),
                 ]));
                 if best_cfg.map_or(true, |(bt, _)| t < bt) {
@@ -315,12 +339,14 @@ pub fn bench_gemm(
 
     let (best_t, best) = best_cfg.expect("autotune probed at least one config");
     let record = Json::obj(vec![
-        ("schema", Json::str("approxtrain/bench_gemm/v2")),
+        ("schema", Json::str("approxtrain/bench_gemm/v3")),
         (
             "description",
             Json::str(
                 "CPU GEMM time per call: native vs direct functional-model vs AMSim LUT \
-                 (paper Fig 6 configurations on the ATxC substrate), panel vs tiled kernels",
+                 (paper Fig 6 configurations on the ATxC substrate), panel vs tiled \
+                 kernels; tiled rows drain through the MRxNR register-blocked \
+                 micro-kernel (mr1nr1 row = per-element drain ablation)",
             ),
         ),
         ("multiplier", Json::str("afm16")),
@@ -336,6 +362,7 @@ pub fn bench_gemm(
         ),
         ("lut_batched_speedup_vs_scalar_dispatch", Json::num(headline_speedup)),
         ("lut_tiled_speedup_vs_panel", Json::num(tiled_vs_panel)),
+        ("lut_micro_speedup_vs_scalar_drain", Json::num(micro_vs_scalar_drain)),
         (
             "autotune",
             Json::obj(vec![
@@ -347,6 +374,8 @@ pub fn bench_gemm(
                         ("mc", Json::num(best.mc as f64)),
                         ("kc", Json::num(best.kc as f64)),
                         ("nc", Json::num(best.nc as f64)),
+                        ("mr", Json::num(best.mr as f64)),
+                        ("nr", Json::num(best.nr as f64)),
                         ("seconds_median", Json::num(best_t)),
                     ]),
                 ),
@@ -364,9 +393,13 @@ pub fn bench_gemm(
         "Batched LUT panels vs per-element dispatch at {last_size}: {headline_speedup:.2}x\n"
     ));
     md.push_str(&format!(
+        "MRxNR micro-kernel vs per-element tile drain at {last_size}: \
+         {micro_vs_scalar_drain:.2}x\n"
+    ));
+    md.push_str(&format!(
         "Tiled vs panel LUT kernel at {last_size}: {tiled_vs_panel:.2}x \
-         (autotune best: mc={} kc={} nc={})\n\n",
-        best.mc, best.kc, best.nc
+         (autotune best: mc={} kc={} nc={} mr={} nr={})\n\n",
+        best.mc, best.kc, best.nc, best.mr, best.nr
     ));
     Ok(md)
 }

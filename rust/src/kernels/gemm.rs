@@ -12,19 +12,40 @@
 //! (the pool's atomic chunk cursor); every tile owns a disjoint rectangle
 //! of `C`, so results are deterministic for any lane count.
 //!
+//! ## The micro-kernel drain
+//!
+//! Within a tile, output is produced by the register-blocked `MR x NR`
+//! *micro-kernel* ([`MulBackend::mul_microtile`], BLIS-style register
+//! blocking): per contraction step the `MR` packed `A` operands and `NR`
+//! packed `B` operands are decomposed once (pre-shifted LUT row bases,
+//! hoisted exponents/signs) and feed `MR x NR` **independent** FP32
+//! accumulator chains, hiding FP-add latency and cutting per-MAC
+//! decomposition cost by ~`MR*NR/(MR+NR)` versus draining each element
+//! with its own serial [`MulBackend::dot_panel_acc`] chain. To feed it
+//! contiguously, `B` panels are packed in an **`NR`-strip interleaved
+//! layout** (see [`PackB`]). Remainder edges (`m mod MR`, `n mod NR`)
+//! run the same micro-kernel at the leftover `mr`/`nr`; a fully
+//! degenerate `1 x 1` micro-tile instead drains through
+//! [`MulBackend::dot_panel_acc`] — the pre-micro-kernel per-element
+//! path, bit-identical by that op's accumulator-continuation contract
+//! (and what the bench's `mr1nr1` ablation row measures).
+//!
 //! ## The accumulation contract
 //!
 //! Every GEMM path in this module computes each output element with a
 //! **single running FP32 accumulator, adding products in ascending
 //! contraction (`k`) order** — cache blocks continue the accumulator via
-//! [`MulBackend::dot_panel_acc`] instead of reducing block-local partial
-//! sums. FP addition is not associative, so this is what makes the
-//! result *independent of blocking*: [`gemm_tiled`] is bit-identical to
-//! the per-element scalar oracle [`gemm_scalar_reference`] for **all
-//! three strategies** (native included — same op sequence, and rustc
-//! neither reassociates nor FMA-contracts f32 arithmetic), at every tile
-//! size and thread count. `tests/batched_vs_scalar.rs` and the in-module
-//! property tests enforce this.
+//! [`MulBackend::dot_panel_acc`] / [`MulBackend::mul_microtile`] instead
+//! of reducing block-local partial sums, and the micro-kernel's `MR x NR`
+//! accumulators are independent *between* elements but strictly
+//! sequential *within* each element. FP addition is not associative, so
+//! this is what makes the result *independent of blocking*:
+//! [`gemm_tiled`] is bit-identical to the per-element scalar oracle
+//! [`gemm_scalar_reference`] for **all three strategies** (native
+//! included — same op sequence, and rustc neither reassociates nor
+//! FMA-contracts f32 arithmetic), at every tile size, micro-tile shape
+//! and thread count. `tests/batched_vs_scalar.rs`,
+//! `tests/microtile.rs` and the in-module property tests enforce this.
 //!
 //! The pre-tiling row-sliced path is kept as [`gemm_panel`] /
 //! [`gemm_panel_threaded`]: same contract, no `A` packing, 1D row-block
@@ -45,7 +66,7 @@
 //! is bit-identical to the materialized route by construction (enforced
 //! in `tests/conv_grads.rs` and `tests/batched_vs_scalar.rs`).
 
-use super::{with_pack_buffers, MulBackend, MulKernel};
+use super::{with_pack_buffers, MulBackend, MulKernel, MR_MAX, NR_MAX};
 use crate::util::threads::{self, SendMutPtr};
 
 /// Source of `A`-operand row-panels for the tiled GEMM — the packing half
@@ -68,11 +89,24 @@ pub trait PackA: Sync {
 
 /// Source of `B`-operand column-panels for the tiled GEMM.
 ///
-/// `pack_b` must fill `out` with the *transposed* `jw x kw` panel of the
-/// logical `K x N` matrix: `out[j * kw + kk] = B[k0 + kk, j0 + j]`, so
-/// the inner gather loop walks both packed operands with stride 1.
+/// `pack_b` must fill `out` (length `jw * kw`) with the panel covering
+/// columns `[j0, j0 + jw)` x contraction rows `[k0, k0 + kw)` of the
+/// logical `K x N` matrix, in the **`nr`-strip interleaved layout** the
+/// micro-kernel streams: columns are grouped into strips of `nr` (the
+/// last strip may be narrower), strip `s` of width `w` starts at element
+/// offset `s * nr * kw`, and within a strip the element for contraction
+/// step `kk`, strip column `c` sits at `strip_base + kk * w + c`:
+///
+/// ```text
+/// out[s*nr*kw + kk*w + c] = B[k0 + kk, j0 + s*nr + c]
+/// ```
+///
+/// so each micro-kernel step reads its `w` `B` operands contiguously and
+/// consecutive steps advance by `w` — a pure streaming walk. With
+/// `nr == 1` this degenerates to the previous transposed column-major
+/// layout (`out[j * kw + kk]`).
 pub trait PackB: Sync {
-    fn pack_b(&self, j0: usize, jw: usize, k0: usize, kw: usize, out: &mut [f32]);
+    fn pack_b(&self, j0: usize, jw: usize, k0: usize, kw: usize, nr: usize, out: &mut [f32]);
 }
 
 /// [`PackA`] over a materialized row-major `M x K` slice (`k` = row
@@ -93,19 +127,29 @@ impl PackA for SliceA<'_> {
 }
 
 /// [`PackB`] over a materialized row-major `K x N` slice (`n` = row
-/// stride), packed transposed.
+/// stride), packed into the `nr`-strip interleaved layout. Each strip
+/// row is a contiguous `w`-wide copy out of a `B` row — unit-stride on
+/// both sides, unlike the per-element strided writes of the old
+/// column-major packing.
 pub struct SliceB<'a> {
     pub data: &'a [f32],
     pub n: usize,
 }
 
 impl PackB for SliceB<'_> {
-    fn pack_b(&self, j0: usize, jw: usize, k0: usize, kw: usize, out: &mut [f32]) {
+    fn pack_b(&self, j0: usize, jw: usize, k0: usize, kw: usize, nr: usize, out: &mut [f32]) {
         debug_assert_eq!(out.len(), jw * kw);
-        for j in 0..jw {
+        let mut base = 0;
+        let mut j = 0;
+        while j < jw {
+            let w = nr.min(jw - j);
             for kk in 0..kw {
-                out[j * kw + kk] = self.data[(k0 + kk) * self.n + j0 + j];
+                let src = (k0 + kk) * self.n + j0 + j;
+                out[base + kk * w..base + (kk + 1) * w]
+                    .copy_from_slice(&self.data[src..src + w]);
             }
+            base += w * kw;
+            j += w;
         }
     }
 }
@@ -121,39 +165,63 @@ pub const BK: usize = 64;
 pub const AUTO_THREAD_MACS: usize = 1 << 18;
 
 /// Tile geometry of the hierarchical cache-blocked [`gemm_tiled`] path:
-/// `A` row-panels are `mc x kc`, `B` column-panels `kc x nc`, and the
-/// output is computed in `mc x nc` tiles.
+/// `A` row-panels are `mc x kc`, `B` column-panels `kc x nc`, the output
+/// is computed in `mc x nc` tiles, and each tile is drained by the
+/// `mr x nr` register-blocked micro-kernel
+/// ([`MulBackend::mul_microtile`]).
 ///
 /// Thanks to the running-accumulator contract (module docs) the choice
-/// only affects speed, never a single output bit.
+/// only affects speed, never a single output bit — micro-tile shape
+/// included.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TileConfig {
     pub mc: usize,
     pub kc: usize,
     pub nc: usize,
+    /// Micro-kernel register-block height (`<=` [`super::MR_MAX`]).
+    pub mr: usize,
+    /// Micro-kernel register-block width (`<=` [`super::NR_MAX`]);
+    /// also the `B`-panel strip width (see [`PackB`]).
+    pub nr: usize,
 }
 
 impl TileConfig {
     /// Default geometry: a 64x128 `A` panel and a 128x64 `B` panel are
-    /// 32 KiB each (both L2-resident; one 128-element `B` column is 512
-    /// bytes, comfortably L1-resident under the gather loop).
-    pub const DEFAULT: TileConfig = TileConfig { mc: 64, kc: 128, nc: 64 };
+    /// 32 KiB each (both L2-resident; one 128-step 8-wide `B` strip is
+    /// 4 KiB, comfortably L1-resident under the gather loop). The 4x8
+    /// micro-tile runs 32 independent accumulator chains and amortizes
+    /// each operand decomposition over 8/4 products respectively
+    /// (`4*8/(4+8) ~ 2.7x` fewer decompositions per MAC).
+    pub const DEFAULT: TileConfig = TileConfig { mc: 64, kc: 128, nc: 64, mr: 4, nr: 8 };
 
     /// Geometries probed by the bench autotune (`bench-gemm` records the
-    /// fastest into `BENCH_gemm.json`). Bit-exactness is unaffected by
-    /// the choice; only cache behaviour differs per machine.
-    pub const AUTOTUNE_CANDIDATES: [TileConfig; 5] = [
-        TileConfig { mc: 32, kc: 64, nc: 32 },
-        TileConfig { mc: 64, kc: 64, nc: 64 },
+    /// fastest into `BENCH_gemm.json`), sweeping the micro-tile shape
+    /// (`mr x nr`) alongside the cache-tile shape. The `mr = nr = 1`
+    /// candidate is the pre-micro-kernel per-element drain — kept both as
+    /// the ablation row and so the autotune can detect a machine where
+    /// register blocking loses. Bit-exactness is unaffected by the
+    /// choice; only cache/register behaviour differs per machine.
+    pub const AUTOTUNE_CANDIDATES: [TileConfig; 8] = [
+        TileConfig { mc: 32, kc: 64, nc: 32, mr: 4, nr: 4 },
+        TileConfig { mc: 64, kc: 64, nc: 64, mr: 4, nr: 8 },
         TileConfig::DEFAULT,
-        TileConfig { mc: 64, kc: 256, nc: 64 },
-        TileConfig { mc: 128, kc: 128, nc: 128 },
+        TileConfig { mc: 64, kc: 128, nc: 64, mr: 1, nr: 1 },
+        TileConfig { mc: 64, kc: 128, nc: 64, mr: 2, nr: 16 },
+        TileConfig { mc: 64, kc: 128, nc: 64, mr: 8, nr: 4 },
+        TileConfig { mc: 64, kc: 256, nc: 64, mr: 8, nr: 8 },
+        TileConfig { mc: 128, kc: 128, nc: 128, mr: 4, nr: 8 },
     ];
 
     fn assert_valid(&self) {
         assert!(
-            self.mc > 0 && self.kc > 0 && self.nc > 0,
+            self.mc > 0 && self.kc > 0 && self.nc > 0 && self.mr > 0 && self.nr > 0,
             "tile dims must be positive: {self:?}"
+        );
+        assert!(
+            self.mr <= super::MR_MAX && self.nr <= super::NR_MAX,
+            "micro-tile exceeds {}x{}: {self:?}",
+            super::MR_MAX,
+            super::NR_MAX
         );
     }
 }
@@ -305,9 +373,15 @@ pub fn gemm_auto_src(
 /// contraction dimension, the `A` rows and `B` columns of the block are
 /// packed into this thread's reusable buffers (the CUDA "shared-memory
 /// fetch") by the panel sources — a memcpy for slice operands, on-the-fly
-/// im2col indexing for implicit conv operands — then the batched dot
-/// walks both packed panels with stride 1, continuing each output
-/// element's running accumulator.
+/// im2col indexing for implicit conv operands — then the tile is drained
+/// in `mr x nr` micro-tiles: accumulators are loaded from `C`, continued
+/// through the register-blocked [`MulBackend::mul_microtile`] over the
+/// whole `KC` block, and stored back. Remainder micro-tiles at the
+/// tile's right/bottom edges run the same micro-kernel at the leftover
+/// `mr`/`nr` width; a `1 x 1` micro-tile drains through
+/// [`MulBackend::dot_panel_acc`] (the pre-micro-kernel per-element
+/// path) — either way the edges follow the exact same per-element
+/// accumulation sequence.
 ///
 /// Deliberate trade-off: each tile packs its own operand panels, so a
 /// `B` panel is re-packed once per tile *row* (and an `A` panel once per
@@ -333,24 +407,76 @@ fn tile_into(
     let j0 = (tile % tile_cols) * cfg.nc;
     let j1 = (j0 + cfg.nc).min(n);
     let (ih, jw) = (i1 - i0, j1 - j0);
+    // micro-tile accumulator block, on the stack (at most 1 KiB)
+    let mut acc = [0.0f32; MR_MAX * NR_MAX];
     with_pack_buffers(cfg.mc * cfg.kc, cfg.kc * cfg.nc, |apack, bpack| {
         for k0 in (0..k).step_by(cfg.kc) {
             let kn = (k0 + cfg.kc).min(k);
             let kw = kn - k0;
             a.pack_a(i0, ih, k0, kw, &mut apack[..ih * kw]);
-            b.pack_b(j0, jw, k0, kw, &mut bpack[..jw * kw]);
-            for i in 0..ih {
-                let a_row = &apack[i * kw..(i + 1) * kw];
-                // SAFETY: this row segment (row i0+i, cols j0..j1) lies
-                // inside the tile's rectangle. Tiles partition C into
-                // disjoint rectangles, the pool's chunk cursor dispenses
-                // each tile index to exactly one lane, and run_chunks
-                // blocks until every tile completes — so no two live
-                // `&mut` slices ever overlap while `c` is borrowed.
-                let c_row =
-                    unsafe { std::slice::from_raw_parts_mut(c.0.add((i0 + i) * n + j0), jw) };
-                for (jj, c_val) in c_row.iter_mut().enumerate() {
-                    *c_val = mul.dot_panel_acc(*c_val, a_row, &bpack[jj * kw..(jj + 1) * kw]);
+            b.pack_b(j0, jw, k0, kw, cfg.nr, &mut bpack[..jw * kw]);
+            for i in (0..ih).step_by(cfg.mr) {
+                let mh = cfg.mr.min(ih - i);
+                let a_rows = &apack[i * kw..(i + mh) * kw];
+                // walk the B panel strip by strip (strip s of width w
+                // starts at s*nr*kw — the PackB interleaved layout)
+                let mut strip = 0;
+                let mut j = 0;
+                while j < jw {
+                    let w = cfg.nr.min(jw - j);
+                    let b_strip = &bpack[strip..strip + kw * w];
+                    if mh == 1 && w == 1 {
+                        // A 1x1 micro-tile IS the per-element drain:
+                        // continue this element's accumulator through the
+                        // 4-wide-unrolled dot instead (bit-identical by
+                        // the dot_panel_acc contract, faster for the
+                        // degenerate shape). With cfg.mr == cfg.nr == 1 —
+                        // width-1 strips are plain contiguous columns —
+                        // this reproduces the pre-micro-kernel tile drain
+                        // exactly, which is what the bench's mr1nr1
+                        // ablation row measures.
+                        //
+                        // SAFETY: same disjoint-rectangle argument as the
+                        // micro-tile path below.
+                        let c_elem = unsafe {
+                            std::slice::from_raw_parts_mut(c.0.add((i0 + i) * n + j0 + j), 1)
+                        };
+                        c_elem[0] = mul.dot_panel_acc(c_elem[0], a_rows, b_strip);
+                        strip += kw;
+                        j += 1;
+                        continue;
+                    }
+                    let acc_t = &mut acc[..mh * w];
+                    for r in 0..mh {
+                        // SAFETY: this row segment (row i0+i+r, cols
+                        // j0+j .. j0+j+w) lies inside the tile's
+                        // rectangle. Tiles partition C into disjoint
+                        // rectangles, the pool's chunk cursor dispenses
+                        // each tile index to exactly one lane, and
+                        // run_chunks blocks until every tile completes —
+                        // so no two live `&mut` slices ever overlap while
+                        // `c` is borrowed.
+                        let c_row = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                c.0.add((i0 + i + r) * n + j0 + j),
+                                w,
+                            )
+                        };
+                        acc_t[r * w..(r + 1) * w].copy_from_slice(c_row);
+                    }
+                    mul.mul_microtile(acc_t, a_rows, b_strip, mh, w, kw);
+                    for r in 0..mh {
+                        // SAFETY: same disjoint rectangle as the load above.
+                        let c_row = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                c.0.add((i0 + i + r) * n + j0 + j),
+                                w,
+                            )
+                        };
+                        c_row.copy_from_slice(&acc_t[r * w..(r + 1) * w]);
+                    }
+                    strip += kw * w;
+                    j += w;
                 }
             }
         }
@@ -581,9 +707,9 @@ mod tests {
         let lut = MantissaLut::generate(model.as_ref());
         let shapes = [(5, 17, 9), (21, 65, 19)];
         let configs = [
-            TileConfig { mc: 3, kc: 5, nc: 2 },
+            TileConfig { mc: 3, kc: 5, nc: 2, mr: 2, nr: 3 },
             TileConfig::DEFAULT,
-            TileConfig { mc: 256, kc: 512, nc: 256 },
+            TileConfig { mc: 256, kc: 512, nc: 256, mr: 16, nr: 16 },
         ];
         for &(m, k, n) in &shapes {
             let mut rng = Pcg32::seeded(2100 + (m * k * n) as u64);
@@ -679,7 +805,7 @@ mod tests {
             (0..k * n).map(|_| quantize_mantissa(rng.range(-2.0, 2.0), 7)).collect();
         // a small-tile config so the threaded run has plenty of tiles to
         // race over even on a narrow pool
-        let cfg = TileConfig { mc: 8, kc: 16, nc: 8 };
+        let cfg = TileConfig { mc: 8, kc: 16, nc: 8, mr: 3, nr: 5 };
         for mul in [
             MulKernel::Native,
             MulKernel::Direct(model.as_ref()),
@@ -771,7 +897,7 @@ mod tests {
         ] {
             let mut want = vec![0.0f32; m * n];
             gemm_scalar_reference(&mul, &a, &b, &mut want, m, k, n);
-            for cfg in [TileConfig { mc: 5, kc: 7, nc: 4 }, TileConfig::DEFAULT] {
+            for cfg in [TileConfig { mc: 5, kc: 7, nc: 4, mr: 2, nr: 2 }, TileConfig::DEFAULT] {
                 for threads in [1, 4] {
                     let mut got = vec![0.0f32; m * n];
                     gemm_tiled_src(
@@ -790,6 +916,46 @@ mod tests {
                         &want,
                         &format!("src {cfg:?} t={threads} {}", mul.describe()),
                     );
+                }
+            }
+        }
+    }
+
+    /// The `nr`-strip interleaved `pack_b` layout: element (kk, c) of
+    /// strip s sits at `s*nr*kw + kk*w + c`, and `nr = 1` reproduces the
+    /// old transposed column-major layout exactly.
+    #[test]
+    fn slice_b_packs_the_interleaved_strip_layout() {
+        let (k, n) = (7usize, 13usize);
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32).collect();
+        let src = SliceB { data: &b, n };
+        for (j0, jw, k0, kw) in [(0usize, n, 0usize, k), (3, 9, 2, 4), (11, 2, 0, 7)] {
+            for nr in [1usize, 3, 8, 16] {
+                let mut out = vec![-1.0f32; jw * kw];
+                src.pack_b(j0, jw, k0, kw, nr, &mut out);
+                let mut base = 0;
+                let mut j = 0;
+                while j < jw {
+                    let w = nr.min(jw - j);
+                    for kk in 0..kw {
+                        for c in 0..w {
+                            assert_eq!(
+                                out[base + kk * w + c],
+                                b[(k0 + kk) * n + j0 + j + c],
+                                "nr={nr} window ({j0},{jw},{k0},{kw}) strip at {j}"
+                            );
+                        }
+                    }
+                    base += w * kw;
+                    j += w;
+                }
+                if nr == 1 {
+                    // degenerate check against the old layout formula
+                    for jj in 0..jw {
+                        for kk in 0..kw {
+                            assert_eq!(out[jj * kw + kk], b[(k0 + kk) * n + j0 + jj]);
+                        }
+                    }
                 }
             }
         }

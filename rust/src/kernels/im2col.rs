@@ -6,7 +6,14 @@
 //!   implementations that pack tiled-GEMM panels *directly from the NHWC
 //!   tensors*; the cols matrix exists only logically ("implicit GEMM",
 //!   the completion of the paper's fusion idea: not even the fused-index
-//!   result array is materialized).
+//!   result array is materialized). All three conv GEMMs put the im2col
+//!   operand on the `A` side, whose row-major `ih x kw` panel layout is
+//!   exactly what the register-blocked micro-kernel drain consumes
+//!   ([`crate::kernels::MulBackend::mul_microtile`] reads `MR`
+//!   consecutive panel rows with row stride `kw`), so these sources
+//!   needed no layout change for the micro-kernel; the `NR`-strip
+//!   interleaved `B` panels are produced by the weight/error-side
+//!   [`crate::kernels::gemm::SliceB`].
 //! * **Materialized functions** ([`im2col_forward`],
 //!   [`im2col_weight_grad`], [`im2col_plg`]) — fill the full cols matrix
 //!   by packing the whole logical range through the same source; kept as

@@ -25,10 +25,16 @@
 //! [`gemm::PackA`]/[`gemm::PackB`] panel sources: the conv layer's
 //! *implicit GEMM* packs its panels straight from the NHWC tensors via
 //! the fused im2col index computations ([`im2col`]), so no cols matrix
-//! is ever materialized. Accumulation follows one crate-wide contract —
-//! a single running FP32 accumulator per output element, products added
-//! in ascending contraction order — so every blocking/threading choice is
-//! bit-identical to the per-element scalar oracle
+//! is ever materialized. Each tile is drained by the register-blocked
+//! `MR x NR` *micro-kernel* ([`MulBackend::mul_microtile`], the BLIS
+//! register-blocking idea): per contraction step the `MR` `A` operands
+//! and `NR` `B` operands are decomposed once and feed `MR x NR`
+//! **independent** FP32 accumulators, so the ~4-cycle FP-add latency is
+//! hidden behind many chains and per-MAC decomposition cost drops by
+//! ~`MR*NR / (MR+NR)`. Accumulation follows one crate-wide contract — a
+//! single running FP32 accumulator per output element, products added in
+//! ascending contraction order — so every blocking/threading/micro-tile
+//! choice is bit-identical to the per-element scalar oracle
 //! ([`gemm::gemm_scalar_reference`]).
 pub mod gemm;
 pub mod im2col;
@@ -38,8 +44,14 @@ pub mod transpose_reverse;
 
 use std::cell::Cell;
 
-use crate::amsim::AmSim;
+use crate::amsim::{assert_microtile_shape, AmSim};
 use crate::mult::ApproxMul;
+
+/// Register-block ceilings of [`MulBackend::mul_microtile`], defined in
+/// [`crate::amsim`] (they bound the stack arrays of its hoisted operand
+/// decompositions) and re-exported here next to the trait that carries
+/// the contract.
+pub use crate::amsim::{MR_MAX, NR_MAX};
 
 /// Multiplication strategy threaded through every kernel.
 pub enum MulKernel<'a> {
@@ -108,6 +120,51 @@ pub trait MulBackend {
     /// `acc[j] += mul(x, row[j])` — the rank-1-update inner loop, with the
     /// broadcast operand's decomposition hoisted out of the loop.
     fn fma_row(&self, acc: &mut [f32], x: f32, row: &[f32]);
+
+    /// Register-blocked `mr x nr` micro-tile FMA — the tiled-GEMM drain
+    /// primitive (BLIS-style register blocking at the multiplier-simulation
+    /// level):
+    ///
+    /// ```text
+    /// for kk in 0..k_len:                       # ascending contraction order
+    ///     for r in 0..mr, c in 0..nr:
+    ///         acc[r*nr + c] += mul(a[r*k_len + kk], b[kk*nr + c])
+    /// ```
+    ///
+    /// `a` holds `mr` operand rows of `k_len` elements each (row-major, the
+    /// tiled `A` panel layout); `b` holds the `k_len x nr` strip
+    /// *interleaved k-major* (`b[kk*nr + c]`, the [`gemm::PackB`] strip
+    /// layout), so each contraction step reads `nr` contiguous `B`
+    /// operands. The `mr*nr` accumulators are **independent chains** —
+    /// FP-add latency is hidden behind them — while each individual
+    /// accumulator still receives its products strictly in ascending `kk`
+    /// order, so the result is bit-identical to the per-element scalar
+    /// sequence (the crate-wide accumulation contract). Specialized
+    /// implementations additionally decompose each operand **once per
+    /// step** instead of once per product, cutting per-MAC decomposition
+    /// cost by ~`mr*nr / (mr + nr)`.
+    ///
+    /// `mr <= MR_MAX`, `nr <= NR_MAX`. The default implementation lowers
+    /// to one [`MulBackend::fma_row`] per `(kk, r)` — bit-identical by
+    /// `fma_row`'s own contract — so implementors only override it for
+    /// speed, never for semantics.
+    fn mul_microtile(
+        &self,
+        acc: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        mr: usize,
+        nr: usize,
+        k_len: usize,
+    ) {
+        assert_microtile_shape(acc, a, b, mr, nr, k_len);
+        for kk in 0..k_len {
+            let b_step = &b[kk * nr..(kk + 1) * nr];
+            for r in 0..mr {
+                self.fma_row(&mut acc[r * nr..(r + 1) * nr], a[r * k_len + kk], b_step);
+            }
+        }
+    }
 }
 
 impl MulBackend for MulKernel<'_> {
@@ -129,7 +186,7 @@ impl MulBackend for MulKernel<'_> {
     }
 
     fn dot_panel_acc(&self, init: f32, a: &[f32], b: &[f32]) -> f32 {
-        debug_assert_eq!(a.len(), b.len());
+        assert_eq!(a.len(), b.len());
         match self {
             // native: plain sequential FMA loop — the baseline every
             // slowdown ratio is measured against
@@ -182,6 +239,52 @@ impl MulBackend for MulKernel<'_> {
                 }
             }
             MulKernel::Lut(sim) => sim.fma_row(acc, x, row),
+        }
+    }
+
+    fn mul_microtile(
+        &self,
+        acc: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        mr: usize,
+        nr: usize,
+        k_len: usize,
+    ) {
+        match self {
+            // native: mr*nr independent FMA chains per step — the adds on
+            // any one accumulator stay in ascending kk order, so this is
+            // the same op sequence as the scalar loop, just latency-hidden
+            MulKernel::Native => {
+                assert_microtile_shape(acc, a, b, mr, nr, k_len);
+                for kk in 0..k_len {
+                    let b_step = &b[kk * nr..(kk + 1) * nr];
+                    for r in 0..mr {
+                        let x = a[r * k_len + kk];
+                        for (av, &bv) in acc[r * nr..(r + 1) * nr].iter_mut().zip(b_step) {
+                            *av += x * bv;
+                        }
+                    }
+                }
+            }
+            // direct: the virtual call per multiply is inherent to the
+            // black-box model; the win here is purely the independent
+            // accumulator chains between the calls
+            MulKernel::Direct(m) => {
+                assert_microtile_shape(acc, a, b, mr, nr, k_len);
+                for kk in 0..k_len {
+                    let b_step = &b[kk * nr..(kk + 1) * nr];
+                    for r in 0..mr {
+                        let x = a[r * k_len + kk];
+                        for (av, &bv) in acc[r * nr..(r + 1) * nr].iter_mut().zip(b_step) {
+                            *av += m.mul(x, bv);
+                        }
+                    }
+                }
+            }
+            // the LUT path validates inside AmSim::mul_microtile — no
+            // double-check on the hot path
+            MulKernel::Lut(sim) => sim.mul_microtile(acc, a, b, mr, nr, k_len),
         }
     }
 }
@@ -268,15 +371,30 @@ pub fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
     r
 }
 
+/// Loop-blocking edge of [`transpose_into`]: an 8x8 f32 block is two
+/// cache lines on each side, so both the row-strided reads and the
+/// column-strided writes of a block stay resident while it is processed.
+const TRANSPOSE_BLOCK: usize = 8;
+
 /// `dst[c * rows + r] = src[r * cols + c]` — transpose a row-major
 /// `rows x cols` matrix into `dst` (which becomes row-major
-/// `cols x rows`). Shared by the dense-kernel fallbacks.
+/// `cols x rows`). Shared by the dense-kernel fallbacks and (per spatial
+/// cell) by [`transpose_reverse::transpose_reverse`]. Cache-blocked in
+/// [`TRANSPOSE_BLOCK`]-square tiles: the naive loop pays a full
+/// column-stride on every write, so each store touches a new cache line;
+/// blocking confines the working set to `2 * 8` lines per tile.
 pub fn transpose_into(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
     assert_eq!(src.len(), rows * cols);
     assert_eq!(dst.len(), rows * cols);
-    for r in 0..rows {
-        for c in 0..cols {
-            dst[c * rows + r] = src[r * cols + c];
+    for r0 in (0..rows).step_by(TRANSPOSE_BLOCK) {
+        let r1 = (r0 + TRANSPOSE_BLOCK).min(rows);
+        for c0 in (0..cols).step_by(TRANSPOSE_BLOCK) {
+            let c1 = (c0 + TRANSPOSE_BLOCK).min(cols);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    dst[c * rows + r] = src[r * cols + c];
+                }
+            }
         }
     }
 }
@@ -431,6 +549,110 @@ mod tests {
                     "{} split={split}",
                     mul.describe()
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_into_blocked_matches_definition() {
+        // dimensions straddling the 8x8 blocking on both axes, plus
+        // degenerate strips
+        for (rows, cols) in [(1, 1), (3, 17), (8, 8), (9, 7), (16, 16), (19, 23)] {
+            let src: Vec<f32> = (0..rows * cols).map(|i| i as f32 * 0.5 - 3.0).collect();
+            let mut dst = vec![0.0f32; rows * cols];
+            transpose_into(&src, rows, cols, &mut dst);
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(
+                        dst[c * rows + r].to_bits(),
+                        src[r * cols + c].to_bits(),
+                        "({rows},{cols}) at ({r},{c})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Scalar replay of the `mul_microtile` contract: every accumulator
+    /// receives `mul(a[r][kk], b[kk][c])` in ascending `kk` order.
+    fn microtile_scalar_ref(
+        mul: &MulKernel,
+        acc: &mut [f32],
+        a: &[f32],
+        b: &[f32],
+        mr: usize,
+        nr: usize,
+        k_len: usize,
+    ) {
+        for kk in 0..k_len {
+            for r in 0..mr {
+                for c in 0..nr {
+                    acc[r * nr + c] += mul.mul(a[r * k_len + kk], b[kk * nr + c]);
+                }
+            }
+        }
+    }
+
+    /// A backend that only supplies the required panel ops, so
+    /// `mul_microtile` resolves to the trait's default (fma_row-lowered)
+    /// implementation — used to pin default == specialized == scalar.
+    struct DefaultOnly<'a>(&'a MulKernel<'a>);
+    impl MulBackend for DefaultOnly<'_> {
+        fn mul_panel(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
+            self.0.mul_panel(a, b, out)
+        }
+        fn dot_panel_acc(&self, init: f32, a: &[f32], b: &[f32]) -> f32 {
+            self.0.dot_panel_acc(init, a, b)
+        }
+        fn fma_row(&self, acc: &mut [f32], x: f32, row: &[f32]) {
+            self.0.fma_row(acc, x, row)
+        }
+    }
+
+    #[test]
+    fn mul_microtile_matches_scalar_and_default_impl_bitwise() {
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let kernels = [
+            MulKernel::Native,
+            MulKernel::Direct(model.as_ref()),
+            MulKernel::Lut(crate::amsim::AmSim::new(&lut)),
+        ];
+        let mut rng = crate::util::rng::Pcg32::seeded(4100);
+        for (mr, nr, k_len) in
+            [(1, 1, 5), (4, 8, 0), (4, 8, 13), (3, 5, 7), (MR_MAX, NR_MAX, 9)]
+        {
+            let mut a: Vec<f32> = (0..mr * k_len).map(|_| rng.range(-2.0, 2.0)).collect();
+            let mut b: Vec<f32> = (0..k_len * nr).map(|_| rng.range(-2.0, 2.0)).collect();
+            // exercise the zero-operand flush-add paths on both sides
+            if !b.is_empty() {
+                b[0] = 0.0;
+            }
+            if a.len() > 1 {
+                a[1] = 0.0;
+            }
+            let init: Vec<f32> = (0..mr * nr).map(|_| rng.range(-1.0, 1.0)).collect();
+            for mul in &kernels {
+                let mut want = init.clone();
+                microtile_scalar_ref(mul, &mut want, &a, &b, mr, nr, k_len);
+                let mut got = init.clone();
+                mul.mul_microtile(&mut got, &a, &b, mr, nr, k_len);
+                let mut via_default = init.clone();
+                DefaultOnly(mul).mul_microtile(&mut via_default, &a, &b, mr, nr, k_len);
+                for i in 0..mr * nr {
+                    assert_eq!(
+                        got[i].to_bits(),
+                        want[i].to_bits(),
+                        "{} {mr}x{nr} k={k_len} idx {i} (specialized)",
+                        mul.describe()
+                    );
+                    assert_eq!(
+                        via_default[i].to_bits(),
+                        want[i].to_bits(),
+                        "{} {mr}x{nr} k={k_len} idx {i} (default impl)",
+                        mul.describe()
+                    );
+                }
             }
         }
     }

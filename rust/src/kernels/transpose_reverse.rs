@@ -23,6 +23,10 @@ pub fn transpose_reverse(
 /// [`transpose_reverse`] writing into a caller-provided buffer (the conv
 /// layer's implicit path routes this through a recycled scratch so the
 /// steady-state backward pass stays allocation-free).
+///
+/// Per spatial cell the channel swap is exactly a dense `in_c x out_c`
+/// transpose, so it reuses the cache-blocked [`super::transpose_into`]
+/// instead of paying a full column stride on every write.
 pub fn transpose_reverse_into(
     w: &[f32],
     k_h: usize,
@@ -33,15 +37,19 @@ pub fn transpose_reverse_into(
 ) {
     assert_eq!(w.len(), k_h * k_w * in_c * out_c);
     assert_eq!(out.len(), w.len());
+    let cell = in_c * out_c;
     for ky in 0..k_h {
         for kx in 0..k_w {
-            let src_spatial = ((k_h - 1 - ky) * k_w + (k_w - 1 - kx)) * in_c * out_c;
-            let dst_spatial = (ky * k_w + kx) * out_c * in_c;
-            for c in 0..in_c {
-                for oc in 0..out_c {
-                    out[dst_spatial + oc * in_c + c] = w[src_spatial + c * out_c + oc];
-                }
-            }
+            let src_spatial = ((k_h - 1 - ky) * k_w + (k_w - 1 - kx)) * cell;
+            let dst_spatial = (ky * k_w + kx) * cell;
+            // out[dst + oc*in_c + c] = w[src + c*out_c + oc]: a row-major
+            // in_c x out_c -> out_c x in_c transpose of the cell
+            super::transpose_into(
+                &w[src_spatial..src_spatial + cell],
+                in_c,
+                out_c,
+                &mut out[dst_spatial..dst_spatial + cell],
+            );
         }
     }
 }
@@ -70,6 +78,27 @@ mod tests {
         let wrt = transpose_reverse(&w, 2, 1, 1, 2);
         // wrt[0,0,oc,c] = w[1,0,c,oc] -> [3,4]; wrt[1,0,oc,c] = w[0,0] -> [1,2]
         assert_eq!(wrt, vec![3.0, 4.0, 1.0, 2.0]);
+    }
+
+    /// Channel dims straddling the 8x8 transpose blocking must still
+    /// satisfy the per-element definition.
+    #[test]
+    fn blocked_cells_match_scalar_definition() {
+        let mut rng = Pcg32::seeded(52);
+        let (kh, kw, c, oc) = (2, 3, 11, 19);
+        let w: Vec<f32> = (0..kh * kw * c * oc).map(|_| rng.range(-1.0, 1.0)).collect();
+        let got = transpose_reverse(&w, kh, kw, c, oc);
+        for ky in 0..kh {
+            for kx in 0..kw {
+                for ci in 0..c {
+                    for o in 0..oc {
+                        let want = w[(((kh - 1 - ky) * kw + (kw - 1 - kx)) * c + ci) * oc + o];
+                        let have = got[((ky * kw + kx) * oc + o) * c + ci];
+                        assert_eq!(have.to_bits(), want.to_bits(), "({ky},{kx},{ci},{o})");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -9,7 +9,11 @@
 //! ([`crate::kernels::im2col`]), so no `col_rows x col_cols` matrix is
 //! ever materialized — conv memory overhead drops from `O(cols)` to
 //! `O(tile)` and the steady-state forward/backward packs through the
-//! recycled per-thread buffers with no per-call cols allocation. The
+//! recycled per-thread buffers with no per-call cols allocation. Tiles
+//! are drained by the register-blocked `MR x NR` micro-kernel
+//! ([`crate::kernels::MulBackend::mul_microtile`]): the implicit im2col
+//! panels feed its `A` side unchanged, while the weight/error `B`
+//! operands are packed into `NR`-wide interleaved strips by [`SliceB`]. The
 //! pre-fusion route is kept as [`forward_materialized`] /
 //! [`weight_grad_materialized`] / [`input_grad_materialized`] — the
 //! oracle and bench comparison partner (`bench-conv`).

@@ -32,28 +32,34 @@
 //!
 //! The kernels consume these through the batched
 //! [`kernels::MulBackend`] panel operations (`mul_panel` / `dot_panel` /
-//! `dot_panel_acc` / `fma_row`): strategy dispatch is paid once per
-//! contiguous panel, so the AMSim path is a tight LUT-gather loop with
-//! hoisted shift/mask and the native path a plain FMA loop. The GEMM hot
-//! path is the hierarchical cache-blocked tiled kernel
-//! ([`kernels::gemm::gemm_tiled`]): packed `A` row-panels / `B`
-//! column-panels in reusable per-thread buffers, 2D output tiles
-//! scheduled work-stealing over the persistent worker pool in
-//! [`util::threads`]. Packing is generalized over
+//! `dot_panel_acc` / `fma_row` / `mul_microtile`): strategy dispatch is
+//! paid once per contiguous panel, so the AMSim path is a tight
+//! LUT-gather loop with hoisted shift/mask and the native path a plain
+//! FMA loop. The GEMM hot path is the hierarchical cache-blocked tiled
+//! kernel ([`kernels::gemm::gemm_tiled`]): packed `A` row-panels / `B`
+//! column-panels (`NR`-strip interleaved) in reusable per-thread
+//! buffers, 2D output tiles scheduled work-stealing over the persistent
+//! worker pool in [`util::threads`], each tile drained by the
+//! register-blocked `MR x NR` micro-kernel
+//! ([`kernels::MulBackend::mul_microtile`]: operands decomposed once per
+//! contraction step, `MR*NR` independent FP32 accumulator chains).
+//! Packing is generalized over
 //! [`kernels::gemm::PackA`]/[`kernels::gemm::PackB`] panel sources
 //! ([`kernels::gemm::gemm_tiled_src`]), which is how the conv layer runs
 //! its three GEMMs *implicitly* — panels packed straight from the NHWC
 //! tensors through the fused im2col indexing, no cols matrix ever
 //! materialized. One accumulation contract (running FP32 accumulator,
 //! ascending contraction order) keeps every path bit-identical to the
-//! per-element scalar oracle at any tile geometry and thread count
-//! (enforced by `tests/batched_vs_scalar.rs`, `tests/conv_grads.rs` and
+//! per-element scalar oracle at any tile/micro-tile geometry and thread
+//! count (enforced by `tests/batched_vs_scalar.rs`,
+//! `tests/microtile.rs`, `tests/conv_grads.rs` and
 //! `tests/golden_mults.rs`). `cargo bench -- gemm` (or `approxtrain
-//! bench-gemm`) times all strategies, panel vs tiled, plus a tile-size
-//! autotune probe, and records `BENCH_gemm.json`; `cargo bench -- conv`
-//! (or `approxtrain bench-conv`) records the implicit-vs-materialized
-//! conv comparison into `BENCH_conv.json`; methodology in
-//! `docs/BENCHMARKS.md`.
+//! bench-gemm`) times all strategies, panel vs tiled, the micro-kernel
+//! vs per-element-drain ablation, plus an autotune probe sweeping
+//! `MR x NR` alongside the tile shape, and records `BENCH_gemm.json`
+//! (schema v3); `cargo bench -- conv` (or `approxtrain bench-conv`)
+//! records the implicit-vs-materialized conv comparison into
+//! `BENCH_conv.json`; methodology in `docs/BENCHMARKS.md`.
 //!
 //! ## Module map (`rust/src/`)
 //!

@@ -54,11 +54,11 @@ fn gemm_paths_equal_scalar_dispatch_at_every_tile_size() {
     // larger-than-matrix
     let shapes = [(1, 1, 1), (5, 17, 9), (33, 64, 20), (21, 65, 19), (16, 130, 24)];
     let configs = [
-        TileConfig { mc: 1, kc: 1, nc: 1 },
-        TileConfig { mc: 2, kc: 7, nc: 3 },
-        TileConfig { mc: 16, kc: 32, nc: 16 },
+        TileConfig { mc: 1, kc: 1, nc: 1, mr: 1, nr: 1 },
+        TileConfig { mc: 2, kc: 7, nc: 3, mr: 2, nr: 2 },
+        TileConfig { mc: 16, kc: 32, nc: 16, mr: 4, nr: 8 },
         TileConfig::DEFAULT,
-        TileConfig { mc: 512, kc: 512, nc: 512 },
+        TileConfig { mc: 512, kc: 512, nc: 512, mr: 16, nr: 16 },
     ];
     for (m, k, n) in shapes {
         for_each_strategy(|mul, name| {
@@ -98,7 +98,7 @@ fn gemm_tiled_src_with_slice_sources_equals_slice_path() {
         let b = rand_vec(&mut rng, k * n);
         let mut want = vec![0.0f32; m * n];
         gemm_scalar_reference(mul, &a, &b, &mut want, m, k, n);
-        for cfg in [TileConfig { mc: 7, kc: 16, nc: 5 }, TileConfig::DEFAULT] {
+        for cfg in [TileConfig { mc: 7, kc: 16, nc: 5, mr: 3, nr: 4 }, TileConfig::DEFAULT] {
             for threads in [1, 3, 8] {
                 let mut got = vec![0.0f32; m * n];
                 gemm_tiled_src(
@@ -122,7 +122,7 @@ fn gemm_tiled_src_with_slice_sources_equals_slice_path() {
 fn gemm_pool_threaded_equals_single_threaded() {
     let (m, k, n) = (43, 70, 31);
     // small tiles so the pool has a deep queue to steal from
-    let cfg = TileConfig { mc: 8, kc: 16, nc: 8 };
+    let cfg = TileConfig { mc: 8, kc: 16, nc: 8, mr: 4, nr: 3 };
     for_each_strategy(|mul, name| {
         let mut rng = Pcg32::seeded(901);
         let a = rand_vec(&mut rng, m * k);

@@ -282,10 +282,10 @@ fn implicit_sources_bitwise_stable_across_tile_geometries_and_threads() {
     im2col_plg(&g, &dy.data, &mut plg_cols);
 
     let configs = [
-        TileConfig { mc: 1, kc: 1, nc: 1 },
-        TileConfig { mc: 3, kc: 5, nc: 2 },
+        TileConfig { mc: 1, kc: 1, nc: 1, mr: 1, nr: 1 },
+        TileConfig { mc: 3, kc: 5, nc: 2, mr: 2, nr: 2 },
         TileConfig::DEFAULT,
-        TileConfig { mc: 512, kc: 512, nc: 512 },
+        TileConfig { mc: 512, kc: 512, nc: 512, mr: 8, nr: 16 },
     ];
     let fwd_src = Im2colForwardSrc::new(&g, &x.data);
     let wg_src = Im2colWeightGradSrc::new(&g, &x.data);

@@ -1,0 +1,148 @@
+//! Micro-kernel remainder-edge acceptance suite.
+//!
+//! The register-blocked `MR x NR` tile drain ([`MulBackend::mul_microtile`]
+//! via `gemm_tiled_*`) must be bit-identical to the per-element scalar
+//! oracle `gemm_scalar_reference` at **every** `(m mod MR, n mod NR)`
+//! residue — the edges where the drain falls back to narrower micro-tiles
+//! (down to `1 x 1`) — for all three simulation strategies and under the
+//! pool scheduler. A steady-state check also pins that a second
+//! micro-kernel GEMM at the same geometry performs no recycled-buffer
+//! growth (the micro-tile accumulator block lives on the stack, and the
+//! `NR`-strip `B` packing reuses the same `KC x NC` buffer footprint).
+
+use approxtrain::amsim::AmSim;
+use approxtrain::kernels::gemm::{gemm_scalar_reference, gemm_tiled_with, TileConfig};
+use approxtrain::kernels::{buffer_growth_events, MulKernel};
+use approxtrain::lut::MantissaLut;
+use approxtrain::mult::registry;
+use approxtrain::util::rng::Pcg32;
+
+fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.range(-2.0, 2.0)).collect()
+}
+
+fn for_each_strategy(f: impl Fn(&MulKernel, &str)) {
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    f(&MulKernel::Native, "native");
+    f(&MulKernel::Direct(model.as_ref()), "direct");
+    f(&MulKernel::Lut(AmSim::new(&lut)), "lut");
+}
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for i in 0..got.len() {
+        assert_eq!(
+            got[i].to_bits(),
+            want[i].to_bits(),
+            "{what} idx {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+/// Every `(m mod MR, n mod NR)` residue of the default 4x8 micro-tile, at
+/// a tile geometry small enough that the shapes also straddle tile edges
+/// and the contraction splits across `KC` blocks with a remainder — for
+/// native / direct / LUT, single-lane and pool-threaded.
+#[test]
+fn every_residue_matches_scalar_oracle_at_default_micro_tile() {
+    let cfg = TileConfig { mc: 8, kc: 16, nc: 16, mr: 4, nr: 8 };
+    let k = 37; // two full KC blocks + a 5-step remainder
+    for_each_strategy(|mul, name| {
+        for m in 12..16 {
+            // m % 4 covers 0..=3
+            for n in 16..24 {
+                // n % 8 covers 0..=7
+                let mut rng = Pcg32::seeded(8800 + (m * 100 + n) as u64);
+                let a = rand_vec(&mut rng, m * k);
+                let b = rand_vec(&mut rng, k * n);
+                let mut want = vec![0.0f32; m * n];
+                gemm_scalar_reference(mul, &a, &b, &mut want, m, k, n);
+                for threads in [1usize, 8] {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_tiled_with(mul, cfg, &a, &b, &mut got, m, k, n, threads);
+                    assert_bits(
+                        &got,
+                        &want,
+                        &format!("[{name}] ({m},{k},{n}) residue ({},{}) t={threads}", m % 4, n % 8),
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// The same residue sweep at a non-default, odd micro-tile shape (3x5),
+/// so remainder handling is not accidentally specialized to the default
+/// powers of two.
+#[test]
+fn every_residue_matches_scalar_oracle_at_odd_micro_tile() {
+    let cfg = TileConfig { mc: 6, kc: 11, nc: 10, mr: 3, nr: 5 };
+    let k = 23;
+    for_each_strategy(|mul, name| {
+        for m in 9..12 {
+            // m % 3 covers 0..=2
+            for n in 10..15 {
+                // n % 5 covers 0..=4
+                let mut rng = Pcg32::seeded(8900 + (m * 100 + n) as u64);
+                let a = rand_vec(&mut rng, m * k);
+                let b = rand_vec(&mut rng, k * n);
+                let mut want = vec![0.0f32; m * n];
+                gemm_scalar_reference(mul, &a, &b, &mut want, m, k, n);
+                let mut got = vec![0.0f32; m * n];
+                gemm_tiled_with(mul, cfg, &a, &b, &mut got, m, k, n, 1);
+                assert_bits(
+                    &got,
+                    &want,
+                    &format!("[{name}] ({m},{k},{n}) residue ({},{})", m % 3, n % 5),
+                );
+            }
+        }
+    });
+}
+
+/// Problems smaller than one micro-tile in either dimension (m < MR,
+/// n < NR) run entirely on remainder paths.
+#[test]
+fn degenerate_shapes_smaller_than_the_micro_tile() {
+    for_each_strategy(|mul, name| {
+        for (m, k, n) in [(1usize, 1usize, 1usize), (2, 9, 3), (1, 40, 7), (3, 17, 1)] {
+            let mut rng = Pcg32::seeded(9000 + (m * k * n) as u64);
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut want = vec![0.0f32; m * n];
+            gemm_scalar_reference(mul, &a, &b, &mut want, m, k, n);
+            let mut got = vec![0.0f32; m * n];
+            gemm_tiled_with(mul, TileConfig::DEFAULT, &a, &b, &mut got, m, k, n, 1);
+            assert_bits(&got, &want, &format!("[{name}] tiny ({m},{k},{n})"));
+        }
+    });
+}
+
+/// Steady-state no-alloc check: after a warm first micro-kernel GEMM, a
+/// second run at the same geometry must not grow the recycled
+/// thread-local pack buffers (single lane, so this thread's growth
+/// counter observes every packing).
+#[test]
+fn second_micro_kernel_gemm_reuses_recycled_buffers() {
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    let mul = MulKernel::Lut(AmSim::new(&lut));
+    let (m, k, n) = (21, 65, 19);
+    let mut rng = Pcg32::seeded(9100);
+    let a = rand_vec(&mut rng, m * k);
+    let b = rand_vec(&mut rng, k * n);
+    let mut first = vec![0.0f32; m * n];
+    gemm_tiled_with(&mul, TileConfig::DEFAULT, &a, &b, &mut first, m, k, n, 1);
+    let before = buffer_growth_events();
+    let mut second = vec![0.0f32; m * n];
+    gemm_tiled_with(&mul, TileConfig::DEFAULT, &a, &b, &mut second, m, k, n, 1);
+    assert_eq!(
+        buffer_growth_events(),
+        before,
+        "steady-state micro-kernel GEMM must not grow the recycled buffers"
+    );
+    assert_bits(&second, &first, "steady-state determinism");
+}
