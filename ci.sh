@@ -43,18 +43,24 @@ step "cargo test --release -q (full suite incl. integration, release mode)"
 # speed; running them optimized also exercises the code the benches ship
 cargo test --release -q || fail=1
 
-step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel remainder edges"
+step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel edges + serving"
 # already part of the full release suite above, but pinned here explicitly
-# so neither the implicit-conv acceptance sweep nor the MRxNR micro-kernel
-# residue sweep can ever silently drop out of the release-mode pass
-cargo test --release -q --test conv_grads --test batched_vs_scalar --test microtile || fail=1
+# so the implicit-conv acceptance sweep, the MRxNR micro-kernel residue
+# sweep, and the serving-layer gates (multi-lane ≡ single-lane replies,
+# partial-batch cycle-padding, bounded-queue rejection) can never
+# silently drop out of the release-mode pass
+cargo test --release -q --test conv_grads --test batched_vs_scalar --test microtile \
+    --test server || fail=1
 
 step "bench smoke (tiny sizes; does not touch the committed BENCH records)"
 # the gemm smoke rows include the micro-kernel tiled path (and its mr1nr1
 # per-element-drain ablation row), each behind the bench's own
-# bit-exactness gate against the scalar oracle
+# bit-exactness gate against the scalar oracle; the serve smoke sweeps
+# lanes x load with every accepted reply gated against the single-lane
+# reference forward
 cargo bench --bench paper_benches -- gemm --smoke || fail=1
 cargo bench --bench paper_benches -- conv --smoke || fail=1
+cargo bench --bench paper_benches -- serve --smoke || fail=1
 
 echo
 if [ "$fail" -ne 0 ]; then

@@ -1,71 +1,70 @@
-//! Serving example: batched approximate-multiplier inference behind a
-//! router/batcher, reporting latency percentiles and throughput — the
-//! deployment shape of ApproxTrain's inference support.
+//! Serving example: the multi-lane batching inference server running
+//! end-to-end on the pure-Rust executor backend — bounded admission,
+//! dynamic batching per lane, approximate multipliers via the AMSim LUT
+//! — reporting throughput, latency percentiles, batch fill and rejects.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_infer
+//! cargo run --release --example serve_infer
 //! ```
+//!
+//! No artifacts needed: each lane owns a bit-identical `Lenet300`
+//! replica. To serve a compiled artifact instead, build an
+//! `EngineBackend` and use `serve_on_caller` (see `approxtrain serve
+//! --backend engine`).
 
-use std::path::Path;
 use std::time::{Duration, Instant};
 
-use approxtrain::coordinator::server::with_server;
+use approxtrain::coordinator::backend::{CpuBackend, InferBackend, MulSpec};
+use approxtrain::coordinator::server::{serve_pool, ServeConfig};
 use approxtrain::data::synth::{mnist_like, SynthSpec};
-use approxtrain::lut::MantissaLut;
-use approxtrain::nn::init::init_params;
-use approxtrain::runtime::artifact::Role;
-use approxtrain::runtime::executor::Engine;
-use approxtrain::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
-    let dir = Path::new("artifacts");
-    let mut engine = Engine::new(dir)?;
-    let art = engine
-        .manifest()
-        .find("lenet300", "fwd", "lut")
-        .expect("lenet300 lut fwd artifact (run `make artifacts`)")
-        .clone();
-    engine.prepare(&art.name)?; // compile before serving
-    let raw = Json::parse(&std::fs::read_to_string(dir.join("manifest.json"))?)?;
-    let params = init_params(&art, 42, &raw)?;
-    let lut = MantissaLut::load(&dir.join("luts/afm16.lut")).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let x_spec = &art.inputs[art.input_indices(Role::Input)[0]];
-    let batch = x_spec.shape[0];
-    let image_elems = x_spec.elements() / batch;
-    let classes = art.outputs[0].shape[1];
-
+    let lanes = 4;
+    let batch = 16;
     let n_requests = 256;
     let n_clients = 8;
+
+    let base = CpuBackend::for_model("lenet300", MulSpec::parse("lut:afm16")?, batch, 42)?;
+    let mut backends = base.replicas(lanes);
+    let cfg = ServeConfig { max_wait: Duration::from_millis(4), queue_depth: 4 * batch };
     let ds = mnist_like(&SynthSpec { n: n_requests, ..SynthSpec::mnist_like_default() });
-    println!("serving lenet300 (AFM16 via AMSim LUT), batch {batch}, {n_clients} clients, {n_requests} requests");
+    println!(
+        "serving {} | {lanes} lanes x batch {batch} | queue depth {} | {n_clients} clients, \
+         {n_requests} requests",
+        base.describe(),
+        cfg.queue_depth
+    );
 
     let t0 = Instant::now();
-    let name = art.name.clone();
-    let stats = with_server(
-        engine,
-        &name,
-        params,
-        Some(lut.entries),
-        batch,
-        image_elems,
-        classes,
-        Duration::from_millis(4),
-        |client| {
-            std::thread::scope(|s| {
-                for t in 0..n_clients {
-                    let client = client.clone();
-                    let ds = &ds;
-                    s.spawn(move || {
-                        for i in (t..n_requests).step_by(n_clients) {
-                            client.infer(ds.image(i).to_vec()).expect("inference");
+    let (stats, rejected) = serve_pool(&mut backends, cfg, |client| {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let rejected = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..n_clients {
+                let client = client.clone();
+                let ds = &ds;
+                let rejected = &rejected;
+                s.spawn(move || {
+                    for i in (t..n_requests).step_by(n_clients) {
+                        match client.infer(ds.image(i).to_vec()) {
+                            Ok(reply) => assert_eq!(reply.logits.len(), 10),
+                            Err(_) => {
+                                // bounded admission queue said no — a real
+                                // client would back off and retry
+                                rejected.fetch_add(1, Ordering::Relaxed);
+                            }
                         }
-                    });
-                }
-            });
-        },
-    )?;
+                    }
+                });
+            }
+        });
+        rejected.load(Ordering::Relaxed)
+    })?;
     let wall = t0.elapsed().as_secs_f64();
-    println!("served {} requests in {} batches over {:.2}s", stats.requests, stats.batches, wall);
+    println!(
+        "served {} requests in {} batches over {:.2}s ({rejected} rejected)",
+        stats.requests, stats.batches, wall
+    );
     println!("throughput: {:.0} req/s", stats.requests as f64 / wall);
     println!(
         "latency: p50 {:.1} ms | p90 {:.1} ms | p99 {:.1} ms (mean {:.1} ms, max {:.1} ms)",
@@ -75,6 +74,6 @@ fn main() -> anyhow::Result<()> {
         stats.mean_latency_s() * 1e3,
         stats.max_latency_s() * 1e3
     );
-    println!("mean batch fill: {:.1}/{}", stats.mean_fill(), batch);
+    println!("mean batch fill: {:.1}/{batch}", stats.mean_fill());
     Ok(())
 }

@@ -8,6 +8,7 @@
 //! cargo bench -- gemm --full  # ...and refresh the committed root BENCH_gemm.json
 //! cargo bench -- gemm --smoke # tiny CI smoke sizes (results/ only)
 //! cargo bench -- conv         # implicit vs materialized conv -> results/BENCH_conv.json
+//! cargo bench -- serve        # multi-lane serving sweep -> results/BENCH_serve.json
 //! cargo bench -- fig6         # one experiment
 //! cargo bench -- all --full   # full (slow) settings
 //! ```
@@ -61,8 +62,17 @@ fn main() -> anyhow::Result<()> {
         out.push_str(&exp::bench_conv(results, quick || smoke, record_root)?);
     }
 
+    if wants("serve") {
+        // Multi-lane batching server sweep over the pure-Rust executor
+        // backend (lanes x offered load x strategy), every accepted reply
+        // bit-exactness-gated against a single-lane reference forward.
+        // Same root-record policy as `gemm`.
+        let record_root = which == "serve" && !smoke && !quick;
+        out.push_str(&exp::bench_serve(results, quick || smoke, record_root)?);
+    }
+
     if !artifacts.join("manifest.json").exists() {
-        println!("artifacts/ not built — only fig1/gemm/conv available. Run `make artifacts`.");
+        println!("artifacts/ not built — only fig1/gemm/conv/serve available. Run `make artifacts`.");
         print!("{out}");
         approxtrain::coordinator::report::write_result(results, "bench_report.md", &out)?;
         return Ok(());

@@ -1,0 +1,386 @@
+//! Pluggable inference backends for the batching server.
+//!
+//! The serving layer ([`super::server`]) is written against one trait,
+//! [`InferBackend`]: "run one fixed-shape image batch, give me the
+//! logits". Two implementations exist:
+//!
+//! * [`EngineBackend`] — the compiled-artifact path: a PJRT [`Engine`]
+//!   executing a forward HLO artifact with host-side params (+ optional
+//!   LUT). This is the deployment shape of the paper's inference support,
+//!   but it needs `make artifacts` and the real `xla` bindings. The PJRT
+//!   client is not `Send`, so this backend serves from the caller's
+//!   thread ([`super::server::serve_on_caller`]).
+//! * [`CpuBackend`] — the pure-Rust executor path: the ATxC
+//!   `Lenet300`/`Lenet5`/`CpuResnet` forward passes with every multiply
+//!   routed through a [`MulKernel`]. No artifacts, no PJRT — the server
+//!   is runnable and testable end-to-end in this repo, under all three
+//!   simulation strategies. `CpuBackend` is `Send` and [`Clone`]-able
+//!   into per-lane replicas (same seed → bit-identical weights), so it
+//!   is what the multi-lane [`super::server::serve_pool`] and
+//!   `bench-serve` run on.
+//!
+//! [`MulSpec`] is the *owned* counterpart of the borrowing [`MulKernel`]:
+//! a lane thread owns its multiplier state (functional model box or LUT)
+//! and materializes the borrowing kernel per batch.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::kernels::MulKernel;
+use crate::lut::MantissaLut;
+use crate::mult::{registry, ApproxMul};
+use crate::nn::cpu_lenet::{Lenet300, Lenet5};
+use crate::nn::cpu_resnet::{CpuResnet, Depth};
+use crate::runtime::artifact::Role;
+use crate::runtime::executor::{Engine, Value};
+use crate::tensor::Tensor;
+
+/// A fixed-batch inference executor the serving lanes drive.
+///
+/// Contract: `run_batch` consumes exactly `batch() * image_elems()` f32s
+/// (row-major `[batch, ...image dims]`) and returns `batch() * classes()`
+/// logits, row `i` belonging to input row `i`. Implementations must be
+/// deterministic: the same image buffer always yields the same logits
+/// bits (the multi-lane bit-exactness gates are built on this).
+pub trait InferBackend {
+    /// Fixed batch size of one `run_batch` call.
+    fn batch(&self) -> usize;
+    /// f32 elements per image row.
+    fn image_elems(&self) -> usize;
+    /// Logit columns per row.
+    fn classes(&self) -> usize;
+    /// Human-readable identity for logs/records.
+    fn describe(&self) -> String;
+    /// Run one full batch; returns row-major `[batch, classes]` logits.
+    fn run_batch(&mut self, images: &[f32]) -> Result<Vec<f32>>;
+}
+
+// ---------------------------------------------------------------------------
+// MulSpec — owned multiplication strategy (lane-replicable)
+// ---------------------------------------------------------------------------
+
+/// Owned multiplication strategy: what a serving lane holds so it can
+/// materialize a borrowing [`MulKernel`] for each batch. Mirrors the
+/// artifact mode strings: `native`, `direct:<mult>`, `lut:<mult>`.
+pub enum MulSpec {
+    /// Hardware `*` (ATnG).
+    Native,
+    /// Per-multiply functional-model call (ATxC direct simulation).
+    Direct(Box<dyn ApproxMul>),
+    /// AMSim mantissa-LUT gather (ATxG); owns a validated LUT.
+    Lut { mult: String, lut: MantissaLut },
+}
+
+impl MulSpec {
+    /// Parse a mode string: `native` | `direct:<mult>` | `lut:<mult>`
+    /// (bare `lut` defaults to `afm16`). LUT tables are generated from
+    /// the registered functional model and validated.
+    pub fn parse(mode: &str) -> Result<MulSpec> {
+        if mode == "native" {
+            return Ok(MulSpec::Native);
+        }
+        if let Some(name) = mode.strip_prefix("direct:") {
+            let model = registry::by_name(name)
+                .ok_or_else(|| anyhow!("unknown multiplier {name:?} in mode {mode:?}"))?;
+            return Ok(MulSpec::Direct(model));
+        }
+        let name = if mode == "lut" { "afm16" } else { mode.strip_prefix("lut:").unwrap_or("") };
+        if name.is_empty() {
+            bail!("unknown simulation mode {mode:?} (want native | direct:<mult> | lut:<mult>)");
+        }
+        let model = registry::by_name(name)
+            .ok_or_else(|| anyhow!("unknown multiplier {name:?} in mode {mode:?}"))?;
+        if !registry::lut_able(name) {
+            bail!("multiplier {name} is not tabulatable; use direct:{name}");
+        }
+        let lut = MantissaLut::generate(model.as_ref());
+        lut.validate().map_err(|e| anyhow!("generated {name} LUT failed validation: {e}"))?;
+        Ok(MulSpec::Lut { mult: name.to_string(), lut })
+    }
+
+    /// The borrowing kernel for this spec (cheap; construct per batch).
+    pub fn kernel(&self) -> MulKernel<'_> {
+        match self {
+            MulSpec::Native => MulKernel::Native,
+            MulSpec::Direct(m) => MulKernel::Direct(m.as_ref()),
+            MulSpec::Lut { lut, .. } => MulKernel::Lut(crate::amsim::AmSim::new(lut)),
+        }
+    }
+
+    /// Mode string this spec round-trips to.
+    pub fn describe(&self) -> String {
+        match self {
+            MulSpec::Native => "native".into(),
+            MulSpec::Direct(m) => format!("direct:{}", m.name()),
+            MulSpec::Lut { mult, .. } => format!("lut:{mult}"),
+        }
+    }
+}
+
+impl Clone for MulSpec {
+    fn clone(&self) -> MulSpec {
+        match self {
+            MulSpec::Native => MulSpec::Native,
+            MulSpec::Direct(m) => MulSpec::Direct(
+                registry::by_name(m.name()).expect("registered model stays registered"),
+            ),
+            MulSpec::Lut { mult, lut } => MulSpec::Lut { mult: mult.clone(), lut: lut.clone() },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CpuBackend — pure-Rust executor backend (ATxC path, replicable lanes)
+// ---------------------------------------------------------------------------
+
+/// The model a [`CpuBackend`] replica executes.
+#[derive(Clone)]
+pub enum CpuModel {
+    Lenet300(Lenet300),
+    Lenet5(Lenet5),
+    Resnet(CpuResnet),
+}
+
+/// Pure-Rust inference backend: an owned model + an owned [`MulSpec`].
+/// `Send` and `Clone`, so [`replicas`](CpuBackend::replicas) hands one
+/// bit-identical copy to each serving lane.
+#[derive(Clone)]
+pub struct CpuBackend {
+    model: CpuModel,
+    mul: MulSpec,
+    name: String,
+    batch: usize,
+    /// full input shape including the leading batch dim
+    input_shape: Vec<usize>,
+    image_elems: usize,
+    classes: usize,
+}
+
+impl CpuBackend {
+    /// Build a backend for a model by name (`lenet300` | `lenet5` |
+    /// `resnet18` | `resnet34` | `resnet50`), freshly initialized from
+    /// `seed` — deterministic, so two backends built with the same
+    /// arguments hold bit-identical weights.
+    pub fn for_model(model: &str, mul: MulSpec, batch: usize, seed: u64) -> Result<CpuBackend> {
+        assert!(batch > 0, "batch must be positive");
+        let (m, input_shape, classes) = match model {
+            "lenet300" => {
+                (CpuModel::Lenet300(Lenet300::init(28 * 28, 10, seed)), vec![batch, 28 * 28], 10)
+            }
+            "lenet5" => (CpuModel::Lenet5(Lenet5::init(seed)), vec![batch, 28, 28, 1], 10),
+            "resnet18" | "resnet34" | "resnet50" => {
+                let depth = match model {
+                    "resnet18" => Depth::R18,
+                    "resnet34" => Depth::R34,
+                    _ => Depth::R50,
+                };
+                // CIFAR-shaped input, width scaled down as in the
+                // experiment harness's quick paths
+                let net = CpuResnet::init(depth, (16, 16, 3), 10, 8, seed);
+                (CpuModel::Resnet(net), vec![batch, 16, 16, 3], 10)
+            }
+            other => bail!("no CPU executor for model {other:?}"),
+        };
+        let image_elems = input_shape.iter().skip(1).product();
+        Ok(CpuBackend {
+            model: m,
+            mul,
+            name: model.to_string(),
+            batch,
+            input_shape,
+            image_elems,
+            classes,
+        })
+    }
+
+    /// Wrap an already-initialized ResNet (callers pick depth/input/width).
+    pub fn from_resnet(net: CpuResnet, mul: MulSpec, batch: usize) -> CpuBackend {
+        let (h, w, c) = net.input;
+        let classes = net.classes;
+        CpuBackend {
+            name: format!("resnet-{:?}", net.depth).to_lowercase(),
+            input_shape: vec![batch, h, w, c],
+            image_elems: h * w * c,
+            model: CpuModel::Resnet(net),
+            mul,
+            batch,
+            classes,
+        }
+    }
+
+    /// `n` bit-identical lane replicas (weights and multiplier cloned).
+    pub fn replicas(&self, n: usize) -> Vec<CpuBackend> {
+        (0..n).map(|_| self.clone()).collect()
+    }
+}
+
+impl InferBackend for CpuBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn describe(&self) -> String {
+        format!("cpu:{}:{}", self.name, self.mul.describe())
+    }
+
+    fn run_batch(&mut self, images: &[f32]) -> Result<Vec<f32>> {
+        if images.len() != self.batch * self.image_elems {
+            bail!(
+                "{}: batch has {} elements, expected {}",
+                self.describe(),
+                images.len(),
+                self.batch * self.image_elems
+            );
+        }
+        let x = Tensor::from_vec(&self.input_shape, images.to_vec());
+        let mul = self.mul.kernel();
+        let logits = match &self.model {
+            CpuModel::Lenet300(net) => net.forward(&mul, &x),
+            CpuModel::Lenet5(net) => net.forward(&mul, &x),
+            CpuModel::Resnet(net) => net.forward(&mul, &x),
+        };
+        debug_assert_eq!(logits.data.len(), self.batch * self.classes);
+        Ok(logits.data)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EngineBackend — compiled-artifact (PJRT) backend
+// ---------------------------------------------------------------------------
+
+/// Artifact-executing backend: owns the PJRT [`Engine`], the forward
+/// artifact name, and the fixed params (+ optional LUT payload) passed
+/// around the image input. Not `Send` in deployment (the PJRT client is
+/// thread-pinned) — serve it with [`super::server::serve_on_caller`].
+pub struct EngineBackend {
+    engine: Engine,
+    artifact: String,
+    params: Vec<Value>,
+    lut: Option<Vec<u32>>,
+    batch: usize,
+    image_elems: usize,
+    classes: usize,
+}
+
+impl EngineBackend {
+    /// Wrap a prepared engine + forward artifact; shapes come from the
+    /// manifest. `params` are the positional params in manifest order;
+    /// `lut` is appended after the image when the artifact takes one.
+    pub fn new(
+        mut engine: Engine,
+        artifact: &str,
+        params: Vec<Value>,
+        lut: Option<Vec<u32>>,
+    ) -> Result<EngineBackend> {
+        let art = engine.manifest().get(artifact)?.clone();
+        let x_idx = art.input_indices(Role::Input);
+        if x_idx.is_empty() {
+            bail!("{artifact}: no image input in manifest");
+        }
+        let x_spec = &art.inputs[x_idx[0]];
+        let batch = x_spec.shape[0];
+        let image_elems = x_spec.elements() / batch;
+        let classes = art.outputs[0].shape[1];
+        if !art.input_indices(Role::Lut).is_empty() && lut.is_none() {
+            bail!("{artifact}: artifact takes a LUT but none was provided");
+        }
+        // compile before the serving loop so no request pays for it
+        engine.prepare(artifact)?;
+        Ok(EngineBackend {
+            engine,
+            artifact: artifact.to_string(),
+            params,
+            lut,
+            batch,
+            image_elems,
+            classes,
+        })
+    }
+}
+
+impl InferBackend for EngineBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn image_elems(&self) -> usize {
+        self.image_elems
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn describe(&self) -> String {
+        format!("engine:{}", self.artifact)
+    }
+
+    fn run_batch(&mut self, images: &[f32]) -> Result<Vec<f32>> {
+        let mut inputs = self.params.clone();
+        inputs.push(Value::F32(images.to_vec()));
+        if let Some(l) = &self.lut {
+            inputs.push(Value::U32(l.clone()));
+        }
+        let out = self.engine.run(&self.artifact, &inputs)?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mulspec_parses_and_describes() {
+        assert!(matches!(MulSpec::parse("native").unwrap(), MulSpec::Native));
+        let d = MulSpec::parse("direct:afm32").unwrap();
+        assert_eq!(d.describe(), "direct:afm32");
+        let l = MulSpec::parse("lut:afm16").unwrap();
+        assert_eq!(l.describe(), "lut:afm16");
+        assert_eq!(MulSpec::parse("lut").unwrap().describe(), "lut:afm16");
+        assert!(MulSpec::parse("nope").is_err());
+        assert!(MulSpec::parse("lut:doesnotexist").is_err());
+        // clones keep semantics: same product bits
+        let l2 = l.clone();
+        assert_eq!(l.kernel().mul(1.5, 2.25).to_bits(), l2.kernel().mul(1.5, 2.25).to_bits());
+    }
+
+    #[test]
+    fn cpu_backend_shapes_and_determinism() {
+        let mut a = CpuBackend::for_model("lenet300", MulSpec::Native, 4, 11).unwrap();
+        assert_eq!(a.batch(), 4);
+        assert_eq!(a.image_elems(), 784);
+        assert_eq!(a.classes(), 10);
+        let images: Vec<f32> = (0..4 * 784).map(|i| (i % 97) as f32 / 97.0).collect();
+        let y1 = a.run_batch(&images).unwrap();
+        assert_eq!(y1.len(), 40);
+        // a replica built from the same seed answers bit-identically
+        let mut b = CpuBackend::for_model("lenet300", MulSpec::Native, 4, 11).unwrap();
+        let y2 = b.run_batch(&images).unwrap();
+        assert_eq!(
+            y1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y2.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // and so do clone()d replicas
+        let mut c = a.replicas(1).pop().unwrap();
+        let y3 = c.run_batch(&images).unwrap();
+        assert_eq!(
+            y1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y3.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // wrong batch size is a typed error, not a panic
+        assert!(a.run_batch(&images[..784]).is_err());
+    }
+
+    #[test]
+    fn cpu_backend_rejects_unknown_model() {
+        assert!(CpuBackend::for_model("vgg", MulSpec::Native, 2, 1).is_err());
+    }
+}

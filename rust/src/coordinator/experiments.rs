@@ -620,6 +620,297 @@ pub fn bench_conv(results_dir: &Path, quick: bool, record_root: bool) -> Result<
 }
 
 // ---------------------------------------------------------------------------
+// BENCH_serve — multi-lane batching inference server sweep
+// ---------------------------------------------------------------------------
+
+/// Benchmark the multi-lane batching server over the pure-Rust executor
+/// backend (`lenet300`, no artifacts needed): offered-load sweep × lanes
+/// {1, 2, 4} × simulation strategy (native / direct / LUT), emitting the
+/// `BENCH_serve.json` perf record (schema v1).
+///
+/// Load is closed-loop: `clients` threads each submit their share of the
+/// request stream and block for the reply (or count a typed rejection —
+/// the admission queue is bounded, so the top load level exercises
+/// backpressure). Per run the record keeps throughput, p50/p99 latency,
+/// mean batch fill and the reject rate.
+///
+/// **Correctness gates** (same fast-but-wrong policy as [`bench_gemm`]):
+/// (1) every accepted reply of every run — any lane count, any load —
+/// must be **bit-identical** to a single-lane full-batch reference
+/// forward of the same image (pins N-lane ≡ 1-lane); (2) a dedicated
+/// padding regression gate serves a partial batch on a
+/// batch-statistics-batchnorm resnet backend — where pad contents reach
+/// every real reply, unlike the row-independent lenet — and requires it
+/// to be bit-identical to the same images in a full batch of themselves,
+/// with a zero-pad-must-differ teeth check. A single differing bit
+/// aborts the bench.
+pub fn bench_serve(results_dir: &Path, quick: bool, record_root: bool) -> Result<String> {
+    use std::time::{Duration, Instant};
+
+    use super::backend::{CpuBackend, InferBackend, MulSpec};
+    use super::server::{serve_pool, InferError, Reply, ServeConfig};
+    use crate::util::json::Json;
+
+    const MODEL: &str = "lenet300";
+    const SEED: u64 = 4242;
+    let batch = 16usize;
+    // depth 16 = one batch: the 32-client load level overruns it and
+    // exercises typed rejection; the low levels never do
+    let queue_depth = 16usize;
+    let max_wait = Duration::from_millis(3);
+    let lanes_sweep: [usize; 3] = [1, 2, 4];
+    let modes: [&str; 3] = ["native", "direct:afm16", "lut:afm16"];
+    let clients_sweep: &[usize] = if quick { &[2, 32] } else { &[2, 8, 32] };
+    // deliberately NOT a multiple of `batch`, so the reference forward
+    // exercises the trailing-batch cycle padding on every run
+    let n_req = if quick { 61 } else { 250 };
+
+    let ds = dataset_for("mnist", n_req, SEED);
+    crate::kernels::gemm::warm_tiled();
+
+    // Padding regression gate (the headline bugfix) — lenet300's rows
+    // are batch-independent, so the throughput sweep below cannot see
+    // pad contents; this gate runs a batch-statistics batchnorm model
+    // where they reach every real reply. A partially-filled served
+    // batch must be bit-identical to the same images in a full batch of
+    // themselves (cycled), and zero-row padding must NOT be (else the
+    // gate has no teeth).
+    {
+        use super::server::Reply as SReply;
+        let base = CpuBackend::for_model("resnet18", MulSpec::Native, 4, SEED)?;
+        let sz = base.image_elems();
+        let classes = base.classes();
+        let mut rng = Pcg32::seeded(SEED ^ 0xBA7);
+        let imgs: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..sz).map(|_| rng.uniform()).collect()).collect();
+        let mut lane = base.replicas(1);
+        let cfg = ServeConfig { max_wait: Duration::from_millis(400), queue_depth: 8 };
+        let imgs_ref = &imgs;
+        let (pstats, (r0, r1)): (_, (SReply, SReply)) =
+            serve_pool(&mut lane, cfg, |client| {
+                std::thread::scope(|s| {
+                    let c0 = client.clone();
+                    let first = s.spawn(move || c0.infer(imgs_ref[0].clone()).expect("pad req 0"));
+                    std::thread::sleep(Duration::from_millis(40));
+                    let c1 = client.clone();
+                    let second =
+                        s.spawn(move || c1.infer(imgs_ref[1].clone()).expect("pad req 1"));
+                    (first.join().unwrap(), second.join().unwrap())
+                })
+            })?;
+        if pstats.batches != 1 || r0.batch_fill != 2 {
+            return Err(anyhow!(
+                "bench aborted: padding gate could not form one partial batch \
+                 (batches {}, fill {})",
+                pstats.batches,
+                r0.batch_fill
+            ));
+        }
+        let mut reference = base.replicas(1).pop().unwrap();
+        let mut full = Vec::with_capacity(4 * sz);
+        for k in 0..4 {
+            full.extend_from_slice(&imgs[k % 2]);
+        }
+        let want = reference.run_batch(&full)?;
+        let same = |got: &[f32], want: &[f32]| {
+            got.len() == want.len()
+                && got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits())
+        };
+        if !same(&r0.logits, &want[..classes]) || !same(&r1.logits, &want[classes..2 * classes]) {
+            return Err(anyhow!(
+                "bench aborted: partial-batch replies diverge from the same images \
+                 served in a full batch of themselves — the cycle-padding policy broke"
+            ));
+        }
+        let mut zeroed = Vec::with_capacity(4 * sz);
+        for img in &imgs {
+            zeroed.extend_from_slice(img);
+        }
+        zeroed.resize(4 * sz, 0.0);
+        let corrupted = reference.run_batch(&zeroed)?;
+        if same(&corrupted[..2 * classes], &want[..2 * classes]) {
+            return Err(anyhow!(
+                "bench aborted: zero-row padding did not perturb the batch-stats \
+                 batchnorm — the padding gate has no teeth on this model"
+            ));
+        }
+    }
+
+    let mut table = Table::new(
+        "BENCH_serve — multi-lane batching server (CPU executor backend, lenet300)",
+        &["mode", "lanes", "clients", "throughput", "p50", "p99", "mean fill", "reject rate"],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    let mut lut_thr_by_lanes: Vec<(usize, f64)> = Vec::new();
+    let top_clients = *clients_sweep.last().unwrap();
+
+    for mode in modes {
+        let spec = MulSpec::parse(mode)?;
+        let base = CpuBackend::for_model(MODEL, spec, batch, SEED)?;
+        // single-lane reference: direct full-batch forwards over the
+        // request stream, trailing batch padded by cycling (the serving
+        // lanes' policy) — row independence makes this the canonical
+        // answer for every batching schedule
+        let mut reference = base.clone();
+        let classes = reference.classes();
+        let sz = reference.image_elems();
+        let mut ref_logits: Vec<Vec<f32>> = Vec::with_capacity(n_req);
+        let mut pos = 0usize;
+        while pos < n_req {
+            let real = (n_req - pos).min(batch);
+            let mut images = Vec::with_capacity(batch * sz);
+            for i in 0..real {
+                images.extend_from_slice(ds.image(pos + i));
+            }
+            crate::data::pad_batch_by_cycling(&mut images, real, batch, sz);
+            let logits = reference.run_batch(&images)?;
+            for i in 0..real {
+                ref_logits.push(logits[i * classes..(i + 1) * classes].to_vec());
+            }
+            pos += real;
+        }
+
+        for lanes in lanes_sweep {
+            for &clients in clients_sweep {
+                let mut backends = base.replicas(lanes);
+                let cfg = ServeConfig { max_wait, queue_depth };
+                let t0 = Instant::now();
+                let (stats, outcomes) = serve_pool(&mut backends, cfg, |client| {
+                    std::thread::scope(|s| {
+                        let handles: Vec<_> = (0..clients)
+                            .map(|t| {
+                                let client = client.clone();
+                                let ds = &ds;
+                                s.spawn(move || {
+                                    let mut out: Vec<(usize, Result<Reply, InferError>)> =
+                                        Vec::new();
+                                    let mut i = t;
+                                    while i < n_req {
+                                        out.push((i, client.infer(ds.image(i).to_vec())));
+                                        i += clients;
+                                    }
+                                    out
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .flat_map(|h| h.join().expect("client thread panicked"))
+                            .collect::<Vec<_>>()
+                    })
+                })?;
+                let wall = t0.elapsed().as_secs_f64();
+
+                let run = format!("{mode} lanes={lanes} clients={clients}");
+                let (mut accepted, mut rejected) = (0u64, 0u64);
+                for (idx, outcome) in &outcomes {
+                    match outcome {
+                        Ok(reply) => {
+                            accepted += 1;
+                            let want = &ref_logits[*idx];
+                            let same = reply.logits.len() == want.len()
+                                && reply
+                                    .logits
+                                    .iter()
+                                    .zip(want)
+                                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                            if !same {
+                                return Err(anyhow!(
+                                    "bench aborted: {run}: reply for request {idx} diverged \
+                                     from the single-lane reference bits"
+                                ));
+                            }
+                        }
+                        Err(InferError::Rejected { .. }) => rejected += 1,
+                        Err(e) => return Err(anyhow!("bench aborted: {run}: {e}")),
+                    }
+                }
+                if accepted as usize != stats.requests || rejected != stats.rejected {
+                    return Err(anyhow!(
+                        "{run}: stats disagree with client outcomes \
+                         ({}/{} vs {accepted}/{rejected})",
+                        stats.requests,
+                        stats.rejected
+                    ));
+                }
+                let throughput = accepted as f64 / wall.max(1e-9);
+                if mode == "lut:afm16" && clients == top_clients {
+                    lut_thr_by_lanes.push((lanes, throughput));
+                }
+                table.row(vec![
+                    mode.into(),
+                    lanes.to_string(),
+                    clients.to_string(),
+                    format!("{throughput:.0} req/s"),
+                    fmt_time(stats.latency_percentile_s(50.0)),
+                    fmt_time(stats.latency_percentile_s(99.0)),
+                    format!("{:.1}/{batch}", stats.mean_fill()),
+                    format!("{:.1}%", stats.reject_rate() * 100.0),
+                ]);
+                records.push(Json::obj(vec![
+                    ("mode", Json::str(mode)),
+                    ("lanes", Json::num(lanes as f64)),
+                    ("clients", Json::num(clients as f64)),
+                    ("offered", Json::num(n_req as f64)),
+                    ("accepted", Json::num(accepted as f64)),
+                    ("rejected", Json::num(rejected as f64)),
+                    ("reject_rate", Json::num(stats.reject_rate())),
+                    ("wall_s", Json::num(wall)),
+                    ("throughput_rps", Json::num(throughput)),
+                    ("p50_ms", Json::num(stats.latency_percentile_s(50.0) * 1e3)),
+                    ("p99_ms", Json::num(stats.latency_percentile_s(99.0) * 1e3)),
+                    ("mean_latency_ms", Json::num(stats.mean_latency_s() * 1e3)),
+                    ("mean_fill", Json::num(stats.mean_fill())),
+                    ("batches", Json::num(stats.batches as f64)),
+                ]));
+            }
+        }
+    }
+
+    let thr_at = |lanes: usize| {
+        lut_thr_by_lanes.iter().find(|(l, _)| *l == lanes).map(|(_, t)| *t).unwrap_or(0.0)
+    };
+    let headline = thr_at(4) / thr_at(1).max(1e-9);
+    let record = Json::obj(vec![
+        ("schema", Json::str("approxtrain/bench_serve/v1")),
+        (
+            "description",
+            Json::str(
+                "multi-lane batching inference server over the pure-Rust executor \
+                 backend: closed-loop offered-load sweep x lanes x simulation \
+                 strategy; every accepted reply bit-exactness-gated against a \
+                 single-lane full-batch reference forward",
+            ),
+        ),
+        ("model", Json::str(MODEL)),
+        ("multiplier", Json::str("afm16")),
+        (
+            "provenance",
+            Json::str("measured in-process by approxtrain bench_serve on this machine"),
+        ),
+        ("quick", Json::Bool(quick)),
+        ("batch", Json::num(batch as f64)),
+        ("queue_depth", Json::num(queue_depth as f64)),
+        ("max_wait_ms", Json::num(max_wait.as_secs_f64() * 1e3)),
+        ("requests_per_run", Json::num(n_req as f64)),
+        ("lanes_swept", Json::arr(lanes_sweep.iter().map(|&l| Json::num(l as f64)))),
+        ("clients_swept", Json::arr(clients_sweep.iter().map(|&c| Json::num(c as f64)))),
+        ("lut_lanes4_speedup_vs_lanes1", Json::num(headline)),
+        ("records", Json::Arr(records)),
+    ]);
+    let payload = record.to_string();
+    write_result(results_dir, "BENCH_serve.json", &payload)?;
+    if record_root {
+        super::report::write_root_record("BENCH_serve.json", &payload)?;
+    }
+    let mut md = table.to_markdown();
+    md.push_str(&format!(
+        "LUT serving throughput, 4 lanes vs 1 lane at {top_clients} clients: {headline:.2}x\n\n"
+    ));
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
 // Fig 6 — GEMM: AMSim vs direct simulation vs native
 // ---------------------------------------------------------------------------
 

@@ -5,11 +5,16 @@
 //!   (one fused train-step call per batch; Python never runs here).
 //! * [`pruning`] — magnitude pruning with a polynomial-decay schedule
 //!   (Fig 11).
-//! * [`server`] — a threaded batching inference server (router/batcher) to
-//!   exercise the inference path the way a deployment would.
+//! * [`backend`] — the pluggable [`backend::InferBackend`] executors the
+//!   server lanes drive: the PJRT artifact path and the pure-Rust
+//!   (ATxC) executor path.
+//! * [`server`] — the multi-lane batching inference server: a bounded
+//!   admission queue feeding N worker lanes, each dynamically batching
+//!   onto its own backend replica.
 //! * [`experiments`] — the harness that regenerates every paper
 //!   table/figure (also callable from `cargo bench`).
 //! * [`report`] — markdown/CSV emitters for EXPERIMENTS.md.
+pub mod backend;
 pub mod experiments;
 pub mod pruning;
 pub mod report;

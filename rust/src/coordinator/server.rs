@@ -1,28 +1,44 @@
-//! Batching inference server — the deployment-shaped consumer of the
-//! inference path (ApproxTrain "also supports inference using approximate
-//! multipliers", §I).
+//! Multi-lane batching inference server — the deployment-shaped consumer
+//! of the inference path (ApproxTrain "also supports inference using
+//! approximate multipliers", §I), scaled from a single batcher thread to
+//! the shape production serving systems use (vLLM's continuous-batching
+//! router, Clipper's adaptive-batching layer): N worker **lanes**, each
+//! owning an [`InferBackend`] replica and running the size/timeout
+//! dynamic-batching policy, all fed from one shared dispatcher with a
+//! **bounded** admission queue.
 //!
-//! Architecture (vLLM-router-like, scaled to this crate): client threads
-//! submit single requests to a queue; a batcher thread collects up to
-//! `batch` requests (padding with zero rows when the timeout fires), runs
-//! the forward artifact once, and distributes per-request results. The
-//! tokio crate is not available offline, so the event loop is
-//! std::sync::mpsc + threads — same topology.
+//! * **Admission** — [`Client::infer`] enqueues into the bounded queue;
+//!   when the queue is at `queue_depth` the caller gets a typed
+//!   [`InferError::Rejected`] immediately (backpressure) instead of
+//!   growing an unbounded channel.
+//! * **Lanes** — each lane pops the first waiting request, then fills its
+//!   batch for at most `max_wait` (dynamic batching), pads a
+//!   partially-filled batch **by cycling the batch's real request
+//!   images** (never zero rows: a batch-statistics batchnorm folds every
+//!   padding row into every real row's normalization — same policy and
+//!   rationale as [`crate::data::EvalBatcher`]), runs the backend once,
+//!   and replies to the real requests only.
+//! * **Stats** — per-lane [`Stats`] merge into one deterministic
+//!   aggregate: streaming fields are summed, latency reservoirs merged by
+//!   a seen-weighted interleave.
+//!
+//! The tokio crate is not available offline, so the event machinery is
+//! `Mutex` + `Condvar` + threads — same topology.
 
-use std::sync::mpsc::{self, Receiver, Sender};
-
+use std::collections::VecDeque;
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
+use super::backend::InferBackend;
 use crate::nn::metrics::accuracy_from_logits;
-use crate::runtime::executor::{Engine, Value};
 use crate::util::rng::Pcg32;
 use crate::util::stats as ustats;
 
 /// One inference request: an image and a oneshot-style reply channel.
-/// (fields used by the serve loop)
-pub struct Request {
+struct Request {
     image: Vec<f32>,
     reply: Sender<Reply>,
     submitted: Instant,
@@ -37,25 +53,200 @@ pub struct Reply {
     pub batch_fill: usize,
 }
 
-/// Server handle for submitting requests.
+/// Typed client-side failure: the admission decision is part of the API,
+/// not an anonymous string.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InferError {
+    /// The bounded admission queue was full — backpressure, try later.
+    Rejected {
+        /// the configured admission-queue depth that was exceeded
+        queue_depth: usize,
+    },
+    /// The server stopped (or failed) before replying.
+    Stopped,
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::Rejected { queue_depth } => {
+                write!(f, "request rejected: admission queue full (depth {queue_depth})")
+            }
+            InferError::Stopped => write!(f, "server stopped before replying"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+/// Serving policy knobs shared by every lane.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// dynamic batching: wait at most this long after the first request
+    /// of a batch for more to arrive
+    pub max_wait: Duration,
+    /// bounded admission-queue depth; submissions beyond it are rejected
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig { max_wait: Duration::from_millis(5), queue_depth: 64 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bounded admission queue (the shared dispatcher)
+// ---------------------------------------------------------------------------
+
+struct QueueState {
+    q: VecDeque<Request>,
+    closed: bool,
+    rejected: u64,
+}
+
+/// Bounded MPMC request queue: clients submit (rejecting at `depth`),
+/// lanes pop dynamic batches. `Condvar`-based so idle lanes sleep.
+struct AdmissionQueue {
+    depth: usize,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl AdmissionQueue {
+    fn new(depth: usize) -> AdmissionQueue {
+        assert!(depth > 0, "queue depth must be positive");
+        AdmissionQueue {
+            depth,
+            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false, rejected: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Admit or reject a request. O(1), never blocks the client.
+    fn submit(&self, req: Request) -> Result<(), InferError> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(InferError::Stopped);
+        }
+        if st.q.len() >= self.depth {
+            st.rejected += 1;
+            return Err(InferError::Rejected { queue_depth: self.depth });
+        }
+        st.q.push_back(req);
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Lane side: block for the first request, then fill up to `batch`
+    /// for at most `max_wait`. Returns `None` when the queue is closed
+    /// and fully drained (lane shutdown).
+    fn pop_batch(&self, batch: usize, max_wait: Duration) -> Option<Vec<Request>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(first) = st.q.pop_front() {
+                let mut pending = vec![first];
+                let deadline = Instant::now() + max_wait;
+                while pending.len() < batch {
+                    if let Some(r) = st.q.pop_front() {
+                        pending.push(r);
+                        continue;
+                    }
+                    if st.closed {
+                        break;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                    st = guard;
+                    if timeout.timed_out() {
+                        // take anything that raced in with the timeout
+                        while pending.len() < batch {
+                            match st.q.pop_front() {
+                                Some(r) => pending.push(r),
+                                None => break,
+                            }
+                        }
+                        break;
+                    }
+                }
+                if !st.q.is_empty() {
+                    // more work waiting: wake a sibling lane before we
+                    // leave for the backend call
+                    self.cv.notify_one();
+                }
+                return Some(pending);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Stop admitting; lanes drain what is queued and exit.
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Fail-stop: close *and* drop everything queued, so blocked clients
+    /// observe [`InferError::Stopped`] instead of hanging. Used when a
+    /// lane's backend errors.
+    fn fail(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        st.q.clear(); // dropping a Request drops its reply sender
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn rejected(&self) -> u64 {
+        self.state.lock().unwrap().rejected
+    }
+}
+
+/// Server handle for submitting requests (cheap to clone; one per client
+/// thread).
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<Request>,
+    queue: Arc<AdmissionQueue>,
     image_elems: usize,
 }
 
-impl Client {
-    /// Blocking inference call.
-    pub fn infer(&self, image: Vec<f32>) -> Result<Reply> {
-        assert_eq!(image.len(), self.image_elems, "image size");
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let submitted = Instant::now();
-        self.tx
-            .send(Request { image, reply: reply_tx, submitted })
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        reply_rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+/// An admitted request's in-flight reply (oneshot).
+pub struct PendingReply(mpsc::Receiver<Reply>);
+
+impl PendingReply {
+    /// Block until the serving lane replies.
+    pub fn wait(self) -> Result<Reply, InferError> {
+        self.0.recv().map_err(|_| InferError::Stopped)
     }
 }
+
+impl Client {
+    /// Submit without waiting: the admission decision is immediate — a
+    /// full queue returns [`InferError::Rejected`], an admitted request
+    /// returns a [`PendingReply`] to wait on.
+    pub fn submit(&self, image: Vec<f32>) -> Result<PendingReply, InferError> {
+        assert_eq!(image.len(), self.image_elems, "image size");
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.queue.submit(Request { image, reply: reply_tx, submitted: Instant::now() })?;
+        Ok(PendingReply(reply_rx))
+    }
+
+    /// Blocking inference call ([`submit`](Client::submit) + wait).
+    pub fn infer(&self, image: Vec<f32>) -> Result<Reply, InferError> {
+        self.submit(image)?.wait()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Latency reservoir + stats
+// ---------------------------------------------------------------------------
 
 /// Default sample capacity of the latency [`Reservoir`]: 4096 `f64`s =
 /// 32 KiB, enough for stable tail percentiles, constant forever.
@@ -74,6 +265,19 @@ pub struct Reservoir {
     rng: Pcg32,
 }
 
+/// Algorithm R's replacement draw at 1-based stream position `seen`:
+/// uniform in `[0, seen)`. Both branches are bias-free — the wide branch
+/// uses [`Pcg32::below_u64`]; a plain `next_u64() % seen` would skew the
+/// retained sample toward low replacement slots once `seen` stops
+/// dividing `2^64`.
+fn replacement_index(rng: &mut Pcg32, seen: u64) -> u64 {
+    if seen <= u32::MAX as u64 {
+        rng.below(seen as u32) as u64
+    } else {
+        rng.below_u64(seen)
+    }
+}
+
 impl Reservoir {
     pub fn new(cap: usize) -> Reservoir {
         assert!(cap > 0, "reservoir capacity must be positive");
@@ -87,14 +291,55 @@ impl Reservoir {
             return;
         }
         // replace a random slot with probability cap/seen (Algorithm R)
-        let j = if self.seen <= u32::MAX as u64 {
-            self.rng.below(self.seen as u32) as u64
-        } else {
-            self.rng.next_u64() % self.seen
-        };
+        let j = replacement_index(&mut self.rng, self.seen);
         if (j as usize) < self.cap {
             self.samples[j as usize] = v;
         }
+    }
+
+    /// Merge another reservoir into this one (same `cap`) so the result
+    /// approximates a uniform sample of the concatenated streams: when
+    /// the union fits, concatenate; otherwise interleave draws-without-
+    /// replacement weighted by how many stream values each retained
+    /// sample represents (`seen / len`). Deterministic: the merge RNG is
+    /// seeded from the two `seen` counts, so equal per-lane stats always
+    /// produce the same aggregate.
+    pub fn merge(&mut self, other: &Reservoir) {
+        assert_eq!(self.cap, other.cap, "reservoir capacity mismatch");
+        if other.seen == 0 {
+            return;
+        }
+        let total = self.seen + other.seen;
+        if self.samples.len() + other.samples.len() <= self.cap {
+            self.samples.extend_from_slice(&other.samples);
+            self.seen = total;
+            return;
+        }
+        let mut rng =
+            Pcg32::new(self.seen.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ other.seen, 0x4D52);
+        let mut a = std::mem::take(&mut self.samples);
+        let mut b = other.samples.clone();
+        // per-sample stream weight: each retained value stands for
+        // seen/len values of its lane's stream
+        let wa = self.seen as f64 / a.len().max(1) as f64;
+        let wb = other.seen as f64 / b.len().max(1) as f64;
+        let mut merged = Vec::with_capacity(self.cap);
+        while merged.len() < self.cap && (!a.is_empty() || !b.is_empty()) {
+            let ta = a.len() as f64 * wa;
+            let tb = b.len() as f64 * wb;
+            let from_a = if b.is_empty() {
+                true
+            } else if a.is_empty() {
+                false
+            } else {
+                (rng.uniform() as f64) * (ta + tb) < ta
+            };
+            let src = if from_a { &mut a } else { &mut b };
+            let i = rng.below(src.len() as u32) as usize;
+            merged.push(src.swap_remove(i));
+        }
+        self.samples = merged;
+        self.seen = total;
     }
 
     /// Total values offered (not the retained sample count).
@@ -120,12 +365,15 @@ impl Reservoir {
 
 /// Server statistics — O(1) memory regardless of lifetime: latencies go
 /// into a bounded [`Reservoir`] plus exact streaming sum/max accumulators,
-/// batch fills into a streaming sum. (Earlier revisions pushed one `f64`
-/// per request forever.)
+/// batch fills into a streaming sum. Per-lane instances merge into one
+/// aggregate via [`Stats::merge`].
 #[derive(Clone, Debug)]
 pub struct Stats {
     pub requests: usize,
     pub batches: usize,
+    /// submissions turned away by the bounded admission queue (aggregate
+    /// only; per-lane stats report 0)
+    pub rejected: u64,
     /// bounded latency sample, seconds (percentile queries)
     pub latencies: Reservoir,
     latency_sum_s: f64,
@@ -138,6 +386,7 @@ impl Default for Stats {
         Stats {
             requests: 0,
             batches: 0,
+            rejected: 0,
             latencies: Reservoir::new(LATENCY_RESERVOIR_CAP),
             latency_sum_s: 0.0,
             latency_max_s: 0.0,
@@ -157,6 +406,20 @@ impl Stats {
     fn record_batch(&mut self, fill: usize) {
         self.batches += 1;
         self.fill_sum += fill as u64;
+    }
+
+    /// Fold another lane's stats into this aggregate: exact streaming
+    /// fields are summed (max is maxed), reservoirs merged by the
+    /// seen-weighted interleave of [`Reservoir::merge`]. Deterministic
+    /// for a fixed merge order (lanes merge in lane order).
+    pub fn merge(&mut self, other: &Stats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.rejected += other.rejected;
+        self.latency_sum_s += other.latency_sum_s;
+        self.latency_max_s = self.latency_max_s.max(other.latency_max_s);
+        self.fill_sum += other.fill_sum;
+        self.latencies.merge(&other.latencies);
     }
 
     /// Latency percentile in seconds (reservoir estimate; exact for the
@@ -179,62 +442,54 @@ impl Stats {
     pub fn mean_fill(&self) -> f64 {
         self.fill_sum as f64 / (self.batches.max(1)) as f64
     }
+
+    /// Reject rate over everything offered (accepted + rejected).
+    pub fn reject_rate(&self) -> f64 {
+        let offered = self.requests as u64 + self.rejected;
+        if offered == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / offered as f64
+        }
+    }
 }
 
-/// Run the batching server loop until the request channel closes.
-/// `fwd_artifact` must be a forward artifact; `fixed_inputs` are the
-/// params (+ optional LUT) in positional order around the image input.
-pub fn serve(
-    engine: &mut Engine,
-    fwd_artifact: &str,
-    params: Vec<Value>,
-    lut: Option<Vec<u32>>,
-    rx: Receiver<Request>,
-    batch: usize,
-    image_elems: usize,
-    classes: usize,
+// ---------------------------------------------------------------------------
+// Lanes + drivers
+// ---------------------------------------------------------------------------
+
+/// One worker lane: dynamic batching over an owned backend replica until
+/// the queue closes and drains. Partial batches are padded by cycling
+/// the real request images; padding rows are never replied to.
+fn serve_lane(
+    backend: &mut dyn InferBackend,
+    queue: &AdmissionQueue,
     max_wait: Duration,
 ) -> Result<Stats> {
-    // Warm the persistent kernel worker pool before the serving loop so
-    // first-request latency never includes thread spawning, and
-    // pre-allocate the per-lane pack buffers of the tiled GEMM (best
-    // effort); all batched CPU kernel work behind the forward pass shares
-    // this pool across batches.
-    crate::kernels::gemm::warm_tiled();
+    let batch = backend.batch();
+    let image_elems = backend.image_elems();
+    let classes = backend.classes();
     let mut stats = Stats::default();
-    loop {
-        // collect up to `batch` requests, waiting at most max_wait after
-        // the first arrives (the paper-world "dynamic batching" policy)
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break, // all clients done
-        };
-        let deadline = Instant::now() + max_wait;
-        let mut pending = vec![first];
-        while pending.len() < batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        // assemble the fixed-shape batch (zero padding for empty slots)
+    let mut images: Vec<f32> = Vec::with_capacity(batch * image_elems);
+    while let Some(pending) = queue.pop_batch(batch, max_wait) {
         let fill = pending.len();
-        let mut images = vec![0.0f32; batch * image_elems];
-        for (i, r) in pending.iter().enumerate() {
-            images[i * image_elems..(i + 1) * image_elems].copy_from_slice(&r.image);
+        debug_assert!(fill > 0 && fill <= batch);
+        images.clear();
+        for r in &pending {
+            images.extend_from_slice(&r.image);
         }
-        let mut inputs = params.clone();
-        inputs.push(Value::F32(images));
-        if let Some(l) = &lut {
-            inputs.push(Value::U32(l.clone()));
+        // pad to the backend's fixed shape by cycling this batch's real
+        // images — zero rows would corrupt batch-statistics batchnorm
+        crate::data::pad_batch_by_cycling(&mut images, fill, batch, image_elems);
+        let logits = backend.run_batch(&images)?;
+        if logits.len() != batch * classes {
+            anyhow::bail!(
+                "{}: backend returned {} logits, expected {}",
+                backend.describe(),
+                logits.len(),
+                batch * classes
+            );
         }
-        let out = engine.run(fwd_artifact, &inputs)?;
-        let logits = out[0].as_f32()?;
         for (i, r) in pending.into_iter().enumerate() {
             let latency = r.submitted.elapsed();
             stats.record_request(latency.as_secs_f64());
@@ -249,32 +504,138 @@ pub fn serve(
     Ok(stats)
 }
 
-/// Convenience: run the batcher/executor loop on the *current* thread (the
-/// PJRT client is not `Send`) while the `load` closure drives traffic from
-/// a spawned thread. When `load` returns and drops its `Client`, the
-/// request channel closes and the server loop exits.
-pub fn with_server<F>(
-    mut engine: Engine,
-    fwd_artifact: &str,
-    params: Vec<Value>,
-    lut: Option<Vec<u32>>,
-    batch: usize,
-    image_elems: usize,
-    classes: usize,
-    max_wait: Duration,
+fn check_uniform_backends(backends: &[&dyn InferBackend]) -> Result<(usize, usize, usize)> {
+    let first = backends.first().ok_or_else(|| anyhow!("serve_pool needs >= 1 backend"))?;
+    let shape = (first.batch(), first.image_elems(), first.classes());
+    for b in backends {
+        let s = (b.batch(), b.image_elems(), b.classes());
+        if s != shape {
+            anyhow::bail!(
+                "lane backends disagree on shape: {} is {:?}, {} is {:?}",
+                backends[0].describe(),
+                shape,
+                b.describe(),
+                s
+            );
+        }
+    }
+    Ok(shape)
+}
+
+/// Run an N-lane server (one lane per backend replica) while `load`
+/// drives traffic through a [`Client`]; when `load` returns, admission
+/// closes, the lanes drain the queue and exit. Returns the merged
+/// aggregate [`Stats`] and `load`'s return value.
+///
+/// A lane whose backend errors fail-stops the server (admission closes,
+/// queued requests observe [`InferError::Stopped`]) and the error is
+/// returned after the remaining lanes wind down.
+pub fn serve_pool<B, F, R>(
+    backends: &mut [B],
+    cfg: ServeConfig,
     load: F,
-) -> Result<Stats>
+) -> Result<(Stats, R)>
 where
-    F: FnOnce(Client) + Send,
+    B: InferBackend + Send,
+    F: FnOnce(Client) -> R + Send,
+    R: Send,
 {
-    let (tx, rx) = mpsc::channel::<Request>();
-    let client = Client { tx, image_elems };
-    std::thread::scope(|s| -> Result<Stats> {
+    let (_, image_elems, _) = {
+        let refs: Vec<&dyn InferBackend> =
+            backends.iter().map(|b| b as &dyn InferBackend).collect();
+        check_uniform_backends(&refs)?
+    };
+    // Warm the persistent kernel worker pool (and the tiled-GEMM pack
+    // buffers, best effort) once, before any lane spawns: first-request
+    // latency never includes thread spawning, and all lanes' CPU kernel
+    // work shares the one pool.
+    crate::kernels::gemm::warm_tiled();
+    let queue = Arc::new(AdmissionQueue::new(cfg.queue_depth));
+    let client = Client { queue: Arc::clone(&queue), image_elems };
+    let max_wait = cfg.max_wait;
+    std::thread::scope(|s| -> Result<(Stats, R)> {
+        let lanes: Vec<_> = backends
+            .iter_mut()
+            .map(|b| {
+                let queue = &queue;
+                s.spawn(move || {
+                    let r = serve_lane(b, queue, max_wait);
+                    if r.is_err() {
+                        queue.fail();
+                    }
+                    r
+                })
+            })
+            .collect();
         let loader = s.spawn(move || load(client));
-        let stats =
-            serve(&mut engine, fwd_artifact, params, lut, rx, batch, image_elems, classes, max_wait)?;
-        loader.join().expect("load thread panicked");
-        Ok(stats)
+        // close before joining the lanes, else they would wait on the
+        // queue forever (and the scope's implicit join with them)
+        let load_res = loader.join();
+        queue.close();
+        // a lane's backend error is the root cause — report it in
+        // preference to the load-side panic it usually triggers (clients
+        // observing Stopped tend to unwrap)
+        let mut agg = Stats::default();
+        let mut first_err = None;
+        for lane in lanes {
+            match lane.join() {
+                Ok(Ok(lane_stats)) => agg.merge(&lane_stats),
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => first_err = first_err.or(Some(anyhow!("serving lane panicked"))),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let load_out = load_res.map_err(|_| anyhow!("load thread panicked"))?;
+        agg.rejected += queue.rejected();
+        Ok((agg, load_out))
+    })
+}
+
+/// Single-lane variant for backends that must stay on the caller's
+/// thread (the PJRT client is not `Send`): the lane loop runs *here*
+/// while `load` drives traffic from a spawned thread. Same admission,
+/// batching, padding and stats semantics as one [`serve_pool`] lane.
+pub fn serve_on_caller<F, R>(
+    backend: &mut dyn InferBackend,
+    cfg: ServeConfig,
+    load: F,
+) -> Result<(Stats, R)>
+where
+    F: FnOnce(Client) -> R + Send,
+    R: Send,
+{
+    crate::kernels::gemm::warm_tiled();
+    let queue = Arc::new(AdmissionQueue::new(cfg.queue_depth));
+    let client = Client { queue: Arc::clone(&queue), image_elems: backend.image_elems() };
+    let max_wait = cfg.max_wait;
+    std::thread::scope(|s| -> Result<(Stats, R)> {
+        let close_queue = Arc::clone(&queue);
+        let loader = s.spawn(move || {
+            // close on every exit path (panic included): the caller
+            // thread is inside serve_lane and only a closed, drained
+            // queue lets it return
+            struct CloseOnDrop(Arc<AdmissionQueue>);
+            impl Drop for CloseOnDrop {
+                fn drop(&mut self) {
+                    self.0.close();
+                }
+            }
+            let _close = CloseOnDrop(close_queue);
+            load(client)
+        });
+        let served = serve_lane(backend, &queue, max_wait);
+        if served.is_err() {
+            queue.fail(); // unblock clients waiting on queued requests
+        }
+        let load_res = loader.join();
+        // the backend error is the root cause — report it in preference
+        // to the load-side panic it usually triggers
+        let mut stats = served?;
+        let load_out = load_res.map_err(|_| anyhow!("load thread panicked"))?;
+        stats.rejected += queue.rejected();
+        Ok((stats, load_out))
     })
 }
 
@@ -322,6 +683,104 @@ mod tests {
     }
 
     #[test]
+    fn replacement_index_is_in_range_both_branches() {
+        let mut rng = Pcg32::seeded(21);
+        // 32-bit branch: in range and covering
+        let mut seen_slot = [false; 7];
+        for _ in 0..500 {
+            let j = replacement_index(&mut rng, 7);
+            assert!(j < 7);
+            seen_slot[j as usize] = true;
+        }
+        assert!(seen_slot.iter().all(|&s| s));
+        // wide branch (seen > u32::MAX): bias-free bounded draw, in range
+        let wide = u32::MAX as u64 * 2 + 3;
+        for _ in 0..500 {
+            assert!(replacement_index(&mut rng, wide) < wide);
+        }
+        // the wide branch still lands replacements inside a cap-sized
+        // prefix sometimes over many draws (probability cap/seen each);
+        // just assert determinism across identically-seeded rngs
+        let mut r1 = Pcg32::seeded(5);
+        let mut r2 = Pcg32::seeded(5);
+        for _ in 0..100 {
+            assert_eq!(replacement_index(&mut r1, wide), replacement_index(&mut r2, wide));
+        }
+    }
+
+    #[test]
+    fn reservoir_merge_invariants() {
+        // below combined cap: exact concatenation
+        let mut a = Reservoir::new(16);
+        let mut b = Reservoir::new(16);
+        for i in 0..6 {
+            a.push(i as f64);
+        }
+        for i in 100..106 {
+            b.push(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.seen(), 12);
+        assert_eq!(a.samples().len(), 12);
+        // above cap: bounded, seen counts sum, all values from the union
+        let mut a = Reservoir::new(32);
+        let mut b = Reservoir::new(32);
+        for i in 0..1000 {
+            a.push(i as f64);
+        }
+        for i in 1000..4000 {
+            b.push(i as f64);
+        }
+        let mut a2 = a.clone();
+        a.merge(&b);
+        assert_eq!(a.seen(), 4000);
+        assert_eq!(a.samples().len(), 32);
+        for &v in a.samples() {
+            assert!((0.0..4000.0).contains(&v));
+        }
+        // weighted interleave: b's stream is 3x a's, so most retained
+        // samples come from b's range
+        let from_b = a.samples().iter().filter(|&&v| v >= 1000.0).count();
+        assert!(from_b > 16, "seen-weighting lost: {from_b}/32 from the 3x stream");
+        // deterministic: merging identical inputs twice gives identical
+        // samples
+        a2.merge(&b);
+        assert_eq!(a.samples(), a2.samples());
+        // merging an empty reservoir is a no-op
+        let before = a.samples().to_vec();
+        a.merge(&Reservoir::new(32));
+        assert_eq!(a.samples(), &before[..]);
+        assert_eq!(a.seen(), 4000);
+    }
+
+    #[test]
+    fn stats_merge_sums_streaming_fields_exactly() {
+        let mut a = Stats::default();
+        let mut b = Stats::default();
+        for i in 0..10 {
+            a.record_request(0.010 + i as f64 * 1e-4);
+        }
+        a.record_batch(10);
+        for i in 0..6 {
+            b.record_request(0.020 + i as f64 * 1e-4);
+        }
+        b.record_batch(4);
+        b.record_batch(2);
+        b.rejected = 3;
+        let sum_all = a.latency_sum_s + b.latency_sum_s;
+        a.merge(&b);
+        assert_eq!(a.requests, 16);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.rejected, 3);
+        assert_eq!(a.fill_sum, 16, "every request lands in exactly one batch");
+        assert!((a.mean_latency_s() - sum_all / 16.0).abs() < 1e-15);
+        assert!((a.max_latency_s() - 0.0205).abs() < 1e-12);
+        assert_eq!(a.latencies.seen(), 16);
+        let offered = 16.0 + 3.0;
+        assert!((a.reject_rate() - 3.0 / offered).abs() < 1e-15);
+    }
+
+    #[test]
     fn stats_memory_is_constant_and_report_fields_exact() {
         let n = LATENCY_RESERVOIR_CAP * 3;
         let mut s = Stats::default();
@@ -346,5 +805,6 @@ mod tests {
         assert_eq!(empty.latency_percentile_s(99.0), 0.0);
         assert_eq!(empty.mean_latency_s(), 0.0);
         assert_eq!(empty.mean_fill(), 0.0);
+        assert_eq!(empty.reject_rate(), 0.0);
     }
 }

@@ -16,6 +16,22 @@ pub mod synth;
 
 use crate::util::rng::Pcg32;
 
+/// Pad an assembled batch image buffer holding `real` rows of
+/// `row_elems` f32s up to `batch` rows **by cycling the real rows** —
+/// the crate-wide padding policy for fixed-shape batches
+/// ([`EvalBatcher`], the serving lanes, the `bench-serve` reference):
+/// repeated real rows keep the padded batch drawn from the data
+/// distribution, whereas zero rows would fold into every real row's
+/// normalization through batch-statistics batchnorm.
+pub fn pad_batch_by_cycling(images: &mut Vec<f32>, real: usize, batch: usize, row_elems: usize) {
+    assert!(real > 0 && real <= batch, "real rows {real} vs batch {batch}");
+    debug_assert_eq!(images.len(), real * row_elems);
+    for pad in 0..batch - real {
+        let src = (pad % real) * row_elems;
+        images.extend_from_within(src..src + row_elems);
+    }
+}
+
 /// An in-memory image-classification dataset, NHWC f32 images in [0, 1].
 #[derive(Clone, Debug)]
 pub struct Dataset {
@@ -159,10 +175,7 @@ impl<'a> Iterator for EvalBatcher<'a> {
         let sz = self.ds.image_len();
         let mut images = Vec::with_capacity(self.batch * sz);
         images.extend_from_slice(&self.ds.images[self.pos * sz..(self.pos + real) * sz]);
-        for pad in 0..self.batch - real {
-            let src = (self.pos + pad % real) * sz;
-            images.extend_from_slice(&self.ds.images[src..src + sz]);
-        }
+        pad_batch_by_cycling(&mut images, real, self.batch, sz);
         let labels = &self.ds.labels[self.pos..self.pos + real];
         self.pos += real;
         Some((images, labels))

@@ -5,6 +5,15 @@
 
 /// 2x2 max-pool, stride 2, NHWC. Returns `(output, argmax_indices)`;
 /// the indices feed the backward pass.
+///
+/// NaN semantics match TF's maxpool: a window containing NaN outputs NaN
+/// (`max` with a NaN operand is NaN — a diverged run stays visibly
+/// diverged instead of being laundered into a finite value), and the
+/// argmax is well-defined for every window: the **first** NaN when one is
+/// present, otherwise the **first** maximum. The earlier `v > best` scan
+/// silently dropped NaN (never selected), and an all-NaN window produced
+/// `-inf` with argmax pointing at flat index 0 — routing that window's
+/// gradient to an arbitrary element of a *different* window.
 pub fn maxpool2x2(
     input: &[f32],
     batch: usize,
@@ -21,14 +30,21 @@ pub fn maxpool2x2(
         for oy in 0..oh {
             for ox in 0..ow {
                 for ch in 0..c {
-                    let mut best = f32::NEG_INFINITY;
-                    let mut best_idx = 0;
-                    for dy in 0..2 {
+                    let first = ((b * h + oy * 2) * w + ox * 2) * c + ch;
+                    let mut best = input[first];
+                    let mut best_idx = first;
+                    'window: for dy in 0..2 {
                         for dx in 0..2 {
                             let idx =
                                 ((b * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch;
-                            if input[idx] > best {
-                                best = input[idx];
+                            let v = input[idx];
+                            if v.is_nan() {
+                                best = v;
+                                best_idx = idx;
+                                break 'window; // NaN propagates; first NaN wins
+                            }
+                            if v > best {
+                                best = v;
                                 best_idx = idx;
                             }
                         }
@@ -118,6 +134,53 @@ mod tests {
         assert_eq!(out, vec![2.5]);
         let dx = global_avgpool_backward(&out, 1, 2, 2, 1);
         assert_eq!(dx, vec![0.625; 4]);
+    }
+
+    #[test]
+    fn maxpool_propagates_nan_with_defined_argmax() {
+        // one NaN in the window: output NaN, argmax = that NaN, gradient
+        // routed there (stays in the diverged element, not laundered)
+        let input = vec![1.0, f32::NAN, 2.0, 3.0];
+        let (out, arg) = maxpool2x2(&input, 1, 2, 2, 1);
+        assert!(out[0].is_nan(), "NaN must propagate, got {}", out[0]);
+        assert_eq!(arg, vec![1], "argmax is the first NaN");
+        let dx = maxpool2x2_backward(&[7.0], &arg, 4);
+        assert_eq!(dx, vec![0.0, 7.0, 0.0, 0.0]);
+
+        // all-NaN window: output NaN, argmax = the window's own first
+        // element (the old code output -inf with argmax at flat index 0)
+        let mut input = vec![f32::NAN; 4 * 4];
+        input[0] = 5.0; // window (0,0) is fine; window (0,1) is all NaN
+        input[1] = 1.0;
+        input[4] = 2.0;
+        input[5] = 3.0;
+        let (out, arg) = maxpool2x2(&input, 1, 4, 4, 1);
+        assert_eq!(out[0], 5.0);
+        assert!(out[1].is_nan());
+        assert_eq!(arg[1], 2, "all-NaN window argmax stays inside the window");
+
+        // NaN in one channel never leaks into the other
+        let input = vec![
+            1.0,
+            f32::NAN, //
+            2.0,
+            f32::NAN, //
+            3.0,
+            f32::NAN, //
+            4.0,
+            f32::NAN,
+        ];
+        let (out, _) = maxpool2x2(&input, 1, 2, 2, 2);
+        assert_eq!(out[0], 4.0);
+        assert!(out[1].is_nan());
+    }
+
+    #[test]
+    fn maxpool_ties_pick_first() {
+        let input = vec![2.0, 2.0, 2.0, 2.0];
+        let (out, arg) = maxpool2x2(&input, 1, 2, 2, 1);
+        assert_eq!(out, vec![2.0]);
+        assert_eq!(arg, vec![0], "tied windows route the gradient to the first element");
     }
 
     #[test]

@@ -39,14 +39,11 @@ pub fn cross_entropy_with_grad(logits: &Tensor, labels: &[u32]) -> (f32, f32, Te
         let p = probs.data[r * c + y].max(1e-12);
         loss -= p.ln();
         grad.data[r * c + y] -= 1.0;
+        // shared NaN-tolerant first-max argmax: a diverged run (NaN
+        // logits -> NaN probs) scores the row wrong instead of panicking,
+        // and ties agree with TF (first max, not last)
         let row = &probs.data[r * c..(r + 1) * c];
-        let argmax = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        if argmax == y {
+        if crate::nn::metrics::argmax(row) == y {
             correct += 1;
         }
     }
@@ -84,9 +81,27 @@ mod tests {
         let logits = Tensor::from_vec(&[1, 2], vec![0.0, 0.0]);
         let (loss, acc, grad) = cross_entropy_with_grad(&logits, &[1]);
         assert!((loss - (2.0f32).ln()).abs() < 1e-6);
-        assert!(acc == 0.0 || acc == 1.0); // argmax tie -> either
+        // argmax tie resolves to the FIRST max (TF semantics): label 1
+        // does not win against the tied index 0
+        assert_eq!(acc, 0.0);
+        let (_, acc0, _) = cross_entropy_with_grad(&logits, &[0]);
+        assert_eq!(acc0, 1.0);
         assert!((grad.data[0] - 0.5).abs() < 1e-6);
         assert!((grad.data[1] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nan_logits_do_not_panic_training_metrics() {
+        // a diverged batch: row 0 all-NaN, row 1 healthy. The NaN row's
+        // probability hits the 1e-12 floor (max() drops NaN), so the
+        // loss stays defined; the accuracy accounting must too — the old
+        // partial_cmp().unwrap() argmax panicked here.
+        let logits = Tensor::from_vec(&[2, 2], vec![f32::NAN, f32::NAN, 0.0, 9.0]);
+        let (loss, acc, grad) = cross_entropy_with_grad(&logits, &[1, 1]);
+        assert!(loss > 10.0, "NaN row is scored at the probability floor, loss {loss}");
+        assert_eq!(acc, 0.5, "NaN row scores wrong; healthy row still scores");
+        assert_eq!(grad.shape, vec![2, 2]);
+        assert!(grad.data[3].is_finite(), "healthy row's gradient stays usable");
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //!   gradients, lowered once to HLO text under `artifacts/`.
 //! * **L3** — this crate: multiplier functional models, LUT generation
 //!   (paper Alg. 1), dataset pipeline, PJRT runtime, training/inference
-//!   drivers, a batching inference server, and the experiment harness that
-//!   regenerates every table and figure of the paper.
+//!   drivers, a multi-lane batching inference server with backpressure
+//!   over pluggable backends (compiled artifacts or the pure-Rust
+//!   executors), and the experiment harness that regenerates every table
+//!   and figure of the paper.
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
@@ -74,7 +76,8 @@
 //! tensor/      minimal row-major tensor
 //! data/        IDX loader + deterministic synthetic datasets
 //! runtime/     PJRT engine for the compiled artifacts (stubbed offline)
-//! coordinator/ trainer, batching inference server, experiments, pruning, reports
+//! coordinator/ trainer, multi-lane batching inference server over
+//!              pluggable InferBackends, experiments, pruning, reports
 //! hwmodel/     Fig. 1 area/power efficiency model
 //! util/        RNG, JSON, stats, timer, persistent thread pool, prop-test harness
 //! cli/         argument parsing for the `approxtrain` binary

@@ -5,9 +5,10 @@
 //! approxtrain hwmodel
 //! approxtrain train --model lenet5 --mode lut --mult afm16 --epochs 3
 //! approxtrain infer --model lenet5 --mode lut --mult afm16
-//! approxtrain serve --model lenet300 --requests 64
+//! approxtrain serve --model lenet300 --lanes 4 --mode lut:afm16 --requests 64
 //! approxtrain bench-gemm --size 256
 //! approxtrain bench-conv
+//! approxtrain bench-serve
 //! approxtrain experiment fig6|fig10|table3|table4|table5|table6|fig11|fig12|all [--quick]
 //! approxtrain list-artifacts
 //! ```
@@ -64,6 +65,15 @@ fn main() -> Result<()> {
             println!("{out}");
             Ok(())
         }
+        "bench-serve" => {
+            // multi-lane batching server sweep over the CPU executor
+            // backend; pure CPU path, same root-record policy as the
+            // other bench commands
+            let quick = args.has_flag("quick");
+            let out = experiments::bench_serve(&results_dir(&args), quick, !quick)?;
+            println!("{out}");
+            Ok(())
+        }
         "experiment" => experiment(&args),
         "list-artifacts" => list_artifacts(&args),
         "" | "help" => {
@@ -84,9 +94,14 @@ commands:
   train --model <m> --mode <tf|custom|lut|direct:afm32> --mult <name>
         [--epochs N] [--lr F] [--samples N] [--seed N] [--ckpt out.ckpt]
   infer --model <m> --mode <...> --mult <name> [--samples N] [--ckpt f]
-  serve --model <m> [--requests N] [--batch-wait-ms N]
+  serve --model <m> [--backend cpu|engine] [--lanes N] [--batch N]
+        [--queue-depth N] [--requests N] [--clients N] [--batch-wait-ms N]
+        [--mode ...]                       multi-lane batching inference server
+        (cpu modes: native|direct:<mult>|lut:<mult>; engine modes are
+         artifact modes: tf|custom|lut|direct:<mult>, plus --mult for the LUT)
   bench-gemm [--size N] [--quick]          CPU GEMM perf record (BENCH_gemm.json)
   bench-conv [--quick]                     implicit vs materialized conv (BENCH_conv.json)
+  bench-serve [--quick]                    serving sweep: lanes x load x strategy (BENCH_serve.json)
   experiment <fig1|fig6|fig10|table3|table4|table5|table6|fig11|fig12|all>
         [--quick]
   list-artifacts
@@ -172,62 +187,153 @@ fn infer(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    use approxtrain::coordinator::server::with_server;
+    use approxtrain::coordinator::backend::{CpuBackend, EngineBackend, InferBackend, MulSpec};
+    use approxtrain::coordinator::server::{serve_on_caller, serve_pool, ServeConfig};
     use approxtrain::nn::init::init_params;
-    use approxtrain::runtime::artifact::Role;
     use approxtrain::util::json::Json;
+    use approxtrain::util::rng::Pcg32;
     use std::time::Duration;
 
-    let dir = artifacts_dir(args);
-    let mut engine = Engine::new(&dir)?;
     let model = args.opt_or("model", "lenet300");
-    let art = engine
-        .manifest()
-        .find(&model, "fwd", "lut")
-        .context("no lut fwd artifact")?
-        .clone();
-    // pre-compile before the timed serving loop
-    engine.prepare(&art.name)?;
-    let raw = Json::parse(&std::fs::read_to_string(dir.join("manifest.json"))?)?;
-    let params = init_params(&art, 42, &raw)?;
-    let lut = MantissaLut::load(&dir.join("luts/afm16.lut")).map_err(|e| anyhow::anyhow!("{e}"))?;
-    lut.validate()
-        .map_err(|e| anyhow::anyhow!("loaded afm16 LUT failed validation: {e}"))?;
-    let x_spec = &art.inputs[art.input_indices(Role::Input)[0]];
-    let batch = x_spec.shape[0];
-    let image_elems = x_spec.elements() / batch;
-    let classes = art.outputs[0].shape[1];
     let requests = args.opt_usize("requests", 64);
-    let wait = Duration::from_millis(args.opt_u64("batch-wait-ms", 5));
-    let ds = experiments::dataset_for(experiments::dataset_of(&model), requests, 7);
-    let name = art.name.clone();
-    let stats = with_server(
-        engine,
-        &name,
-        params,
-        Some(lut.entries),
-        batch,
-        image_elems,
-        classes,
-        wait,
-        |client| {
-            std::thread::scope(|s| {
-                for t in 0..4 {
-                    let client = client.clone();
-                    let ds = &ds;
-                    s.spawn(move || {
-                        for i in (t..requests).step_by(4) {
-                            let _ = client.infer(ds.image(i).to_vec());
-                        }
-                    });
+    let clients = args.opt_usize("clients", 4).max(1);
+    let lanes = args.opt_usize("lanes", 2).max(1);
+    let queue_depth = args.opt_usize("queue-depth", 64);
+    if queue_depth == 0 {
+        bail!("--queue-depth must be >= 1");
+    }
+    let cfg = ServeConfig {
+        max_wait: Duration::from_millis(args.opt_u64("batch-wait-ms", 5)),
+        queue_depth,
+    };
+
+    // build the backend(s) first; the request images are sized to them
+    enum Built {
+        Cpu(Vec<CpuBackend>),
+        Engine(Box<EngineBackend>),
+    }
+    let backend_kind = args.opt_or("backend", "cpu");
+    let built = match backend_kind.as_str() {
+        "cpu" => {
+            // pure-Rust executor backend: runnable with no artifacts, one
+            // bit-identical model replica per lane. --mult composes with a
+            // bare --mode lut|direct (the train/infer flag convention);
+            // a fully-qualified --mode that contradicts --mult is an error
+            let m = args.opt_or("mode", "lut");
+            let mode = match (m.as_str(), args.opt("mult")) {
+                ("lut", Some(mult)) => format!("lut:{mult}"),
+                ("direct", Some(mult)) => format!("direct:{mult}"),
+                ("native", _) | (_, None) => m.clone(),
+                (other, Some(mult)) => {
+                    if !other.ends_with(&format!(":{mult}")) {
+                        bail!("--mode {other} contradicts --mult {mult}");
+                    }
+                    other.to_string()
                 }
-            });
-        },
-    )?;
+            };
+            let batch = args.opt_usize("batch", 16);
+            let seed = args.opt_u64("seed", 42);
+            let base = CpuBackend::for_model(&model, MulSpec::parse(&mode)?, batch, seed)?;
+            println!(
+                "serving {} | {lanes} lanes x batch {batch} | queue depth {} | {clients} clients",
+                base.describe(),
+                cfg.queue_depth
+            );
+            Built::Cpu(base.replicas(lanes))
+        }
+        "engine" => {
+            // compiled-artifact path: PJRT is thread-pinned, so this
+            // serves single-lane from the current thread
+            if lanes > 1 {
+                println!("note: the engine backend is not Send; serving 1 lane (not {lanes})");
+            }
+            // --mode here selects the *artifact* mode (tf | custom | lut
+            // | direct:<mult>), matching train/infer
+            let mode = args.opt_or("mode", "lut");
+            let dir = artifacts_dir(args);
+            let engine = Engine::new(&dir)?;
+            let art = engine
+                .manifest()
+                .find(&model, "fwd", &mode)
+                .with_context(|| format!("no {mode} fwd artifact for {model}"))?
+                .clone();
+            let raw = Json::parse(&std::fs::read_to_string(dir.join("manifest.json"))?)?;
+            let params = init_params(&art, 42, &raw)?;
+            // LUT payload only when the artifact takes one
+            let lut = if art.input_indices(approxtrain::runtime::artifact::Role::Lut).is_empty()
+            {
+                None
+            } else {
+                let mult = args.opt_or("mult", "afm16");
+                let lut = MantissaLut::load(&dir.join(format!("luts/{mult}.lut")))
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                lut.validate()
+                    .map_err(|e| anyhow::anyhow!("loaded {mult} LUT failed validation: {e}"))?;
+                Some(lut.entries)
+            };
+            let backend = EngineBackend::new(engine, &art.name, params, lut)?;
+            println!(
+                "serving {} | 1 lane (caller thread) x batch {} | queue depth {} | \
+                 {clients} clients",
+                backend.describe(),
+                backend.batch(),
+                cfg.queue_depth
+            );
+            Built::Engine(Box::new(backend))
+        }
+        other => bail!("unknown backend {other:?} (want cpu | engine)"),
+    };
+    let (batch, image_elems) = match &built {
+        Built::Cpu(v) => (v[0].batch(), v[0].image_elems()),
+        Built::Engine(b) => (b.batch(), b.image_elems()),
+    };
+
+    // request stream: dataset images when the shapes line up (lenet
+    // models), otherwise deterministic synthetic rows of the right size
+    // (the scaled-down CPU resnets take 16x16x3, not the dataset's
+    // shape). Probe with a 1-sample dataset before building the real one
+    // so a mismatch never pays for `requests` images it then discards.
+    let probe = experiments::dataset_for(experiments::dataset_of(&model), 1, 7);
+    let images: Vec<Vec<f32>> = if probe.image_len() == image_elems {
+        let ds = experiments::dataset_for(experiments::dataset_of(&model), requests, 7);
+        (0..requests).map(|i| ds.image(i).to_vec()).collect()
+    } else {
+        let mut rng = Pcg32::seeded(7);
+        (0..requests).map(|_| (0..image_elems).map(|_| rng.uniform()).collect()).collect()
+    };
+
+    // closed-loop load shared by both backends; returns the reject count
+    let drive = |client: approxtrain::coordinator::server::Client| -> usize {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let rejected = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for t in 0..clients {
+                let client = client.clone();
+                let images = &images;
+                let rejected = &rejected;
+                s.spawn(move || {
+                    for i in (t..requests).step_by(clients) {
+                        if client.infer(images[i].clone()).is_err() {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        rejected.load(Ordering::Relaxed)
+    };
+
+    let stats = match built {
+        Built::Cpu(mut backends) => serve_pool(&mut backends, cfg, drive)?.0,
+        Built::Engine(mut backend) => serve_on_caller(backend.as_mut(), cfg, drive)?.0,
+    };
     println!(
-        "served {} requests in {} batches | p50 {:.1} ms p99 {:.1} ms | mean fill {:.1}/{batch}",
+        "served {} requests in {} batches ({} rejected, {:.1}%) | p50 {:.1} ms p99 {:.1} ms | \
+         mean fill {:.1}/{batch}",
         stats.requests,
         stats.batches,
+        stats.rejected,
+        stats.reject_rate() * 100.0,
         stats.latency_percentile_s(50.0) * 1e3,
         stats.latency_percentile_s(99.0) * 1e3,
         stats.mean_fill(),

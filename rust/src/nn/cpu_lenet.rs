@@ -11,6 +11,7 @@ use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
 /// LeNet-300-100 parameters.
+#[derive(Clone)]
 pub struct Lenet300 {
     pub w1: Tensor,
     pub b1: Tensor,
@@ -81,6 +82,7 @@ impl Lenet300 {
 }
 
 /// LeNet-5 parameters (28x28x1 input).
+#[derive(Clone)]
 pub struct Lenet5 {
     pub c1: Tensor, // [5,5,1,6]
     pub c2: Tensor, // [5,5,6,16]

@@ -38,6 +38,7 @@ impl Depth {
 }
 
 /// One conv + BN unit's parameters.
+#[derive(Clone)]
 struct ConvBn {
     w: Tensor,
     gamma: Tensor,
@@ -45,6 +46,7 @@ struct ConvBn {
 }
 
 /// A ResNet with named parameters (mirrors the manifest naming).
+#[derive(Clone)]
 pub struct CpuResnet {
     pub depth: Depth,
     pub width: usize,

@@ -48,22 +48,49 @@ impl RunLog {
     }
 }
 
+/// Index of the **first maximum** of a row, NaN-tolerant.
+///
+/// * Ties keep the *first* maximal index — TF/NumPy `argmax` semantics
+///   (the previous `max_by(partial_cmp)` scans kept the *last*).
+/// * NaN entries are never selected and never panic — the previous
+///   `partial_cmp().unwrap()` crashed the whole evaluation when a
+///   diverged approximate-multiplier run produced a NaN logit; scoring
+///   policy is "a NaN logit can't win", so a partially-NaN row is scored
+///   against its finite entries and an all-NaN row deterministically
+///   returns 0 (counted wrong unless the label happens to be 0 — a
+///   diverged run scores ~chance instead of aborting).
+///
+/// The shared helper for every argmax over logits/probabilities in the
+/// crate; `row` must be non-empty.
+pub fn argmax(row: &[f32]) -> usize {
+    assert!(!row.is_empty(), "argmax of an empty row");
+    let mut best = f32::NEG_INFINITY;
+    let mut best_idx = 0usize;
+    let mut found = false;
+    for (i, &v) in row.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        if !found || v > best {
+            best = v;
+            best_idx = i;
+            found = true;
+        }
+    }
+    best_idx
+}
+
 /// Count of correctly-classified rows (argmax == label) from logits
 /// (row-major `[batch, classes]`). The count form lets callers weight
 /// accuracy per *sample* across unevenly-filled batches — a per-batch
-/// average of rates would overweight a padded final batch.
+/// average of rates would overweight a padded final batch. NaN-safe via
+/// [`argmax`]: rows with NaN logits score wrong (usually), never panic.
 pub fn correct_from_logits(logits: &[f32], labels: &[u32], classes: usize) -> usize {
     assert_eq!(logits.len(), labels.len() * classes);
     let mut correct = 0usize;
     for (i, &label) in labels.iter().enumerate() {
         let row = &logits[i * classes..(i + 1) * classes];
-        let argmax = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        if argmax == label as usize {
+        if argmax(row) == label as usize {
             correct += 1;
         }
     }
@@ -84,6 +111,33 @@ mod tests {
         let logits = [1.0, 0.0, 0.0, 9.0];
         assert_eq!(accuracy_from_logits(&logits, &[0, 1], 2), 1.0);
         assert_eq!(accuracy_from_logits(&logits, &[1, 0], 2), 0.0);
+    }
+
+    #[test]
+    fn argmax_first_max_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1, "ties keep the first max (TF semantics)");
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[2.0, 2.0, 2.0]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]), 0);
+    }
+
+    #[test]
+    fn argmax_tolerates_nan() {
+        // NaN never wins, never panics
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        // all-NaN row: deterministic index 0
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+    }
+
+    #[test]
+    fn nan_rows_score_wrong_instead_of_crashing() {
+        // row 0 diverged to NaN (argmax -> 0, label 1: wrong); row 1 fine
+        let logits = [f32::NAN, f32::NAN, 0.0, 9.0];
+        assert_eq!(correct_from_logits(&logits, &[1, 1], 2), 1);
+        // a NaN row whose argmax(0) happens to equal the label counts —
+        // the policy is deterministic scoring, not guaranteed-wrong
+        assert_eq!(correct_from_logits(&logits, &[0, 1], 2), 2);
     }
 
     #[test]

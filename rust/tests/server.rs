@@ -1,0 +1,314 @@
+//! Integration suite for the multi-lane batching inference server.
+//!
+//! Pins the serving-layer contracts that back the `bench-serve` record:
+//!
+//! * **N-lane ≡ 1-lane**: replies are bit-identical whichever lane count
+//!   (and whichever batching schedule the race produces) served them,
+//!   for all three `MulKernel` strategies.
+//! * **Partial-batch padding**: a partially-filled batch is padded by
+//!   cycling its real request images, so its replies are bit-identical
+//!   to the same images served in a full batch of themselves — and zero
+//!   padding provably would NOT be (batch-statistics batchnorm).
+//! * **Bounded admission**: overload yields typed
+//!   [`InferError::Rejected`] replies, never unbounded queue growth.
+//! * **Merged stats**: per-lane stats aggregate with exact streaming
+//!   sums (requests/batches/fill) and a seen-consistent reservoir.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use approxtrain::coordinator::backend::{CpuBackend, InferBackend, MulSpec};
+use approxtrain::coordinator::server::{
+    serve_on_caller, serve_pool, InferError, Reply, ServeConfig, Stats,
+};
+use approxtrain::data::synth::{mnist_like, SynthSpec};
+use approxtrain::util::rng::Pcg32;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Serve `images` through `lanes` lane replicas of `base` with a
+/// closed-loop `clients`-thread load; returns merged stats + replies by
+/// request index. Every request must be accepted.
+fn run_server(
+    base: &CpuBackend,
+    lanes: usize,
+    cfg: ServeConfig,
+    images: &[Vec<f32>],
+    clients: usize,
+) -> (Stats, BTreeMap<usize, Reply>) {
+    let mut backends = base.replicas(lanes);
+    let n = images.len();
+    let (stats, replies) = serve_pool(&mut backends, cfg, |client| {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|t| {
+                    let client = client.clone();
+                    s.spawn(move || {
+                        let mut out = Vec::new();
+                        let mut i = t;
+                        while i < n {
+                            out.push((i, client.infer(images[i].clone()).expect("infer")));
+                            i += clients;
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("client thread panicked"))
+                .collect::<Vec<(usize, Reply)>>()
+        })
+    })
+    .expect("serve_pool");
+    (stats, replies.into_iter().collect())
+}
+
+/// Multi-lane replies must be bit-identical to the single-lane reference
+/// for every simulation strategy, regardless of how requests raced into
+/// batches; and the merged aggregate stats must keep their exact-sum
+/// invariants.
+#[test]
+fn multi_lane_bit_identical_to_single_lane_every_kernel() {
+    // kept small: the direct:<mult> strategy pays a functional-model
+    // call per multiply and this suite also runs in debug builds
+    let n = 8usize;
+    let ds = mnist_like(&SynthSpec { n, seed: 31, ..SynthSpec::mnist_like_default() });
+    let images: Vec<Vec<f32>> = (0..n).map(|i| ds.image(i).to_vec()).collect();
+    let cfg = ServeConfig { max_wait: Duration::from_millis(2), queue_depth: 64 };
+    for mode in ["native", "direct:afm16", "lut:afm16"] {
+        let base =
+            CpuBackend::for_model("lenet300", MulSpec::parse(mode).unwrap(), 4, 3).unwrap();
+        let (s1, r1) = run_server(&base, 1, cfg, &images, 3);
+        let (s4, r4) = run_server(&base, 4, cfg, &images, 3);
+        assert_eq!(s1.requests, n, "{mode}: single lane answered everything");
+        assert_eq!(s4.requests, n, "{mode}: four lanes answered everything");
+        for i in 0..n {
+            assert_eq!(
+                bits(&r1[&i].logits),
+                bits(&r4[&i].logits),
+                "{mode}: request {i} diverged between 1-lane and 4-lane serving"
+            );
+        }
+
+        // merged-stats invariants: every request in exactly one batch,
+        // streaming sums exact, reservoir seen count consistent
+        for (label, s) in [("1-lane", &s1), ("4-lane", &s4)] {
+            assert_eq!(s.rejected, 0, "{mode} {label}");
+            assert!(s.batches >= 1 && s.batches <= n, "{mode} {label}: batches {}", s.batches);
+            let fill_sum = s.mean_fill() * s.batches as f64;
+            assert!(
+                (fill_sum - n as f64).abs() < 1e-9,
+                "{mode} {label}: fills sum to {fill_sum}, want {n}"
+            );
+            assert_eq!(s.latencies.seen(), n as u64, "{mode} {label}");
+            assert!(s.max_latency_s() >= s.mean_latency_s(), "{mode} {label}");
+        }
+    }
+
+    // the caller-thread single-lane driver (the engine-backend shape)
+    // produces the same bits as a serve_pool lane
+    let base = CpuBackend::for_model("lenet300", MulSpec::Native, 4, 3).unwrap();
+    let (_, r_pool) = run_server(&base, 1, cfg, &images, 3);
+    let mut caller_backend = base.replicas(1).pop().unwrap();
+    let images_ref = &images;
+    let (s_caller, replies) = serve_on_caller(&mut caller_backend, cfg, |client| {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..3)
+                .map(|t| {
+                    let client = client.clone();
+                    s.spawn(move || {
+                        let mut out = Vec::new();
+                        let mut i = t;
+                        while i < images_ref.len() {
+                            out.push((i, client.infer(images_ref[i].clone()).expect("infer")));
+                            i += 3;
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("client thread panicked"))
+                .collect::<Vec<(usize, Reply)>>()
+        })
+    })
+    .expect("serve_on_caller");
+    assert_eq!(s_caller.requests, n);
+    for (i, reply) in replies {
+        assert_eq!(bits(&r_pool[&i].logits), bits(&reply.logits), "caller-thread lane, req {i}");
+    }
+}
+
+/// The partial-batch padding regression (the headline bugfix): a batch
+/// that fills `k < batch` slots must reply with exactly the bits the
+/// same images produce in a full batch of themselves (cycled) — and a
+/// zero-row pad demonstrably corrupts those bits through the
+/// batch-statistics batchnorm, which is why the policy exists.
+#[test]
+fn partial_batch_padding_matches_full_batch_of_cycled_images() {
+    // resnet18 normalizes with batch statistics: padding rows influence
+    // every real row, so this model detects any padding-policy change
+    let base = CpuBackend::for_model("resnet18", MulSpec::Native, 4, 9).unwrap();
+    let sz = base.image_elems();
+    let classes = base.classes();
+    let mut rng = Pcg32::seeded(77);
+    let imgs: Vec<Vec<f32>> =
+        (0..2).map(|_| (0..sz).map(|_| rng.uniform()).collect()).collect();
+
+    // serve exactly 2 requests into one batch of 4: submit in a fixed
+    // order (staggered well inside the batching window) so the batch
+    // composition is deterministic
+    let cfg = ServeConfig { max_wait: Duration::from_millis(400), queue_depth: 8 };
+    let mut backends = base.replicas(1);
+    let imgs_ref = &imgs;
+    let (stats, replies) = serve_pool(&mut backends, cfg, |client| {
+        std::thread::scope(|s| {
+            let c0 = client.clone();
+            let first = s.spawn(move || c0.infer(imgs_ref[0].clone()).expect("infer 0"));
+            std::thread::sleep(Duration::from_millis(40));
+            let c1 = client.clone();
+            let second = s.spawn(move || c1.infer(imgs_ref[1].clone()).expect("infer 1"));
+            (first.join().unwrap(), second.join().unwrap())
+        })
+    })
+    .expect("serve_pool");
+    let (r0, r1) = replies;
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.batches, 1, "both requests must share one partial batch");
+    assert_eq!(r0.batch_fill, 2);
+    assert_eq!(r1.batch_fill, 2);
+
+    // reference: the same two images as a full batch of themselves,
+    // cycled [i0, i1, i0, i1] — the lane's padding policy
+    let mut reference = base.replicas(1).pop().unwrap();
+    let mut full = Vec::with_capacity(4 * sz);
+    for k in 0..4 {
+        full.extend_from_slice(&imgs[k % 2]);
+    }
+    let want = reference.run_batch(&full).unwrap();
+    assert_eq!(bits(&r0.logits), bits(&want[..classes]), "row 0: padding must cycle real images");
+    assert_eq!(
+        bits(&r1.logits),
+        bits(&want[classes..2 * classes]),
+        "row 1: padding must cycle real images"
+    );
+
+    // teeth: the old zero-row padding produces DIFFERENT bits for the
+    // real rows — the bug this regression test guards against
+    let mut zeroed = Vec::with_capacity(4 * sz);
+    for img in &imgs {
+        zeroed.extend_from_slice(img);
+    }
+    zeroed.resize(4 * sz, 0.0);
+    let corrupted = reference.run_batch(&zeroed).unwrap();
+    assert_ne!(
+        bits(&corrupted[..2 * classes]),
+        bits(&want[..2 * classes]),
+        "zero-row padding must actually perturb batch-stats batchnorm, \
+         else this regression test has no teeth"
+    );
+}
+
+/// A gated backend for overload tests: batch 1, identity logits. It
+/// signals `entered` when a batch starts and then blocks until the
+/// test's gate sender is dropped — no sleeps, no scheduling races.
+struct GatedBackend {
+    entered: std::sync::mpsc::Sender<()>,
+    gate: std::sync::mpsc::Receiver<()>,
+}
+
+impl InferBackend for GatedBackend {
+    fn batch(&self) -> usize {
+        1
+    }
+    fn image_elems(&self) -> usize {
+        1
+    }
+    fn classes(&self) -> usize {
+        1
+    }
+    fn describe(&self) -> String {
+        "test:gated".into()
+    }
+    fn run_batch(&mut self, images: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let _ = self.entered.send(());
+        let _ = self.gate.recv(); // released when the test drops the sender
+        Ok(images.to_vec())
+    }
+}
+
+/// Overload against the bounded admission queue: with the single lane
+/// provably busy (blocked inside `run_batch`) and the queue empty,
+/// exactly `depth` further submissions are admitted and the rest get the
+/// typed `Rejected` reply carrying the configured depth. Fully
+/// deterministic: admission is probed sequentially via `Client::submit`
+/// while the backend is gated on a channel.
+#[test]
+fn bounded_queue_rejects_overload_with_typed_reply() {
+    use std::sync::mpsc;
+
+    let depth = 2usize;
+    let flood = 6usize;
+    let cfg = ServeConfig { max_wait: Duration::from_millis(1), queue_depth: depth };
+    let (entered_tx, entered_rx) = mpsc::channel();
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let mut backends = vec![GatedBackend { entered: entered_tx, gate: gate_rx }];
+    let (stats, (accepted, rejected)) = serve_pool(&mut backends, cfg, move |client| {
+        // request 0 occupies the lane; wait until the backend has
+        // actually started on it (queue is empty again from here on)
+        let pending0 = client.submit(vec![0.5]).expect("first submit admitted");
+        entered_rx.recv().expect("lane entered run_batch");
+        // sequential flood while the lane is blocked: the first `depth`
+        // submissions are admitted, the rest rejected — typed,
+        // immediate, no unbounded growth
+        let mut pendings = Vec::new();
+        let mut rejected = 0usize;
+        for k in 0..flood {
+            match client.submit(vec![k as f32]) {
+                Ok(p) => pendings.push(p),
+                Err(InferError::Rejected { queue_depth }) => {
+                    assert_eq!(queue_depth, depth, "reject reports the configured depth");
+                    rejected += 1;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        // open the gate for this and every later batch
+        drop(gate_tx);
+        let r0 = pending0.wait().expect("first reply");
+        assert_eq!(r0.logits, vec![0.5]);
+        let accepted = pendings.len();
+        for p in pendings {
+            assert_eq!(p.wait().expect("admitted reply").logits.len(), 1);
+        }
+        (accepted, rejected)
+    })
+    .expect("serve_pool");
+
+    assert_eq!(accepted, depth, "exactly the queue depth is admitted while the lane is busy");
+    assert_eq!(rejected, flood - depth);
+    assert_eq!(stats.requests, 1 + depth, "first request + admitted flood all get replies");
+    assert_eq!(stats.rejected, (flood - depth) as u64);
+    let offered = (1 + flood) as f64;
+    assert!((stats.reject_rate() - (flood - depth) as f64 / offered).abs() < 1e-12);
+}
+
+/// Lanes answer *every* admitted request exactly once even when the
+/// load finishes before the queue drains (shutdown drains, never drops).
+#[test]
+fn shutdown_drains_admitted_requests() {
+    let base = CpuBackend::for_model("lenet300", MulSpec::Native, 4, 5).unwrap();
+    let ds = mnist_like(&SynthSpec { n: 9, seed: 8, ..SynthSpec::mnist_like_default() });
+    let images: Vec<Vec<f32>> = (0..9).map(|i| ds.image(i).to_vec()).collect();
+    // tiny wait: lots of partial batches + a queue that outlives load
+    let cfg = ServeConfig { max_wait: Duration::from_micros(100), queue_depth: 64 };
+    let (stats, replies) = run_server(&base, 2, cfg, &images, 9);
+    assert_eq!(stats.requests, 9);
+    assert_eq!(replies.len(), 9, "every admitted request answered exactly once");
+    let fill_sum = stats.mean_fill() * stats.batches as f64;
+    assert!((fill_sum - 9.0).abs() < 1e-9);
+}

@@ -135,13 +135,15 @@ fn evaluate_covers_partial_batches_and_errors_only_when_empty() {
     assert!(err.to_string().contains("empty"), "{err}");
 }
 
-/// The batching server answers every request exactly once with sane logits.
+/// The batching server answers every request exactly once with sane
+/// logits through the engine (compiled-artifact) backend, served from
+/// the caller's thread (the PJRT client is not `Send`).
 #[test]
 fn server_round_trip() {
-    use approxtrain::coordinator::server::with_server;
+    use approxtrain::coordinator::backend::{EngineBackend, InferBackend};
+    use approxtrain::coordinator::server::{serve_on_caller, ServeConfig};
     use approxtrain::lut::MantissaLut;
     use approxtrain::nn::init::init_params;
-    use approxtrain::runtime::artifact::Role;
     use approxtrain::util::json::Json;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::time::Duration;
@@ -149,44 +151,34 @@ fn server_round_trip() {
     let Some(dir) = artifacts_dir() else { return };
     let mut engine = Engine::new(&dir).unwrap();
     let art = engine.manifest().find("lenet300", "fwd", "lut").unwrap().clone();
-    engine.prepare(&art.name).unwrap();
     let raw = Json::parse(&std::fs::read_to_string(dir.join("manifest.json")).unwrap()).unwrap();
     let params = init_params(&art, 1, &raw).unwrap();
     let lut = MantissaLut::load(&dir.join("luts/afm16.lut")).unwrap();
-    let x_spec = &art.inputs[art.input_indices(Role::Input)[0]];
-    let batch = x_spec.shape[0];
-    let image_elems = x_spec.elements() / batch;
-    let classes = art.outputs[0].shape[1];
+    let mut backend = EngineBackend::new(engine, &art.name, params, Some(lut.entries)).unwrap();
+    let image_elems = backend.image_elems();
+    let classes = backend.classes();
     let answered = AtomicUsize::new(0);
     let n_requests = 10;
-    let stats = with_server(
-        engine,
-        &art.name.clone(),
-        params,
-        Some(lut.entries),
-        batch,
-        image_elems,
-        classes,
-        Duration::from_millis(2),
-        |client| {
-            std::thread::scope(|s| {
-                for _ in 0..2 {
-                    let client = client.clone();
-                    let answered = &answered;
-                    s.spawn(move || {
-                        for _ in 0..n_requests / 2 {
-                            let reply = client.infer(vec![0.5; image_elems]).unwrap();
-                            assert_eq!(reply.logits.len(), classes);
-                            assert!(reply.logits.iter().all(|v| v.is_finite()));
-                            answered.fetch_add(1, Ordering::SeqCst);
-                        }
-                    });
-                }
-            });
-        },
-    )
+    let cfg = ServeConfig { max_wait: Duration::from_millis(2), queue_depth: 32 };
+    let (stats, ()) = serve_on_caller(&mut backend, cfg, |client| {
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let client = client.clone();
+                let answered = &answered;
+                s.spawn(move || {
+                    for _ in 0..n_requests / 2 {
+                        let reply = client.infer(vec![0.5; image_elems]).unwrap();
+                        assert_eq!(reply.logits.len(), classes);
+                        assert!(reply.logits.iter().all(|v| v.is_finite()));
+                        answered.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+    })
     .unwrap();
     assert_eq!(answered.load(Ordering::SeqCst), n_requests);
     assert_eq!(stats.requests, n_requests);
     assert!(stats.batches <= n_requests);
+    assert_eq!(stats.rejected, 0);
 }
