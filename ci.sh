@@ -43,24 +43,29 @@ step "cargo test --release -q (full suite incl. integration, release mode)"
 # speed; running them optimized also exercises the code the benches ship
 cargo test --release -q || fail=1
 
-step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel edges + serving"
+step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel edges + serving + data-parallel"
 # already part of the full release suite above, but pinned here explicitly
 # so the implicit-conv acceptance sweep, the MRxNR micro-kernel residue
-# sweep, and the serving-layer gates (multi-lane ≡ single-lane replies,
-# partial-batch cycle-padding, bounded-queue rejection) can never
-# silently drop out of the release-mode pass
+# sweep, the serving-layer gates (multi-lane ≡ single-lane replies,
+# partial-batch cycle-padding, bounded-queue rejection), and the
+# data-parallel determinism gates (N-worker loss curves ≡ 1-worker,
+# sharded-checkpoint resume, aligned grad accumulation, fail-stop on
+# replica panic) can never silently drop out of the release-mode pass
 cargo test --release -q --test conv_grads --test batched_vs_scalar --test microtile \
-    --test server || fail=1
+    --test server --test data_parallel || fail=1
 
 step "bench smoke (tiny sizes; does not touch the committed BENCH records)"
 # the gemm smoke rows include the micro-kernel tiled path (and its mr1nr1
 # per-element-drain ablation row), each behind the bench's own
 # bit-exactness gate against the scalar oracle; the serve smoke sweeps
 # lanes x load with every accepted reply gated against the single-lane
-# reference forward
+# reference forward; the train smoke sweeps workers x strategy with every
+# multi-worker run gated bit-identical (loss curve + final params) to its
+# 1-worker twin
 cargo bench --bench paper_benches -- gemm --smoke || fail=1
 cargo bench --bench paper_benches -- conv --smoke || fail=1
 cargo bench --bench paper_benches -- serve --smoke || fail=1
+cargo bench --bench paper_benches -- train --smoke || fail=1
 
 echo
 if [ "$fail" -ne 0 ]; then

@@ -9,6 +9,7 @@
 //! cargo bench -- gemm --smoke # tiny CI smoke sizes (results/ only)
 //! cargo bench -- conv         # implicit vs materialized conv -> results/BENCH_conv.json
 //! cargo bench -- serve        # multi-lane serving sweep -> results/BENCH_serve.json
+//! cargo bench -- train        # data-parallel training sweep -> results/BENCH_train.json
 //! cargo bench -- fig6         # one experiment
 //! cargo bench -- all --full   # full (slow) settings
 //! ```
@@ -71,8 +72,19 @@ fn main() -> anyhow::Result<()> {
         out.push_str(&exp::bench_serve(results, quick || smoke, record_root)?);
     }
 
+    if wants("train") {
+        // Deterministic data-parallel training sweep (workers x strategy
+        // x model) over the pure-Rust executors; every multi-worker run
+        // bit-exactness-gated (loss curve + final params) against its
+        // 1-worker twin. Same root-record policy as `gemm`.
+        let record_root = which == "train" && !smoke && !quick;
+        out.push_str(&exp::bench_train(results, quick || smoke, record_root)?);
+    }
+
     if !artifacts.join("manifest.json").exists() {
-        println!("artifacts/ not built — only fig1/gemm/conv/serve available. Run `make artifacts`.");
+        println!(
+            "artifacts/ not built — only fig1/gemm/conv/serve/train available. Run `make artifacts`."
+        );
         print!("{out}");
         approxtrain::coordinator::report::write_result(results, "bench_report.md", &out)?;
         return Ok(());

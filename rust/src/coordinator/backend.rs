@@ -132,12 +132,117 @@ impl Clone for MulSpec {
 // CpuBackend — pure-Rust executor backend (ATxC path, replicable lanes)
 // ---------------------------------------------------------------------------
 
-/// The model a [`CpuBackend`] replica executes.
+/// The model a [`CpuBackend`] serving replica or a
+/// [`super::data_parallel::DpTrainer`] training replica executes.
 #[derive(Clone)]
 pub enum CpuModel {
     Lenet300(Lenet300),
     Lenet5(Lenet5),
     Resnet(CpuResnet),
+}
+
+impl CpuModel {
+    /// Build a pure-Rust model by name (`lenet300` | `lenet5` |
+    /// `resnet18` | `resnet34` | `resnet50`), freshly initialized from
+    /// `seed` — deterministic, so two models built with the same
+    /// arguments hold bit-identical weights. The resnets are the
+    /// CIFAR-shaped width-scaled variants used by the experiment
+    /// harness's quick paths.
+    pub fn for_name(model: &str, seed: u64) -> Result<CpuModel> {
+        Ok(match model {
+            "lenet300" => CpuModel::Lenet300(Lenet300::init(28 * 28, 10, seed)),
+            "lenet5" => CpuModel::Lenet5(Lenet5::init(seed)),
+            "resnet18" | "resnet34" | "resnet50" => {
+                let depth = match model {
+                    "resnet18" => Depth::R18,
+                    "resnet34" => Depth::R34,
+                    _ => Depth::R50,
+                };
+                CpuModel::Resnet(CpuResnet::init(depth, (16, 16, 3), 10, 8, seed))
+            }
+            other => bail!("no CPU executor for model {other:?}"),
+        })
+    }
+
+    /// Per-sample input shape (no batch dim), NHWC for the image models.
+    pub fn input_dims(&self) -> Vec<usize> {
+        match self {
+            CpuModel::Lenet300(net) => vec![net.w1.shape[0]],
+            CpuModel::Lenet5(_) => vec![28, 28, 1],
+            CpuModel::Resnet(net) => vec![net.input.0, net.input.1, net.input.2],
+        }
+    }
+
+    /// Logit columns.
+    pub fn classes(&self) -> usize {
+        match self {
+            CpuModel::Lenet300(net) => net.w3.shape[1],
+            CpuModel::Lenet5(net) => net.w3.shape[1],
+            CpuModel::Resnet(net) => net.classes,
+        }
+    }
+
+    /// Forward pass; `x` carries the leading batch dim.
+    pub fn forward(&self, mul: &MulKernel, x: &Tensor) -> Tensor {
+        match self {
+            CpuModel::Lenet300(net) => net.forward(mul, x),
+            CpuModel::Lenet5(net) => net.forward(mul, x),
+            CpuModel::Resnet(net) => net.forward(mul, x),
+        }
+    }
+
+    /// Total parameter elements in the model's canonical flat layout.
+    pub fn param_count(&self) -> usize {
+        match self {
+            CpuModel::Lenet300(net) => net.param_count(),
+            CpuModel::Lenet5(net) => net.param_count(),
+            CpuModel::Resnet(net) => net.param_count(),
+        }
+    }
+
+    /// Snapshot every parameter into one flat vector (canonical layout).
+    pub fn flat_params(&self) -> Vec<f32> {
+        match self {
+            CpuModel::Lenet300(net) => net.flat_params(),
+            CpuModel::Lenet5(net) => net.flat_params(),
+            CpuModel::Resnet(net) => net.flat_params(),
+        }
+    }
+
+    /// Overwrite every parameter from a flat vector (canonical layout).
+    pub fn load_flat(&mut self, flat: &[f32]) {
+        match self {
+            CpuModel::Lenet300(net) => net.load_flat(flat),
+            CpuModel::Lenet5(net) => net.load_flat(flat),
+            CpuModel::Resnet(net) => net.load_flat(flat),
+        }
+    }
+
+    /// Compute-only training step (`&self`, parameters untouched): loss
+    /// sum, correct count, flat gradient with the loss gradient scaled by
+    /// `1/divisor` (pass the effective batch size).
+    pub fn grad_step(
+        &self,
+        mul: &MulKernel,
+        x: &Tensor,
+        labels: &[u32],
+        divisor: usize,
+    ) -> (f32, usize, Vec<f32>) {
+        match self {
+            CpuModel::Lenet300(net) => net.grad_step(mul, x, labels, divisor),
+            CpuModel::Lenet5(net) => net.grad_step(mul, x, labels, divisor),
+            CpuModel::Resnet(net) => net.grad_step(mul, x, labels, divisor),
+        }
+    }
+
+    /// Plain SGD over a flat gradient: `p -= lr * g` per element.
+    pub fn apply_grads(&mut self, flat: &[f32], lr: f32) {
+        match self {
+            CpuModel::Lenet300(net) => net.apply_grads(flat, lr),
+            CpuModel::Lenet5(net) => net.apply_grads(flat, lr),
+            CpuModel::Resnet(net) => net.apply_grads(flat, lr),
+        }
+    }
 }
 
 /// Pure-Rust inference backend: an owned model + an owned [`MulSpec`].
@@ -162,25 +267,11 @@ impl CpuBackend {
     /// arguments hold bit-identical weights.
     pub fn for_model(model: &str, mul: MulSpec, batch: usize, seed: u64) -> Result<CpuBackend> {
         assert!(batch > 0, "batch must be positive");
-        let (m, input_shape, classes) = match model {
-            "lenet300" => {
-                (CpuModel::Lenet300(Lenet300::init(28 * 28, 10, seed)), vec![batch, 28 * 28], 10)
-            }
-            "lenet5" => (CpuModel::Lenet5(Lenet5::init(seed)), vec![batch, 28, 28, 1], 10),
-            "resnet18" | "resnet34" | "resnet50" => {
-                let depth = match model {
-                    "resnet18" => Depth::R18,
-                    "resnet34" => Depth::R34,
-                    _ => Depth::R50,
-                };
-                // CIFAR-shaped input, width scaled down as in the
-                // experiment harness's quick paths
-                let net = CpuResnet::init(depth, (16, 16, 3), 10, 8, seed);
-                (CpuModel::Resnet(net), vec![batch, 16, 16, 3], 10)
-            }
-            other => bail!("no CPU executor for model {other:?}"),
-        };
+        let m = CpuModel::for_name(model, seed)?;
+        let mut input_shape = vec![batch];
+        input_shape.extend(m.input_dims());
         let image_elems = input_shape.iter().skip(1).product();
+        let classes = m.classes();
         Ok(CpuBackend {
             model: m,
             mul,
@@ -240,12 +331,7 @@ impl InferBackend for CpuBackend {
             );
         }
         let x = Tensor::from_vec(&self.input_shape, images.to_vec());
-        let mul = self.mul.kernel();
-        let logits = match &self.model {
-            CpuModel::Lenet300(net) => net.forward(&mul, &x),
-            CpuModel::Lenet5(net) => net.forward(&mul, &x),
-            CpuModel::Resnet(net) => net.forward(&mul, &x),
-        };
+        let logits = self.model.forward(&self.mul.kernel(), &x);
         debug_assert_eq!(logits.data.len(), self.batch * self.classes);
         Ok(logits.data)
     }

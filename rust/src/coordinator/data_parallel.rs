@@ -1,0 +1,703 @@
+//! Data-parallel deterministic training over the pure-Rust executors.
+//!
+//! The paper's headline evaluations (§VI) train LeNets/ResNets with
+//! approximate multipliers at scales that are only tractable multi-worker,
+//! and simulated-multiplier studies need *repeatable* loss curves so an
+//! accuracy delta can be attributed to the multiplier rather than to
+//! nondeterminism. This module applies the crate-wide accumulation
+//! contract (one running FP32 accumulator, fixed order — the trick that
+//! made the threaded GEMM bit-identical to the scalar oracle) one level
+//! up, to gradient reduction, so the *entire loss curve* is bit-identical
+//! for any worker count, for native, direct, and LUT multipliers alike.
+//!
+//! ## Why it is deterministic
+//!
+//! FP32 addition does not associate, so any scheme whose reduction order
+//! depends on how many workers ran (or which worker finished first) will
+//! drift between worker counts. Three decisions remove every such
+//! dependence:
+//!
+//! 1. **The numerical decomposition is fixed by the shard size, not the
+//!    worker count.** [`shard_ranges`] cuts a minibatch into "leaves" of
+//!    `DpConfig::shard` samples (ragged last leaf). Each leaf's gradient
+//!    is a pure function of (parameters, leaf samples) — computed by the
+//!    models' `grad_step(&self, ..)` with the loss gradient pre-scaled by
+//!    the *effective* batch size. Workers merely claim leaves
+//!    ([`worker_shares`]); N changes who computes a leaf, never what is
+//!    computed.
+//! 2. **Leaf gradients meet in a fixed-order binary tree.**
+//!    [`tree_reduce`] folds gap-doubling over the leaf list
+//!    (`leaves[i] += leaves[i+gap]`, gap = 1, 2, 4, …): the tree's shape
+//!    is a function of the leaf *index* only. The fold is parallelized
+//!    over disjoint **element ranges** — every element's additions happen
+//!    in tree order inside one thread — so thread count never touches the
+//!    bits, only the wall clock.
+//! 3. **Metrics reduce exactly.** Leaf losses are kept as FP32 *sums*
+//!    (reduced through the same tree, divided once at the end) and
+//!    accuracies as integer correct-counts, so the reported curve carries
+//!    no per-shard averaging error.
+//!
+//! Gradient accumulation rides the same machinery: `k` micro-batches are
+//! cut into one concatenated leaf list and reduced through one tree, so
+//! when leaf boundaries align (`shard` divides the micro-batch size) the
+//! accumulated step is **bitwise equal** to the monolithic large-batch
+//! step for the batchnorm-free models. `CpuResnet` normalizes over each
+//! `grad_step` call's rows (shard-local batch statistics), so its
+//! *decomposition* is part of its numerics: different shard sizes are
+//! legitimately different BN models — but any fixed decomposition is
+//! still bit-identical across worker counts, which is the invariant this
+//! module guarantees. The `rust/tests/data_parallel.rs` suite enforces
+//! all of it.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::backend::{CpuModel, MulSpec};
+use crate::data::{Batcher, Dataset, EvalBatcher};
+use crate::nn::checkpoint::Checkpoint;
+use crate::nn::metrics::correct_from_logits;
+use crate::tensor::Tensor;
+use crate::util::threads;
+
+// ---------------------------------------------------------------------------
+// Reduction primitives (pure, unit-testable)
+// ---------------------------------------------------------------------------
+
+/// Cut `n` samples into fixed-size leaves: `[0, shard)`, `[shard, 2*shard)`,
+/// …, with a ragged final leaf. The decomposition depends only on `(n,
+/// shard)` — never on worker count — which is what pins the bits of the
+/// whole data-parallel step. `shard` is clamped to at least 1.
+pub fn shard_ranges(n: usize, shard: usize) -> Vec<(usize, usize)> {
+    let shard = shard.max(1);
+    let mut out = Vec::with_capacity(n.div_ceil(shard));
+    let mut s = 0;
+    while s < n {
+        let e = (s + shard).min(n);
+        out.push((s, e));
+        s = e;
+    }
+    out
+}
+
+/// Split `tasks` leaf indices into at most `workers` contiguous non-empty
+/// shares, share `w` = `[start, end)`. Balanced like the pool's chunking:
+/// `ceil(tasks/workers)` leaves per share. Degenerate cases fold away
+/// cleanly: more workers than leaves yields one share per leaf (extra
+/// workers idle), one worker yields a single share holding every leaf.
+pub fn worker_shares(tasks: usize, workers: usize) -> Vec<(usize, usize)> {
+    if tasks == 0 {
+        return Vec::new();
+    }
+    let per = tasks.div_ceil(workers.max(1));
+    let mut out = Vec::with_capacity(tasks.div_ceil(per));
+    let mut s = 0;
+    while s < tasks {
+        let e = (s + per).min(tasks);
+        out.push((s, e));
+        s = e;
+    }
+    out
+}
+
+/// Fixed-order binary tree sum over equal-length leaf vectors, in place;
+/// returns what was `leaves[0]` holding the reduction. Gap-doubling:
+/// round `g` folds `leaves[i] += leaves[i+g]` for `i = 0, 2g, 4g, …` —
+/// the tree shape is a function of the leaf index only. One running FP32
+/// accumulator per element; parallelism (up to `workers` lanes on the
+/// global pool) is over disjoint *element ranges*, so every element sees
+/// its additions in tree order regardless of thread count or schedule.
+pub fn tree_reduce(mut leaves: Vec<Vec<f32>>, workers: usize) -> Vec<f32> {
+    let count = leaves.len();
+    assert!(count > 0, "tree_reduce needs at least one leaf");
+    let n = leaves[0].len();
+    assert!(leaves.iter().all(|l| l.len() == n), "tree_reduce leaf length mismatch");
+    if count > 1 && n > 0 {
+        let ptrs: Vec<threads::SendMutPtr> =
+            leaves.iter_mut().map(|l| threads::SendMutPtr(l.as_mut_ptr())).collect();
+        let ptrs = &ptrs;
+        threads::parallel_ranges(n, workers.max(1), |_, s, e| {
+            let mut gap = 1;
+            while gap < count {
+                let mut i = 0;
+                while i + gap < count {
+                    // SAFETY: distinct leaves (dst != src) and disjoint
+                    // element ranges per chunk; the Vecs outlive the call.
+                    unsafe {
+                        let (dst, src) = (ptrs[i].0, ptrs[i + gap].0);
+                        for k in s..e {
+                            *dst.add(k) += *src.add(k);
+                        }
+                    }
+                    i += 2 * gap;
+                }
+                gap *= 2;
+            }
+        });
+    }
+    leaves.swap_remove(0)
+}
+
+/// Scalar twin of [`tree_reduce`] (used for per-leaf loss sums): same
+/// gap-doubling shape, so scalar metrics reduce through the *same* tree
+/// as the gradients.
+pub fn tree_reduce_scalar(vals: &[f32]) -> f32 {
+    assert!(!vals.is_empty(), "tree_reduce_scalar needs at least one value");
+    let mut v = vals.to_vec();
+    let count = v.len();
+    let mut gap = 1;
+    while gap < count {
+        let mut i = 0;
+        while i + gap < count {
+            v[i] += v[i + gap];
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+    v[0]
+}
+
+// ---------------------------------------------------------------------------
+// Replicas and the trainer
+// ---------------------------------------------------------------------------
+
+/// One training replica: an owned model + an owned multiplier. All
+/// replicas of a trainer hold bit-identical parameters at every step
+/// boundary (same init, same reduced gradient applied everywhere).
+#[derive(Clone)]
+pub struct TrainReplica {
+    pub model: CpuModel,
+    pub mul: MulSpec,
+}
+
+impl TrainReplica {
+    /// Fresh replica for a model name (`lenet300` | `lenet5` |
+    /// `resnet18|34|50`), deterministically initialized from `seed`.
+    pub fn for_model(model: &str, mul: MulSpec, seed: u64) -> Result<TrainReplica> {
+        Ok(TrainReplica { model: CpuModel::for_name(model, seed)?, mul })
+    }
+
+    /// `n` bit-identical replicas (PR 5's serving-lane idiom). Note
+    /// `MulSpec::clone` resolves `direct:` multipliers through the
+    /// registry — hand-built unregistered multipliers must construct
+    /// each replica explicitly instead.
+    pub fn replicas(&self, n: usize) -> Vec<TrainReplica> {
+        (0..n).map(|_| self.clone()).collect()
+    }
+}
+
+/// Data-parallel training configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct DpConfig {
+    /// Worker lanes (= replicas). Changes throughput only, never bits.
+    pub workers: usize,
+    /// Samples per leaf shard. Part of the numerical decomposition:
+    /// changing it is (for BN models) changing the model, so it is a
+    /// config knob, not a worker-count derivative.
+    pub shard: usize,
+    /// Plain SGD learning rate.
+    pub lr: f32,
+}
+
+/// Per-optimizer-step statistics; `loss`/`acc` are exact functions of the
+/// tree-reduced sums, so the whole curve is bit-comparable across runs.
+#[derive(Clone, Copy, Debug)]
+pub struct DpStepStats {
+    pub loss: f32,
+    pub acc: f32,
+    pub samples: usize,
+    pub leaves: usize,
+}
+
+/// Deterministic data-parallel trainer: N replicas, fixed-shard minibatch
+/// decomposition, fixed-order gradient reduction tree, plain SGD.
+pub struct DpTrainer {
+    replicas: Vec<TrainReplica>,
+    cfg: DpConfig,
+}
+
+impl DpTrainer {
+    /// Build `cfg.workers` bit-identical replicas of `model` initialized
+    /// from `seed`.
+    pub fn new(model: &str, mul: MulSpec, cfg: DpConfig, seed: u64) -> Result<DpTrainer> {
+        let base = TrainReplica::for_model(model, mul, seed)?;
+        Self::from_replicas(base.replicas(cfg.workers.max(1)), cfg)
+    }
+
+    /// Wrap pre-built replicas (tests use this to inject custom
+    /// multipliers or small models). `cfg.workers` must match.
+    pub fn from_replicas(replicas: Vec<TrainReplica>, cfg: DpConfig) -> Result<DpTrainer> {
+        if replicas.is_empty() {
+            bail!("data-parallel trainer needs at least one replica");
+        }
+        if cfg.workers != replicas.len() {
+            bail!("cfg.workers = {} but {} replicas were supplied", cfg.workers, replicas.len());
+        }
+        if cfg.shard == 0 {
+            bail!("cfg.shard must be at least 1 sample per leaf");
+        }
+        if !cfg.lr.is_finite() {
+            bail!("cfg.lr must be finite, got {}", cfg.lr);
+        }
+        let p0 = replicas[0].model.param_count();
+        if replicas.iter().any(|r| r.model.param_count() != p0) {
+            bail!("replicas disagree on parameter count");
+        }
+        Ok(DpTrainer { replicas, cfg })
+    }
+
+    pub fn config(&self) -> DpConfig {
+        self.cfg
+    }
+
+    pub fn workers(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Human-readable identity for logs/records.
+    pub fn describe(&self) -> String {
+        format!(
+            "dp:{}:workers={}:shard={}",
+            self.replicas[0].mul.describe(),
+            self.replicas.len(),
+            self.cfg.shard
+        )
+    }
+
+    /// Flat parameter snapshot (replica 0; all replicas are identical at
+    /// step boundaries).
+    pub fn flat_params(&self) -> Vec<f32> {
+        self.replicas[0].model.flat_params()
+    }
+
+    /// Overwrite every replica's parameters from one flat vector.
+    pub fn load_flat(&mut self, flat: &[f32]) {
+        for r in &mut self.replicas {
+            r.model.load_flat(flat);
+        }
+    }
+
+    /// One optimizer step on one minibatch (`images` row-major
+    /// `[n, ...input dims]`, one label per row).
+    pub fn step(&mut self, images: &[f32], labels: &[u32]) -> Result<DpStepStats> {
+        self.step_accum(&[(images, labels)])
+    }
+
+    /// One optimizer step accumulating `k` micro-batches: every
+    /// micro-batch is cut into leaves, all leaves reduce through one
+    /// fixed-order tree, and SGD applies once with the loss gradient
+    /// scaled by the total sample count. With aligned leaf boundaries
+    /// this is bitwise the monolithic concatenated-batch step (for the
+    /// BN-free models; see the module docs for the resnet caveat).
+    pub fn step_accum(&mut self, micros: &[(&[f32], &[u32])]) -> Result<DpStepStats> {
+        let dims = self.replicas[0].model.input_dims();
+        let elems: usize = dims.iter().product();
+        if micros.is_empty() {
+            bail!("step_accum needs at least one micro-batch");
+        }
+        for (mi, (images, labels)) in micros.iter().enumerate() {
+            if labels.is_empty() {
+                bail!("micro-batch {mi} is empty");
+            }
+            if images.len() != labels.len() * elems {
+                bail!(
+                    "micro-batch {mi}: {} image f32s for {} labels (model takes {} per sample)",
+                    images.len(),
+                    labels.len(),
+                    elems
+                );
+            }
+        }
+        let total: usize = micros.iter().map(|(_, l)| l.len()).sum();
+
+        // fixed decomposition: leaves are (micro index, sample range),
+        // a function of the micro-batch sizes and cfg.shard only
+        let mut leaves: Vec<(usize, usize, usize)> = Vec::new();
+        for (mi, (_, labels)) in micros.iter().enumerate() {
+            for (s, e) in shard_ranges(labels.len(), self.cfg.shard) {
+                leaves.push((mi, s, e));
+            }
+        }
+        let shares = worker_shares(leaves.len(), self.replicas.len());
+
+        // fan-out: each share runs on its own replica; a leaf gradient is
+        // a pure function of (params, leaf), so who runs it is irrelevant
+        let slots: Vec<Mutex<Option<(f32, usize, Vec<f32>)>>> =
+            leaves.iter().map(|_| Mutex::new(None)).collect();
+        let replicas = &self.replicas;
+        let leaves_ref = &leaves;
+        let shares_ref = &shares;
+        let slots_ref = &slots;
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            threads::global().run_tasks(shares_ref.len(), |w| {
+                let rep = &replicas[w];
+                let mul = rep.mul.kernel();
+                let (ls, le) = shares_ref[w];
+                for li in ls..le {
+                    let (mi, s, e) = leaves_ref[li];
+                    let (images, labels) = micros[mi];
+                    let mut shape = vec![e - s];
+                    shape.extend_from_slice(&dims);
+                    let x = Tensor::from_vec(&shape, images[s * elems..e * elems].to_vec());
+                    let out = rep.model.grad_step(&mul, &x, &labels[s..e], total);
+                    *slots_ref[li].lock().unwrap() = Some(out);
+                }
+            });
+        }));
+        if let Err(payload) = run {
+            // fail-stop: no gradient was reduced and no parameter was
+            // touched (grad_step is &self), so the trainer state is
+            // exactly the pre-step state
+            return Err(anyhow!(
+                "data-parallel step failed: a replica panicked mid-step ({}); \
+                 parameters are untouched",
+                panic_msg(&payload)
+            ));
+        }
+
+        // fan-in through the fixed-order tree
+        let mut loss_leaves = Vec::with_capacity(leaves.len());
+        let mut grad_leaves = Vec::with_capacity(leaves.len());
+        let mut correct = 0usize;
+        for slot in slots {
+            let (loss_sum, c, grad) =
+                slot.into_inner().unwrap().expect("every leaf completed without panicking");
+            loss_leaves.push(loss_sum);
+            correct += c;
+            grad_leaves.push(grad);
+        }
+        let leaf_count = grad_leaves.len();
+        let grad = tree_reduce(grad_leaves, self.replicas.len());
+        let loss_sum = tree_reduce_scalar(&loss_leaves);
+
+        // apply the one reduced gradient to every replica (they stay
+        // bit-identical at step boundaries)
+        for r in &mut self.replicas {
+            r.model.apply_grads(&grad, self.cfg.lr);
+        }
+        // same `* (1/b)` head as the models' train_step, so a one-leaf DP
+        // step reports bitwise the same loss/acc as a plain train_step
+        let inv = 1.0 / total as f32;
+        Ok(DpStepStats {
+            loss: loss_sum * inv,
+            acc: correct as f32 * inv,
+            samples: total,
+            leaves: leaf_count,
+        })
+    }
+
+    /// Train `epochs` over `ds` with the deterministic [`Batcher`] stream,
+    /// grouping `accum` consecutive minibatches into one optimizer step.
+    /// Returns one [`DpStepStats`] per optimizer step — the loss curve
+    /// the bit-identity gates compare.
+    pub fn fit(
+        &mut self,
+        ds: &Dataset,
+        epochs: usize,
+        batch: usize,
+        accum: usize,
+        seed: u64,
+    ) -> Result<Vec<DpStepStats>> {
+        let accum = accum.max(1);
+        let mut curve = Vec::new();
+        for epoch in 0..epochs {
+            let batches: Vec<(Vec<f32>, Vec<u32>)> =
+                Batcher::new(ds, batch, seed, epoch as u64).collect();
+            for group in batches.chunks(accum) {
+                let micros: Vec<(&[f32], &[u32])> =
+                    group.iter().map(|(i, l)| (i.as_slice(), l.as_slice())).collect();
+                curve.push(self.step_accum(&micros)?);
+            }
+        }
+        Ok(curve)
+    }
+
+    /// Test-set accuracy of the shared parameters (replica 0 forward over
+    /// an in-order [`EvalBatcher`]; exact integer correct-counts).
+    pub fn evaluate(&self, ds: &Dataset, batch: usize) -> Result<f32> {
+        if ds.n == 0 {
+            bail!("cannot evaluate on an empty dataset");
+        }
+        let rep = &self.replicas[0];
+        let dims = rep.model.input_dims();
+        let elems: usize = dims.iter().product();
+        if ds.image_len() != elems {
+            bail!("dataset rows have {} f32s, model takes {elems}", ds.image_len());
+        }
+        let classes = rep.model.classes();
+        let mul = rep.mul.kernel();
+        let mut correct = 0usize;
+        for (images, labels) in EvalBatcher::new(ds, batch) {
+            let mut shape = vec![batch];
+            shape.extend_from_slice(&dims);
+            let logits = rep.model.forward(&mul, &Tensor::from_vec(&shape, images));
+            correct += correct_from_logits(&logits.data[..labels.len() * classes], labels, classes);
+        }
+        Ok(correct as f32 / ds.n as f32)
+    }
+
+    /// Save the flat parameter vector split across up to `shards`
+    /// checkpoint files (`dp-shard-NNN.ckpt`, each holding one tensor
+    /// named `flat/<offset>`). Shard count is a storage choice only: any
+    /// sharding reassembles to the same vector.
+    pub fn save_sharded(&self, dir: &Path, shards: usize) -> Result<()> {
+        let flat = self.flat_params();
+        let per = flat.len().div_ceil(shards.max(1)).max(1);
+        std::fs::create_dir_all(dir)?;
+        for (i, (s, e)) in shard_ranges(flat.len(), per).into_iter().enumerate() {
+            let mut ckpt = Checkpoint::default();
+            ckpt.insert(&format!("flat/{s}"), &[e - s], flat[s..e].to_vec());
+            ckpt.save(&dir.join(format!("dp-shard-{i:03}.ckpt")))?;
+        }
+        Ok(())
+    }
+
+    /// Load parameters from a sharded checkpoint directory, validating
+    /// that the shards tile the model's flat layout exactly (no gap,
+    /// overlap, or size mismatch passes silently).
+    pub fn load_sharded(&mut self, dir: &Path) -> Result<()> {
+        let total = self.replicas[0].model.param_count();
+        let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+            .map_err(|e| anyhow!("reading checkpoint dir {}: {e}", dir.display()))?
+            .filter_map(|r| r.ok().map(|d| d.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("dp-shard-") && n.ends_with(".ckpt"))
+            })
+            .collect();
+        files.sort();
+        if files.is_empty() {
+            bail!("no dp-shard-*.ckpt files in {}", dir.display());
+        }
+        let mut segments: Vec<(usize, Vec<f32>)> = Vec::new();
+        for path in &files {
+            let ckpt = Checkpoint::load(path)?;
+            for (name, (_, data)) in &ckpt.tensors {
+                let off: usize = name
+                    .strip_prefix("flat/")
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| {
+                        anyhow!("{}: unexpected tensor {name:?} in sharded checkpoint",
+                                path.display())
+                    })?;
+                segments.push((off, data.clone()));
+            }
+        }
+        segments.sort_by_key(|(off, _)| *off);
+        let mut flat = Vec::with_capacity(total);
+        for (off, data) in segments {
+            if off != flat.len() {
+                bail!(
+                    "sharded checkpoint has a gap or overlap at element {off} \
+                     (assembled {} elements so far)",
+                    flat.len()
+                );
+            }
+            flat.extend_from_slice(&data);
+        }
+        if flat.len() != total {
+            bail!("sharded checkpoint holds {} params, model needs {total}", flat.len());
+        }
+        self.load_flat(&flat);
+        Ok(())
+    }
+}
+
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_all;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn shard_partition_assigns_every_sample_exactly_once() {
+        // property: for random (n, shard), the ranges tile [0, n) in
+        // order, every leaf is non-empty and at most `shard` long, and
+        // only the last leaf may be ragged
+        for_all(
+            "shard-partition-tiles",
+            31,
+            300,
+            |r| (1 + r.below(200) as usize, 1 + r.below(40) as usize),
+            |&(n, shard)| {
+                let ranges = shard_ranges(n, shard);
+                let mut expect = 0usize;
+                for (i, &(s, e)) in ranges.iter().enumerate() {
+                    if s != expect {
+                        return Err(format!("leaf {i} starts at {s}, expected {expect}"));
+                    }
+                    if e <= s || e - s > shard {
+                        return Err(format!("leaf {i} = [{s},{e}) is empty or oversized"));
+                    }
+                    if e - s < shard && i != ranges.len() - 1 {
+                        return Err(format!("ragged leaf {i} is not last"));
+                    }
+                    expect = e;
+                }
+                if expect != n {
+                    return Err(format!("ranges cover {expect} of {n} samples"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn worker_shares_cover_all_leaves_for_any_worker_count() {
+        for_all(
+            "worker-shares-tile",
+            32,
+            300,
+            |r| (r.below(50) as usize, 1 + r.below(12) as usize),
+            |&(tasks, workers)| {
+                let shares = worker_shares(tasks, workers);
+                if tasks == 0 {
+                    return if shares.is_empty() { Ok(()) } else { Err("shares for 0".into()) };
+                }
+                if shares.len() > workers.min(tasks) {
+                    return Err(format!("{} shares for {workers} workers", shares.len()));
+                }
+                let mut expect = 0usize;
+                for &(s, e) in &shares {
+                    if s != expect || e <= s {
+                        return Err(format!("share [{s},{e}) after {expect}"));
+                    }
+                    expect = e;
+                }
+                if expect != tasks {
+                    return Err(format!("shares cover {expect} of {tasks} leaves"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tree_sum_is_bit_identical_across_worker_counts() {
+        // satellite: worker counts 1..9 including degenerate N=1 and
+        // N > leaf-count must produce identical bits — the tree shape is
+        // a function of the leaf index only
+        let mut rng = Pcg32::seeded(77);
+        for leaf_count in [1usize, 2, 3, 5, 8, 17] {
+            let elems = 101;
+            let leaves: Vec<Vec<f32>> = (0..leaf_count)
+                .map(|_| (0..elems).map(|_| rng.range(-3.0, 3.0)).collect())
+                .collect();
+            let reference = tree_reduce(leaves.clone(), 1);
+            for workers in 2..=9 {
+                let got = tree_reduce(leaves.clone(), workers);
+                for k in 0..elems {
+                    assert_eq!(
+                        reference[k].to_bits(),
+                        got[k].to_bits(),
+                        "leaves={leaf_count} workers={workers} elem={k}"
+                    );
+                }
+            }
+            // the scalar twin folds the same tree: reducing each leaf's
+            // element k as a scalar list matches the vector reduction
+            for k in [0usize, 50, 100] {
+                let col: Vec<f32> = leaves.iter().map(|l| l[k]).collect();
+                assert_eq!(
+                    tree_reduce_scalar(&col).to_bits(),
+                    reference[k].to_bits(),
+                    "scalar twin diverged at leaves={leaf_count} elem={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reduce_differs_from_sequential_sum_shape() {
+        // sanity that the tree is actually a tree: with 4 leaves the fold
+        // is (a+b)+(c+d), not ((a+b)+c)+d. Values chosen to expose the
+        // association difference in FP32.
+        let a = 1.0e8f32;
+        let b = 1.0f32;
+        let c = -1.0e8f32;
+        let d = 1.0f32;
+        // tree: (1e8 + 1) absorbs the 1 (ulp at 1e8 is 8), so the fold
+        // gives 0; the sequential left fold gives 1
+        let tree = tree_reduce_scalar(&[a, b, c, d]);
+        assert_eq!(tree.to_bits(), ((a + b) + (c + d)).to_bits());
+        assert_ne!(tree.to_bits(), (((a + b) + c) + d).to_bits());
+    }
+
+    #[test]
+    fn sharded_checkpoint_roundtrip_and_validation() {
+        let cfg = DpConfig { workers: 2, shard: 4, lr: 0.05 };
+        let base = TrainReplica::for_model("lenet300", MulSpec::Native, 21).unwrap();
+        let mut tr = DpTrainer::from_replicas(base.replicas(2), cfg).unwrap();
+        let flat = tr.flat_params();
+        let dir = std::env::temp_dir().join("approxtrain_dp_ckpt_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        for shards in [1usize, 3, 5] {
+            let _ = std::fs::remove_dir_all(&dir);
+            tr.save_sharded(&dir, shards).unwrap();
+            let mut other =
+                DpTrainer::new("lenet300", MulSpec::Native, cfg, 909).unwrap();
+            other.load_sharded(&dir).unwrap();
+            let got = other.flat_params();
+            assert_eq!(got.len(), flat.len());
+            for i in 0..flat.len() {
+                assert_eq!(flat[i].to_bits(), got[i].to_bits(), "shards={shards} param {i}");
+            }
+        }
+        // a missing shard is a loud gap error, not silent garbage
+        tr.save_sharded(&dir, 5).unwrap();
+        std::fs::remove_file(dir.join("dp-shard-002.ckpt")).unwrap();
+        let mut other = DpTrainer::new("lenet300", MulSpec::Native, cfg, 909).unwrap();
+        let err = other.load_sharded(&dir).unwrap_err().to_string();
+        assert!(err.contains("gap") || err.contains("needs"), "{err}");
+        // and a wrong-model load is a size error
+        let _ = std::fs::remove_dir_all(&dir);
+        tr.save_sharded(&dir, 2).unwrap();
+        let mut small = DpTrainer::new("lenet5", MulSpec::Native, cfg, 1).unwrap();
+        assert!(small.load_sharded(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        let base = TrainReplica::for_model("lenet300", MulSpec::Native, 1).unwrap();
+        assert!(DpTrainer::from_replicas(vec![], DpConfig { workers: 0, shard: 1, lr: 0.1 })
+            .is_err());
+        assert!(DpTrainer::from_replicas(
+            base.replicas(2),
+            DpConfig { workers: 3, shard: 1, lr: 0.1 }
+        )
+        .is_err());
+        assert!(DpTrainer::from_replicas(
+            base.replicas(1),
+            DpConfig { workers: 1, shard: 0, lr: 0.1 }
+        )
+        .is_err());
+        assert!(DpTrainer::from_replicas(
+            base.replicas(1),
+            DpConfig { workers: 1, shard: 4, lr: f32::NAN }
+        )
+        .is_err());
+        let mut ok = DpTrainer::from_replicas(
+            base.replicas(1),
+            DpConfig { workers: 1, shard: 4, lr: 0.1 },
+        )
+        .unwrap();
+        // shape mismatches are typed errors, not panics
+        assert!(ok.step(&[0.0; 10], &[1, 2]).is_err());
+        assert!(ok.step_accum(&[]).is_err());
+        assert!(ok.step_accum(&[(&[][..], &[][..])]).is_err());
+    }
+}

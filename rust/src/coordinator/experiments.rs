@@ -911,6 +911,174 @@ pub fn bench_serve(results_dir: &Path, quick: bool, record_root: bool) -> Result
 }
 
 // ---------------------------------------------------------------------------
+// BENCH_train — data-parallel deterministic training sweep
+// ---------------------------------------------------------------------------
+
+/// Benchmark deterministic data-parallel training
+/// (`coordinator::data_parallel`): worker counts {1, 2, 4} × simulation
+/// strategy (native / direct / LUT) × model, emitting the
+/// `BENCH_train.json` perf record (schema v1) with steps/sec and scaling
+/// efficiency per run.
+///
+/// **Correctness gate** (same fast-but-wrong policy as the other
+/// benches): every multi-worker run must produce a per-step
+/// (loss, accuracy) curve *and* final flat parameters **bit-identical**
+/// to the 1-worker run of the same configuration — the module's N≡1
+/// determinism contract. A single differing bit aborts the bench before
+/// any record is written.
+pub fn bench_train(results_dir: &Path, quick: bool, record_root: bool) -> Result<String> {
+    use std::time::Instant;
+
+    use super::backend::MulSpec;
+    use super::data_parallel::{DpConfig, DpTrainer};
+    use crate::data::Batcher;
+    use crate::util::json::Json;
+
+    const SEED: u64 = 1717;
+    let workers_sweep: [usize; 3] = [1, 2, 4];
+    let modes: [&str; 3] = ["native", "direct:afm16", "lut:afm16"];
+    let models: &[&str] = if quick { &["lenet300"] } else { &["lenet300", "lenet5"] };
+    let batch = if quick { 16usize } else { 32 };
+    let shard = 4usize;
+    let steps = if quick { 3usize } else { 10 };
+    let lr = 0.05f32;
+
+    // pool spawn + tiled-GEMM warmup outside every timed region
+    crate::kernels::gemm::warm_tiled();
+    let _ = crate::util::threads::global();
+
+    let mut table = Table::new(
+        "BENCH_train — data-parallel deterministic training (fixed-order reduction tree)",
+        &["model", "mode", "workers", "steps/s", "samples/s", "speedup", "efficiency"],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    let mut headline = 0.0f64;
+
+    for &model in models {
+        let ds = dataset_for(dataset_of(model), batch * steps, SEED);
+        let stream: Vec<(Vec<f32>, Vec<u32>)> =
+            Batcher::new(&ds, batch, SEED, 0).take(steps).collect();
+        if stream.len() < steps {
+            return Err(anyhow!("{model}: dataset yielded {} of {steps} batches", stream.len()));
+        }
+        for mode in modes {
+            let spec = MulSpec::parse(mode)?;
+            let mut reference: Option<(Vec<(u32, u32)>, Vec<u32>, f64)> = None;
+            for &workers in &workers_sweep {
+                let cfg = DpConfig { workers, shard, lr };
+                let mut tr = DpTrainer::new(model, spec.clone(), cfg, SEED)?;
+                let t0 = Instant::now();
+                let mut curve = Vec::with_capacity(steps);
+                for (images, labels) in &stream {
+                    curve.push(tr.step(images, labels)?);
+                }
+                let wall = t0.elapsed().as_secs_f64();
+                let run = format!("{model} {mode} workers={workers}");
+
+                let curve_bits: Vec<(u32, u32)> =
+                    curve.iter().map(|s| (s.loss.to_bits(), s.acc.to_bits())).collect();
+                let param_bits: Vec<u32> =
+                    tr.flat_params().iter().map(|v| v.to_bits()).collect();
+                let thr = steps as f64 / wall.max(1e-9);
+                let (speedup, efficiency) = match &reference {
+                    None => {
+                        reference = Some((curve_bits, param_bits, thr));
+                        (1.0, 1.0)
+                    }
+                    Some((ref_curve, ref_params, thr1)) => {
+                        // the bit-gate: N-worker ≡ 1-worker, whole curve
+                        // and final parameters
+                        if curve_bits != *ref_curve {
+                            return Err(anyhow!(
+                                "bench aborted: {run}: loss/accuracy curve diverged from \
+                                 the 1-worker bits — the reduction tree is not \
+                                 worker-count-invariant"
+                            ));
+                        }
+                        if param_bits != *ref_params {
+                            return Err(anyhow!(
+                                "bench aborted: {run}: final parameters diverged from \
+                                 the 1-worker bits"
+                            ));
+                        }
+                        let speedup = thr / thr1.max(1e-9);
+                        (speedup, speedup / workers as f64)
+                    }
+                };
+                if model == "lenet300" && mode == "lut:afm16" && workers == 4 {
+                    headline = speedup;
+                }
+                table.row(vec![
+                    model.into(),
+                    mode.into(),
+                    workers.to_string(),
+                    format!("{thr:.2}"),
+                    format!("{:.0}", thr * batch as f64),
+                    fmt_ratio(speedup),
+                    format!("{:.0}%", efficiency * 100.0),
+                ]);
+                let last = curve.last().unwrap();
+                records.push(Json::obj(vec![
+                    ("model", Json::str(model)),
+                    ("mode", Json::str(mode)),
+                    ("workers", Json::num(workers as f64)),
+                    ("steps", Json::num(steps as f64)),
+                    ("batch", Json::num(batch as f64)),
+                    ("shard", Json::num(shard as f64)),
+                    ("wall_s", Json::num(wall)),
+                    ("steps_per_s", Json::num(thr)),
+                    ("samples_per_s", Json::num(thr * batch as f64)),
+                    ("speedup_vs_workers1", Json::num(speedup)),
+                    ("scaling_efficiency", Json::num(efficiency)),
+                    ("bit_identical_to_workers1", Json::Bool(true)),
+                    ("final_loss", Json::num(last.loss as f64)),
+                    ("final_acc", Json::num(last.acc as f64)),
+                ]));
+            }
+        }
+    }
+
+    let record = Json::obj(vec![
+        ("schema", Json::str("approxtrain/bench_train/v1")),
+        (
+            "description",
+            Json::str(
+                "deterministic data-parallel training over the pure-Rust executors: \
+                 worker counts x simulation strategy x model; minibatches cut into \
+                 fixed leaf shards reduced through a fixed-order binary tree; every \
+                 multi-worker run bit-exactness-gated (loss curve + final params) \
+                 against the 1-worker run",
+            ),
+        ),
+        ("multiplier", Json::str("afm16")),
+        (
+            "provenance",
+            Json::str("measured in-process by approxtrain bench_train on this machine"),
+        ),
+        ("quick", Json::Bool(quick)),
+        ("batch", Json::num(batch as f64)),
+        ("shard", Json::num(shard as f64)),
+        ("steps_per_run", Json::num(steps as f64)),
+        ("lr", Json::num(lr as f64)),
+        ("models", Json::arr(models.iter().map(|&m| Json::str(m)))),
+        ("workers_swept", Json::arr(workers_sweep.iter().map(|&w| Json::num(w as f64)))),
+        ("lut_lenet300_workers4_speedup_vs_workers1", Json::num(headline)),
+        ("records", Json::Arr(records)),
+    ]);
+    let payload = record.to_string();
+    write_result(results_dir, "BENCH_train.json", &payload)?;
+    if record_root {
+        super::report::write_root_record("BENCH_train.json", &payload)?;
+    }
+    let mut md = table.to_markdown();
+    md.push_str(&format!(
+        "Every row bit-gated against its 1-worker run (loss curve + final params). \
+         LUT lenet300 training, 4 workers vs 1: {headline:.2}x\n\n"
+    ));
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------------
 // Fig 6 — GEMM: AMSim vs direct simulation vs native
 // ---------------------------------------------------------------------------
 

@@ -11,10 +11,15 @@
 //! * [`server`] — the multi-lane batching inference server: a bounded
 //!   admission queue feeding N worker lanes, each dynamically batching
 //!   onto its own backend replica.
+//! * [`data_parallel`] — deterministic data-parallel training over the
+//!   pure-Rust executors: fixed-shard minibatch decomposition + a
+//!   fixed-order binary gradient reduction tree, so the loss curve is
+//!   bit-identical for any worker count.
 //! * [`experiments`] — the harness that regenerates every paper
 //!   table/figure (also callable from `cargo bench`).
 //! * [`report`] — markdown/CSV emitters for EXPERIMENTS.md.
 pub mod backend;
+pub mod data_parallel;
 pub mod experiments;
 pub mod pruning;
 pub mod report;

@@ -27,8 +27,30 @@ pub fn softmax(logits: &Tensor) -> Tensor {
 /// Mean cross-entropy loss of logits against integer labels; returns
 /// `(loss, accuracy, dlogits)`.
 pub fn cross_entropy_with_grad(logits: &Tensor, labels: &[u32]) -> (f32, f32, Tensor) {
+    let b = logits.shape[0];
+    let (loss_sum, correct, grad) = cross_entropy_sum_with_grad(logits, labels, b);
+    let inv_b = 1.0 / b as f32;
+    (loss_sum * inv_b, correct as f32 * inv_b, grad)
+}
+
+/// Un-averaged cross-entropy head for data-parallel shards: returns the
+/// per-batch loss **sum**, the exact correct **count**, and `dlogits`
+/// scaled by `1/divisor` instead of `1/batch`. With `divisor` set to the
+/// *effective* batch size, a shard of a larger minibatch contributes
+/// exactly the gradient rows it would have contributed inside the
+/// monolithic batch (the softmax and per-row grads never mix rows), which
+/// is what makes the fixed-order shard reduction in
+/// `coordinator::data_parallel` bit-identical to single-worker training.
+/// Sums and counts (rather than means) stay exactly reducible across
+/// shards. [`cross_entropy_with_grad`] is this with `divisor = batch`.
+pub fn cross_entropy_sum_with_grad(
+    logits: &Tensor,
+    labels: &[u32],
+    divisor: usize,
+) -> (f32, usize, Tensor) {
     let (b, c) = (logits.shape[0], logits.shape[1]);
     assert_eq!(labels.len(), b);
+    assert!(divisor > 0, "divisor must be positive");
     let probs = softmax(logits);
     let mut loss = 0.0f32;
     let mut correct = 0usize;
@@ -47,11 +69,11 @@ pub fn cross_entropy_with_grad(logits: &Tensor, labels: &[u32]) -> (f32, f32, Te
             correct += 1;
         }
     }
-    let inv_b = 1.0 / b as f32;
+    let inv = 1.0 / divisor as f32;
     for g in &mut grad.data {
-        *g *= inv_b;
+        *g *= inv;
     }
-    (loss * inv_b, correct as f32 * inv_b, grad)
+    (loss, correct, grad)
 }
 
 #[cfg(test)]
@@ -102,6 +124,37 @@ mod tests {
         assert_eq!(acc, 0.5, "NaN row scores wrong; healthy row still scores");
         assert_eq!(grad.shape, vec![2, 2]);
         assert!(grad.data[3].is_finite(), "healthy row's gradient stays usable");
+    }
+
+    #[test]
+    fn sum_variant_shards_reassemble_the_monolithic_batch_exactly() {
+        // four rows scored monolithically vs as two 2-row shards with the
+        // effective-batch divisor: every dlogits row, the loss sum, and
+        // the correct count must come out bit-identical (the invariant
+        // the data-parallel reduction is built on)
+        let logits =
+            Tensor::from_vec(&[4, 3], vec![0.5, -0.2, 0.1, 1.0, 0.0, -1.0, -0.3, 0.7, 0.2, 2.0,
+                                           -2.0, 0.5]);
+        let labels = [2u32, 0, 1, 0];
+        let (full_sum, full_correct, full_grad) =
+            cross_entropy_sum_with_grad(&logits, &labels, 4);
+        let lo = Tensor::from_vec(&[2, 3], logits.data[..6].to_vec());
+        let hi = Tensor::from_vec(&[2, 3], logits.data[6..].to_vec());
+        let (s0, c0, g0) = cross_entropy_sum_with_grad(&lo, &labels[..2], 4);
+        let (s1, c1, g1) = cross_entropy_sum_with_grad(&hi, &labels[2..], 4);
+        // loss sums re-associate ((a+b)+(c+d) vs (((a+b)+c)+d), so only the
+        // value is close — bit-identity of the *curve* comes from the DP
+        // layer fixing one leaf decomposition, not from re-association
+        assert!((s0 + s1 - full_sum).abs() <= full_sum.abs() * 1e-6);
+        assert_eq!(c0 + c1, full_correct);
+        for (i, g) in g0.data.iter().chain(&g1.data).enumerate() {
+            assert_eq!(g.to_bits(), full_grad.data[i].to_bits(), "dlogits[{i}]");
+        }
+        // and the mean head is exactly the sum head divided once
+        let (loss, acc, grad) = cross_entropy_with_grad(&logits, &labels);
+        assert_eq!(loss.to_bits(), (full_sum * 0.25).to_bits());
+        assert_eq!(acc.to_bits(), (full_correct as f32 * 0.25).to_bits());
+        assert_eq!(grad.data[0].to_bits(), full_grad.data[0].to_bits());
     }
 
     #[test]

@@ -77,7 +77,9 @@
 //! data/        IDX loader + deterministic synthetic datasets
 //! runtime/     PJRT engine for the compiled artifacts (stubbed offline)
 //! coordinator/ trainer, multi-lane batching inference server over
-//!              pluggable InferBackends, experiments, pruning, reports
+//!              pluggable InferBackends, deterministic data-parallel
+//!              training (fixed-order gradient reduction tree),
+//!              experiments, pruning, reports
 //! hwmodel/     Fig. 1 area/power efficiency model
 //! util/        RNG, JSON, stats, timer, persistent thread pool, prop-test harness
 //! cli/         argument parsing for the `approxtrain` binary

@@ -4,11 +4,13 @@
 //! approxtrain gen-lut --mult afm16 --out afm16.lut
 //! approxtrain hwmodel
 //! approxtrain train --model lenet5 --mode lut --mult afm16 --epochs 3
+//! approxtrain train-dp --model lenet300 --mode lut:afm16 --workers 4 --epochs 2
 //! approxtrain infer --model lenet5 --mode lut --mult afm16
 //! approxtrain serve --model lenet300 --lanes 4 --mode lut:afm16 --requests 64
 //! approxtrain bench-gemm --size 256
 //! approxtrain bench-conv
 //! approxtrain bench-serve
+//! approxtrain bench-train
 //! approxtrain experiment fig6|fig10|table3|table4|table5|table6|fig11|fig12|all [--quick]
 //! approxtrain list-artifacts
 //! ```
@@ -41,6 +43,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "train" => train(&args),
+        "train-dp" => train_dp(&args),
         "infer" => infer(&args),
         "serve" => serve(&args),
         "bench-gemm" => {
@@ -74,6 +77,15 @@ fn main() -> Result<()> {
             println!("{out}");
             Ok(())
         }
+        "bench-train" => {
+            // deterministic data-parallel training sweep over the CPU
+            // executors; pure CPU path, same root-record policy as the
+            // other bench commands
+            let quick = args.has_flag("quick");
+            let out = experiments::bench_train(&results_dir(&args), quick, !quick)?;
+            println!("{out}");
+            Ok(())
+        }
         "experiment" => experiment(&args),
         "list-artifacts" => list_artifacts(&args),
         "" | "help" => {
@@ -93,6 +105,11 @@ commands:
   hwmodel                                  Fig 1 resource-efficiency model
   train --model <m> --mode <tf|custom|lut|direct:afm32> --mult <name>
         [--epochs N] [--lr F] [--samples N] [--seed N] [--ckpt out.ckpt]
+  train-dp --model <m> [--mode native|direct:<mult>|lut:<mult>] [--workers N]
+        [--shard N] [--accum N] [--epochs N] [--batch N] [--lr F] [--samples N]
+        [--seed N] [--ckpt-dir DIR] [--ckpt-shards N]
+        deterministic data-parallel training on the pure-Rust executors
+        (loss curve is bit-identical for any --workers)
   infer --model <m> --mode <...> --mult <name> [--samples N] [--ckpt f]
   serve --model <m> [--backend cpu|engine] [--lanes N] [--batch N]
         [--queue-depth N] [--requests N] [--clients N] [--batch-wait-ms N]
@@ -102,6 +119,7 @@ commands:
   bench-gemm [--size N] [--quick]          CPU GEMM perf record (BENCH_gemm.json)
   bench-conv [--quick]                     implicit vs materialized conv (BENCH_conv.json)
   bench-serve [--quick]                    serving sweep: lanes x load x strategy (BENCH_serve.json)
+  bench-train [--quick]                    data-parallel training sweep: workers x strategy (BENCH_train.json)
   experiment <fig1|fig6|fig10|table3|table4|table5|table6|fig11|fig12|all>
         [--quick]
   list-artifacts
@@ -159,6 +177,55 @@ fn train(args: &Args) -> Result<()> {
     if let Some(path) = args.opt("ckpt") {
         tr.checkpoint()?.save(Path::new(path))?;
         println!("checkpoint -> {path}");
+    }
+    Ok(())
+}
+
+fn train_dp(args: &Args) -> Result<()> {
+    use approxtrain::coordinator::backend::MulSpec;
+    use approxtrain::coordinator::data_parallel::{DpConfig, DpTrainer};
+
+    let model = args.opt_or("model", "lenet300");
+    let mode = args.opt_or("mode", "native");
+    let workers = args.opt_usize("workers", 2).max(1);
+    let shard = args.opt_usize("shard", 8).max(1);
+    let accum = args.opt_usize("accum", 1).max(1);
+    let epochs = args.opt_usize("epochs", 2);
+    let batch = args.opt_usize("batch", 32);
+    let lr = args.opt_f32("lr", 0.05);
+    let seed = args.opt_u64("seed", 42);
+    let samples = args.opt_usize("samples", 512);
+
+    let ds = experiments::dataset_for(experiments::dataset_of(&model), samples, seed);
+    let (train_ds, test_ds) = ds.split(samples / 4);
+    let cfg = DpConfig { workers, shard, lr };
+    let mut tr = DpTrainer::new(&model, MulSpec::parse(&mode)?, cfg, seed)?;
+    println!(
+        "training {} | {workers} workers x shard {shard} | accum {accum} | \
+         epochs {epochs} batch {batch} on {} ({} train / {} test)",
+        tr.describe(),
+        train_ds.name,
+        train_ds.n,
+        test_ds.n
+    );
+    let stats = tr.fit(&train_ds, epochs, batch, accum, seed)?;
+    let per_epoch = stats.len().div_ceil(epochs.max(1)).max(1);
+    for (e, chunk) in stats.chunks(per_epoch).enumerate() {
+        let last = chunk.last().expect("fit emits at least one step per epoch");
+        println!(
+            "epoch {:>3}  loss {:.4}  train acc {:.2}%  ({} optimizer steps)",
+            e + 1,
+            last.loss,
+            last.acc * 100.0,
+            chunk.len()
+        );
+    }
+    let acc = tr.evaluate(&test_ds, batch)?;
+    println!("test accuracy: {:.2}%", acc * 100.0);
+    if let Some(dir) = args.opt("ckpt-dir") {
+        let shards = args.opt_usize("ckpt-shards", workers).max(1);
+        tr.save_sharded(Path::new(dir), shards)?;
+        println!("sharded checkpoint ({shards} shards) -> {dir}/dp-shard-*.ckpt");
     }
     Ok(())
 }

@@ -5,10 +5,35 @@
 
 use crate::kernels::MulKernel;
 use crate::layers::activations::{relu, relu_backward};
-use crate::layers::softmax::cross_entropy_with_grad;
+use crate::layers::softmax::cross_entropy_sum_with_grad;
 use crate::layers::{amconv2d, amdense};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
+
+/// Concatenate tensors into one flat parameter/gradient vector. The order
+/// of `parts` is the model's canonical flat layout — `grad_step`,
+/// `apply_grads`, `flat_params` and `load_flat` must all agree on it.
+fn flatten(parts: &[&Tensor]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(parts.iter().map(|t| t.data.len()).sum());
+    for t in parts {
+        out.extend_from_slice(&t.data);
+    }
+    out
+}
+
+/// Scatter a flat vector back over the same canonical layout, applying
+/// `f(param, value)` element-wise (SGD step or plain overwrite).
+fn scatter(parts: &mut [&mut Tensor], flat: &[f32], mut f: impl FnMut(&mut f32, f32)) {
+    let want: usize = parts.iter().map(|t| t.data.len()).sum();
+    assert_eq!(flat.len(), want, "flat vector has {} elements, model has {want}", flat.len());
+    let mut off = 0usize;
+    for t in parts {
+        for (p, &v) in t.data.iter_mut().zip(&flat[off..off + t.data.len()]) {
+            f(p, v);
+        }
+        off += t.data.len();
+    }
+}
 
 /// LeNet-300-100 parameters.
 #[derive(Clone)]
@@ -46,21 +71,51 @@ impl Lenet300 {
         amdense::forward(mul, &h2, &self.w3, Some(&self.b3))
     }
 
-    /// One SGD training step; returns (loss, accuracy).
-    pub fn train_step(
-        &mut self,
+    /// Total parameter elements in the canonical flat layout.
+    pub fn param_count(&self) -> usize {
+        self.flat_order().iter().map(|t| t.data.len()).sum()
+    }
+
+    /// Canonical flat layout: `w1 b1 w2 b2 w3 b3`.
+    fn flat_order(&self) -> [&Tensor; 6] {
+        [&self.w1, &self.b1, &self.w2, &self.b2, &self.w3, &self.b3]
+    }
+
+    fn flat_order_mut(&mut self) -> [&mut Tensor; 6] {
+        [&mut self.w1, &mut self.b1, &mut self.w2, &mut self.b2, &mut self.w3, &mut self.b3]
+    }
+
+    /// Snapshot every parameter into one flat vector (canonical order).
+    pub fn flat_params(&self) -> Vec<f32> {
+        flatten(&self.flat_order())
+    }
+
+    /// Overwrite every parameter from a flat vector (canonical order).
+    pub fn load_flat(&mut self, flat: &[f32]) {
+        scatter(&mut self.flat_order_mut(), flat, |p, v| *p = v);
+    }
+
+    /// Compute-only step for the data-parallel path: forward + backward on
+    /// `x` without touching parameters. Returns the shard's loss **sum**,
+    /// correct **count**, and the flat gradient (canonical order) with the
+    /// loss gradient scaled by `1/divisor` — pass the *effective* batch
+    /// size so shard gradients sum exactly to the monolithic gradient.
+    /// Taking `&self` is load-bearing: a panic anywhere in here can never
+    /// leave a replica with a torn parameter update.
+    pub fn grad_step(
+        &self,
         mul: &MulKernel,
         x: &Tensor,
         labels: &[u32],
-        lr: f32,
-    ) -> (f32, f32) {
+        divisor: usize,
+    ) -> (f32, usize, Vec<f32>) {
         // forward, keeping pre-activations for relu backward
         let z1 = amdense::forward(mul, x, &self.w1, Some(&self.b1));
         let h1 = relu(&z1);
         let z2 = amdense::forward(mul, &h1, &self.w2, Some(&self.b2));
         let h2 = relu(&z2);
         let logits = amdense::forward(mul, &h2, &self.w3, Some(&self.b3));
-        let (loss, acc, dlogits) = cross_entropy_with_grad(&logits, labels);
+        let (loss_sum, correct, dlogits) = cross_entropy_sum_with_grad(&logits, labels, divisor);
         // backward
         let dw3 = amdense::weight_grad(mul, &h2, &dlogits);
         let db3 = amdense::bias_grad(&dlogits);
@@ -70,14 +125,29 @@ impl Lenet300 {
         let dh1 = relu_backward(&amdense::input_grad(mul, &dh2, &self.w2), &z1);
         let dw1 = amdense::weight_grad(mul, x, &dh1);
         let db1 = amdense::bias_grad(&dh1);
-        // plain SGD (the CPU path benchmarks per-batch cost, not curves)
-        sgd(&mut self.w3, &dw3, lr);
-        sgd(&mut self.b3, &db3, lr);
-        sgd(&mut self.w2, &dw2, lr);
-        sgd(&mut self.b2, &db2, lr);
-        sgd(&mut self.w1, &dw1, lr);
-        sgd(&mut self.b1, &db1, lr);
-        (loss, acc)
+        (loss_sum, correct, flatten(&[&dw1, &db1, &dw2, &db2, &dw3, &db3]))
+    }
+
+    /// Plain SGD over a flat gradient: `p -= lr * g` per element.
+    pub fn apply_grads(&mut self, flat: &[f32], lr: f32) {
+        scatter(&mut self.flat_order_mut(), flat, |p, g| *p -= lr * g);
+    }
+
+    /// One SGD training step; returns (loss, accuracy). Exactly
+    /// `grad_step` + `apply_grads` — the single-replica path and the
+    /// data-parallel path share every float op.
+    pub fn train_step(
+        &mut self,
+        mul: &MulKernel,
+        x: &Tensor,
+        labels: &[u32],
+        lr: f32,
+    ) -> (f32, f32) {
+        let b = x.shape[0];
+        let (loss_sum, correct, grads) = self.grad_step(mul, x, labels, b);
+        self.apply_grads(&grads, lr);
+        let inv_b = 1.0 / b as f32;
+        (loss_sum * inv_b, correct as f32 * inv_b)
     }
 }
 
@@ -128,14 +198,48 @@ impl Lenet5 {
         amdense::forward(mul, &h2, &self.w3, Some(&self.b3))
     }
 
-    /// One SGD step (full backward through convs and pools).
-    pub fn train_step(
-        &mut self,
+    /// Total parameter elements in the canonical flat layout.
+    pub fn param_count(&self) -> usize {
+        self.flat_order().iter().map(|t| t.data.len()).sum()
+    }
+
+    /// Canonical flat layout: `c1 c2 w1 b1 w2 b2 w3 b3`.
+    fn flat_order(&self) -> [&Tensor; 8] {
+        [&self.c1, &self.c2, &self.w1, &self.b1, &self.w2, &self.b2, &self.w3, &self.b3]
+    }
+
+    fn flat_order_mut(&mut self) -> [&mut Tensor; 8] {
+        [
+            &mut self.c1,
+            &mut self.c2,
+            &mut self.w1,
+            &mut self.b1,
+            &mut self.w2,
+            &mut self.b2,
+            &mut self.w3,
+            &mut self.b3,
+        ]
+    }
+
+    /// Snapshot every parameter into one flat vector (canonical order).
+    pub fn flat_params(&self) -> Vec<f32> {
+        flatten(&self.flat_order())
+    }
+
+    /// Overwrite every parameter from a flat vector (canonical order).
+    pub fn load_flat(&mut self, flat: &[f32]) {
+        scatter(&mut self.flat_order_mut(), flat, |p, v| *p = v);
+    }
+
+    /// Compute-only step (see [`Lenet300::grad_step`]): loss sum, correct
+    /// count, flat gradient with the loss grad scaled by `1/divisor`.
+    pub fn grad_step(
+        &self,
         mul: &MulKernel,
         x: &Tensor,
         labels: &[u32],
-        lr: f32,
-    ) -> (f32, f32) {
+        divisor: usize,
+    ) -> (f32, usize, Vec<f32>) {
         use crate::kernels::pool::{maxpool2x2, maxpool2x2_backward};
         let batch = x.shape[0];
         // forward (cache everything)
@@ -152,7 +256,7 @@ impl Lenet5 {
         let zf2 = amdense::forward(mul, &h1, &self.w2, Some(&self.b2));
         let h2 = relu(&zf2);
         let logits = amdense::forward(mul, &h2, &self.w3, Some(&self.b3));
-        let (loss, acc, dlogits) = cross_entropy_with_grad(&logits, labels);
+        let (loss_sum, correct, dlogits) = cross_entropy_sum_with_grad(&logits, labels, divisor);
         // dense backward
         let dw3 = amdense::weight_grad(mul, &h2, &dlogits);
         let db3 = amdense::bias_grad(&dlogits);
@@ -172,22 +276,28 @@ impl Lenet5 {
         let da1 = maxpool2x2_backward(&dp1.data, &arg1, batch * 28 * 28 * 6);
         let dz1 = relu_backward(&Tensor::from_vec(&[batch, 28, 28, 6], da1), &z1);
         let dc1 = amconv2d::weight_grad(mul, x, &dz1, &self.c1.shape, 1, 2);
-        // updates
-        sgd(&mut self.c1, &dc1, lr);
-        sgd(&mut self.c2, &dc2, lr);
-        sgd(&mut self.w1, &dw1, lr);
-        sgd(&mut self.b1, &db1, lr);
-        sgd(&mut self.w2, &dw2, lr);
-        sgd(&mut self.b2, &db2, lr);
-        sgd(&mut self.w3, &dw3, lr);
-        sgd(&mut self.b3, &db3, lr);
-        (loss, acc)
+        (loss_sum, correct, flatten(&[&dc1, &dc2, &dw1, &db1, &dw2, &db2, &dw3, &db3]))
     }
-}
 
-fn sgd(p: &mut Tensor, g: &Tensor, lr: f32) {
-    for (pv, gv) in p.data.iter_mut().zip(&g.data) {
-        *pv -= lr * gv;
+    /// Plain SGD over a flat gradient: `p -= lr * g` per element.
+    pub fn apply_grads(&mut self, flat: &[f32], lr: f32) {
+        scatter(&mut self.flat_order_mut(), flat, |p, g| *p -= lr * g);
+    }
+
+    /// One SGD step (full backward through convs and pools); exactly
+    /// `grad_step` + `apply_grads`.
+    pub fn train_step(
+        &mut self,
+        mul: &MulKernel,
+        x: &Tensor,
+        labels: &[u32],
+        lr: f32,
+    ) -> (f32, f32) {
+        let b = x.shape[0];
+        let (loss_sum, correct, grads) = self.grad_step(mul, x, labels, b);
+        self.apply_grads(&grads, lr);
+        let inv_b = 1.0 / b as f32;
+        (loss_sum * inv_b, correct as f32 * inv_b)
     }
 }
 
@@ -209,6 +319,40 @@ mod tests {
             last = l;
         }
         assert!(last < l0 * 0.7, "loss {l0} -> {last}");
+    }
+
+    #[test]
+    fn split_step_is_bitwise_train_step_and_flat_roundtrips() {
+        // the data-parallel path drives grad_step + apply_grads directly;
+        // they must be the same float ops as train_step, and the flat
+        // param vector must round-trip exactly
+        let mut rng = Pcg32::seeded(9);
+        let x = Tensor::from_vec(&[6, 36], (0..6 * 36).map(|_| rng.range(-1.0, 1.0)).collect());
+        let labels: Vec<u32> = (0..6).map(|_| rng.below(10)).collect();
+        let mul = MulKernel::Native;
+        let mut a = Lenet300::init(36, 10, 5);
+        let mut b = a.clone();
+        let (loss_a, acc_a) = a.train_step(&mul, &x, &labels, 0.05);
+        let (loss_sum, correct, grads) = b.grad_step(&mul, &x, &labels, 6);
+        assert_eq!(grads.len(), b.param_count());
+        b.apply_grads(&grads, 0.05);
+        assert_eq!(loss_a.to_bits(), (loss_sum * (1.0 / 6.0)).to_bits());
+        assert_eq!(acc_a.to_bits(), (correct as f32 * (1.0 / 6.0)).to_bits());
+        let (fa, fb) = (a.flat_params(), b.flat_params());
+        for i in 0..fa.len() {
+            assert_eq!(fa[i].to_bits(), fb[i].to_bits(), "param {i}");
+        }
+        // load_flat overwrites a differently-seeded net completely
+        let mut c = Lenet300::init(36, 10, 777);
+        c.load_flat(&fa);
+        assert_eq!(c.flat_params(), fa);
+        // lenet5 flat layout is self-consistent too
+        let net5 = Lenet5::init(3);
+        let flat5 = net5.flat_params();
+        assert_eq!(flat5.len(), net5.param_count());
+        let mut other5 = Lenet5::init(4);
+        other5.load_flat(&flat5);
+        assert_eq!(other5.flat_params(), flat5);
     }
 
     #[test]

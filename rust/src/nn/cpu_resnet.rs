@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 use crate::kernels::pool::{global_avgpool, global_avgpool_backward};
 use crate::kernels::MulKernel;
 use crate::layers::activations::{relu, relu_backward};
-use crate::layers::softmax::cross_entropy_with_grad;
+use crate::layers::softmax::cross_entropy_sum_with_grad;
 use crate::layers::{amconv2d, amdense, batchnorm};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
@@ -167,12 +167,97 @@ impl CpuResnet {
         amdense::forward(mul, &pooled, &self.fc_w, Some(&self.fc_b))
     }
 
+    /// Total parameter elements in the canonical flat layout: units in
+    /// `BTreeMap` name order (`w`, `gamma`, `beta` per unit), then
+    /// `fc_w`, `fc_b`.
+    pub fn param_count(&self) -> usize {
+        self.units
+            .values()
+            .map(|u| u.w.data.len() + u.gamma.data.len() + u.beta.data.len())
+            .sum::<usize>()
+            + self.fc_w.data.len()
+            + self.fc_b.data.len()
+    }
+
+    /// Start offset of each unit's `w` within the flat layout; the fc
+    /// head sits after every unit.
+    fn unit_offsets(&self) -> (BTreeMap<String, usize>, usize) {
+        let mut map = BTreeMap::new();
+        let mut off = 0usize;
+        for (name, u) in &self.units {
+            map.insert(name.clone(), off);
+            off += u.w.data.len() + u.gamma.data.len() + u.beta.data.len();
+        }
+        (map, off)
+    }
+
+    /// Snapshot every parameter into one flat vector (canonical order).
+    pub fn flat_params(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.param_count());
+        for u in self.units.values() {
+            out.extend_from_slice(&u.w.data);
+            out.extend_from_slice(&u.gamma.data);
+            out.extend_from_slice(&u.beta.data);
+        }
+        out.extend_from_slice(&self.fc_w.data);
+        out.extend_from_slice(&self.fc_b.data);
+        out
+    }
+
+    /// Walk the canonical layout applying `f(param, flat_value)`.
+    fn scatter_flat(&mut self, flat: &[f32], mut f: impl FnMut(&mut f32, f32)) {
+        let want = self.param_count();
+        assert_eq!(flat.len(), want, "flat vector has {} elements, model has {want}", flat.len());
+        let mut off = 0usize;
+        let mut apply = |t: &mut Tensor, off: &mut usize, f: &mut dyn FnMut(&mut f32, f32)| {
+            for (p, &v) in t.data.iter_mut().zip(&flat[*off..*off + t.data.len()]) {
+                f(p, v);
+            }
+            *off += t.data.len();
+        };
+        for u in self.units.values_mut() {
+            apply(&mut u.w, &mut off, &mut f);
+            apply(&mut u.gamma, &mut off, &mut f);
+            apply(&mut u.beta, &mut off, &mut f);
+        }
+        apply(&mut self.fc_w, &mut off, &mut f);
+        apply(&mut self.fc_b, &mut off, &mut f);
+    }
+
+    /// Overwrite every parameter from a flat vector (canonical order).
+    pub fn load_flat(&mut self, flat: &[f32]) {
+        self.scatter_flat(flat, |p, v| *p = v);
+    }
+
+    /// Plain SGD over a flat gradient: `p -= lr * g` per element.
+    pub fn apply_grads(&mut self, flat: &[f32], lr: f32) {
+        self.scatter_flat(flat, |p, g| *p -= lr * g);
+    }
+
     /// One full training step (forward + backward + SGD), used by the
-    /// Table V ATxC column. Gradients flow through every conv/BN/skip.
-    /// For benchmark purposes gradients w.r.t. BN statistics use the
-    /// standard batch-stats backward (`layers::batchnorm::backward`).
+    /// Table V ATxC column; exactly [`CpuResnet::grad_step`] +
+    /// [`CpuResnet::apply_grads`], so the single-replica path and the
+    /// data-parallel path share every float op.
     pub fn train_step(&mut self, mul: &MulKernel, x: &Tensor, labels: &[u32], lr: f32)
                       -> (f32, f32) {
+        let b = x.shape[0];
+        let (loss_sum, correct, grads) = self.grad_step(mul, x, labels, b);
+        self.apply_grads(&grads, lr);
+        let inv_b = 1.0 / b as f32;
+        (loss_sum * inv_b, correct as f32 * inv_b)
+    }
+
+    /// Compute-only step: forward + backward without touching parameters
+    /// (`&self` — a panic mid-step can never tear an update). Returns the
+    /// loss **sum**, correct **count**, and the flat gradient (canonical
+    /// order) with the loss gradient scaled by `1/divisor`. Gradients flow
+    /// through every conv/BN/skip; BN uses the standard batch-stats
+    /// backward (`layers::batchnorm::backward`), so BN statistics are
+    /// computed over *this call's* rows — data-parallel shards therefore
+    /// see shard-local batch statistics (see `coordinator::data_parallel`
+    /// for why that is still deterministic).
+    pub fn grad_step(&self, mul: &MulKernel, x: &Tensor, labels: &[u32], divisor: usize)
+                     -> (f32, usize, Vec<f32>) {
         // To bound implementation complexity the backward pass is computed
         // per *unit* via recomputation: forward is run twice, once caching
         // unit inputs. This is the paper-faithful cost model (same kernels
@@ -213,8 +298,6 @@ impl CpuResnet {
         let mut blocks: Vec<(String, usize, usize, usize, Tensor, Tensor, Tensor)> = Vec::new();
         // (prefix, stride, c_in, c_out, block_input, pre_relu_sum, skip)
         let mut h = relu(&save_fwd(self, mul, "stem", x, 1, 1, &mut saved));
-        let stem_prerelu = saved.last().unwrap().pre_bn.clone();
-        let _ = stem_prerelu;
         let mut c_in = self.width;
         for (si, &n_blocks) in self.depth.stages().iter().enumerate() {
             let c_stage = self.width * (1 << si);
@@ -250,7 +333,7 @@ impl CpuResnet {
         let (b, hh, ww, cc) = (h.shape[0], h.shape[1], h.shape[2], h.shape[3]);
         let pooled = Tensor::from_vec(&[b, cc], global_avgpool(&h.data, b, hh, ww, cc));
         let logits = amdense::forward(mul, &pooled, &self.fc_w, Some(&self.fc_b));
-        let (loss, acc, dlogits) = cross_entropy_with_grad(&logits, labels);
+        let (loss_sum, correct, dlogits) = cross_entropy_sum_with_grad(&logits, labels, divisor);
 
         // ---- backward ----
         let dw_fc = amdense::weight_grad(mul, &pooled, &dlogits);
@@ -331,26 +414,24 @@ impl CpuResnet {
         let _ = unit_bwd(self, mul, &dstem, &mut saved_iter, &mut grads);
         assert!(saved_iter.is_empty(), "unit stack not fully consumed");
 
-        // ---- SGD ----
+        // ---- assemble the canonical flat gradient ----
+        let (offsets, fc_off) = self.unit_offsets();
+        let mut flat = vec![0.0f32; self.param_count()];
+        let mut seen = 0usize;
         for (name, dw, dgamma, dbeta) in grads {
-            let u = self.units.get_mut(&name).unwrap();
-            for (p, g) in u.w.data.iter_mut().zip(&dw.data) {
-                *p -= lr * g;
+            let mut off = offsets[&name];
+            for t in [&dw, &dgamma, &dbeta] {
+                flat[off..off + t.data.len()].copy_from_slice(&t.data);
+                off += t.data.len();
             }
-            for (p, g) in u.gamma.data.iter_mut().zip(&dgamma.data) {
-                *p -= lr * g;
-            }
-            for (p, g) in u.beta.data.iter_mut().zip(&dbeta.data) {
-                *p -= lr * g;
-            }
+            seen += 1;
         }
-        for (p, g) in self.fc_w.data.iter_mut().zip(&dw_fc.data) {
-            *p -= lr * g;
-        }
-        for (p, g) in self.fc_b.data.iter_mut().zip(&db_fc.data) {
-            *p -= lr * g;
-        }
-        (loss, acc)
+        assert_eq!(seen, self.units.len(), "every unit contributes exactly one gradient");
+        let mut off = fc_off;
+        flat[off..off + dw_fc.data.len()].copy_from_slice(&dw_fc.data);
+        off += dw_fc.data.len();
+        flat[off..off + db_fc.data.len()].copy_from_slice(&db_fc.data);
+        (loss_sum, correct, flat)
     }
 }
 
@@ -382,6 +463,32 @@ mod tests {
             last = l;
         }
         assert!(last < l0, "loss {l0} -> {last}");
+    }
+
+    #[test]
+    fn split_step_is_bitwise_train_step_and_flat_roundtrips() {
+        let mut rng = Pcg32::seeded(11);
+        let x =
+            Tensor::from_vec(&[4, 8, 8, 3], (0..4 * 8 * 8 * 3).map(|_| rng.uniform()).collect());
+        let labels: Vec<u32> = (0..4).map(|i| i % 4).collect();
+        let mul = MulKernel::Native;
+        let mut a = CpuResnet::init(Depth::R18, (8, 8, 3), 4, 4, 6);
+        let mut b = a.clone();
+        let (loss_a, acc_a) = a.train_step(&mul, &x, &labels, 0.05);
+        let (loss_sum, correct, grads) = b.grad_step(&mul, &x, &labels, 4);
+        assert_eq!(grads.len(), b.param_count());
+        b.apply_grads(&grads, 0.05);
+        assert_eq!(loss_a.to_bits(), (loss_sum * 0.25).to_bits());
+        assert_eq!(acc_a.to_bits(), (correct as f32 * 0.25).to_bits());
+        let (fa, fb) = (a.flat_params(), b.flat_params());
+        assert_eq!(fa.len(), a.param_count());
+        for i in 0..fa.len() {
+            assert_eq!(fa[i].to_bits(), fb[i].to_bits(), "param {i}");
+        }
+        // load_flat overwrites a differently-seeded net completely
+        let mut c = CpuResnet::init(Depth::R18, (8, 8, 3), 4, 4, 999);
+        c.load_flat(&fa);
+        assert_eq!(c.flat_params(), fa);
     }
 
     #[test]

@@ -120,6 +120,23 @@ impl ThreadPool {
         self.handles.len() + 1
     }
 
+    /// Run `f(task_index)` once for each of `tasks` indices, blocking
+    /// until all complete. A degenerate [`run_chunks`](Self::run_chunks)
+    /// with chunk size 1: every lane races the shared cursor for whole
+    /// task indices, so the *assignment* of tasks to threads is
+    /// schedule-dependent but the set of tasks (and anything keyed only
+    /// on the task index, like the data-parallel trainer's worker
+    /// shares) is not. Panic semantics are those of `run_chunks`.
+    pub fn run_tasks<F>(&self, tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.run_chunks(tasks, tasks, |i, start, end| {
+            debug_assert_eq!((start, end), (i, i + 1));
+            f(i)
+        });
+    }
+
     /// Split `items` into up to `chunks` contiguous ranges and run
     /// `f(chunk_index, start, end)` over them, blocking until all chunks
     /// complete. The submitting thread executes chunks too, so the call
@@ -289,6 +306,18 @@ mod tests {
             hits.fetch_add(e - s, Ordering::SeqCst);
         });
         assert_eq!(hits.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn run_tasks_visits_every_index_once() {
+        let pool = ThreadPool::new(3);
+        let seen: Vec<AtomicUsize> = (0..17).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_tasks(17, |i| {
+            seen[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, s) in seen.iter().enumerate() {
+            assert_eq!(s.load(Ordering::SeqCst), 1, "task {i}");
+        }
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! Data-parallel determinism suite: the test net that proves the
+//! fixed-order gradient reduction tree bit-exact.
+//!
+//! The invariant under test (`coordinator::data_parallel`): the number of
+//! workers changes *throughput only* — the loss/accuracy curve and every
+//! parameter bit are identical for any worker count, for native, direct,
+//! and LUT multipliers alike, because the minibatch decomposition is fixed
+//! by the shard size and the leaf gradients meet in a reduction tree whose
+//! shape is a function of the leaf index only. On top of that:
+//!
+//! * a one-leaf DP step is bitwise a plain `train_step` (they share every
+//!   float op);
+//! * gradient accumulation with aligned leaf boundaries is bitwise the
+//!   monolithic large-batch step — including for the batchnorm resnet,
+//!   whose batch statistics are per-leaf and therefore identical when the
+//!   leaves are;
+//! * changing the *decomposition* (shard size) of a batchnorm model is
+//!   legitimately changing the model — the documented teeth of the
+//!   batch-stats caveat;
+//! * sharded checkpoints resume bit-identically, across worker counts;
+//! * a replica panicking mid-step fail-stops with a typed error and no
+//!   torn parameter update, and the thread pool survives.
+
+use approxtrain::coordinator::backend::{CpuModel, MulSpec};
+use approxtrain::coordinator::data_parallel::{DpConfig, DpTrainer, TrainReplica};
+use approxtrain::mult::ApproxMul;
+use approxtrain::nn::cpu_lenet::Lenet300;
+use approxtrain::nn::cpu_resnet::{CpuResnet, Depth};
+use approxtrain::tensor::Tensor;
+use approxtrain::util::rng::Pcg32;
+
+const N_IN: usize = 36;
+const CLASSES: usize = 10;
+const LR: f32 = 0.05;
+
+/// Deterministic synthetic batch stream (the checkpoint_resume idiom).
+fn batches(steps: usize, batch: usize, seed: u64) -> Vec<(Vec<f32>, Vec<u32>)> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..steps)
+        .map(|_| {
+            let images: Vec<f32> = (0..batch * N_IN).map(|_| rng.range(-1.0, 1.0)).collect();
+            let labels: Vec<u32> = (0..batch).map(|_| rng.below(CLASSES as u32)).collect();
+            (images, labels)
+        })
+        .collect()
+}
+
+/// Small-Lenet300 trainer; replicas are built explicitly so tests control
+/// the model size (the named `DpTrainer::new` path takes the full 28x28
+/// net).
+fn lenet_trainer(workers: usize, shard: usize, spec: &MulSpec, seed: u64) -> DpTrainer {
+    let replicas: Vec<TrainReplica> = (0..workers)
+        .map(|_| TrainReplica {
+            model: CpuModel::Lenet300(Lenet300::init(N_IN, CLASSES, seed)),
+            mul: spec.clone(),
+        })
+        .collect();
+    DpTrainer::from_replicas(replicas, DpConfig { workers, shard, lr: LR }).unwrap()
+}
+
+fn resnet_trainer(workers: usize, shard: usize, seed: u64) -> DpTrainer {
+    let replicas: Vec<TrainReplica> = (0..workers)
+        .map(|_| TrainReplica {
+            model: CpuModel::Resnet(CpuResnet::init(Depth::R18, (8, 8, 3), 4, 4, seed)),
+            mul: MulSpec::Native,
+        })
+        .collect();
+    DpTrainer::from_replicas(replicas, DpConfig { workers, shard, lr: LR }).unwrap()
+}
+
+/// Run `steps` over `data`, returning the curve as bits plus final params
+/// as bits.
+fn run_curve(tr: &mut DpTrainer, data: &[(Vec<f32>, Vec<u32>)]) -> (Vec<(u32, u32)>, Vec<u32>) {
+    let curve = data
+        .iter()
+        .map(|(images, labels)| {
+            let s = tr.step(images, labels).unwrap();
+            (s.loss.to_bits(), s.acc.to_bits())
+        })
+        .collect();
+    (curve, tr.flat_params().iter().map(|v| v.to_bits()).collect())
+}
+
+fn assert_bits_eq(a: &[u32], b: &[u32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x, y, "{what}: bit mismatch at element {i}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// N-worker bit-identity, all multiplier strategies
+// ---------------------------------------------------------------------------
+
+/// The headline invariant: for N in {2, 4, 5, 7} (including N greater
+/// than the leaf count — batch 12 / shard 4 = 3 leaves), training is
+/// bit-identical to N = 1, for native, direct, and LUT multipliers.
+#[test]
+fn n_worker_training_is_bit_identical_to_one_worker() {
+    let data = batches(5, 12, 4242);
+    for mode in ["native", "direct:afm16", "lut:afm16"] {
+        let spec = MulSpec::parse(mode).unwrap();
+        let (ref_curve, ref_params) = run_curve(&mut lenet_trainer(1, 4, &spec, 77), &data);
+        // the curve must actually train (not be degenerate zeros)
+        assert!(ref_curve.iter().any(|&(l, _)| f32::from_bits(l) > 0.0), "{mode}: flat curve");
+        for workers in [2usize, 4, 5, 7] {
+            let (curve, params) = run_curve(&mut lenet_trainer(workers, 4, &spec, 77), &data);
+            assert_eq!(
+                curve, ref_curve,
+                "{mode}: loss/acc curve diverged at workers={workers}"
+            );
+            assert_bits_eq(&ref_params, &params, &format!("{mode} workers={workers} params"));
+        }
+    }
+}
+
+/// The batchnorm resnet is *also* worker-count-invariant: its batch
+/// statistics are per-leaf, and the leaves don't depend on N.
+#[test]
+fn resnet_batch_stats_are_worker_count_invariant() {
+    let mut rng = Pcg32::seeded(5151);
+    let (batch, elems) = (6usize, 8 * 8 * 3);
+    let data: Vec<(Vec<f32>, Vec<u32>)> = (0..2)
+        .map(|_| {
+            let images: Vec<f32> = (0..batch * elems).map(|_| rng.range(-1.0, 1.0)).collect();
+            let labels: Vec<u32> = (0..batch).map(|_| rng.below(4)).collect();
+            (images, labels)
+        })
+        .collect();
+    let (ref_curve, ref_params) = run_curve(&mut resnet_trainer(1, 2, 6), &data);
+    for workers in [2usize, 3] {
+        let (curve, params) = run_curve(&mut resnet_trainer(workers, 2, 6), &data);
+        assert_eq!(curve, ref_curve, "resnet curve diverged at workers={workers}");
+        assert_bits_eq(&ref_params, &params, &format!("resnet workers={workers} params"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DP reduces to the plain single-replica path
+// ---------------------------------------------------------------------------
+
+/// A one-worker, one-leaf (shard >= batch) DP step is bitwise a plain
+/// `train_step` loop: same float ops, same `* (1/b)` loss head — DP is a
+/// strict generalization, not a parallel approximation of training.
+#[test]
+fn single_leaf_dp_step_is_bitwise_a_plain_train_step() {
+    let (batch, steps, seed) = (10usize, 4usize, 909u64);
+    let data = batches(steps, batch, 11);
+    let spec = MulSpec::parse("lut:afm16").unwrap();
+
+    let mut plain = Lenet300::init(N_IN, CLASSES, seed);
+    let mul = spec.kernel();
+    let plain_curve: Vec<(u32, u32)> = data
+        .iter()
+        .map(|(images, labels)| {
+            let x = Tensor::from_vec(&[batch, N_IN], images.clone());
+            let (loss, acc) = plain.train_step(&mul, &x, labels, LR);
+            (loss.to_bits(), acc.to_bits())
+        })
+        .collect();
+
+    let mut tr = lenet_trainer(1, batch, &spec, seed);
+    let (dp_curve, dp_params) = run_curve(&mut tr, &data);
+    assert_eq!(dp_curve, plain_curve, "DP loss/acc head diverged from train_step");
+    let plain_params: Vec<u32> = plain.flat_params().iter().map(|v| v.to_bits()).collect();
+    assert_bits_eq(&plain_params, &dp_params, "params vs plain train_step");
+}
+
+// ---------------------------------------------------------------------------
+// Gradient accumulation
+// ---------------------------------------------------------------------------
+
+/// k micro-batches through `step_accum` are bitwise one monolithic
+/// concatenated-batch `step` when leaf boundaries align (shard divides the
+/// micro-batch size): both cut into the *same* leaf list and reduce
+/// through the *same* tree with the *same* effective-batch divisor.
+#[test]
+fn aligned_gradient_accumulation_is_bitwise_the_monolithic_batch() {
+    let (micro, k, shard, seed) = (8usize, 3usize, 4usize, 303u64);
+    let data = batches(3, micro * k, 2024); // each step is one big batch
+    let spec = MulSpec::parse("direct:afm16").unwrap();
+
+    let mut mono = lenet_trainer(2, shard, &spec, seed);
+    let mut accum = lenet_trainer(3, shard, &spec, seed); // worker count free to differ
+    for (images, labels) in &data {
+        let a = mono.step(images, labels).unwrap();
+        let micros: Vec<(&[f32], &[u32])> = (0..k)
+            .map(|i| {
+                (&images[i * micro * N_IN..(i + 1) * micro * N_IN], &labels[i * micro..(i + 1) * micro])
+            })
+            .collect();
+        let b = accum.step_accum(&micros).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "accumulated loss diverged");
+        assert_eq!(a.acc.to_bits(), b.acc.to_bits(), "accumulated accuracy diverged");
+        assert_eq!(a.leaves, b.leaves, "leaf decompositions differ");
+    }
+    let mono_params: Vec<u32> = mono.flat_params().iter().map(|v| v.to_bits()).collect();
+    let accum_params: Vec<u32> = accum.flat_params().iter().map(|v| v.to_bits()).collect();
+    assert_bits_eq(&mono_params, &accum_params, "accumulated params");
+}
+
+/// Aligned accumulation holds for the batchnorm resnet too — identical
+/// leaves mean identical batch statistics. The teeth: with *misaligned*
+/// decompositions (one 8-row leaf vs two 4-row leaves) the resnet
+/// legitimately diverges, because its batch statistics normalize over
+/// each `grad_step` call's rows — a different shard size is a different
+/// BN model, not a numerical bug. That is exactly why `DpConfig::shard`
+/// is a standalone config knob and never derived from the worker count.
+#[test]
+fn resnet_accumulation_aligned_matches_and_misaligned_diverges() {
+    let mut rng = Pcg32::seeded(616);
+    let (batch, elems, seed) = (8usize, 8 * 8 * 3, 13u64);
+    let images: Vec<f32> = (0..batch * elems).map(|_| rng.range(-1.0, 1.0)).collect();
+    let labels: Vec<u32> = (0..batch).map(|_| rng.below(4)).collect();
+    let micros: Vec<(&[f32], &[u32])> =
+        (0..2).map(|i| (&images[i * 4 * elems..(i + 1) * 4 * elems], &labels[i * 4..(i + 1) * 4])).collect();
+
+    // aligned: shard 4 on both sides -> same 4-row leaves -> bitwise equal
+    let mut mono = resnet_trainer(1, 4, seed);
+    let mut accum = resnet_trainer(2, 4, seed);
+    mono.step(&images, &labels).unwrap();
+    accum.step_accum(&micros).unwrap();
+    let mono_params: Vec<u32> = mono.flat_params().iter().map(|v| v.to_bits()).collect();
+    let accum_params: Vec<u32> = accum.flat_params().iter().map(|v| v.to_bits()).collect();
+    assert_bits_eq(&mono_params, &accum_params, "aligned resnet accumulation");
+
+    // misaligned: one 8-row leaf (BN over 8 rows) vs two 4-row leaves
+    // (BN over 4 rows) must disagree somewhere — the documented caveat
+    let mut wide = resnet_trainer(1, batch, seed);
+    wide.step(&images, &labels).unwrap();
+    let wide_params: Vec<u32> = wide.flat_params().iter().map(|v| v.to_bits()).collect();
+    assert!(
+        wide_params.iter().zip(&accum_params).any(|(a, b)| a != b),
+        "8-row-leaf and 4-row-leaf batchnorm produced identical bits — the \
+         batch-stats caveat documented in coordinator::data_parallel no \
+         longer bites (did BN switch to running statistics?)"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Sharded checkpoint resume
+// ---------------------------------------------------------------------------
+
+/// Training interrupted by a sharded save / reload — into a trainer with
+/// a *different worker count* and different init seed — finishes on
+/// bit-identical weights and curve tail versus the uninterrupted run.
+/// Checkpoint sharding is a storage choice; worker count is a throughput
+/// choice; neither touches the bits.
+#[test]
+fn sharded_checkpoint_resume_is_bit_identical_across_worker_counts() {
+    let data = batches(6, 12, 777);
+    let split = 3;
+    let spec = MulSpec::parse("lut:afm16").unwrap();
+
+    let (full_curve, full_params) = run_curve(&mut lenet_trainer(2, 4, &spec, 55), &data);
+
+    let mut first = lenet_trainer(2, 4, &spec, 55);
+    let (head_curve, _) = run_curve(&mut first, &data[..split]);
+    assert_eq!(head_curve, &full_curve[..split], "pre-split curves should already agree");
+    let dir = std::env::temp_dir().join("approxtrain_dp_resume_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    first.save_sharded(&dir, 3).unwrap();
+    drop(first);
+
+    // resume into a differently-initialized trainer with 4 workers
+    let mut resumed = lenet_trainer(4, 4, &spec, 55 + 999);
+    resumed.load_sharded(&dir).unwrap();
+    let (tail_curve, tail_params) = run_curve(&mut resumed, &data[split..]);
+    assert_eq!(tail_curve, &full_curve[split..], "post-resume curve diverged");
+    assert_bits_eq(&full_params, &tail_params, "post-resume params");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Fail-stop robustness
+// ---------------------------------------------------------------------------
+
+/// A multiplier that always panics — stands in for any mid-step replica
+/// failure. Built into replicas *explicitly* (never via `MulSpec::clone`,
+/// which resolves `direct:` names through the registry).
+struct PanicMul;
+
+impl ApproxMul for PanicMul {
+    fn name(&self) -> &str {
+        "panic16"
+    }
+    fn mantissa_bits(&self) -> u32 {
+        8
+    }
+    fn mul(&self, _a: f32, _b: f32) -> f32 {
+        panic!("injected replica failure")
+    }
+    fn mantissa_product(&self, _ma: u32, _mb: u32) -> (u32, u32) {
+        panic!("injected replica failure")
+    }
+}
+
+/// A replica panicking mid-step must fail-stop: a typed error carrying the
+/// panic context, parameters bit-untouched on every replica (no torn
+/// update — `grad_step` is compute-only), no deadlock, and the shared
+/// thread pool still serves subsequent healthy trainers.
+#[test]
+fn replica_panic_fails_stop_without_torn_update() {
+    let data = batches(1, 8, 99);
+    let (images, labels) = &data[0];
+
+    let replicas = vec![
+        TrainReplica {
+            model: CpuModel::Lenet300(Lenet300::init(N_IN, CLASSES, 3)),
+            mul: MulSpec::Native,
+        },
+        TrainReplica {
+            model: CpuModel::Lenet300(Lenet300::init(N_IN, CLASSES, 3)),
+            mul: MulSpec::Direct(Box::new(PanicMul)),
+        },
+    ];
+    // batch 8 / shard 4 = 2 leaves over 2 workers: the PanicMul replica
+    // is guaranteed a leaf
+    let mut tr =
+        DpTrainer::from_replicas(replicas, DpConfig { workers: 2, shard: 4, lr: LR }).unwrap();
+    let before: Vec<u32> = tr.flat_params().iter().map(|v| v.to_bits()).collect();
+
+    let err = tr.step(images, labels).unwrap_err().to_string();
+    assert!(err.contains("panicked mid-step"), "untyped error: {err}");
+    assert!(err.contains("injected replica failure"), "panic context lost: {err}");
+
+    let after: Vec<u32> = tr.flat_params().iter().map(|v| v.to_bits()).collect();
+    assert_bits_eq(&before, &after, "params after failed step");
+
+    // the global pool survived the panic: a healthy trainer still steps,
+    // and still bit-matches a single-worker twin
+    let spec = MulSpec::Native;
+    let (curve2, params2) = run_curve(&mut lenet_trainer(2, 4, &spec, 3), &data);
+    let (curve1, params1) = run_curve(&mut lenet_trainer(1, 4, &spec, 3), &data);
+    assert_eq!(curve1, curve2, "post-panic pool produced a divergent curve");
+    assert_bits_eq(&params1, &params2, "post-panic params");
+}
