@@ -38,21 +38,34 @@ step "cargo test -q (unit tests, debug assertions on)"
 # to the release pass below so they only run once, optimized
 cargo test -q --lib --bins --examples || fail=1
 
-step "cargo test --release -q (full suite incl. integration, release mode)"
+step "cargo test --release -q (full suite incl. integration, release mode, detected SIMD)"
 # the golden-vector and GEMM property sweeps are sized for release-mode
-# speed; running them optimized also exercises the code the benches ship
+# speed; running them optimized also exercises the code the benches ship.
+# This pass runs at the machine's detected SIMD level — the forced-level
+# matrices inside the suites additionally pin every lower level per
+# kernel object, so one pass covers scalar/avx2/avx2fma arms.
 cargo test --release -q || fail=1
 
-step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel edges + serving + data-parallel"
+step "cargo test --release -q with APPROXTRAIN_SIMD=scalar (portable-fallback pass)"
+# second full pass with the process-wide knob forcing the scalar
+# fallback: every *unforced* kernel (the default construction the
+# trainer, server and benches use) now runs the portable body, and
+# simd_lanes' env-resolution test asserts active() == Scalar — together
+# the two passes prove the knob reaches every dispatch site end to end
+APPROXTRAIN_SIMD=scalar cargo test --release -q || fail=1
+
+step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel edges + SIMD lanes + serving + data-parallel"
 # already part of the full release suite above, but pinned here explicitly
 # so the implicit-conv acceptance sweep, the MRxNR micro-kernel residue
-# sweep, the serving-layer gates (multi-lane ≡ single-lane replies,
-# partial-batch cycle-padding, bounded-queue rejection), and the
-# data-parallel determinism gates (N-worker loss curves ≡ 1-worker,
-# sharded-checkpoint resume, aligned grad accumulation, fail-stop on
-# replica panic) can never silently drop out of the release-mode pass
+# sweep, the SIMD lane-differential net (forced-level x multiplier x
+# residue matrix, incl. the odd-offset unaligned-buffer smoke), the
+# serving-layer gates (multi-lane ≡ single-lane replies, partial-batch
+# cycle-padding, bounded-queue rejection), and the data-parallel
+# determinism gates (N-worker loss curves ≡ 1-worker, sharded-checkpoint
+# resume, aligned grad accumulation, fail-stop on replica panic) can
+# never silently drop out of the release-mode pass
 cargo test --release -q --test conv_grads --test batched_vs_scalar --test microtile \
-    --test server --test data_parallel || fail=1
+    --test simd_lanes --test server --test data_parallel || fail=1
 
 step "bench smoke (tiny sizes; does not touch the committed BENCH records)"
 # the gemm smoke rows include the micro-kernel tiled path (and its mr1nr1

@@ -8,6 +8,16 @@
 //! 3. re-assemble, with flush-to-zero for `exp <= 0` / zero operands and
 //!    overflow-to-infinity for `exp >= 255`.
 //!
+//! The panel kernels ([`AmSim::mul_slice`], [`AmSim::dot_acc`],
+//! [`AmSim::fma_row`], [`AmSim::mul_microtile`]) each carry an AVX2
+//! specialization ([`simd`], x86-64 only) next to their portable scalar
+//! body; which one runs is decided by the instance's
+//! [`crate::util::simd::SimdLevel`] — runtime-detected by default
+//! ([`AmSim::new`]), forceable per instance ([`AmSim::with_simd`]) and
+//! process-wide via `APPROXTRAIN_SIMD`. The scalar body is the oracle:
+//! every vector arm is bit-identical to it (lanes run across independent
+//! accumulator chains, never along one — see [`crate::util::simd`]).
+//!
 //! One deliberate deviation from the paper's pseudo-code: Algorithm 2
 //! checks `Exp >= 255` *before* adding the carry, so `Exp == 254, carry ==
 //! 1` would assemble the biased exponent 255 and silently produce
@@ -19,6 +29,10 @@
 
 use crate::lut::MantissaLut;
 use crate::mult::fpbits::{EXP_BIAS, EXP_MASK, MANT_BITS, MANT_MASK, SIGN_MASK};
+use crate::util::simd::SimdLevel;
+
+#[cfg(target_arch = "x86_64")]
+pub mod simd;
 
 /// Hard ceiling on the micro-kernel's register-block height
 /// ([`AmSim::mul_microtile`]'s `mr`). Bounds the stack footprint of the
@@ -56,10 +70,26 @@ pub struct AmSim<'a> {
     m: u32,
     /// shift that brings a 23-bit mantissa field down to its top `m` bits
     shift: u32,
+    /// SIMD tier the panel kernels dispatch at — always clamped to what
+    /// this machine can execute, so the unsafe vector arms are only ever
+    /// entered with their target features present
+    simd: SimdLevel,
 }
 
 impl<'a> AmSim<'a> {
+    /// Simulator at the process-wide active SIMD level
+    /// ([`crate::util::simd::active`]: runtime detection, lowered by
+    /// `APPROXTRAIN_SIMD` if set).
     pub fn new(lut: &'a MantissaLut) -> AmSim<'a> {
+        Self::with_simd(lut, crate::util::simd::active())
+    }
+
+    /// Simulator pinned to a specific SIMD tier — the forced-level hook
+    /// the differential suites (`tests/simd_lanes.rs`) and the per-level
+    /// bench rows use. `level` is clamped to the machine's capability,
+    /// so requesting a tier the CPU lacks degrades to a runnable one
+    /// instead of faulting.
+    pub fn with_simd(lut: &'a MantissaLut, level: SimdLevel) -> AmSim<'a> {
         // The panel kernels below index the table with
         // `(amnt << m) | bmnt` where both halves are `m`-bit values, and
         // elide the bounds check on the strength of this invariant.
@@ -68,7 +98,37 @@ impl<'a> AmSim<'a> {
             1usize << (2 * lut.m),
             "LUT size must be 2^(2m)"
         );
-        AmSim { lut: &lut.entries, m: lut.m, shift: MANT_BITS - lut.m }
+        AmSim {
+            lut: &lut.entries,
+            m: lut.m,
+            shift: MANT_BITS - lut.m,
+            simd: level.clamp_to_machine(),
+        }
+    }
+
+    /// The SIMD tier this instance dispatches at (post-clamp).
+    pub fn simd_level(&self) -> SimdLevel {
+        self.simd
+    }
+
+    /// Hard re-validation of the LUT-index invariant at panel entry: the
+    /// panel kernels (scalar `get_unchecked` and the AVX2 `vpgatherdd`
+    /// arm alike) elide per-element bounds checks on the strength of
+    /// `lut.len() == 2^(2m)`, so this must hold in release builds too —
+    /// a `debug_assert` would let a corrupted simulator turn an
+    /// out-of-range gather into UB inside the `unsafe` arms. One check
+    /// per panel, not per element, so the cost is noise.
+    #[inline]
+    fn assert_panel_invariant(&self) {
+        assert!(
+            self.m <= MANT_BITS
+                && self.shift == MANT_BITS - self.m
+                && self.lut.len() == 1usize << (2 * self.m),
+            "AmSim LUT invariant violated (m={}, shift={}, lut.len()={})",
+            self.m,
+            self.shift,
+            self.lut.len()
+        );
     }
 
     /// Algorithm 2 over raw FP32 bit patterns.
@@ -138,9 +198,18 @@ impl<'a> AmSim<'a> {
 
     /// Vectorized front-end: `out[i] = amsim(a[i], b[i])` — a tight
     /// LUT-gather loop, bit-identical to calling [`AmSim::mul`] per
-    /// element.
+    /// element. Dispatches to the AVX2 elementwise arm at
+    /// [`SimdLevel::Avx2`]+.
     pub fn mul_slice(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
         assert!(a.len() == b.len() && a.len() == out.len());
+        self.assert_panel_invariant();
+        #[cfg(target_arch = "x86_64")]
+        if self.simd >= SimdLevel::Avx2 {
+            // SAFETY: simd is clamped to the machine, so AVX2 is present;
+            // the gather invariant was just hard-asserted.
+            unsafe { simd::lut_mul_slice_avx2(self.lut, self.m, self.shift, a, b, out) };
+            return;
+        }
         let (lut, m, shift) = (self.lut, self.m, self.shift);
         for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
             *o = f32::from_bits(Self::gather(lut, m, shift, x.to_bits(), y.to_bits()));
@@ -162,8 +231,19 @@ impl<'a> AmSim<'a> {
     /// bit-identical to the scalar `acc += amsim(a[i], b[i])` reference —
     /// and, because the accumulator is threaded through, independent of
     /// how callers split a long dot across cache blocks.
+    ///
+    /// At [`SimdLevel::Avx2`]+ the *product* computation (decomposition,
+    /// gather, assembly — exact integer ops) runs 8 lanes wide while the
+    /// adds stay strictly serial: a dot is a single accumulator chain,
+    /// and only the products are order-free.
     pub fn dot_acc(&self, init: f32, a: &[f32], b: &[f32]) -> f32 {
         assert_eq!(a.len(), b.len());
+        self.assert_panel_invariant();
+        #[cfg(target_arch = "x86_64")]
+        if self.simd >= SimdLevel::Avx2 {
+            // SAFETY: simd is clamped to the machine; invariant asserted.
+            return unsafe { simd::lut_dot_acc_avx2(self.lut, self.m, self.shift, init, a, b) };
+        }
         let (lut, m, shift) = (self.lut, self.m, self.shift);
         let n = a.len();
         let mut acc = init;
@@ -193,8 +273,19 @@ impl<'a> AmSim<'a> {
     /// loop). Bit-identical to the per-element scalar sequence, including
     /// the `+= 0.0` flush-adds (which normalize `-0.0` accumulators the
     /// same way the scalar path does).
+    ///
+    /// At [`SimdLevel::Avx2`]+ the lanes run across the independent
+    /// `acc[j]` chains (one ordered add per chain per call), so the
+    /// vector arm is bit-identical by construction.
     pub fn fma_row(&self, acc: &mut [f32], x: f32, row: &[f32]) {
         assert_eq!(acc.len(), row.len());
+        self.assert_panel_invariant();
+        #[cfg(target_arch = "x86_64")]
+        if self.simd >= SimdLevel::Avx2 {
+            // SAFETY: simd is clamped to the machine; invariant asserted.
+            unsafe { simd::lut_fma_row_avx2(self.lut, self.m, self.shift, acc, x, row) };
+            return;
+        }
         let (lut, m, shift) = (self.lut, self.m, self.shift);
         let xb = x.to_bits();
         let ea = (xb & EXP_MASK) >> MANT_BITS;
@@ -247,6 +338,13 @@ impl<'a> AmSim<'a> {
     /// order, so the result is bit-identical to the scalar
     /// `acc += amsim(a, b)` sequence (including the `+= 0.0` flush-adds
     /// for zero/subnormal operands and underflow).
+    ///
+    /// At [`SimdLevel::Avx2`]+ the lanes run across the `nr` column
+    /// chains in 8-wide chunks (`vpgatherdd` LUT gathers, vectorized
+    /// decomposition, accumulator vectors hoisted across the `kk` loop);
+    /// remainder columns drain through the scalar gather. Every chain
+    /// still receives exactly one add per `kk`, ascending, so all arms
+    /// are bit-identical.
     pub fn mul_microtile(
         &self,
         acc: &mut [f32],
@@ -257,6 +355,17 @@ impl<'a> AmSim<'a> {
         k_len: usize,
     ) {
         assert_microtile_shape(acc, a, b, mr, nr, k_len);
+        self.assert_panel_invariant();
+        #[cfg(target_arch = "x86_64")]
+        if self.simd >= SimdLevel::Avx2 {
+            // SAFETY: simd is clamped to the machine; invariant asserted.
+            unsafe {
+                simd::lut_microtile_avx2(
+                    self.lut, self.m, self.shift, acc, a, b, mr, nr, k_len,
+                )
+            };
+            return;
+        }
         let (lut, m, shift) = (self.lut, self.m, self.shift);
         // hoisted per-step operand decompositions (Algorithm 2 lines 7-8
         // and 11-12, paid once per operand instead of once per product)
@@ -486,6 +595,75 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Every panel op at every machine-executable SIMD level must be
+    /// bit-identical to the scalar-forced instance (the oracle). This is
+    /// the in-crate smoke of the contract; the full forced-level ×
+    /// multiplier × residue matrix lives in `tests/simd_lanes.rs`.
+    #[test]
+    fn forced_simd_levels_match_scalar_bitwise() {
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let oracle = AmSim::with_simd(&lut, SimdLevel::Scalar);
+        assert_eq!(oracle.simd_level(), SimdLevel::Scalar);
+        let mk = |seed: u64, n: usize| {
+            let mut r = crate::util::rng::Pcg32::seeded(seed);
+            (0..n).map(|_| quantize_mantissa(r.range(-4.0, 4.0), 7)).collect::<Vec<f32>>()
+        };
+        for level in crate::util::simd::available_levels() {
+            let sim = AmSim::with_simd(&lut, level);
+            assert_eq!(sim.simd_level(), level, "clamp must keep executable levels");
+            // sizes straddling the 8-lane width, incl. tails and empties
+            for n in [0usize, 1, 7, 8, 9, 16, 23, 64] {
+                let a = mk(10 + n as u64, n);
+                let b = mk(20 + n as u64, n);
+                let mut out = vec![0.0f32; n];
+                let mut out_ref = vec![0.0f32; n];
+                sim.mul_slice(&a, &b, &mut out);
+                oracle.mul_slice(&a, &b, &mut out_ref);
+                for i in 0..n {
+                    assert_eq!(out[i].to_bits(), out_ref[i].to_bits(), "{level} slice n={n}");
+                }
+                assert_eq!(
+                    sim.dot_acc(0.5, &a, &b).to_bits(),
+                    oracle.dot_acc(0.5, &a, &b).to_bits(),
+                    "{level} dot n={n}"
+                );
+                let mut acc = mk(30 + n as u64, n);
+                let mut acc_ref = acc.clone();
+                sim.fma_row(&mut acc, -1.75, &b);
+                oracle.fma_row(&mut acc_ref, -1.75, &b);
+                for i in 0..n {
+                    assert_eq!(acc[i].to_bits(), acc_ref[i].to_bits(), "{level} fma n={n}");
+                }
+            }
+            // micro-tiles across nr residues 1..=9 (every lane tail + one
+            // full chunk + chunk-plus-tail)
+            for nr in 1..=9usize {
+                let (mr, k_len) = (4usize, 13usize);
+                let a = mk(40 + nr as u64, mr * k_len);
+                let b = mk(50 + nr as u64, k_len * nr);
+                let init = mk(60 + nr as u64, mr * nr);
+                let mut got = init.clone();
+                let mut want = init.clone();
+                sim.mul_microtile(&mut got, &a, &b, mr, nr, k_len);
+                oracle.mul_microtile(&mut want, &a, &b, mr, nr, k_len);
+                for i in 0..mr * nr {
+                    assert_eq!(got[i].to_bits(), want[i].to_bits(), "{level} tile nr={nr}");
+                }
+            }
+        }
+    }
+
+    /// A level the machine cannot execute degrades instead of faulting.
+    #[test]
+    fn with_simd_clamps_to_machine() {
+        let model = registry::by_name("bfloat16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let sim = AmSim::with_simd(&lut, SimdLevel::Avx2Fma);
+        assert!(sim.simd_level() <= SimdLevel::detected());
+        assert_eq!(sim.mul(1.5, 2.0), 3.0);
     }
 
     #[test]

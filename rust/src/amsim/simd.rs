@@ -1,0 +1,272 @@
+//! AVX2 specializations of the AMSim panel kernels — Algorithm 2 with
+//! 8 lanes of sign/exponent/mantissa decomposition and a `vpgatherdd`
+//! LUT-row gather per step (the CPU analogue of the paper's §IV GPU LUT
+//! gather).
+//!
+//! Every function here is bit-identical to the scalar body it
+//! specializes, by construction:
+//!
+//! * lanes run **across independent accumulator chains** (the `nr`
+//!   columns of a micro-tile, the `acc[j]` of a rank-1 update) or, for
+//!   the single-chain dot, only across the *product* computation — the
+//!   adds of any one chain stay strictly serial in ascending contraction
+//!   order (see [`crate::util::simd`] for why this is load-bearing);
+//! * the per-lane product assembly is exact integer arithmetic (masks,
+//!   shifts, adds, compares, one gather), so a lane computes precisely
+//!   the scalar [`super::AmSim::mul_bits`] result — including unsigned
+//!   `+0.0` on flush-to-zero and `sign | EXP_MASK` on post-carry
+//!   overflow;
+//! * all memory accesses are unaligned loads/stores (`loadu`/`storeu`),
+//!   so packed panels at odd offsets are handled without alignment luck
+//!   (ci.sh runs an explicit odd-offset smoke).
+//!
+//! # Safety
+//!
+//! Callers (the dispatchers in [`super::AmSim`]) must guarantee AVX2 is
+//! available — enforced by clamping every requested [`crate::util::simd::
+//! SimdLevel`] to the machine — and that the LUT invariant
+//! `lut.len() == 1 << (2*m)` holds, re-asserted *hard* at panel entry so
+//! an out-of-range gather index can never become UB here. Within that
+//! contract the gather index `(amnt << m) | bmnt` is `2m`-bit by
+//! construction and always in bounds.
+
+use core::arch::x86_64::*;
+
+use crate::mult::fpbits::{EXP_BIAS, EXP_MASK, MANT_BITS, MANT_MASK, SIGN_MASK};
+
+use super::{AmSim, MR_MAX};
+
+/// FP32 lanes per AVX2 vector. The micro-kernel's vector arm engages on
+/// column chunks of this width; narrower strips fall through to the
+/// scalar tail.
+pub const LANES: usize = 8;
+
+/// Per-lane operand decomposition (Algorithm 2 lines 7-8, 11-12):
+/// `(mantissa >> shift, biased exponent, sign bit)` for 8 packed FP32
+/// bit patterns. `shift` is the runtime `23 - m` count in a `__m128i`.
+#[inline(always)]
+unsafe fn decompose(bits: __m256i, shift: __m128i) -> (__m256i, __m256i, __m256i) {
+    let mnt = _mm256_srl_epi32(_mm256_and_si256(bits, _mm256_set1_epi32(MANT_MASK as i32)), shift);
+    let exp = _mm256_srli_epi32::<{ MANT_BITS as i32 }>(_mm256_and_si256(
+        bits,
+        _mm256_set1_epi32(EXP_MASK as i32),
+    ));
+    let sign = _mm256_and_si256(bits, _mm256_set1_epi32(SIGN_MASK as i32));
+    (mnt, exp, sign)
+}
+
+/// Assemble 8 Algorithm-2 products: gather the LUT entries at `idx`,
+/// combine with the hoisted exponents/signs, apply flush-to-zero and
+/// post-carry overflow saturation per lane. Returns the products as FP32
+/// lanes ready for one ordered `add_ps` into independent accumulator
+/// chains.
+///
+/// Lane-for-lane this is exactly [`AmSim::mul_bits`]: the flush mask
+/// (`ea == 0 || eb == 0 || exp <= 0`) is applied *last* so it wins over
+/// the overflow blend, mirroring the scalar early-return order.
+#[inline(always)]
+unsafe fn assemble(
+    lut: *const i32,
+    idx: __m256i,
+    a_exp: __m256i,
+    b_exp: __m256i,
+    sign: __m256i,
+) -> __m256 {
+    // SAFETY (in-bounds gather): idx lanes are (amnt << m) | bmnt with
+    // both halves m-bit, so idx < 2^(2m) == lut.len() — the invariant
+    // hard-asserted at panel entry.
+    let entry = _mm256_i32gather_epi32::<4>(lut, idx);
+    let zero = _mm256_setzero_si256();
+    let exp = _mm256_add_epi32(_mm256_add_epi32(a_exp, b_exp), _mm256_set1_epi32(-EXP_BIAS));
+    let flush = _mm256_or_si256(
+        _mm256_or_si256(_mm256_cmpeq_epi32(a_exp, zero), _mm256_cmpeq_epi32(b_exp, zero)),
+        _mm256_cmpgt_epi32(_mm256_set1_epi32(1), exp),
+    );
+    let carry = _mm256_and_si256(
+        _mm256_srli_epi32::<{ MANT_BITS as i32 }>(entry),
+        _mm256_set1_epi32(1),
+    );
+    let exp2 = _mm256_add_epi32(exp, carry);
+    let inf = _mm256_cmpgt_epi32(exp2, _mm256_set1_epi32(254));
+    // normal assembly; lanes headed for flush/inf hold garbage here and
+    // are overwritten by the blend/andnot below
+    let norm = _mm256_or_si256(
+        _mm256_or_si256(sign, _mm256_slli_epi32::<{ MANT_BITS as i32 }>(exp2)),
+        _mm256_and_si256(entry, _mm256_set1_epi32(MANT_MASK as i32)),
+    );
+    let infv = _mm256_or_si256(sign, _mm256_set1_epi32(EXP_MASK as i32));
+    let res = _mm256_blendv_epi8(norm, infv, inf);
+    _mm256_castsi256_ps(_mm256_andnot_si256(flush, res))
+}
+
+/// AVX2 arm of [`AmSim::mul_microtile`]: lanes across the `nr` column
+/// chains, `mr` accumulator vectors hoisted across the whole `kk` loop,
+/// the `A` operand decomposed once per `(kk, r)` and broadcast. Columns
+/// past the last full 8-wide chunk drain through the scalar gather in
+/// the same ascending-`kk` order (independent chains, so the column
+/// split cannot change any chain's add sequence).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn lut_microtile_avx2(
+    lut: &[u32],
+    m: u32,
+    shift: u32,
+    acc: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    mr: usize,
+    nr: usize,
+    k_len: usize,
+) {
+    let lut_ptr = lut.as_ptr() as *const i32;
+    let shiftv = _mm_cvtsi32_si128(shift as i32);
+    let full = nr - nr % LANES;
+    let mut c0 = 0;
+    while c0 < full {
+        let mut accv = [_mm256_setzero_ps(); MR_MAX];
+        for (r, av) in accv.iter_mut().enumerate().take(mr) {
+            *av = _mm256_loadu_ps(acc.as_ptr().add(r * nr + c0));
+        }
+        for kk in 0..k_len {
+            let bbits = _mm256_loadu_si256(b.as_ptr().add(kk * nr + c0) as *const __m256i);
+            let (b_mnt, b_exp, b_sign) = decompose(bbits, shiftv);
+            for (r, av) in accv.iter_mut().enumerate().take(mr) {
+                let abits = a[r * k_len + kk].to_bits();
+                let arow = ((abits & MANT_MASK) >> shift) << m;
+                let a_exp = _mm256_set1_epi32(((abits & EXP_MASK) >> MANT_BITS) as i32);
+                let idx = _mm256_or_si256(_mm256_set1_epi32(arow as i32), b_mnt);
+                let sign =
+                    _mm256_xor_si256(_mm256_set1_epi32((abits & SIGN_MASK) as i32), b_sign);
+                let prod = assemble(lut_ptr, idx, a_exp, b_exp, sign);
+                *av = _mm256_add_ps(*av, prod);
+            }
+        }
+        for (r, av) in accv.iter().enumerate().take(mr) {
+            _mm256_storeu_ps(acc.as_mut_ptr().add(r * nr + c0), *av);
+        }
+        c0 += LANES;
+    }
+    if full < nr {
+        for kk in 0..k_len {
+            for r in 0..mr {
+                let ab = a[r * k_len + kk].to_bits();
+                for c in full..nr {
+                    let p = AmSim::gather(lut, m, shift, ab, b[kk * nr + c].to_bits());
+                    acc[r * nr + c] += f32::from_bits(p);
+                }
+            }
+        }
+    }
+}
+
+/// AVX2 arm of [`AmSim::fma_row`]: lanes across the `acc[j]` chains, the
+/// broadcast operand decomposed once. A zero/subnormal `x` needs no
+/// special case — its zero exponent raises the flush mask in every lane,
+/// so each chain receives the same `+0.0` add the scalar path applies.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn lut_fma_row_avx2(
+    lut: &[u32],
+    m: u32,
+    shift: u32,
+    acc: &mut [f32],
+    x: f32,
+    row: &[f32],
+) {
+    let n = acc.len();
+    let lut_ptr = lut.as_ptr() as *const i32;
+    let shiftv = _mm_cvtsi32_si128(shift as i32);
+    let xb = x.to_bits();
+    let a_row = _mm256_set1_epi32((((xb & MANT_MASK) >> shift) << m) as i32);
+    let a_exp = _mm256_set1_epi32(((xb & EXP_MASK) >> MANT_BITS) as i32);
+    let a_sign = _mm256_set1_epi32((xb & SIGN_MASK) as i32);
+    let mut i = 0;
+    while i + LANES <= n {
+        let bbits = _mm256_loadu_si256(row.as_ptr().add(i) as *const __m256i);
+        let (b_mnt, b_exp, b_sign) = decompose(bbits, shiftv);
+        let idx = _mm256_or_si256(a_row, b_mnt);
+        let sign = _mm256_xor_si256(a_sign, b_sign);
+        let prod = assemble(lut_ptr, idx, a_exp, b_exp, sign);
+        let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(av, prod));
+        i += LANES;
+    }
+    while i < n {
+        acc[i] += f32::from_bits(AmSim::gather(lut, m, shift, xb, row[i].to_bits()));
+        i += 1;
+    }
+}
+
+/// AVX2 arm of [`AmSim::dot_acc`]. A dot is a **single** accumulator
+/// chain, so only the product computation (decompose + gather +
+/// assemble, all exact integer ops) is vectorized; the 8 products are
+/// spilled to a lane buffer and added strictly in ascending index order
+/// — the only order the blocking-independence contract allows.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn lut_dot_acc_avx2(
+    lut: &[u32],
+    m: u32,
+    shift: u32,
+    init: f32,
+    a: &[f32],
+    b: &[f32],
+) -> f32 {
+    let n = a.len();
+    let lut_ptr = lut.as_ptr() as *const i32;
+    let shiftv = _mm_cvtsi32_si128(shift as i32);
+    let mv = _mm_cvtsi32_si128(m as i32);
+    let mut acc = init;
+    let mut lanes = [0.0f32; LANES];
+    let mut i = 0;
+    while i + LANES <= n {
+        let abits = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let bbits = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        let (a_mnt, a_exp, a_sign) = decompose(abits, shiftv);
+        let (b_mnt, b_exp, b_sign) = decompose(bbits, shiftv);
+        let idx = _mm256_or_si256(_mm256_sll_epi32(a_mnt, mv), b_mnt);
+        let sign = _mm256_xor_si256(a_sign, b_sign);
+        let prod = assemble(lut_ptr, idx, a_exp, b_exp, sign);
+        _mm256_storeu_ps(lanes.as_mut_ptr(), prod);
+        for &p in &lanes {
+            acc += p;
+        }
+        i += LANES;
+    }
+    while i < n {
+        acc += f32::from_bits(AmSim::gather(lut, m, shift, a[i].to_bits(), b[i].to_bits()));
+        i += 1;
+    }
+    acc
+}
+
+/// AVX2 arm of [`AmSim::mul_slice`]: purely elementwise, one vector of
+/// products per 8 outputs.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn lut_mul_slice_avx2(
+    lut: &[u32],
+    m: u32,
+    shift: u32,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+) {
+    let n = out.len();
+    let lut_ptr = lut.as_ptr() as *const i32;
+    let shiftv = _mm_cvtsi32_si128(shift as i32);
+    let mv = _mm_cvtsi32_si128(m as i32);
+    let mut i = 0;
+    while i + LANES <= n {
+        let abits = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+        let bbits = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+        let (a_mnt, a_exp, a_sign) = decompose(abits, shiftv);
+        let (b_mnt, b_exp, b_sign) = decompose(bbits, shiftv);
+        let idx = _mm256_or_si256(_mm256_sll_epi32(a_mnt, mv), b_mnt);
+        let sign = _mm256_xor_si256(a_sign, b_sign);
+        let prod = assemble(lut_ptr, idx, a_exp, b_exp, sign);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), prod);
+        i += LANES;
+    }
+    while i < n {
+        out[i] =
+            f32::from_bits(AmSim::gather(lut, m, shift, a[i].to_bits(), b[i].to_bits()));
+        i += 1;
+    }
+}

@@ -100,7 +100,17 @@ pub fn fig1(results_dir: &Path) -> Result<String> {
 ///   ([`crate::kernels::gemm::gemm_scalar_reference`]), measuring the
 ///   dispatch + cache-blocking headroom the batched kernels close;
 /// * `lut_pool` / `lut_tiled_pool` — the LUT paths over the persistent
-///   worker pool's full width (row-blocks vs the 2D tile queue).
+///   worker pool's full width (row-blocks vs the 2D tile queue);
+/// * `lut_afm16_tiled_simd_<level>` / `native_tiled_simd_<level>` — the
+///   tiled micro-kernel path with the SIMD tier **forced per kernel
+///   object** (`AmSim::with_simd` / `MulKernel::NativeAt`) for every
+///   machine-executable [`crate::util::simd::SimdLevel`], isolating the
+///   vector-arm win; the unsuffixed rows run at the process-wide active
+///   level (detection, lowered by `APPROXTRAIN_SIMD`).
+///
+/// The record carries a top-level `simd` object (detected level, raw env
+/// override, resolved active level) so a committed BENCH_gemm.json says
+/// what silicon/tier produced it.
 ///
 /// At the largest size an autotune probe times the LUT tiled path over
 /// [`crate::kernels::gemm::TileConfig::AUTOTUNE_CANDIDATES`] — sweeping
@@ -127,6 +137,7 @@ pub fn bench_gemm(
     };
     use crate::kernels::MulKernel;
     use crate::util::json::Json;
+    use crate::util::simd::{self, SimdLevel};
     use crate::util::threads;
 
     let budget = if quick { 0.15 } else { 1.0 };
@@ -151,6 +162,7 @@ pub fn bench_gemm(
     let mut headline_speedup = 0.0f64;
     let mut tiled_vs_panel = 0.0f64;
     let mut micro_vs_scalar_drain = 0.0f64;
+    let mut simd_scalar_to_best = 0.0f64;
     // the default tile geometry with the micro-kernel degenerated to the
     // per-element drain — the ablation partner for the micro-kernel rows
     let cfg_mr1 = TileConfig { mr: 1, nr: 1, ..TileConfig::DEFAULT };
@@ -250,6 +262,86 @@ pub fn bench_gemm(
             gemm_tiled_threaded(&MulKernel::Lut(AmSim::new(&lut)), &a, &b, &mut c, n, n, n, lanes);
         });
 
+        // per-SIMD-level rows: the tiled micro-kernel path with the tier
+        // forced per kernel object, every row behind the same
+        // bit-exactness gate as the unsuffixed rows. The native rows are
+        // gated against the native scalar-dispatch reference.
+        let mut c_nat_ref = vec![0.0f32; n * n];
+        gemm_scalar_reference(&MulKernel::Native, &a, &b, &mut c_nat_ref, n, n, n);
+        let mut level_rows: Vec<(String, f64)> = Vec::new();
+        let mut t_lut_level_scalar = f64::NAN;
+        let mut t_lut_level_best = f64::INFINITY;
+        for level in simd::available_levels() {
+            let lut_label = format!("lut_afm16_tiled_simd_{}", level.name());
+            gemm_tiled_with(
+                &MulKernel::Lut(AmSim::with_simd(&lut, level)),
+                TileConfig::DEFAULT,
+                &a,
+                &b,
+                &mut c,
+                n,
+                n,
+                n,
+                1,
+            );
+            gate(&lut_label, &c)?;
+            let t_l = timed(&lut_label, &mut || {
+                gemm_tiled_with(
+                    &MulKernel::Lut(AmSim::with_simd(&lut, level)),
+                    TileConfig::DEFAULT,
+                    &a,
+                    &b,
+                    &mut c,
+                    n,
+                    n,
+                    n,
+                    1,
+                );
+            });
+            let nat_label = format!("native_tiled_simd_{}", level.name());
+            gemm_tiled_with(
+                &MulKernel::NativeAt(level),
+                TileConfig::DEFAULT,
+                &a,
+                &b,
+                &mut c,
+                n,
+                n,
+                n,
+                1,
+            );
+            for i in 0..n * n {
+                if c[i].to_bits() != c_nat_ref[i].to_bits() {
+                    return Err(anyhow!(
+                        "bench aborted: {nat_label} diverged from native scalar reference \
+                         at n={n} idx {i}"
+                    ));
+                }
+            }
+            let t_n = timed(&nat_label, &mut || {
+                gemm_tiled_with(
+                    &MulKernel::NativeAt(level),
+                    TileConfig::DEFAULT,
+                    &a,
+                    &b,
+                    &mut c,
+                    n,
+                    n,
+                    n,
+                    1,
+                );
+            });
+            if level == SimdLevel::Scalar {
+                t_lut_level_scalar = t_l;
+            }
+            t_lut_level_best = t_lut_level_best.min(t_l);
+            level_rows.push((lut_label, t_l));
+            level_rows.push((nat_label, t_n));
+        }
+        if n == last_size {
+            simd_scalar_to_best = t_lut_level_scalar / t_lut_level_best;
+        }
+
         for (strategy, t) in [
             ("native", t_native),
             ("direct_afm16", t_direct),
@@ -275,6 +367,23 @@ pub fn bench_gemm(
                 ("n", Json::num(n as f64)),
                 ("strategy", Json::str(strategy)),
                 ("seconds_median", Json::num(t)),
+                ("vs_native", Json::num(t / t_native)),
+            ]));
+        }
+        for (strategy, t) in &level_rows {
+            table.row(vec![
+                format!("{n}x{n}x{n}"),
+                strategy.clone(),
+                fmt_time(*t),
+                fmt_ratio(t / t_native),
+                fmt_ratio(t / t_scalar),
+            ]);
+            records.push(Json::obj(vec![
+                ("m", Json::num(n as f64)),
+                ("k", Json::num(n as f64)),
+                ("n", Json::num(n as f64)),
+                ("strategy", Json::str(strategy)),
+                ("seconds_median", Json::num(*t)),
                 ("vs_native", Json::num(t / t_native)),
             ]));
         }
@@ -339,15 +448,35 @@ pub fn bench_gemm(
 
     let (best_t, best) = best_cfg.expect("autotune probed at least one config");
     let record = Json::obj(vec![
-        ("schema", Json::str("approxtrain/bench_gemm/v3")),
+        ("schema", Json::str("approxtrain/bench_gemm/v4")),
         (
             "description",
             Json::str(
                 "CPU GEMM time per call: native vs direct functional-model vs AMSim LUT \
                  (paper Fig 6 configurations on the ATxC substrate), panel vs tiled \
                  kernels; tiled rows drain through the MRxNR register-blocked \
-                 micro-kernel (mr1nr1 row = per-element drain ablation)",
+                 micro-kernel (mr1nr1 row = per-element drain ablation; \
+                 *_simd_<level> rows = forced SimdLevel, isolating the AVX2 \
+                 vpgatherdd/FMA vector arms)",
             ),
+        ),
+        (
+            "simd",
+            Json::obj(vec![
+                ("detected", Json::str(SimdLevel::detected().name())),
+                ("active", Json::str(simd::active().name())),
+                (
+                    "env",
+                    match std::env::var(simd::ENV_KNOB) {
+                        Ok(v) => Json::str(&v),
+                        Err(_) => Json::Null,
+                    },
+                ),
+                (
+                    "levels",
+                    Json::arr(simd::available_levels().iter().map(|l| Json::str(l.name()))),
+                ),
+            ]),
         ),
         ("multiplier", Json::str("afm16")),
         (
@@ -363,10 +492,12 @@ pub fn bench_gemm(
         ("lut_batched_speedup_vs_scalar_dispatch", Json::num(headline_speedup)),
         ("lut_tiled_speedup_vs_panel", Json::num(tiled_vs_panel)),
         ("lut_micro_speedup_vs_scalar_drain", Json::num(micro_vs_scalar_drain)),
+        ("lut_simd_speedup_scalar_to_best", Json::num(simd_scalar_to_best)),
         (
             "autotune",
             Json::obj(vec![
                 ("size", Json::num(last_size as f64)),
+                ("simd_level", Json::str(simd::active().name())),
                 ("candidates", Json::Arr(autotune)),
                 (
                     "best",
@@ -395,6 +526,12 @@ pub fn bench_gemm(
     md.push_str(&format!(
         "MRxNR micro-kernel vs per-element tile drain at {last_size}: \
          {micro_vs_scalar_drain:.2}x\n"
+    ));
+    md.push_str(&format!(
+        "LUT tiled SIMD vector arm vs forced-scalar at {last_size}: \
+         {simd_scalar_to_best:.2}x (detected {}, active {})\n",
+        SimdLevel::detected().name(),
+        simd::active().name()
     ));
     md.push_str(&format!(
         "Tiled vs panel LUT kernel at {last_size}: {tiled_vs_panel:.2}x \

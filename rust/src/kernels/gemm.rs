@@ -118,7 +118,10 @@ pub struct SliceA<'a> {
 
 impl PackA for SliceA<'_> {
     fn pack_a(&self, i0: usize, ih: usize, k0: usize, kw: usize, out: &mut [f32]) {
-        debug_assert_eq!(out.len(), ih * kw);
+        // hard even in release: a mis-sized panel buffer would hand the
+        // micro-kernel's unsafe SIMD arm a short operand slice (once per
+        // panel, so the cost is noise)
+        assert_eq!(out.len(), ih * kw);
         for i in 0..ih {
             let src = (i0 + i) * self.k + k0;
             out[i * kw..(i + 1) * kw].copy_from_slice(&self.data[src..src + kw]);
@@ -138,7 +141,8 @@ pub struct SliceB<'a> {
 
 impl PackB for SliceB<'_> {
     fn pack_b(&self, j0: usize, jw: usize, k0: usize, kw: usize, nr: usize, out: &mut [f32]) {
-        debug_assert_eq!(out.len(), jw * kw);
+        // hard even in release (see SliceA::pack_a)
+        assert_eq!(out.len(), jw * kw);
         let mut base = 0;
         let mut j = 0;
         while j < jw {

@@ -36,10 +36,21 @@
 //! ascending contraction order — so every blocking/threading/micro-tile
 //! choice is bit-identical to the per-element scalar oracle
 //! ([`gemm::gemm_scalar_reference`]).
+//!
+//! On x86-64 the micro-kernel additionally carries runtime-detected
+//! AVX2 arms ([`crate::amsim::simd`] for the LUT gather path, [`simd`]
+//! for the native baseline), with lanes running **across** the
+//! independent accumulator chains so the contract — and therefore the
+//! bit-identity gate — survives vectorization. The tier is a
+//! [`SimdLevel`] (detection + `APPROXTRAIN_SIMD` override, see
+//! [`crate::util::simd`]); `tests/simd_lanes.rs` is the forced-level ×
+//! multiplier × residue differential net.
 pub mod gemm;
 pub mod im2col;
 pub mod matvec;
 pub mod pool;
+#[cfg(target_arch = "x86_64")]
+mod simd;
 pub mod transpose_reverse;
 
 use std::cell::Cell;
@@ -53,14 +64,29 @@ use crate::mult::ApproxMul;
 /// the contract.
 pub use crate::amsim::{MR_MAX, NR_MAX};
 
+/// The runtime SIMD tier (detection + `APPROXTRAIN_SIMD` override),
+/// re-exported next to the kernels that dispatch on it.
+pub use crate::util::simd::SimdLevel;
+
 /// Multiplication strategy threaded through every kernel.
 pub enum MulKernel<'a> {
-    /// Native hardware multiplier (`*` operator) — the ATnG configuration.
+    /// Native hardware multiplier (`*` operator) — the ATnG
+    /// configuration. Panel ops dispatch at the process-wide active
+    /// [`SimdLevel`] ([`crate::util::simd::active`]).
     Native,
+    /// Native multiplier pinned to a specific [`SimdLevel`] (clamped to
+    /// the machine at dispatch) — the forced-level hook for the
+    /// differential suites and the per-level bench rows. Bit-identical
+    /// to [`MulKernel::Native`] at every level by the vector-arm
+    /// contract; the LUT counterpart is [`AmSim::with_simd`].
+    NativeAt(SimdLevel),
     /// Direct call into the multiplier functional model (bit manipulation
     /// per multiply) — the ATxC configuration / Fig 6 "C simulation".
+    /// Scalar at every SIMD level: the per-multiply virtual call cannot
+    /// be vectorized.
     Direct(&'a dyn ApproxMul),
-    /// LUT-based AMSim — the ATxG configuration.
+    /// LUT-based AMSim — the ATxG configuration. Carries its own
+    /// [`SimdLevel`] (see [`AmSim::simd_level`]).
     Lut(AmSim<'a>),
 }
 
@@ -72,7 +98,7 @@ impl<'a> MulKernel<'a> {
     #[inline(always)]
     pub fn mul(&self, a: f32, b: f32) -> f32 {
         match self {
-            MulKernel::Native => a * b,
+            MulKernel::Native | MulKernel::NativeAt(_) => a * b,
             MulKernel::Direct(m) => m.mul(a, b),
             MulKernel::Lut(sim) => sim.mul(a, b),
         }
@@ -81,8 +107,24 @@ impl<'a> MulKernel<'a> {
     pub fn describe(&self) -> String {
         match self {
             MulKernel::Native => "native".into(),
+            MulKernel::NativeAt(l) => format!("native@{}", l.name()),
             MulKernel::Direct(m) => format!("direct:{}", m.name()),
             MulKernel::Lut(sim) => format!("lut:m{}", sim.mantissa_bits()),
+        }
+    }
+
+    /// The SIMD tier the **native** panel arms run at for this kernel:
+    /// the active process-wide level for [`MulKernel::Native`], the
+    /// machine-clamped pinned level for [`MulKernel::NativeAt`], and
+    /// `Scalar` for the non-native strategies (the LUT arm carries its
+    /// level inside [`AmSim`]).
+    #[inline]
+    #[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+    fn native_level(&self) -> SimdLevel {
+        match self {
+            MulKernel::Native => crate::util::simd::active(),
+            MulKernel::NativeAt(l) => l.clamp_to_machine(),
+            MulKernel::Direct(_) | MulKernel::Lut(_) => SimdLevel::Scalar,
         }
     }
 }
@@ -171,7 +213,9 @@ impl MulBackend for MulKernel<'_> {
     fn mul_panel(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
         assert!(a.len() == b.len() && a.len() == out.len());
         match self {
-            MulKernel::Native => {
+            // elementwise `*` is the same single op at every SIMD level
+            // and the compiler auto-vectorizes it; no hand-written arm
+            MulKernel::Native | MulKernel::NativeAt(_) => {
                 for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
                     *o = x * y;
                 }
@@ -189,8 +233,12 @@ impl MulBackend for MulKernel<'_> {
         assert_eq!(a.len(), b.len());
         match self {
             // native: plain sequential FMA loop — the baseline every
-            // slowdown ratio is measured against
-            MulKernel::Native => {
+            // slowdown ratio is measured against. One accumulator chain,
+            // so there is nothing contract-legal to vectorize here (the
+            // products are single-op; only the LUT arm's gather/decompose
+            // work is worth lifting into lanes for a dot) — identical at
+            // every SIMD level by construction.
+            MulKernel::Native | MulKernel::NativeAt(_) => {
                 let mut acc = init;
                 for i in 0..a.len() {
                     acc += a[i] * b[i];
@@ -228,7 +276,23 @@ impl MulBackend for MulKernel<'_> {
     fn fma_row(&self, acc: &mut [f32], x: f32, row: &[f32]) {
         assert_eq!(acc.len(), row.len());
         match self {
-            MulKernel::Native => {
+            MulKernel::Native | MulKernel::NativeAt(_) => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    let level = self.native_level();
+                    if level >= SimdLevel::Avx2 {
+                        // SAFETY: native_level() is clamped to the
+                        // machine, so the target features are present
+                        unsafe {
+                            if level >= SimdLevel::Avx2Fma {
+                                simd::native_fma_row_avx2fma(acc, x, row);
+                            } else {
+                                simd::native_fma_row_avx2(acc, x, row);
+                            }
+                        }
+                        return;
+                    }
+                }
                 for (a, &r) in acc.iter_mut().zip(row) {
                     *a += x * r;
                 }
@@ -254,9 +318,26 @@ impl MulBackend for MulKernel<'_> {
         match self {
             // native: mr*nr independent FMA chains per step — the adds on
             // any one accumulator stay in ascending kk order, so this is
-            // the same op sequence as the scalar loop, just latency-hidden
-            MulKernel::Native => {
+            // the same op sequence as the scalar loop, just latency-hidden;
+            // at Avx2+ the chains are drained 8 columns per vector op
+            MulKernel::Native | MulKernel::NativeAt(_) => {
                 assert_microtile_shape(acc, a, b, mr, nr, k_len);
+                #[cfg(target_arch = "x86_64")]
+                {
+                    let level = self.native_level();
+                    if level >= SimdLevel::Avx2 {
+                        // SAFETY: native_level() is clamped to the
+                        // machine, so the target features are present
+                        unsafe {
+                            if level >= SimdLevel::Avx2Fma {
+                                simd::native_microtile_avx2fma(acc, a, b, mr, nr, k_len);
+                            } else {
+                                simd::native_microtile_avx2(acc, a, b, mr, nr, k_len);
+                            }
+                        }
+                        return;
+                    }
+                }
                 for kk in 0..k_len {
                     let b_step = &b[kk * nr..(kk + 1) * nr];
                     for r in 0..mr {
@@ -531,8 +612,11 @@ mod tests {
         let lut = MantissaLut::generate(model.as_ref());
         let kernels = [
             MulKernel::Native,
+            MulKernel::NativeAt(SimdLevel::Scalar),
+            MulKernel::NativeAt(SimdLevel::detected()),
             MulKernel::Direct(model.as_ref()),
             MulKernel::Lut(crate::amsim::AmSim::new(&lut)),
+            MulKernel::Lut(crate::amsim::AmSim::with_simd(&lut, SimdLevel::Scalar)),
         ];
         let a: Vec<f32> = (0..13).map(|i| 0.37 * i as f32 - 1.9).collect();
         let b: Vec<f32> = (0..13).map(|i| -0.11 * i as f32 + 0.8).collect();
@@ -615,8 +699,11 @@ mod tests {
         let lut = MantissaLut::generate(model.as_ref());
         let kernels = [
             MulKernel::Native,
+            MulKernel::NativeAt(SimdLevel::Scalar),
+            MulKernel::NativeAt(SimdLevel::detected()),
             MulKernel::Direct(model.as_ref()),
             MulKernel::Lut(crate::amsim::AmSim::new(&lut)),
+            MulKernel::Lut(crate::amsim::AmSim::with_simd(&lut, SimdLevel::Scalar)),
         ];
         let mut rng = crate::util::rng::Pcg32::seeded(4100);
         for (mr, nr, k_len) in
@@ -670,5 +757,13 @@ mod tests {
         assert_eq!(native.describe(), "native");
         assert_eq!(direct.describe(), "direct:bfloat16");
         assert_eq!(lut_k.describe(), "lut:m7");
+        let pinned = MulKernel::NativeAt(SimdLevel::Scalar);
+        assert_eq!(pinned.mul(1.5, 2.0), 3.0);
+        assert_eq!(pinned.describe(), "native@scalar");
+        assert_eq!(
+            MulKernel::NativeAt(SimdLevel::Avx2Fma).describe(),
+            "native@avx2fma",
+            "describe reports the requested pin, clamping happens at dispatch"
+        );
     }
 }

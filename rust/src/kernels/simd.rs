@@ -1,0 +1,112 @@
+//! AVX2 / AVX2+FMA specializations of the **native** multiplier panel
+//! ops (the ATnG baseline arm of [`super::MulKernel`]). The LUT arm's
+//! vector kernels live in [`crate::amsim::simd`]; `Direct` stays scalar
+//! at every level (a virtual call per multiply cannot be vectorized —
+//! the paper's direct-simulation cost argument in miniature).
+//!
+//! Bit-exactness: lanes run across independent accumulator chains, one
+//! `vaddps` per chain per contraction step, so each chain performs the
+//! exact scalar `acc += a * b` sequence. The FMA variants use `vfmadd`
+//! **only in product position** with a `-0.0` addend:
+//! `fma(a, b, -0.0) == a * b` bitwise for every input — the exact
+//! product plus `-0.0` is the exact product (and for an exactly-zero
+//! product, `±0.0 + -0.0` keeps the product's sign under
+//! round-to-nearest, which a `+0.0` addend would not). FMA in
+//! *accumulate* position (`fma(a, b, acc)`) would single-round
+//! `a*b + acc` and break the contract — that is the divergence the
+//! reassociation teeth test in `tests/microtile.rs` proves the suites
+//! can catch.
+//!
+//! All loads/stores are unaligned; callers guarantee the target
+//! features are present (levels are clamped to the machine).
+
+use core::arch::x86_64::*;
+
+use crate::amsim::MR_MAX;
+
+/// FP32 lanes per AVX2 vector (same width as `amsim::simd::LANES`).
+pub const LANES: usize = 8;
+
+/// `a * b` via plain `vmulps` — the AVX2 product op.
+#[inline(always)]
+unsafe fn prod_mul(a: __m256, b: __m256) -> __m256 {
+    _mm256_mul_ps(a, b)
+}
+
+/// `a * b` via `vfmadd` with a `-0.0` addend — bit-identical to
+/// `vmulps` (see module docs), exercising the FMA unit.
+#[inline(always)]
+unsafe fn prod_fma(a: __m256, b: __m256) -> __m256 {
+    _mm256_fmadd_ps(a, b, _mm256_set1_ps(-0.0))
+}
+
+macro_rules! define_native_kernels {
+    ($microtile:ident, $fma_row:ident, $feat:literal, $prod:ident) => {
+        /// Vector arm of the native `mul_microtile`: lanes across the
+        /// `nr` column chains in 8-wide chunks, `mr` accumulator vectors
+        /// hoisted across the whole `kk` loop, `A` operand broadcast per
+        /// `(kk, r)`. Remainder columns drain scalar in the same
+        /// ascending-`kk` order (independent chains).
+        #[target_feature(enable = $feat)]
+        pub(super) unsafe fn $microtile(
+            acc: &mut [f32],
+            a: &[f32],
+            b: &[f32],
+            mr: usize,
+            nr: usize,
+            k_len: usize,
+        ) {
+            let full = nr - nr % LANES;
+            let mut c0 = 0;
+            while c0 < full {
+                let mut accv = [_mm256_setzero_ps(); MR_MAX];
+                for (r, av) in accv.iter_mut().enumerate().take(mr) {
+                    *av = _mm256_loadu_ps(acc.as_ptr().add(r * nr + c0));
+                }
+                for kk in 0..k_len {
+                    let bv = _mm256_loadu_ps(b.as_ptr().add(kk * nr + c0));
+                    for (r, av) in accv.iter_mut().enumerate().take(mr) {
+                        let va = _mm256_set1_ps(a[r * k_len + kk]);
+                        *av = _mm256_add_ps(*av, $prod(va, bv));
+                    }
+                }
+                for (r, av) in accv.iter().enumerate().take(mr) {
+                    _mm256_storeu_ps(acc.as_mut_ptr().add(r * nr + c0), *av);
+                }
+                c0 += LANES;
+            }
+            if full < nr {
+                for kk in 0..k_len {
+                    for r in 0..mr {
+                        let x = a[r * k_len + kk];
+                        for c in full..nr {
+                            acc[r * nr + c] += x * b[kk * nr + c];
+                        }
+                    }
+                }
+            }
+        }
+
+        /// Vector arm of the native `fma_row`: lanes across the `acc[j]`
+        /// chains, scalar tail.
+        #[target_feature(enable = $feat)]
+        pub(super) unsafe fn $fma_row(acc: &mut [f32], x: f32, row: &[f32]) {
+            let n = acc.len();
+            let vx = _mm256_set1_ps(x);
+            let mut i = 0;
+            while i + LANES <= n {
+                let vr = _mm256_loadu_ps(row.as_ptr().add(i));
+                let va = _mm256_loadu_ps(acc.as_ptr().add(i));
+                _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(va, $prod(vx, vr)));
+                i += LANES;
+            }
+            while i < n {
+                acc[i] += x * row[i];
+                i += 1;
+            }
+        }
+    };
+}
+
+define_native_kernels!(native_microtile_avx2, native_fma_row_avx2, "avx2", prod_mul);
+define_native_kernels!(native_microtile_avx2fma, native_fma_row_avx2fma, "avx2,fma", prod_fma);

@@ -50,16 +50,27 @@
 //! ([`kernels::gemm::gemm_tiled_src`]), which is how the conv layer runs
 //! its three GEMMs *implicitly* — panels packed straight from the NHWC
 //! tensors through the fused im2col indexing, no cols matrix ever
-//! materialized. One accumulation contract (running FP32 accumulator,
+//! materialized. The micro-kernel's inner loops carry
+//! runtime-feature-detected SIMD arms ([`util::simd::SimdLevel`],
+//! capped by the `APPROXTRAIN_SIMD` env knob): on AVX2 machines the LUT
+//! drain gathers 8 mantissa products per `vpgatherdd` with vectorized
+//! sign/exponent/mantissa decomposition (`amsim/simd.rs`), the native
+//! baseline gets vector multiply / FMA arms (`kernels/simd.rs`), and
+//! the lanes run *across* the micro-tile's independent accumulator
+//! chains so the contract below is untouched — the scalar body stays
+//! the everywhere-fallback and the oracle. One accumulation contract
+//! (running FP32 accumulator,
 //! ascending contraction order) keeps every path bit-identical to the
-//! per-element scalar oracle at any tile/micro-tile geometry and thread
-//! count (enforced by `tests/batched_vs_scalar.rs`,
-//! `tests/microtile.rs`, `tests/conv_grads.rs` and
-//! `tests/golden_mults.rs`). `cargo bench -- gemm` (or `approxtrain
+//! per-element scalar oracle at any tile/micro-tile geometry, thread
+//! count and SIMD level (enforced by `tests/batched_vs_scalar.rs`,
+//! `tests/microtile.rs`, `tests/conv_grads.rs`,
+//! `tests/golden_mults.rs` and the `tests/simd_lanes.rs`
+//! lane-differential net). `cargo bench -- gemm` (or `approxtrain
 //! bench-gemm`) times all strategies, panel vs tiled, the micro-kernel
-//! vs per-element-drain ablation, plus an autotune probe sweeping
+//! vs per-element-drain ablation, per-SIMD-level rows with the
+//! feature-detection record, plus an autotune probe sweeping
 //! `MR x NR` alongside the tile shape, and records `BENCH_gemm.json`
-//! (schema v3); `cargo bench -- conv` (or `approxtrain bench-conv`)
+//! (schema v4); `cargo bench -- conv` (or `approxtrain bench-conv`)
 //! records the implicit-vs-materialized conv comparison into
 //! `BENCH_conv.json`; methodology in `docs/BENCHMARKS.md`.
 //!
@@ -69,8 +80,10 @@
 //! mult/        multiplier functional models (paper's "C/C++ models") + FP32 bit plumbing
 //! lut/         mantissa-product LUT generation (Algorithm 1) + binary format
 //! amsim/       LUT-based multiplication simulator (Algorithm 2) + batched panels
+//!              (+ simd.rs: the AVX2 vpgatherdd LUT arm)
 //! kernels/     CPU analogs of the paper's CUDA kernels: GEMM, IM2COL x3,
 //!              transpose-reverse, matvec, pooling (§VI)
+//!              (+ simd.rs: the native baseline's AVX2/FMA arms)
 //! layers/      AMCONV2D / AMDENSE / activations / softmax / batchnorm (§VI-B, §VI-C)
 //! nn/          pure-Rust LeNet/ResNet executors, init, metrics, checkpoints
 //! tensor/      minimal row-major tensor
@@ -81,7 +94,9 @@
 //!              training (fixed-order gradient reduction tree),
 //!              experiments, pruning, reports
 //! hwmodel/     Fig. 1 area/power efficiency model
-//! util/        RNG, JSON, stats, timer, persistent thread pool, prop-test harness
+//! util/        RNG, JSON, stats, timer, persistent thread pool, prop-test
+//!              harness, SIMD capability detection (simd::SimdLevel +
+//!              the APPROXTRAIN_SIMD knob)
 //! cli/         argument parsing for the `approxtrain` binary
 //! ```
 //!

@@ -116,7 +116,9 @@ commands:
         [--mode ...]                       multi-lane batching inference server
         (cpu modes: native|direct:<mult>|lut:<mult>; engine modes are
          artifact modes: tf|custom|lut|direct:<mult>, plus --mult for the LUT)
-  bench-gemm [--size N] [--quick]          CPU GEMM perf record (BENCH_gemm.json)
+  bench-gemm [--size N] [--quick]          CPU GEMM perf record (BENCH_gemm.json;
+        per-SIMD-level rows — env APPROXTRAIN_SIMD=scalar|avx2|avx2fma|auto
+        caps the active level for all kernels, requests above the machine clamp)
   bench-conv [--quick]                     implicit vs materialized conv (BENCH_conv.json)
   bench-serve [--quick]                    serving sweep: lanes x load x strategy (BENCH_serve.json)
   bench-train [--quick]                    data-parallel training sweep: workers x strategy (BENCH_train.json)

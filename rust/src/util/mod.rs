@@ -1,9 +1,11 @@
 //! Small self-contained utilities: deterministic RNG, a minimal JSON
 //! parser/emitter (no external deps are available offline), statistics,
-//! timing, and a scoped thread-pool helper.
+//! timing, a scoped thread-pool helper, and runtime SIMD-level
+//! detection/override.
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod threads;
 pub mod timer;

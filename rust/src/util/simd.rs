@@ -1,0 +1,232 @@
+//! Runtime SIMD capability detection and the `APPROXTRAIN_SIMD` override
+//! knob.
+//!
+//! The micro-kernel hot paths ([`crate::amsim::AmSim::mul_microtile`] and
+//! the native arm of `kernels::MulKernel`) carry hand-written AVX2
+//! specializations next to their portable scalar bodies. Which body runs
+//! is a *data* question answered here, once per process:
+//!
+//! 1. probe the CPU with `is_x86_feature_detected!` ([`SimdLevel::detected`],
+//!    cached);
+//! 2. let the `APPROXTRAIN_SIMD` environment variable lower (never raise)
+//!    the probe ([`active`], cached) — `scalar` forces the portable
+//!    fallback everywhere, `avx2`/`avx2fma` pin a vector tier, anything
+//!    else (or `auto`) keeps the detection result. A request the machine
+//!    cannot execute is **clamped down** to what it can, so forcing
+//!    `avx2` on a non-AVX2 host (or any non-x86-64 host) degrades to
+//!    `scalar` instead of faulting — which is what makes the
+//!    forced-level differential suites runnable on any machine.
+//!
+//! ## Why a level can never change results
+//!
+//! Every vector arm keeps the crate-wide accumulation contract by
+//! running its SIMD lanes **across independent accumulator chains**
+//! (the `MR x NR` micro-tile accumulators, or the `acc[j]` chains of a
+//! rank-1 update), never *along* one chain: each output element still
+//! receives its products one at a time, in ascending contraction order,
+//! through the exact scalar add sequence. Vectorizing along a chain
+//! (summing partial lanes and folding them) would reassociate FP
+//! addition and silently change bits — that is the failure mode
+//! `tests/simd_lanes.rs` exists to catch, and why the single-chain
+//! [`crate::kernels::MulBackend::dot_panel_acc`] only vectorizes its
+//! *product* computation (gather + decomposition, which are exact
+//! integer ops) while the adds stay serial.
+//!
+//! The same reasoning bans FMA *contraction*: `acc = fma(a, b, acc)`
+//! single-rounds `a*b + acc` where the contract's `acc += a * b`
+//! rounds twice, so the [`SimdLevel::Avx2Fma`] native arm uses FMA only
+//! in product position with a `-0.0` addend (`fma(a, b, -0.0)`), which
+//! is bit-identical to `a * b` for every input — including the sign of
+//! an exactly-zero product, which a `+0.0` addend would flip.
+
+use std::sync::OnceLock;
+
+/// Environment variable that lowers the SIMD tier (see module docs).
+pub const ENV_KNOB: &str = "APPROXTRAIN_SIMD";
+
+/// The SIMD tier a kernel dispatch runs at. Ordered: a higher level is a
+/// strict superset of the features of every lower one, so clamping a
+/// request to the machine's capability is `min`.
+///
+/// * [`SimdLevel::Scalar`] — the portable body. Compiled everywhere, the
+///   everywhere-fallback *and the oracle*: every vector arm is gated
+///   bit-identical to it.
+/// * [`SimdLevel::Avx2`] — x86-64 AVX2: `vpgatherdd` LUT-row gathers and
+///   vectorized sign/exponent/mantissa decomposition, 8 FP32 lanes
+///   spread across independent accumulator chains.
+/// * [`SimdLevel::Avx2Fma`] — AVX2 + FMA: the native arm additionally
+///   computes products with `vfmadd` in the contract-legal
+///   `fma(a, b, -0.0)` form (module docs). The LUT arm is the AVX2 one
+///   (gathers have no FMA to use).
+///
+/// `Direct` multiplier kernels are scalar at every level: the per-multiply
+/// virtual call into the functional model cannot be vectorized, which is
+/// the paper's ATxC-vs-ATxG cost argument in miniature.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SimdLevel {
+    Scalar,
+    Avx2,
+    Avx2Fma,
+}
+
+impl SimdLevel {
+    /// Stable lowercase name (the `APPROXTRAIN_SIMD` vocabulary and the
+    /// bench-record row suffix).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx2Fma => "avx2fma",
+        }
+    }
+
+    /// Parse one concrete level name (see [`resolve`] for the full knob
+    /// grammar, which also understands `auto`).
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(SimdLevel::Scalar),
+            "avx2" => Some(SimdLevel::Avx2),
+            "avx2fma" | "avx2+fma" | "fma" => Some(SimdLevel::Avx2Fma),
+            _ => None,
+        }
+    }
+
+    /// The highest level this machine can execute — one cached
+    /// `is_x86_feature_detected!` probe. Always [`SimdLevel::Scalar`] on
+    /// non-x86-64 targets.
+    pub fn detected() -> SimdLevel {
+        static DETECTED: OnceLock<SimdLevel> = OnceLock::new();
+        *DETECTED.get_or_init(probe)
+    }
+
+    /// Clamp `self` to what this machine can execute (`min` with
+    /// [`SimdLevel::detected`]). Forced-level constructors route through
+    /// this so an impossible request degrades instead of faulting.
+    pub fn clamp_to_machine(self) -> SimdLevel {
+        self.min(SimdLevel::detected())
+    }
+}
+
+impl std::fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn probe() -> SimdLevel {
+    if is_x86_feature_detected!("avx2") {
+        if is_x86_feature_detected!("fma") {
+            SimdLevel::Avx2Fma
+        } else {
+            SimdLevel::Avx2
+        }
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn probe() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+/// Pure resolution of the override knob: what level is active given the
+/// raw `APPROXTRAIN_SIMD` value (`None` = unset) and the detected
+/// capability. Unset / empty / `auto` keep the detection result; a
+/// recognized level is clamped down to `detected`; an unrecognized value
+/// is ignored with a warning (detection wins) rather than silently
+/// changing behaviour.
+pub fn resolve(env: Option<&str>, detected: SimdLevel) -> SimdLevel {
+    match env {
+        None => detected,
+        Some(raw) => {
+            let s = raw.trim().to_ascii_lowercase();
+            if s.is_empty() || s == "auto" || s == "detect" {
+                detected
+            } else if let Some(req) = SimdLevel::parse(&s) {
+                req.min(detected)
+            } else {
+                eprintln!(
+                    "warning: unrecognized {ENV_KNOB}={raw:?} \
+                     (expected scalar|avx2|avx2fma|auto); using detected '{detected}'"
+                );
+                detected
+            }
+        }
+    }
+}
+
+/// The process-wide active level: [`resolve`] of the `APPROXTRAIN_SIMD`
+/// environment variable against [`SimdLevel::detected`], computed once
+/// and cached (one atomic load per call afterwards — cheap enough for
+/// per-panel dispatch). Kernel objects that want a *different* level
+/// take it explicitly (`AmSim::with_simd`, `MulKernel::NativeAt`)
+/// instead of mutating this.
+pub fn active() -> SimdLevel {
+    static ACTIVE: OnceLock<SimdLevel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| resolve(std::env::var(ENV_KNOB).ok().as_deref(), SimdLevel::detected()))
+}
+
+/// Every level this machine can execute, ascending — always starts with
+/// [`SimdLevel::Scalar`], ends with [`SimdLevel::detected`]. The
+/// iteration domain of the forced-level differential suites and the
+/// bench's per-level rows.
+pub fn available_levels() -> Vec<SimdLevel> {
+    [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Avx2Fma]
+        .into_iter()
+        .filter(|&l| l <= SimdLevel::detected())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered_and_clamping_is_min() {
+        assert!(SimdLevel::Scalar < SimdLevel::Avx2);
+        assert!(SimdLevel::Avx2 < SimdLevel::Avx2Fma);
+        assert_eq!(SimdLevel::Avx2Fma.min(SimdLevel::Scalar), SimdLevel::Scalar);
+        assert!(SimdLevel::Avx2Fma.clamp_to_machine() <= SimdLevel::detected());
+    }
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for l in [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Avx2Fma] {
+            assert_eq!(SimdLevel::parse(l.name()), Some(l));
+        }
+        assert_eq!(SimdLevel::parse(" AVX2 "), Some(SimdLevel::Avx2));
+        assert_eq!(SimdLevel::parse("neon"), None);
+    }
+
+    #[test]
+    fn resolve_grammar() {
+        let det = SimdLevel::detected();
+        assert_eq!(resolve(None, det), det);
+        assert_eq!(resolve(Some(""), det), det);
+        assert_eq!(resolve(Some("auto"), det), det);
+        assert_eq!(resolve(Some("scalar"), det), SimdLevel::Scalar);
+        // a request is clamped down to the machine, never raised
+        assert_eq!(resolve(Some("avx2fma"), SimdLevel::Scalar), SimdLevel::Scalar);
+        assert_eq!(resolve(Some("avx2fma"), SimdLevel::Avx2), SimdLevel::Avx2);
+        assert_eq!(resolve(Some("scalar"), SimdLevel::Avx2Fma), SimdLevel::Scalar);
+        // junk is ignored in favour of detection
+        assert_eq!(resolve(Some("sse9"), det), det);
+    }
+
+    #[test]
+    fn active_is_stable_and_machine_executable() {
+        let a = active();
+        assert_eq!(active(), a, "active level must be cached, not re-resolved");
+        assert!(a <= SimdLevel::detected());
+    }
+
+    #[test]
+    fn available_levels_ascend_from_scalar_to_detected() {
+        let levels = available_levels();
+        assert_eq!(levels.first(), Some(&SimdLevel::Scalar));
+        assert_eq!(levels.last(), Some(&SimdLevel::detected()));
+        assert!(levels.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -20,6 +20,7 @@ use approxtrain::kernels::{MulBackend, MulKernel};
 use approxtrain::lut::MantissaLut;
 use approxtrain::mult::registry;
 use approxtrain::util::rng::Pcg32;
+use approxtrain::util::simd;
 
 fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.range(-2.0, 2.0)).collect()
@@ -81,6 +82,49 @@ fn gemm_paths_equal_scalar_dispatch_at_every_tile_size() {
                 );
             }
         });
+    }
+}
+
+/// The strategy sweep widened across *forced* SIMD levels: for every
+/// machine-executable level (Scalar, Avx2, Avx2Fma when detected) ×
+/// threads {1, 8}, the tiled and flat-panel threaded paths over
+/// block-straddling shapes must equal the scalar dispatch oracle bit
+/// for bit — the vector arms inherit the accumulation contract
+/// unchanged, for both the native baseline and the LUT simulation.
+#[test]
+fn gemm_paths_equal_scalar_dispatch_at_every_forced_simd_level() {
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    let shapes = [(5usize, 17usize, 9usize), (21, 65, 19), (16, 130, 24)];
+    for level in simd::available_levels() {
+        let kernels = [
+            (MulKernel::NativeAt(level), format!("native@{level}")),
+            (MulKernel::Lut(AmSim::with_simd(&lut, level)), format!("lut@{level}")),
+        ];
+        for (mul, name) in &kernels {
+            for (m, k, n) in shapes {
+                let mut rng = Pcg32::seeded(910 + (m * k * n) as u64);
+                let a = rand_vec(&mut rng, m * k);
+                let b = rand_vec(&mut rng, k * n);
+                let mut want = vec![0.0f32; m * n];
+                gemm_scalar_reference(mul, &a, &b, &mut want, m, k, n);
+                for threads in [1usize, 8] {
+                    let mut got = vec![0.0f32; m * n];
+                    gemm_tiled_with(mul, TileConfig::DEFAULT, &a, &b, &mut got, m, k, n, threads);
+                    assert_bits(
+                        &got,
+                        &want,
+                        &format!("gemm_tiled[{name}] ({m},{k},{n}) t={threads}"),
+                    );
+                    gemm_panel_threaded(mul, &a, &b, &mut got, m, k, n, threads);
+                    assert_bits(
+                        &got,
+                        &want,
+                        &format!("gemm_panel_threaded[{name}] ({m},{k},{n}) t={threads}"),
+                    );
+                }
+            }
+        }
     }
 }
 

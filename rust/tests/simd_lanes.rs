@@ -1,0 +1,327 @@
+//! Lane-differential bit-exactness net for the SIMD kernel arms.
+//!
+//! The AVX2 paths (`amsim::simd` for the LUT gather, `kernels::simd` for
+//! the native baseline) claim bit-identity to the portable scalar bodies
+//! at every [`SimdLevel`]. This suite is the acceptance gate for that
+//! claim: every (multiplier ∈ {native, direct:m, lut:m for all registry
+//! models with m ≤ 8}) × (forced `SimdLevel`) × (shape residue hitting
+//! every lane remainder `0..LANES` and every `MR`/`NR` edge) is compared
+//! against the per-element scalar replay, **bitwise**. Operand panels
+//! carry planted IEEE edge values (signed zeros, subnormal-flush,
+//! overflow-saturating magnitudes, infinities) at head / mid / tail lane
+//! positions, so masked lanes in the vector arms are exercised at every
+//! position within a vector.
+//!
+//! Forcing is per kernel object — [`AmSim::with_simd`] for the LUT arm,
+//! [`MulKernel::NativeAt`] for the native arm (`Direct` is scalar at
+//! every level by design) — so all levels run in one process. The
+//! process-wide `APPROXTRAIN_SIMD` knob is covered separately: ci.sh
+//! runs this whole suite twice (default detection and forced `scalar`),
+//! and `active_level_matches_pure_resolution_of_env` pins the knob's
+//! resolution against the pure [`simd::resolve`] function under
+//! whichever environment the suite was launched with.
+
+use approxtrain::amsim::AmSim;
+use approxtrain::kernels::gemm::{gemm_scalar_reference, gemm_tiled_with, TileConfig};
+use approxtrain::kernels::{MulBackend, MulKernel, SimdLevel};
+use approxtrain::lut::MantissaLut;
+use approxtrain::mult::{registry, ApproxMul};
+use approxtrain::util::rng::Pcg32;
+use approxtrain::util::simd;
+
+/// AVX2 FP32 lane width — the vector arms chunk columns by this, so the
+/// shape sweeps below cover every remainder `0..LANES` (and then some).
+const LANES: usize = 8;
+
+/// Widest mantissa whose LUT this suite tabulates (matches the
+/// golden-vector suite's ceiling; every registry model with m ≤ 8 rides).
+const MAX_LUT_M: u32 = 8;
+
+struct Tabulated {
+    model: Box<dyn ApproxMul>,
+    lut: MantissaLut,
+}
+
+fn tabulated() -> Vec<Tabulated> {
+    registry::names()
+        .iter()
+        .filter_map(|name| registry::by_name(name))
+        .filter(|m| m.mantissa_bits() <= MAX_LUT_M)
+        .map(|model| {
+            let lut = MantissaLut::generate(model.as_ref());
+            Tabulated { model, lut }
+        })
+        .collect()
+}
+
+/// Run `f` over the full forced-level × multiplier matrix: for each
+/// machine-executable level, the native kernel pinned at that level, and
+/// per tabulatable model both its LUT kernel pinned at that level and
+/// its direct kernel (scalar at every level by design — included so the
+/// matrix witnesses that levels cannot change it either).
+fn for_each_forced_kernel(f: &mut dyn FnMut(&MulKernel, &str)) {
+    let tabs = tabulated();
+    assert!(!tabs.is_empty(), "registry lost all m<=8 models");
+    for level in simd::available_levels() {
+        f(&MulKernel::NativeAt(level), &format!("native@{level}"));
+        for t in &tabs {
+            f(
+                &MulKernel::Lut(AmSim::with_simd(&t.lut, level)),
+                &format!("lut:{}@{level}", t.model.name()),
+            );
+            f(
+                &MulKernel::Direct(t.model.as_ref()),
+                &format!("direct:{}@{level}", t.model.name()),
+            );
+        }
+    }
+}
+
+/// Operand panel with planted IEEE edge values at head / mid / tail lane
+/// positions: signed zeros (flush-add paths), subnormal (flushes), a
+/// magnitude pair that saturates to infinity on multiply, and infinities
+/// themselves (huge-exponent lanes for the LUT arm, IEEE inf for native).
+fn edge_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..n).map(|_| rng.range(-3.0, 3.0)).collect();
+    let plant = [
+        0.0f32,
+        -0.0,
+        f32::MIN_POSITIVE / 2.0, // subnormal
+        1e30,                    // overflow partner
+        -1e30,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        1e-25, // underflow partner
+    ];
+    // lane positions 0, mid, tail of the first vector, plus the very end
+    // of the panel (the scalar-tail region when n % LANES != 0)
+    let slots = [0usize, LANES / 2, LANES - 1, n / 2, n.saturating_sub(1)];
+    for (i, &s) in slots.iter().enumerate() {
+        if s < n {
+            v[s] = plant[i % plant.len()];
+        }
+    }
+    v
+}
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for i in 0..got.len() {
+        assert_eq!(
+            got[i].to_bits(),
+            want[i].to_bits(),
+            "{what} idx {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+/// Per-element scalar replay of the `mul_microtile` contract.
+fn microtile_ref(
+    mul: &MulKernel,
+    acc: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    mr: usize,
+    nr: usize,
+    k_len: usize,
+) {
+    for kk in 0..k_len {
+        for r in 0..mr {
+            for c in 0..nr {
+                acc[r * nr + c] += mul.mul(a[r * k_len + kk], b[kk * nr + c]);
+            }
+        }
+    }
+}
+
+/// The core matrix: `mul_microtile` at every `nr ∈ 1..=16` (every lane
+/// remainder twice, both the sub-lane widths and the `NR_MAX` edge),
+/// `mr ∈ {1, 3, 4, 16}` (unit, odd, default, `MR_MAX`), `k` hitting the
+/// empty/unit/odd/deep cases — for every forced-level kernel, against
+/// the per-element scalar replay, bitwise.
+#[test]
+fn microtile_forced_level_matrix_matches_scalar_replay() {
+    for_each_forced_kernel(&mut |mul, label| {
+        for nr in 1..=16usize {
+            for mr in [1usize, 3, 4, 16] {
+                for k_len in [0usize, 1, 5, 13] {
+                    let mut rng = Pcg32::seeded(7000 + (nr * 997 + mr * 89 + k_len) as u64);
+                    let a = edge_vec(&mut rng, mr * k_len);
+                    let b = edge_vec(&mut rng, k_len * nr);
+                    let init = edge_vec(&mut rng, mr * nr);
+                    let mut got = init.clone();
+                    mul.mul_microtile(&mut got, &a, &b, mr, nr, k_len);
+                    let mut want = init;
+                    microtile_ref(mul, &mut want, &a, &b, mr, nr, k_len);
+                    assert_bits(&got, &want, &format!("[{label}] {mr}x{nr} k={k_len}"));
+                }
+            }
+        }
+    });
+}
+
+/// `mul_panel` / `fma_row` / `dot_panel_acc` at every length residue
+/// `0..=2*LANES+1` plus a deep panel — covering the all-tail, one-chunk,
+/// chunk-plus-every-tail and many-chunk cases of the vector arms.
+#[test]
+fn panel_ops_forced_level_matrix_matches_scalar_replay() {
+    let mut lens: Vec<usize> = (0..=2 * LANES + 1).collect();
+    lens.push(64);
+    lens.push(65);
+    for_each_forced_kernel(&mut |mul, label| {
+        for &n in &lens {
+            let mut rng = Pcg32::seeded(7600 + n as u64);
+            let a = edge_vec(&mut rng, n);
+            let b = edge_vec(&mut rng, n);
+            // mul_panel
+            let mut out = vec![0.0f32; n];
+            mul.mul_panel(&a, &b, &mut out);
+            let want: Vec<f32> = (0..n).map(|i| mul.mul(a[i], b[i])).collect();
+            assert_bits(&out, &want, &format!("[{label}] mul_panel n={n}"));
+            // dot: single chain, ascending adds
+            let got = mul.dot_panel_acc(0.25, &a, &b);
+            let mut acc = 0.25f32;
+            for i in 0..n {
+                acc += mul.mul(a[i], b[i]);
+            }
+            assert_bits(&[got], &[acc], &format!("[{label}] dot n={n}"));
+            // fma_row, with zero / nonzero broadcast operands (the zero
+            // operand drives the all-lanes-flushed vector path)
+            for x in [1.375f32, -0.0, 0.0, 2.5e30] {
+                let mut row_acc = edge_vec(&mut rng, n);
+                let mut row_ref = row_acc.clone();
+                mul.fma_row(&mut row_acc, x, &b);
+                for i in 0..n {
+                    row_ref[i] += mul.mul(x, b[i]);
+                }
+                assert_bits(&row_acc, &row_ref, &format!("[{label}] fma_row x={x} n={n}"));
+            }
+        }
+    });
+}
+
+/// Whole-GEMM differential at forced levels: the tiled micro-kernel path
+/// over `(m % MR, n % NR)` residues × threads {1, 8} against the scalar
+/// dispatch oracle — the same sweep `tests/microtile.rs` runs at the
+/// active level, here pinned per level so both vector arms and the
+/// scalar fallback are exercised in one process.
+#[test]
+fn gemm_tiled_forced_levels_match_scalar_oracle() {
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    let cfg = TileConfig { mc: 8, kc: 16, nc: 16, mr: 4, nr: 8 };
+    let k = 37;
+    for level in simd::available_levels() {
+        let kernels = [
+            MulKernel::NativeAt(level),
+            MulKernel::Lut(AmSim::with_simd(&lut, level)),
+        ];
+        for mul in &kernels {
+            for m in 12..16 {
+                for n in 16..24 {
+                    let mut rng = Pcg32::seeded(8100 + (m * 100 + n) as u64);
+                    let a = edge_vec(&mut rng, m * k);
+                    let b = edge_vec(&mut rng, k * n);
+                    let mut want = vec![0.0f32; m * n];
+                    gemm_scalar_reference(mul, &a, &b, &mut want, m, k, n);
+                    for threads in [1usize, 8] {
+                        let mut got = vec![0.0f32; m * n];
+                        gemm_tiled_with(mul, cfg, &a, &b, &mut got, m, k, n, threads);
+                        assert_bits(
+                            &got,
+                            &want,
+                            &format!(
+                                "[{}] ({m},{k},{n}) residue ({},{}) t={threads}",
+                                mul.describe(),
+                                m % 4,
+                                n % 8
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Odd-offset smoke: the vector arms use unaligned loads/stores
+/// throughout, so panels starting 1..3 floats into an allocation (4, 8,
+/// 12 bytes — never 32-byte aligned) must work and stay bit-identical.
+/// This is what lets packed panels land anywhere in the recycled buffers
+/// without alignment luck.
+#[test]
+fn unaligned_odd_offset_panels_match_scalar_replay() {
+    let n = 2 * LANES + 3;
+    for_each_forced_kernel(&mut |mul, label| {
+        let mut rng = Pcg32::seeded(9300);
+        let a_buf = edge_vec(&mut rng, n + 4);
+        let b_buf = edge_vec(&mut rng, n + 4);
+        for off in 1..=3usize {
+            let a = &a_buf[off..off + n];
+            let b = &b_buf[off..off + n];
+            let mut out_buf = vec![0.0f32; n + 4];
+            mul.mul_panel(a, b, &mut out_buf[off..off + n]);
+            let want: Vec<f32> = (0..n).map(|i| mul.mul(a[i], b[i])).collect();
+            assert_bits(&out_buf[off..off + n], &want, &format!("[{label}] off={off} panel"));
+            // micro-tile over the same offset slices (nr=9: one vector
+            // chunk plus a scalar-tail column — operands and acc all at
+            // odd offsets)
+            let (mr, nr, k_len) = (2usize, 9usize, 2usize);
+            let mut acc_buf = edge_vec(&mut rng, mr * nr + off);
+            let mut acc_ref: Vec<f32> = acc_buf[off..].to_vec();
+            mul.mul_microtile(
+                &mut acc_buf[off..],
+                &a[..mr * k_len],
+                &b[..k_len * nr],
+                mr,
+                nr,
+                k_len,
+            );
+            microtile_ref(mul, &mut acc_ref, &a[..mr * k_len], &b[..k_len * nr], mr, nr, k_len);
+            assert_bits(&acc_buf[off..], &acc_ref, &format!("[{label}] off={off} microtile"));
+        }
+    });
+}
+
+/// The cached process-wide level must equal the pure resolution of the
+/// actual environment against the actual detection — under ci.sh's
+/// second pass (`APPROXTRAIN_SIMD=scalar`) this pins the knob end to
+/// end: active() is then `Scalar` and every unforced kernel in the rest
+/// of the suite ran the portable fallback.
+#[test]
+fn active_level_matches_pure_resolution_of_env() {
+    let env = std::env::var(simd::ENV_KNOB).ok();
+    let expect = simd::resolve(env.as_deref(), SimdLevel::detected());
+    assert_eq!(simd::active(), expect, "env={env:?}");
+    assert!(simd::active() <= SimdLevel::detected());
+    if env.as_deref() == Some("scalar") {
+        assert_eq!(simd::active(), SimdLevel::Scalar);
+    }
+}
+
+/// Forcing a tier the machine lacks degrades (clamps) instead of
+/// faulting: requesting Avx2Fma everywhere must still run — and still
+/// match the scalar replay — even on a host detected below it.
+#[test]
+fn impossible_level_requests_clamp_and_stay_correct() {
+    let model = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(model.as_ref());
+    let sim = AmSim::with_simd(&lut, SimdLevel::Avx2Fma);
+    assert!(sim.simd_level() <= SimdLevel::detected());
+    let kernels = [
+        MulKernel::NativeAt(SimdLevel::Avx2Fma),
+        MulKernel::Lut(sim),
+    ];
+    let n = LANES + 3;
+    let mut rng = Pcg32::seeded(9500);
+    let a = edge_vec(&mut rng, n);
+    let b = edge_vec(&mut rng, n);
+    for mul in &kernels {
+        let mut out = vec![0.0f32; n];
+        mul.mul_panel(&a, &b, &mut out);
+        let want: Vec<f32> = (0..n).map(|i| mul.mul(a[i], b[i])).collect();
+        assert_bits(&out, &want, &format!("[{}] clamped", mul.describe()));
+    }
+}
