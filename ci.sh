@@ -54,22 +54,28 @@ step "cargo test --release -q with APPROXTRAIN_SIMD=scalar (portable-fallback pa
 # the two passes prove the knob reaches every dispatch site end to end
 APPROXTRAIN_SIMD=scalar cargo test --release -q || fail=1
 
-step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel edges + SIMD lanes + serving + data-parallel"
+step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel edges + SIMD lanes + sparse skipping + serving + data-parallel"
 # already part of the full release suite above, but pinned here explicitly
 # so the implicit-conv acceptance sweep, the MRxNR micro-kernel residue
 # sweep, the SIMD lane-differential net (forced-level x multiplier x
 # residue matrix, incl. the odd-offset unaligned-buffer smoke), the
-# serving-layer gates (multi-lane ≡ single-lane replies, partial-batch
-# cycle-padding, bounded-queue rejection), and the data-parallel
-# determinism gates (N-worker loss curves ≡ 1-worker, sharded-checkpoint
-# resume, aligned grad accumulation, fail-stop on replica panic) can
+# zero-skipping sparse-GEMM net (occupancy-residue x sparsity x
+# multiplier x level x threads vs the dense scalar oracle, the native
+# dense-fallback NaN proof, the lying-zero-identity teeth and the
+# closed-form skip-counter check), the serving-layer gates (multi-lane
+# ≡ single-lane replies, partial-batch cycle-padding, bounded-queue
+# rejection), and the data-parallel determinism gates (N-worker loss
+# curves ≡ 1-worker, sharded-checkpoint resume, aligned grad
+# accumulation, fail-stop on replica panic, masked sparse training) can
 # never silently drop out of the release-mode pass
 cargo test --release -q --test conv_grads --test batched_vs_scalar --test microtile \
-    --test simd_lanes --test server --test data_parallel || fail=1
+    --test simd_lanes --test sparse_gemm --test server --test data_parallel || fail=1
 
 step "bench smoke (tiny sizes; does not touch the committed BENCH records)"
 # the gemm smoke rows include the micro-kernel tiled path (and its mr1nr1
-# per-element-drain ablation row), each behind the bench's own
+# per-element-drain ablation row) plus the structured-sparsity sweep
+# (0/50/90% rows with occupancy-bitmap zero-skipping for flagged
+# multipliers, dense fallback for native), each behind the bench's own
 # bit-exactness gate against the scalar oracle; the serve smoke sweeps
 # lanes x load with every accepted reply gated against the single-lane
 # reference forward; the train smoke sweeps workers x strategy with every

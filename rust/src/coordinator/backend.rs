@@ -302,6 +302,20 @@ impl CpuBackend {
     pub fn replicas(&self, n: usize) -> Vec<CpuBackend> {
         (0..n).map(|_| self.clone()).collect()
     }
+
+    /// Replace the backend's weights with an externally trained (e.g.
+    /// pruned and fine-tuned) flat parameter vector; the length must
+    /// match the model's parameter count. Load before
+    /// [`replicas`](CpuBackend::replicas) so every serving lane carries
+    /// the loaded weights bit-identically.
+    pub fn load_flat_params(&mut self, flat: &[f32]) -> Result<()> {
+        let n = self.model.param_count();
+        if flat.len() != n {
+            bail!("flat params carry {} f32s, {} expects {n}", flat.len(), self.describe());
+        }
+        self.model.load_flat(flat);
+        Ok(())
+    }
 }
 
 impl InferBackend for CpuBackend {

@@ -56,6 +56,7 @@ use std::sync::Mutex;
 use anyhow::{anyhow, bail, Result};
 
 use super::backend::{CpuModel, MulSpec};
+use super::pruning::{apply_mask, Mask};
 use crate::data::{Batcher, Dataset, EvalBatcher};
 use crate::nn::checkpoint::Checkpoint;
 use crate::nn::metrics::correct_from_logits;
@@ -216,6 +217,7 @@ pub struct DpStepStats {
 pub struct DpTrainer {
     replicas: Vec<TrainReplica>,
     cfg: DpConfig,
+    mask: Option<Mask>,
 }
 
 impl DpTrainer {
@@ -245,7 +247,32 @@ impl DpTrainer {
         if replicas.iter().any(|r| r.model.param_count() != p0) {
             bail!("replicas disagree on parameter count");
         }
-        Ok(DpTrainer { replicas, cfg })
+        Ok(DpTrainer { replicas, cfg, mask: None })
+    }
+
+    /// Install (or clear) a pruning mask over the *flat* parameter
+    /// vector: while set, pruned entries are forced back to zero after
+    /// every optimizer step, so sparse fine-tuning stays sparse and the
+    /// zero-skipping GEMM drain keeps seeing dead panels. The mask rides
+    /// the determinism contract for free — it is applied once to the
+    /// post-reduction parameter vector and broadcast to every replica,
+    /// after the point where all replicas are already bit-identical, so
+    /// N-worker and 1-worker sparse training produce the same bits
+    /// (enforced by `rust/tests/data_parallel.rs`).
+    pub fn set_mask(&mut self, mask: Option<Mask>) -> Result<()> {
+        if let Some(m) = &mask {
+            let n = self.replicas[0].model.param_count();
+            if m.keep.len() != n {
+                bail!("mask covers {} params, model has {n}", m.keep.len());
+            }
+        }
+        self.mask = mask;
+        Ok(())
+    }
+
+    /// The installed flat-parameter mask, if any.
+    pub fn mask(&self) -> Option<&Mask> {
+        self.mask.as_ref()
     }
 
     pub fn config(&self) -> DpConfig {
@@ -376,6 +403,16 @@ impl DpTrainer {
         // bit-identical at step boundaries)
         for r in &mut self.replicas {
             r.model.apply_grads(&grad, self.cfg.lr);
+        }
+        // pruning mask: zero the pruned entries of the (now identical)
+        // post-step parameters once and broadcast, keeping replicas
+        // bit-identical at the step boundary
+        if let Some(mask) = &self.mask {
+            let mut flat = self.replicas[0].model.flat_params();
+            apply_mask(&mut flat, mask);
+            for r in &mut self.replicas {
+                r.model.load_flat(&flat);
+            }
         }
         // same `* (1/b)` head as the models' train_step, so a one-leaf DP
         // step reports bitwise the same loss/acc as a plain train_step
@@ -668,6 +705,37 @@ mod tests {
         let mut small = DpTrainer::new("lenet5", MulSpec::Native, cfg, 1).unwrap();
         assert!(small.load_sharded(&dir).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mask_is_validated_and_enforced_after_each_step() {
+        let cfg = DpConfig { workers: 1, shard: 4, lr: 0.05 };
+        let base = TrainReplica::for_model("lenet300", MulSpec::Native, 3).unwrap();
+        let mut tr = DpTrainer::from_replicas(base.replicas(1), cfg).unwrap();
+        let n = tr.flat_params().len();
+        // wrong-length masks are rejected before they can corrupt a run
+        assert!(tr.set_mask(Some(Mask { keep: vec![true; n + 1] })).is_err());
+        assert!(tr.mask().is_none());
+        let mut keep = vec![true; n];
+        for k in keep.iter_mut().step_by(3) {
+            *k = false;
+        }
+        tr.set_mask(Some(Mask { keep: keep.clone() })).unwrap();
+        let dims: usize = tr.replicas[0].model.input_dims().iter().product();
+        let mut rng = Pcg32::seeded(11);
+        let images: Vec<f32> = (0..8 * dims).map(|_| rng.range(-1.0, 1.0)).collect();
+        let labels: Vec<u32> = (0..8).map(|i| i % 10).collect();
+        tr.step(&images, &labels).unwrap();
+        let flat = tr.flat_params();
+        for (i, (&v, &k)) in flat.iter().zip(&keep).enumerate() {
+            if !k {
+                assert_eq!(v.to_bits(), 0.0f32.to_bits(), "pruned param {i} revived");
+            }
+        }
+        assert!(flat.iter().any(|&v| v != 0.0), "step zeroed everything");
+        // clearing the mask lets weights move freely again
+        tr.set_mask(None).unwrap();
+        assert!(tr.mask().is_none());
     }
 
     #[test]

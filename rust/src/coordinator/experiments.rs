@@ -121,6 +121,11 @@ pub fn fig1(results_dir: &Path) -> Result<String> {
 /// geometry, pool-threaded tiled) is asserted bit-identical to the scalar
 /// `AmSim::mul`-per-element reference (the paper's §VI footnote 2
 /// methodology), so the record can never report a fast-but-wrong kernel.
+/// The schema-v5 sparsity sweep extends the same policy to structured
+/// 0/50/90 % sparse operands: zero-skipping rows (multipliers with the
+/// audited zero-identity flag) are gated against their own strategy's
+/// scalar reference on the sparse inputs, and the native row doubles as a
+/// check that a non-gated strategy never elides a pair.
 ///
 /// Runs without artifacts — pure CPU path. Unlike the figure experiments
 /// it never touches the PJRT engine.
@@ -135,7 +140,7 @@ pub fn bench_gemm(
         gemm_panel, gemm_panel_threaded, gemm_scalar_reference, gemm_tiled_threaded,
         gemm_tiled_with, TileConfig,
     };
-    use crate::kernels::MulKernel;
+    use crate::kernels::{panel_pair_events, panel_skip_events, MulKernel};
     use crate::util::json::Json;
     use crate::util::simd::{self, SimdLevel};
     use crate::util::threads;
@@ -158,11 +163,13 @@ pub fn bench_gemm(
     );
     let mut records: Vec<Json> = Vec::new();
     let mut autotune: Vec<Json> = Vec::new();
+    let mut sparsity_rows: Vec<Json> = Vec::new();
     let mut best_cfg: Option<(f64, TileConfig)> = None;
     let mut headline_speedup = 0.0f64;
     let mut tiled_vs_panel = 0.0f64;
     let mut micro_vs_scalar_drain = 0.0f64;
     let mut simd_scalar_to_best = 0.0f64;
+    let mut sparse_speedup = 0.0f64;
     // the default tile geometry with the micro-kernel degenerated to the
     // per-element drain — the ablation partner for the micro-kernel rows
     let cfg_mr1 = TileConfig { mr: 1, nr: 1, ..TileConfig::DEFAULT };
@@ -443,12 +450,110 @@ pub fn bench_gemm(
                     best_cfg = Some((t, cfg));
                 }
             }
+
+            // pruning-aware sparsity sweep (schema v5): structured-sparse
+            // operands — mr-aligned dead A row-groups and nr-aligned dead
+            // B column bands, the shapes `magnitude_block_mask` produces —
+            // at 0/50/90 %, per strategy. Gated strategies (direct/LUT
+            // afm16) elide dead micro-panel pairs in the tile drain;
+            // native has no zero identity and provably runs dense. Every
+            // row is gated bit-exact against its own strategy's scalar
+            // reference on the *sparse* inputs before timing, and the
+            // drain counters are sampled around the gated run so each row
+            // records its measured pair/skip census.
+            let scfg = TileConfig::DEFAULT;
+            let mut t_sparse_dense = f64::NAN;
+            for &sparsity in &[0.0f32, 0.5, 0.9] {
+                let mut srng = Pcg32::seeded(4800 + (sparsity * 100.0) as u64);
+                let mut sa: Vec<f32> = (0..n * n).map(|_| srng.range(-1.0, 1.0)).collect();
+                let mut sb: Vec<f32> = (0..n * n).map(|_| srng.range(-1.0, 1.0)).collect();
+                let mut r0 = 0;
+                while r0 < n {
+                    let r1 = (r0 + scfg.mr).min(n);
+                    if srng.range(0.0, 1.0) < sparsity {
+                        sa[r0 * n..r1 * n].fill(0.0);
+                    }
+                    r0 = r1;
+                }
+                let mut j0 = 0;
+                while j0 < n {
+                    let j1 = (j0 + scfg.nr).min(n);
+                    if srng.range(0.0, 1.0) < sparsity {
+                        for kk in 0..n {
+                            sb[kk * n + j0..kk * n + j1].fill(0.0);
+                        }
+                    }
+                    j0 = j1;
+                }
+                for (strategy, mul) in [
+                    ("native_tiled", MulKernel::Native),
+                    ("direct_afm16_tiled", MulKernel::Direct(model.as_ref())),
+                    ("lut_afm16_tiled", MulKernel::Lut(AmSim::new(&lut))),
+                ] {
+                    let mut sref = vec![0.0f32; n * n];
+                    gemm_scalar_reference(&mul, &sa, &sb, &mut sref, n, n, n);
+                    let (p0, s0) = (panel_pair_events(), panel_skip_events());
+                    gemm_tiled_with(&mul, scfg, &sa, &sb, &mut c, n, n, n, 1);
+                    let (pairs, skips) =
+                        (panel_pair_events() - p0, panel_skip_events() - s0);
+                    for i in 0..n * n {
+                        if c[i].to_bits() != sref[i].to_bits() {
+                            return Err(anyhow!(
+                                "bench aborted: sparse {strategy} (sparsity {sparsity}) \
+                                 diverged from its scalar reference at n={n} idx {i}"
+                            ));
+                        }
+                    }
+                    if !mul.zero_skip_ok() && skips != 0 {
+                        return Err(anyhow!(
+                            "bench aborted: {strategy} has no zero identity but the \
+                             drain elided {skips} pairs"
+                        ));
+                    }
+                    let t = timed(&format!("sparse_{strategy}_s{sparsity}"), &mut || {
+                        gemm_tiled_with(&mul, scfg, &sa, &sb, &mut c, n, n, n, 1);
+                    });
+                    if strategy == "lut_afm16_tiled" {
+                        if sparsity == 0.0 {
+                            t_sparse_dense = t;
+                        } else if sparsity == 0.9 {
+                            sparse_speedup = t_sparse_dense / t;
+                        }
+                    }
+                    table.row(vec![
+                        format!("{n}x{n}x{n} s={:.0}%", sparsity * 100.0),
+                        format!("sparse_{strategy}"),
+                        fmt_time(t),
+                        fmt_ratio(t / t_native),
+                        fmt_ratio(t / t_scalar),
+                    ]);
+                    sparsity_rows.push(Json::obj(vec![
+                        ("m", Json::num(n as f64)),
+                        ("k", Json::num(n as f64)),
+                        ("n", Json::num(n as f64)),
+                        ("strategy", Json::str(strategy)),
+                        ("sparsity", Json::num(sparsity as f64)),
+                        ("zero_skip", Json::Bool(mul.zero_skip_ok())),
+                        ("panel_pairs", Json::num(pairs as f64)),
+                        ("panel_skips", Json::num(skips as f64)),
+                        (
+                            "skip_rate",
+                            Json::num(if pairs == 0 {
+                                0.0
+                            } else {
+                                skips as f64 / pairs as f64
+                            }),
+                        ),
+                        ("seconds_median", Json::num(t)),
+                    ]));
+                }
+            }
         }
     }
 
     let (best_t, best) = best_cfg.expect("autotune probed at least one config");
     let record = Json::obj(vec![
-        ("schema", Json::str("approxtrain/bench_gemm/v4")),
+        ("schema", Json::str("approxtrain/bench_gemm/v5")),
         (
             "description",
             Json::str(
@@ -457,7 +562,12 @@ pub fn bench_gemm(
                  kernels; tiled rows drain through the MRxNR register-blocked \
                  micro-kernel (mr1nr1 row = per-element drain ablation; \
                  *_simd_<level> rows = forced SimdLevel, isolating the AVX2 \
-                 vpgatherdd/FMA vector arms)",
+                 vpgatherdd/FMA vector arms); sparsity_records sweep structured \
+                 0/50/90% sparse operands per strategy with occupancy-bitmap \
+                 zero-skipping active for multipliers carrying the audited \
+                 zero-identity flag (native runs dense), each row gated bit-exact \
+                 against its strategy's scalar reference and annotated with the \
+                 drain's measured pair/skip census",
             ),
         ),
         (
@@ -493,6 +603,8 @@ pub fn bench_gemm(
         ("lut_tiled_speedup_vs_panel", Json::num(tiled_vs_panel)),
         ("lut_micro_speedup_vs_scalar_drain", Json::num(micro_vs_scalar_drain)),
         ("lut_simd_speedup_scalar_to_best", Json::num(simd_scalar_to_best)),
+        ("lut_sparse_speedup_90_vs_dense", Json::num(sparse_speedup)),
+        ("sparsity_records", Json::Arr(sparsity_rows)),
         (
             "autotune",
             Json::obj(vec![
@@ -532,6 +644,10 @@ pub fn bench_gemm(
          {simd_scalar_to_best:.2}x (detected {}, active {})\n",
         SimdLevel::detected().name(),
         simd::active().name()
+    ));
+    md.push_str(&format!(
+        "Zero-skipping LUT tiled at 90% structured sparsity vs dense operands \
+         at {last_size}: {sparse_speedup:.2}x\n"
     ));
     md.push_str(&format!(
         "Tiled vs panel LUT kernel at {last_size}: {tiled_vs_panel:.2}x \
@@ -1452,7 +1568,7 @@ pub fn fig11(
                     crate::data::Batcher::new(&train, tr.batch_size(), 42, 1000 + epoch as u64)
                 {
                     tr.step(&images, &labels)?;
-                    reapply_masks(tr.params_mut(), &masks);
+                    reapply_masks(tr.params_mut(), &masks)?;
                 }
             }
             row.push(format!("{:.2}", tr.evaluate(&test)? * 100.0));

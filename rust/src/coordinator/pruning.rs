@@ -5,8 +5,19 @@
 //! pre-train, then prune to increasing sparsity levels with brief retraining
 //! after each level. We implement the same schedule: sparsity(t) =
 //! final + (initial - final) * (1 - t/T)^3.
+//!
+//! Two mask shapes are provided. [`magnitude_mask`] is classic unstructured
+//! element-wise pruning. [`magnitude_block_mask`] prunes whole contiguous
+//! blocks by aggregate magnitude — the shape that actually feeds the
+//! zero-skipping sparse GEMM drain: the tiled kernel elides work at
+//! micro-panel granularity (`mr`-row groups × `nr`-column strips, see
+//! `kernels::gemm::PackA::pack_a_occ`), and unstructured sparsity almost
+//! never zeroes a whole panel (at 90% element sparsity the chance a 4×128
+//! row group is all-zero is `0.9^512 ≈ 10⁻²⁴`), while block pruning at the
+//! matrix-row granularity produces exactly the dead panels the drain skips.
 
 use crate::runtime::executor::Value;
+use anyhow::{bail, Result};
 
 /// Polynomial-decay sparsity schedule (TF model-optimization semantics).
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +51,11 @@ impl Mask {
 }
 
 /// Build a magnitude mask pruning the smallest-|w| fraction of `weights`.
+///
+/// Deterministic under ties and NaN-safe: candidates are ordered by
+/// `|w|` under [`f32::total_cmp`] (NaN sorts above every finite value,
+/// so NaN weights are treated as large and kept), and the sort is
+/// stable, so equal magnitudes prune in ascending index order.
 pub fn magnitude_mask(weights: &[f32], sparsity: f32) -> Mask {
     let n = weights.len();
     let k = ((n as f32) * sparsity.clamp(0.0, 1.0)).round() as usize;
@@ -47,10 +63,45 @@ pub fn magnitude_mask(weights: &[f32], sparsity: f32) -> Mask {
         return Mask { keep: vec![true; n] };
     }
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| weights[a].abs().partial_cmp(&weights[b].abs()).unwrap());
+    idx.sort_by(|&a, &b| weights[a].abs().total_cmp(&weights[b].abs()));
     let mut keep = vec![true; n];
     for &i in &idx[..k.min(n)] {
         keep[i] = false;
+    }
+    Mask { keep }
+}
+
+/// Build a *block-structured* magnitude mask: `weights` is scored in
+/// contiguous blocks of `block` elements (the final block may be short)
+/// by summed `|w|`, and the lowest-scoring fraction of blocks is pruned
+/// whole. Block count pruned = `round(nblocks * sparsity)`, so element
+/// sparsity tracks `sparsity` up to the block-count rounding.
+///
+/// This is the mask shape that feeds the zero-skipping GEMM drain: with
+/// `block` a multiple of the matrix row length (or of `nr` along a
+/// column band) the pruned blocks become whole dead micro-panels the
+/// tiled kernel can elide (see `kernels::gemm::PackA::pack_a_occ`),
+/// whereas unstructured masks almost never do. Same determinism and
+/// NaN policy as [`magnitude_mask`]: stable sort under `total_cmp`,
+/// ties prune in ascending block order, NaN scores count as large.
+pub fn magnitude_block_mask(weights: &[f32], sparsity: f32, block: usize) -> Mask {
+    let n = weights.len();
+    assert!(block > 0, "block size must be nonzero");
+    let nblocks = n.div_ceil(block);
+    let kb = ((nblocks as f32) * sparsity.clamp(0.0, 1.0)).round() as usize;
+    if kb == 0 {
+        return Mask { keep: vec![true; n] };
+    }
+    let score: Vec<f32> = (0..nblocks)
+        .map(|g| weights[g * block..((g + 1) * block).min(n)].iter().map(|v| v.abs()).sum())
+        .collect();
+    let mut idx: Vec<usize> = (0..nblocks).collect();
+    idx.sort_by(|&a, &b| score[a].total_cmp(&score[b]));
+    let mut keep = vec![true; n];
+    for &g in &idx[..kb.min(nblocks)] {
+        for k in &mut keep[g * block..((g + 1) * block).min(n)] {
+            *k = false;
+        }
     }
     Mask { keep }
 }
@@ -84,12 +135,35 @@ pub fn prune_params(params: &mut [Value], sparsity: f32, min_elems: usize) -> Ve
 }
 
 /// Re-apply masks after a training step (pruned weights stay zero).
-pub fn reapply_masks(params: &mut [Value], masks: &[Option<Mask>]) {
+///
+/// Every `(param, mask)` pair is validated *before* anything is
+/// mutated, so a shape mismatch (e.g. a parameter that was resized or
+/// retyped since [`prune_params`] built the masks) returns an error and
+/// leaves all parameters exactly as they were — no partially-masked
+/// state to corrupt a training run.
+pub fn reapply_masks(params: &mut [Value], masks: &[Option<Mask>]) -> Result<()> {
+    if params.len() != masks.len() {
+        bail!("reapply_masks: {} params but {} masks", params.len(), masks.len());
+    }
+    for (i, (v, m)) in params.iter().zip(masks).enumerate() {
+        if let Some(mask) = m {
+            match v {
+                Value::F32(data) if data.len() == mask.keep.len() => {}
+                Value::F32(data) => bail!(
+                    "reapply_masks: param {i} has {} elems but its mask covers {}",
+                    data.len(),
+                    mask.keep.len()
+                ),
+                _ => bail!("reapply_masks: param {i} is masked but no longer an F32 tensor"),
+            }
+        }
+    }
     for (v, m) in params.iter_mut().zip(masks) {
         if let (Value::F32(data), Some(mask)) = (v, m) {
             apply_mask(data, mask);
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -146,8 +220,94 @@ mod tests {
                 *v += 1.0;
             }
         }
-        reapply_masks(&mut params, &masks);
+        reapply_masks(&mut params, &masks).unwrap();
         let d = params[0].as_f32().unwrap();
         assert_eq!(d.iter().filter(|&&v| v == 0.0).count(), 2);
+    }
+
+    #[test]
+    fn magnitude_ties_prune_lowest_indices_first() {
+        // Four equal magnitudes (mixed signs): pruning 50% must drop the
+        // two *lowest-index* candidates, deterministically.
+        let w = vec![1.0, -1.0, 1.0, -1.0];
+        let mask = magnitude_mask(&w, 0.5);
+        assert_eq!(mask.keep, vec![false, false, true, true]);
+        // NaN counts as large under total_cmp and is kept.
+        let w = vec![f32::NAN, 0.5, 2.0, 0.25];
+        let mask = magnitude_mask(&w, 0.5);
+        assert_eq!(mask.keep, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn all_zero_and_all_equal_vectors_prune_deterministically() {
+        let zeros = vec![0.0; 6];
+        let mask = magnitude_mask(&zeros, 0.5);
+        assert_eq!(mask.keep, vec![false, false, false, true, true, true]);
+        let equal = vec![3.25; 6];
+        let mask = magnitude_mask(&equal, 0.5);
+        assert_eq!(mask.keep, vec![false, false, false, true, true, true]);
+        // sparsity 0 / 1 extremes
+        assert_eq!(magnitude_mask(&equal, 0.0).keep, vec![true; 6]);
+        assert_eq!(magnitude_mask(&equal, 1.0).keep, vec![false; 6]);
+        // empty input is fine
+        assert_eq!(magnitude_mask(&[], 0.5).keep, Vec::<bool>::new());
+    }
+
+    #[test]
+    fn min_elems_boundary_is_inclusive() {
+        // len == min_elems prunes; len == min_elems - 1 is left dense.
+        let mut params = vec![
+            Value::F32(vec![1.0, 0.001, 2.0, 0.002]), // exactly min_elems
+            Value::F32(vec![1.0, 0.001, 2.0]),        // one short
+        ];
+        let masks = prune_params(&mut params, 0.5, 4);
+        assert!(masks[0].is_some());
+        assert!(masks[1].is_none());
+        assert_eq!(params[1].as_f32().unwrap(), &[1.0, 0.001, 2.0]);
+    }
+
+    #[test]
+    fn block_mask_prunes_whole_low_magnitude_blocks() {
+        // Three blocks of 4 (last short): scores 4.0, 0.4, ~0.03.
+        let w = vec![1.0, -1.0, 1.0, 1.0, 0.1, 0.1, -0.1, 0.1, 0.01, -0.02];
+        let mask = magnitude_block_mask(&w, 0.67, 4);
+        // round(3 * 0.67) = 2 blocks pruned: the two lowest-scoring.
+        assert_eq!(
+            mask.keep,
+            vec![true, true, true, true, false, false, false, false, false, false]
+        );
+        // Tie between equal-score blocks prunes the lower block index.
+        let w = vec![0.5, 0.5, 0.5, 0.5, 9.0, 0.0];
+        let mask = magnitude_block_mask(&w, 0.34, 2);
+        assert_eq!(mask.keep, vec![false, false, true, true, true, true]);
+        // sparsity 0 keeps everything.
+        assert_eq!(magnitude_block_mask(&w, 0.0, 2).keep, vec![true; 6]);
+    }
+
+    #[test]
+    fn shape_changed_reapply_errors_without_corrupting() {
+        let mut params = vec![
+            Value::F32(vec![1.0, 0.01, 2.0, 0.02]),
+            Value::F32(vec![5.0, 0.05, 6.0, 0.06]),
+        ];
+        let masks = prune_params(&mut params, 0.5, 2);
+        // Revive everything, then resize the *second* tensor.
+        for v in &mut params {
+            if let Value::F32(d) = v {
+                for x in d.iter_mut() {
+                    *x = 7.0;
+                }
+            }
+        }
+        if let Value::F32(d) = &mut params[1] {
+            d.push(7.0);
+        }
+        let err = reapply_masks(&mut params, &masks).unwrap_err();
+        assert!(err.to_string().contains("param 1"), "{err}");
+        // Validation ran before mutation: param 0 was NOT re-masked.
+        assert_eq!(params[0].as_f32().unwrap(), &[7.0; 4]);
+        // Mask-count mismatch also errors.
+        let err = reapply_masks(&mut params[..1], &masks).unwrap_err();
+        assert!(err.to_string().contains("1 params but 2 masks"), "{err}");
     }
 }

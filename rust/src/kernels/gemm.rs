@@ -65,8 +65,31 @@
 //! *values* and the dot/accumulation code is shared, the implicit route
 //! is bit-identical to the materialized route by construction (enforced
 //! in `tests/conv_grads.rs` and `tests/batched_vs_scalar.rs`).
+//!
+//! ## The zero-skipping sparse drain
+//!
+//! Sparsity rides the same packing abstraction: [`PackA::pack_a_occ`] /
+//! [`PackB::pack_b_occ`] emit a per-micro-panel [`Occupancy`] bitmap next
+//! to the packed floats (one bit per `mr`-row group of the `A` panel, one
+//! per `nr`-column strip of the `B` panel — exactly the granularity the
+//! micro-kernel drains at), and `tile_into` elides every (a-row-group ×
+//! b-strip) pair in which either side is dead, so only live pairs reach
+//! [`MulBackend::mul_microtile`]. Magnitude-pruned models (see
+//! `coordinator::pruning`) thus stop paying dense cost through the packed
+//! tiles. Skipping is gated per multiplier by
+//! [`MulKernel::zero_skip_ok`] — the audited `mul(0, x)` zero-identity
+//! capability — and falls back to the dense drain (bit-for-bit the
+//! pre-sparsity behaviour, occupancy never scanned) where the identity
+//! fails, native hardware `*` included (`0 × inf == NaN`). The full
+//! bitwise-no-op argument lives on [`PackA::pack_a_occ`];
+//! `tests/sparse_gemm.rs` holds the occupancy-residue × sparsity
+//! differential net, the sign-of-zero teeth test and the dense-fallback
+//! proofs, and [`super::panel_skip_events`] counts elided pairs for
+//! observability.
 
-use super::{with_pack_buffers, MulBackend, MulKernel, MR_MAX, NR_MAX};
+use super::{
+    note_panel_drain, with_pack_buffers_occ, MulBackend, MulKernel, Occupancy, MR_MAX, NR_MAX,
+};
 use crate::util::threads::{self, SendMutPtr};
 
 /// Source of `A`-operand row-panels for the tiled GEMM — the packing half
@@ -85,6 +108,51 @@ use crate::util::threads::{self, SendMutPtr};
 /// worker pool's lanes (each into its own thread-local buffer).
 pub trait PackA: Sync {
     fn pack_a(&self, i0: usize, ih: usize, k0: usize, kw: usize, out: &mut [f32]);
+
+    /// Pack the panel **and** emit its per-micro-panel [`Occupancy`]
+    /// bitmap: one bit per `mr`-row group (group `g` covers packed rows
+    /// `[g*mr, min((g+1)*mr, ih))`; the last group may be short), set iff
+    /// the group holds at least one element with `v != 0.0`. `±0.0` is
+    /// dead; NaN and subnormals are live (conservative — the skip
+    /// argument below only needs *dead* to mean "exactly a signed zero").
+    ///
+    /// The default packs via [`PackA::pack_a`] and then scans the packed
+    /// floats ([`scan_packed_a`]), so every source — the materialized
+    /// [`SliceA`], the implicit im2col sources — gets a correct bitmap
+    /// for free; a source with cheaper structural knowledge (e.g. a
+    /// block-sparse store) may override, but the bitmap it emits must
+    /// equal the scan of its packed values.
+    ///
+    /// ## Why skipping a dead micro-panel pair is a bitwise no-op
+    ///
+    /// The drain elides a (row-group × strip) pair only when (a) the
+    /// multiplier passed [`MulKernel::zero_skip_ok`], so `mul(±0, x)` and
+    /// `mul(x, ±0)` are signed zeros for **every** `x` (NaN/inf
+    /// included), and (b) one side of the pair is all-`±0.0` — so every
+    /// elided product is a `±0.0`. Adding `±0.0` to an FP32 accumulator
+    /// is the identity for every value except `acc == -0.0` (where
+    /// `-0.0 + (+0.0) == +0.0` flips the sign bit). That residual case
+    /// cannot arise: [`gemm_tiled_src`] initializes `C` with `+0.0`
+    /// (`c.fill(0.0)`), and under round-to-nearest-even an addition only
+    /// produces `-0.0` from `(-0.0) + (-0.0)`, so an accumulator chain
+    /// seeded with `+0.0` can never reach `-0.0`. Hence eliding the adds
+    /// leaves the accumulator — and every later add in the ascending-`k`
+    /// chain — bitwise unchanged: the crate-wide contract survives.
+    /// `tests/sparse_gemm.rs::minus_zero_accumulator_is_the_load_bearing_edge`
+    /// is the teeth test showing the `+0.0`-fill premise is load-bearing.
+    fn pack_a_occ(
+        &self,
+        i0: usize,
+        ih: usize,
+        k0: usize,
+        kw: usize,
+        mr: usize,
+        out: &mut [f32],
+        occ: &mut Occupancy,
+    ) {
+        self.pack_a(i0, ih, k0, kw, out);
+        scan_packed_a(out, ih, kw, mr, occ);
+    }
 }
 
 /// Source of `B`-operand column-panels for the tiled GEMM.
@@ -107,6 +175,58 @@ pub trait PackA: Sync {
 /// layout (`out[j * kw + kk]`).
 pub trait PackB: Sync {
     fn pack_b(&self, j0: usize, jw: usize, k0: usize, kw: usize, nr: usize, out: &mut [f32]);
+
+    /// Pack the panel **and** emit its per-strip [`Occupancy`] bitmap:
+    /// one bit per `nr`-column strip (strip `s` covers panel columns
+    /// `[s*nr, min((s+1)*nr, jw))` — contiguous in the interleaved
+    /// layout), set iff the strip holds at least one `v != 0.0` element.
+    /// Same liveness convention, default implementation shape
+    /// (pack-then-scan via [`scan_packed_b`]) and override contract as
+    /// [`PackA::pack_a_occ`], where the full skip-safety argument lives.
+    fn pack_b_occ(
+        &self,
+        j0: usize,
+        jw: usize,
+        k0: usize,
+        kw: usize,
+        nr: usize,
+        out: &mut [f32],
+        occ: &mut Occupancy,
+    ) {
+        self.pack_b(j0, jw, k0, kw, nr, out);
+        scan_packed_b(out, jw, kw, nr, occ);
+    }
+}
+
+/// Scan a packed `A` panel (row-major `ih x kw`, the [`PackA::pack_a`]
+/// layout) into its per-`mr`-row-group occupancy bitmap. Row groups are
+/// contiguous in the packed layout, so each test is one linear sweep that
+/// short-circuits at the first live element.
+pub fn scan_packed_a(out: &[f32], ih: usize, kw: usize, mr: usize, occ: &mut Occupancy) {
+    let groups = ih.div_ceil(mr);
+    occ.reset(groups);
+    for g in 0..groups {
+        let r1 = ((g + 1) * mr).min(ih);
+        if out[g * mr * kw..r1 * kw].iter().any(|&v| v != 0.0) {
+            occ.set(g);
+        }
+    }
+}
+
+/// Scan a packed `B` panel (`nr`-strip interleaved, the [`PackB::pack_b`]
+/// layout) into its per-strip occupancy bitmap. Strips are contiguous
+/// (`kw * w` elements each), so each test is one linear sweep.
+pub fn scan_packed_b(out: &[f32], jw: usize, kw: usize, nr: usize, occ: &mut Occupancy) {
+    let strips = jw.div_ceil(nr);
+    occ.reset(strips);
+    let mut base = 0;
+    for s in 0..strips {
+        let w = nr.min(jw - s * nr);
+        if out[base..base + kw * w].iter().any(|&v| v != 0.0) {
+            occ.set(s);
+        }
+        base += kw * w;
+    }
 }
 
 /// [`PackA`] over a materialized row-major `M x K` slice (`k` = row
@@ -411,23 +531,55 @@ fn tile_into(
     let j0 = (tile % tile_cols) * cfg.nc;
     let j1 = (j0 + cfg.nc).min(n);
     let (ih, jw) = (i1 - i0, j1 - j0);
+    // Zero-skipping is decided once per GEMM: only multipliers with the
+    // audited zero identity may elide dead micro-panel pairs (see
+    // PackA::pack_a_occ for the bitwise no-op argument). Everything else
+    // — native hardware `*` included — takes the dense drain below with
+    // the occupancy bitmaps never scanned nor read.
+    let skip = mul.zero_skip_ok();
     // micro-tile accumulator block, on the stack (at most 1 KiB)
     let mut acc = [0.0f32; MR_MAX * NR_MAX];
-    with_pack_buffers(cfg.mc * cfg.kc, cfg.kc * cfg.nc, |apack, bpack| {
+    // (considered, skipped) micro-panel pair counts, accumulated in
+    // locals and flushed to the global observability counters once per
+    // tile so the hot loop never touches an atomic
+    let (pairs, skips) = with_pack_buffers_occ(cfg.mc * cfg.kc, cfg.kc * cfg.nc, |apack,
+                                                                                  bpack,
+                                                                                  a_occ,
+                                                                                  b_occ| {
+        let (mut pairs, mut skips) = (0u64, 0u64);
         for k0 in (0..k).step_by(cfg.kc) {
             let kn = (k0 + cfg.kc).min(k);
             let kw = kn - k0;
-            a.pack_a(i0, ih, k0, kw, &mut apack[..ih * kw]);
-            b.pack_b(j0, jw, k0, kw, cfg.nr, &mut bpack[..jw * kw]);
+            if skip {
+                a.pack_a_occ(i0, ih, k0, kw, cfg.mr, &mut apack[..ih * kw], a_occ);
+                b.pack_b_occ(j0, jw, k0, kw, cfg.nr, &mut bpack[..jw * kw], b_occ);
+            } else {
+                a.pack_a(i0, ih, k0, kw, &mut apack[..ih * kw]);
+                b.pack_b(j0, jw, k0, kw, cfg.nr, &mut bpack[..jw * kw]);
+            }
             for i in (0..ih).step_by(cfg.mr) {
                 let mh = cfg.mr.min(ih - i);
+                let a_live = !skip || a_occ.get(i / cfg.mr);
                 let a_rows = &apack[i * kw..(i + mh) * kw];
                 // walk the B panel strip by strip (strip s of width w
                 // starts at s*nr*kw — the PackB interleaved layout)
                 let mut strip = 0;
                 let mut j = 0;
+                let mut s = 0;
                 while j < jw {
                     let w = cfg.nr.min(jw - j);
+                    pairs += 1;
+                    if skip && !(a_live && b_occ.get(s)) {
+                        // dead pair: every elided product has a ±0.0
+                        // operand, so under the zero-identity gate every
+                        // elided add is a bitwise no-op on this (+0.0-
+                        // seeded, never −0.0) accumulator chain
+                        skips += 1;
+                        strip += kw * w;
+                        j += w;
+                        s += 1;
+                        continue;
+                    }
                     let b_strip = &bpack[strip..strip + kw * w];
                     if mh == 1 && w == 1 {
                         // A 1x1 micro-tile IS the per-element drain:
@@ -448,6 +600,7 @@ fn tile_into(
                         c_elem[0] = mul.dot_panel_acc(c_elem[0], a_rows, b_strip);
                         strip += kw;
                         j += 1;
+                        s += 1;
                         continue;
                     }
                     let acc_t = &mut acc[..mh * w];
@@ -481,10 +634,13 @@ fn tile_into(
                     }
                     strip += kw * w;
                     j += w;
+                    s += 1;
                 }
             }
         }
+        (pairs, skips)
     });
+    note_panel_drain(pairs, skips);
 }
 
 /// Warm-up: fan one rendezvous chunk per pool lane so each lane
@@ -509,7 +665,12 @@ pub fn warm_tiled() {
     let cfg = TileConfig::DEFAULT;
     let arrived = AtomicUsize::new(0);
     pool.run_chunks(lanes, lanes, |_, _, _| {
-        with_pack_buffers(cfg.mc * cfg.kc, cfg.kc * cfg.nc, |_, _| {});
+        with_pack_buffers_occ(cfg.mc * cfg.kc, cfg.kc * cfg.nc, |_, _, a_occ, b_occ| {
+            // size the occupancy words too, so a later zero-skipping
+            // (sparse) GEMM doesn't pay its first growth on a timed tile
+            a_occ.reset(cfg.mc.div_ceil(cfg.mr));
+            b_occ.reset(cfg.nc.div_ceil(cfg.nr));
+        });
         // Hold this chunk until every lane has claimed one, so exactly
         // one chunk runs on each distinct lane (otherwise the submitting
         // thread drains the whole no-op queue before workers wake). The
@@ -969,6 +1130,78 @@ mod tests {
     fn warm_tiled_is_idempotent() {
         warm_tiled();
         warm_tiled();
+    }
+
+    /// The pack-then-scan defaults: group/strip bits follow exactly the
+    /// documented `mr`-row-group / `nr`-strip geometry, `±0.0` is dead,
+    /// NaN is live.
+    #[test]
+    fn scan_helpers_mark_live_groups_and_strips() {
+        // A panel: 7 rows x 3 cols, mr = 2 -> groups {0,1},{2,3},{4,5},{6}
+        let mut a = vec![0.0f32; 7 * 3];
+        a[1 * 3 + 2] = 1.5; // group 0 live via row 1
+        a[5 * 3] = -0.0; // negative zero stays dead
+        a[6 * 3 + 1] = f32::NAN; // NaN is live (conservative)
+        let mut occ = Occupancy::default();
+        scan_packed_a(&a, 7, 3, 2, &mut occ);
+        assert_eq!(occ.panels(), 4);
+        assert!(occ.get(0) && !occ.get(1) && !occ.get(2) && occ.get(3));
+        assert_eq!(occ.live(), 2);
+
+        // B panel: jw = 5, kw = 2, nr = 2 -> strips of width 2,2,1 at
+        // interleaved offsets 0, 4, 8
+        let mut b = vec![0.0f32; 5 * 2];
+        b[4 + 3] = 2.0; // strip 1 live
+        scan_packed_b(&b, 5, 2, 2, &mut occ);
+        assert_eq!(occ.panels(), 3);
+        assert!(!occ.get(0) && occ.get(1) && !occ.get(2));
+
+        // and via the trait defaults on materialized slices: identical
+        let mut packed = vec![0.0f32; 7 * 3];
+        let mut occ2 = Occupancy::default();
+        SliceA { data: &a, k: 3 }.pack_a_occ(0, 7, 0, 3, 2, &mut packed, &mut occ2);
+        for g in 0..4 {
+            assert_eq!(occ2.get(g), [true, false, false, true][g], "group {g}");
+        }
+    }
+
+    /// Zero-skipping smoke (the full occupancy-residue × sparsity ×
+    /// SIMD × threads net lives in `tests/sparse_gemm.rs`): with
+    /// structured-sparse operands, every gated strategy stays
+    /// bit-identical to the dense scalar oracle, and the dense-fallback
+    /// native path is untouched by construction.
+    #[test]
+    fn zero_skipping_matches_dense_oracle_bitwise() {
+        let model = registry::by_name("afm16").unwrap();
+        let lut = MantissaLut::generate(model.as_ref());
+        let (m, k, n) = (21, 37, 27);
+        let mut rng = Pcg32::seeded(31);
+        let mut a = rand_vec(&mut rng, m * k);
+        let mut b = rand_vec(&mut rng, k * n);
+        // kill whole A rows and whole B columns (structured sparsity —
+        // what magnitude-pruned row/column blocks look like to the packer)
+        for i in [0, 1, 2, 3, 9, 20] {
+            a[i * k..(i + 1) * k].fill(0.0);
+        }
+        for j in [4, 5, 6, 7, 8, 9, 10, 11, 26] {
+            for kk in 0..k {
+                b[kk * n + j] = 0.0;
+            }
+        }
+        let cfg = TileConfig { mc: 8, kc: 16, nc: 8, mr: 2, nr: 4 };
+        for mul in [
+            MulKernel::Native, // dense fallback, still bit-exact
+            MulKernel::Direct(model.as_ref()),
+            MulKernel::Lut(AmSim::new(&lut)),
+        ] {
+            let mut want = vec![0.0f32; m * n];
+            gemm_scalar_reference(&mul, &a, &b, &mut want, m, k, n);
+            for threads in [1, 4] {
+                let mut got = vec![0.0f32; m * n];
+                gemm_tiled_with(&mul, cfg, &a, &b, &mut got, m, k, n, threads);
+                assert_bits_eq(&got, &want, &format!("sparse {} t={threads}", mul.describe()));
+            }
+        }
     }
 
     #[test]

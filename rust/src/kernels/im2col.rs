@@ -30,6 +30,13 @@
 //!   position and reads the undilated error array otherwise (§VI-B.2).
 //! * [`dilate_explicit`] — the naive separate-dilation baseline the paper
 //!   argues against; kept for the ablation benchmark.
+//!
+//! Occupancy: the implicit sources inherit [`PackA::pack_a_occ`]'s
+//! pack-then-scan default, so the sparse drain's per-micro-panel bitmaps
+//! come for free — including the padding/dilation zeros these sources
+//! synthesize, which register as dead exactly like materialized zeros
+//! (the occupancy leg of
+//! `tests::implicit_sources_pack_identically_to_materialized_slices`).
 
 use super::gemm::PackA;
 use super::Conv2dGeom;
@@ -485,6 +492,26 @@ mod tests {
                             want[i].to_bits(),
                             "{what} s{stride}p{pad} window ({i0},{ih},{k0},{kw}) idx {i}"
                         );
+                    }
+                    // occupancy (the sparse-drain contract): the implicit
+                    // source's pack_a_occ default must emit the exact
+                    // bitmap the materialized slice emits — the padding
+                    // zeros the im2col sources synthesize count as dead
+                    // panels the same way materialized zeros do
+                    for mr in [1usize, 2, 4] {
+                        let mut occ_got = crate::kernels::Occupancy::default();
+                        let mut occ_want = crate::kernels::Occupancy::default();
+                        implicit.pack_a_occ(i0, ih, k0, kw, mr, &mut got, &mut occ_got);
+                        slice.pack_a_occ(i0, ih, k0, kw, mr, &mut want, &mut occ_want);
+                        assert_eq!(occ_got.panels(), occ_want.panels());
+                        for gi in 0..occ_got.panels() {
+                            assert_eq!(
+                                occ_got.get(gi),
+                                occ_want.get(gi),
+                                "{what} s{stride}p{pad} mr={mr} window \
+                                 ({i0},{ih},{k0},{kw}) group {gi}"
+                            );
+                        }
                     }
                 }
             }

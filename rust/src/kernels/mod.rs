@@ -45,6 +45,17 @@
 //! [`SimdLevel`] (detection + `APPROXTRAIN_SIMD` override, see
 //! [`crate::util::simd`]); `tests/simd_lanes.rs` is the forced-level ×
 //! multiplier × residue differential net.
+//!
+//! Sparsity is a first-class property of a packed panel: the pack stage
+//! emits a per-micro-panel [`Occupancy`] bitmap next to the packed floats
+//! ([`gemm::PackA::pack_a_occ`] / [`gemm::PackB::pack_b_occ`]), and the
+//! tile drain skips dead (all-zero) `A`-row-group × `B`-strip pairs for
+//! multipliers that pass the audited zero-identity gate
+//! ([`MulKernel::zero_skip_ok`]); all other strategies take the dense
+//! path unchanged. Skipping preserves the accumulation contract bit for
+//! bit — see the safety argument on [`gemm::PackA::pack_a_occ`] and the
+//! [`panel_skip_events`] observability counters; `tests/sparse_gemm.rs`
+//! is the differential net.
 pub mod gemm;
 pub mod im2col;
 pub mod matvec;
@@ -110,6 +121,31 @@ impl<'a> MulKernel<'a> {
             MulKernel::NativeAt(l) => format!("native@{}", l.name()),
             MulKernel::Direct(m) => format!("direct:{}", m.name()),
             MulKernel::Lut(sim) => format!("lut:m{}", sim.mantissa_bits()),
+        }
+    }
+
+    /// Whether the tiled-GEMM drain may elide dead (all-zero) micro-panel
+    /// pairs under this strategy — the per-multiplier zero-identity gate
+    /// of the sparse packed GEMM (see [`gemm::PackA::pack_a_occ`] for the
+    /// full safety argument).
+    ///
+    /// - [`MulKernel::Native`] / [`MulKernel::NativeAt`]: **no**. Hardware
+    ///   `*` yields NaN for `0 × inf` and `0 × NaN`, so an elided product
+    ///   is not provably zero — the dense path is the only correct one.
+    /// - [`MulKernel::Direct`]: defers to the model's declared
+    ///   [`ApproxMul::zero_identity`] capability, which
+    ///   `tests/golden_mults.rs` audits against brute force so the flag
+    ///   can never drift from the functional model.
+    /// - [`MulKernel::Lut`]: **yes**, structurally — AMSim's Algorithm 2
+    ///   returns zero whenever either operand's exponent field is zero,
+    ///   *before* any special-case handling ([`AmSim::mul_bits`]), so
+    ///   `mul(±0, x) == 0` for every `x` by construction.
+    #[inline]
+    pub fn zero_skip_ok(&self) -> bool {
+        match self {
+            MulKernel::Native | MulKernel::NativeAt(_) => false,
+            MulKernel::Direct(m) => m.zero_identity(),
+            MulKernel::Lut(_) => true,
         }
     }
 
@@ -370,12 +406,105 @@ impl MulBackend for MulKernel<'_> {
     }
 }
 
+/// Per-micro-panel occupancy bitmap emitted by the packing stage next to
+/// the packed floats ([`gemm::PackA::pack_a_occ`] /
+/// [`gemm::PackB::pack_b_occ`]): one bit per micro-panel — an `mr`-row
+/// group of a packed `A` panel, an `nr`-column strip of a packed `B`
+/// panel. A **set** bit means the panel is *live* (holds at least one
+/// element with nonzero bits-ignored value, i.e. `v != 0.0`; NaN and
+/// subnormals count as live). A **clear** bit means every element is
+/// `±0.0` ("dead") and the tile drain may elide the whole micro-panel's
+/// products when the multiplier passes [`MulKernel::zero_skip_ok`].
+#[derive(Default)]
+pub struct Occupancy {
+    words: Vec<u64>,
+    panels: usize,
+}
+
+impl Occupancy {
+    /// Re-size for `panels` micro-panels and clear every bit to *dead*.
+    /// The backing words are recycled across calls (growth feeds the
+    /// [`buffer_growth_events`] counter like the pack buffers do), so
+    /// steady-state packing stays allocation-free.
+    pub fn reset(&mut self, panels: usize) {
+        let words = panels.div_ceil(64);
+        if self.words.len() < words {
+            self.words.resize(words, 0);
+            note_buffer_growth();
+        }
+        for w in &mut self.words[..words] {
+            *w = 0;
+        }
+        self.panels = panels;
+    }
+
+    /// Mark micro-panel `i` live.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.panels);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Is micro-panel `i` live?
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.panels);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Number of micro-panels covered by the last [`Occupancy::reset`].
+    pub fn panels(&self) -> usize {
+        self.panels
+    }
+
+    /// Number of live micro-panels.
+    pub fn live(&self) -> usize {
+        self.words[..self.panels.div_ceil(64)].iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+/// Global (a-row-group × b-strip) pair counters of the tiled drain —
+/// the observability hooks of the sparse GEMM. `PANEL_PAIRS` counts every
+/// pair the drain *considered*; `PANEL_SKIPS` counts the subset it elided
+/// as dead under the zero-identity gate. Relaxed atomics, flushed once
+/// per tile, so the hot loop only touches thread-locals.
+static PANEL_PAIRS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+static PANEL_SKIPS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Process-wide count of (a-row-group × b-strip) micro-panel pairs the
+/// tiled GEMM drain has considered. Monotonic; meaningful as a delta
+/// around a region (note: other threads running GEMMs concurrently also
+/// advance it).
+pub fn panel_pair_events() -> u64 {
+    PANEL_PAIRS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Process-wide count of micro-panel pairs the tiled GEMM drain *skipped*
+/// because both occupancy tests said dead and the multiplier passed
+/// [`MulKernel::zero_skip_ok`]. Always 0 for dense-fallback strategies.
+pub fn panel_skip_events() -> u64 {
+    PANEL_SKIPS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// One flush of a tile's locally-accumulated drain counters.
+pub(crate) fn note_panel_drain(pairs: u64, skips: u64) {
+    if pairs != 0 {
+        PANEL_PAIRS.fetch_add(pairs, std::sync::atomic::Ordering::Relaxed);
+    }
+    if skips != 0 {
+        PANEL_SKIPS.fetch_add(skips, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
 /// Reusable per-thread packing buffers for the tiled GEMM: one `A`
-/// row-panel (`MC x KC`) and one `B` column-panel (`KC x NC`).
+/// row-panel (`MC x KC`) and one `B` column-panel (`KC x NC`), plus their
+/// per-micro-panel [`Occupancy`] bitmaps.
 #[derive(Default)]
 struct PackBuffers {
     a: Vec<f32>,
     b: Vec<f32>,
+    a_occ: Occupancy,
+    b_occ: Occupancy,
 }
 
 thread_local! {
@@ -426,6 +555,31 @@ pub fn with_pack_buffers<R>(
         note_buffer_growth();
     }
     let r = f(&mut bufs.a[..a_len], &mut bufs.b[..b_len]);
+    PACK_BUFFERS.with(|c| c.set(Some(bufs)));
+    r
+}
+
+/// [`with_pack_buffers`] plus the two per-thread [`Occupancy`] bitmaps —
+/// the entry point of the zero-skipping tiled drain. The bitmaps are
+/// handed over un-reset (the packer calls [`Occupancy::reset`] per
+/// panel); like the float buffers they are recycled across calls on the
+/// same thread.
+pub fn with_pack_buffers_occ<R>(
+    a_len: usize,
+    b_len: usize,
+    f: impl FnOnce(&mut [f32], &mut [f32], &mut Occupancy, &mut Occupancy) -> R,
+) -> R {
+    let mut bufs = PACK_BUFFERS.with(|c| c.take()).unwrap_or_default();
+    if bufs.a.len() < a_len {
+        bufs.a.resize(a_len, 0.0);
+        note_buffer_growth();
+    }
+    if bufs.b.len() < b_len {
+        bufs.b.resize(b_len, 0.0);
+        note_buffer_growth();
+    }
+    let PackBuffers { a, b, a_occ, b_occ } = &mut *bufs;
+    let r = f(&mut a[..a_len], &mut b[..b_len], a_occ, b_occ);
     PACK_BUFFERS.with(|c| c.set(Some(bufs)));
     r
 }
@@ -604,6 +758,39 @@ mod tests {
             });
         });
         with_scratch(3, |s| assert_eq!(s.len(), 3));
+    }
+
+    #[test]
+    fn occupancy_bitmap_set_get_live_across_word_boundaries() {
+        let mut occ = Occupancy::default();
+        for panels in [1, 63, 64, 65, 130] {
+            occ.reset(panels);
+            assert_eq!(occ.panels(), panels);
+            assert_eq!(occ.live(), 0, "reset must clear all {panels} bits");
+            for i in (0..panels).step_by(3) {
+                occ.set(i);
+            }
+            for i in 0..panels {
+                assert_eq!(occ.get(i), i % 3 == 0, "panels={panels} bit {i}");
+            }
+            assert_eq!(occ.live(), panels.div_ceil(3));
+        }
+        // shrinking reuses the words and re-clears them
+        occ.reset(2);
+        assert_eq!((occ.panels(), occ.live()), (2, 0));
+        assert!(!occ.get(0) && !occ.get(1));
+    }
+
+    #[test]
+    fn zero_skip_gate_follows_strategy_and_declared_flag() {
+        let afm = registry::by_name("afm16").unwrap();
+        let fp32 = registry::by_name("fp32").unwrap();
+        let lut = MantissaLut::generate(afm.as_ref());
+        assert!(!MulKernel::Native.zero_skip_ok(), "hardware 0*inf is NaN");
+        assert!(!MulKernel::NativeAt(SimdLevel::Scalar).zero_skip_ok());
+        assert!(MulKernel::Direct(afm.as_ref()).zero_skip_ok());
+        assert!(!MulKernel::Direct(fp32.as_ref()).zero_skip_ok(), "IEEE baseline");
+        assert!(MulKernel::Lut(crate::amsim::AmSim::new(&lut)).zero_skip_ok());
     }
 
     #[test]

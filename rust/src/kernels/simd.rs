@@ -19,6 +19,15 @@
 //!
 //! All loads/stores are unaligned; callers guarantee the target
 //! features are present (levels are clamped to the machine).
+//!
+//! Sparsity: the zero-skipping tiled drain (`gemm::tile_into`) elides
+//! dead micro-panel pairs *above* this dispatch layer — a skipped pair
+//! simply never calls these arms — so scalar and vector arms need no
+//! occupancy awareness and their per-arm bit-exactness contract is
+//! untouched. (The native arms can never be reached from a skip-enabled
+//! drain anyway: hardware `*` fails the zero identity, see
+//! [`super::MulKernel::zero_skip_ok`], so native GEMMs always run the
+//! dense drain these arms were verified against.)
 
 use core::arch::x86_64::*;
 

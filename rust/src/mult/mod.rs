@@ -51,6 +51,28 @@ pub trait ApproxMul: Send + Sync {
     /// This is the piece Algorithm 1 extracts by probing `mul`; models
     /// implement `mul` in terms of it via [`models::mul_via_mantissa`].
     fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32);
+
+    /// Capability flag: does this model satisfy the *zero identity*
+    /// `mul(±0, x) == ±0` and `mul(x, ±0) == ±0` (a zero of the XOR-sign,
+    /// i.e. the IEEE product sign) for **every** operand `x` — finite,
+    /// subnormal, infinite and NaN alike?
+    ///
+    /// This is the machine-checked contract the sparse packed-GEMM drain
+    /// relies on to skip all-zero micro-panels (see
+    /// `kernels::gemm::PackA::pack_a_occ` and `MulKernel::zero_skip_ok`):
+    /// a skipped (a-panel × b-strip) pair is a bitwise no-op only if every
+    /// elided product would have been a zero, which `0 × inf == NaN`
+    /// hardware semantics violate. Models returning `true` here commit to
+    /// zero-dominant semantics — a zero (or flushed-subnormal) operand
+    /// yields a signed zero *before* IEEE special-case handling, the way
+    /// real approximate datapaths gate a zero operand. The default is the
+    /// conservative `false` (dense fallback); the declared flag is audited
+    /// against brute-force behaviour over all exponent/mantissa corners and
+    /// specials in `tests/golden_mults.rs`, so it cannot silently drift
+    /// from the functional model.
+    fn zero_identity(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -13,16 +13,34 @@ use super::ApproxMul;
 /// product to the model, re-assemble with flush-to-zero and overflow-to-inf
 /// semantics (matching AMSim, paper Alg. 2 lines 12-19, with the exp+carry
 /// overflow check applied *after* the carry — see `amsim` module docs).
+///
+/// Special-case ordering is governed by the model's
+/// [`ApproxMul::zero_identity`] flag. Models *without* the flag (the exact
+/// IEEE baselines) delegate any NaN/inf operand to hardware semantics
+/// first, so `0 × inf == NaN` exactly as `f32` multiplication would.
+/// Models *with* the flag are zero-dominant, like AMSim's Algorithm-2
+/// datapath and real approximate-hardware designs that gate on a zero
+/// operand: a zero (or flushed-subnormal) operand yields the signed zero
+/// of the XOR sign before NaN/inf handling, which is what licenses the
+/// sparse GEMM drain to elide the product entirely.
 pub fn mul_via_mantissa(model: &dyn ApproxMul, a: f32, b: f32) -> f32 {
-    if a.is_nan() || b.is_nan() || a.is_infinite() || b.is_infinite() {
+    let specials = a.is_nan() || b.is_nan() || a.is_infinite() || b.is_infinite();
+    if specials && !model.zero_identity() {
         return a * b; // delegate IEEE special cases to hardware semantics
     }
     let pa = decompose(a);
     let pb = decompose(b);
     let sign = pa.sign ^ pb.sign;
     if pa.exp == 0 || pb.exp == 0 {
-        // zero or subnormal operand -> (signed) zero, AMSim line 13
+        // zero or subnormal operand -> (signed) zero, AMSim line 13.
+        // For zero-identity models this dominates NaN/inf on the other
+        // operand; for the rest it is unreachable with specials present.
         return compose(FpParts { sign, exp: 0, mant: 0 });
+    }
+    if specials {
+        // nonzero × NaN/inf under a zero-dominant model: the zero gate did
+        // not fire, so hardware semantics apply (inf stays inf, NaN NaN).
+        return a * b;
     }
     let (carry, mant) = model.mantissa_product(pa.mant, pb.mant);
     // flush-to-zero checked on the *pre-carry* exponent (paper Alg. 2
@@ -56,12 +74,24 @@ pub struct ExactFp {
     /// round-to-nearest-even if true, round-toward-zero if false
     /// (round-toward-zero gives the DRUM-style `trunc16` design)
     rne: bool,
+    /// zero-dominant special handling (see [`ApproxMul::zero_identity`]).
+    /// Off for the IEEE baselines (fp32/bfloat16/fp16 must keep hardware
+    /// `0 × inf == NaN` semantics), on for approximate-hardware designs
+    /// modeled through `ExactFp` (the DRUM-style `trunc16`).
+    zero_id: bool,
 }
 
 impl ExactFp {
     pub fn new(name: &str, m: u32, rne: bool) -> Self {
         assert!((1..=MANT_BITS).contains(&m));
-        ExactFp { name: name.to_string(), m, rne }
+        ExactFp { name: name.to_string(), m, rne, zero_id: false }
+    }
+
+    /// Builder: declare the zero-identity capability (zero-dominant
+    /// specials). Audited against brute force in `tests/golden_mults.rs`.
+    pub fn with_zero_identity(mut self) -> Self {
+        self.zero_id = true;
+        self
     }
 }
 
@@ -74,6 +104,9 @@ impl ApproxMul for ExactFp {
     }
     fn mul(&self, a: f32, b: f32) -> f32 {
         mul_via_mantissa(self, a, b)
+    }
+    fn zero_identity(&self) -> bool {
+        self.zero_id
     }
 
     fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32) {
@@ -138,6 +171,12 @@ impl ApproxMul for Mitchell {
         mul_via_mantissa(self, a, b)
     }
 
+    // Log-domain datapath: a zero operand gates the whole product to a
+    // signed zero before special handling, matching AMSim's Algorithm 2.
+    fn zero_identity(&self) -> bool {
+        true
+    }
+
     fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32) {
         let s = trunc_m(ma, self.m) + trunc_m(mb, self.m); // x + y, 24 bits
         if s >= 1 << MANT_BITS {
@@ -187,6 +226,11 @@ impl ApproxMul for Afm {
     }
     fn mul(&self, a: f32, b: f32) -> f32 {
         mul_via_mantissa(self, a, b)
+    }
+
+    // Zero-dominant like the other approximate designs (see Mitchell).
+    fn zero_identity(&self) -> bool {
+        true
     }
 
     fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32) {
@@ -250,6 +294,11 @@ impl ApproxMul for Realm {
         mul_via_mantissa(self, a, b)
     }
 
+    // Zero-dominant like the other approximate designs (see Mitchell).
+    fn zero_identity(&self) -> bool {
+        true
+    }
+
     fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32) {
         let ma = trunc_m(ma, self.m);
         let mb = trunc_m(mb, self.m);
@@ -295,6 +344,11 @@ impl ApproxMul for AndCompensated {
     }
     fn mul(&self, a: f32, b: f32) -> f32 {
         mul_via_mantissa(self, a, b)
+    }
+
+    // Zero-dominant like the other approximate designs (see Mitchell).
+    fn zero_identity(&self) -> bool {
+        true
     }
 
     fn mantissa_product(&self, ma: u32, mb: u32) -> (u32, u32) {
@@ -355,6 +409,31 @@ mod tests {
             assert!(m.mul(-2.0, 3.0) < 0.0, "{}", m.name());
             assert!(m.mul(-2.0, -3.0) > 0.0, "{}", m.name());
         }
+    }
+
+    /// Special-case ordering follows the declared zero-identity flag:
+    /// IEEE baselines keep hardware `0 × inf == NaN`; zero-dominant models
+    /// return the signed zero of the XOR sign even against NaN/inf, and
+    /// still propagate NaN/inf when no zero operand gates them.
+    #[test]
+    fn zero_dominance_follows_the_declared_flag() {
+        let fp32 = ExactFp::new("fp32", 23, true);
+        assert!(!fp32.zero_identity());
+        assert!(fp32.mul(0.0, f32::INFINITY).is_nan());
+        assert!(fp32.mul(f32::NAN, 0.0).is_nan());
+
+        let tr = ExactFp::new("trunc16", 7, false).with_zero_identity();
+        assert!(tr.zero_identity());
+        assert_eq!(tr.mul(0.0, f32::INFINITY).to_bits(), 0.0f32.to_bits());
+        assert_eq!(tr.mul(f32::INFINITY, -0.0).to_bits(), (-0.0f32).to_bits());
+
+        let mit = Mitchell::new("mit16", 7);
+        assert!(mit.zero_identity());
+        assert_eq!(mit.mul(f32::NAN, 0.0).to_bits(), 0.0f32.to_bits());
+        // no zero gate -> hardware semantics still apply
+        assert!(mit.mul(f32::NAN, 1.0).is_nan());
+        assert_eq!(mit.mul(f32::INFINITY, 2.0), f32::INFINITY);
+        assert_eq!(mit.mul(-2.0, f32::INFINITY), f32::NEG_INFINITY);
     }
 
     #[test]

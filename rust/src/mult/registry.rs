@@ -26,7 +26,9 @@ pub fn by_name(name: &str) -> Option<Box<dyn ApproxMul>> {
         "afm16" => Box::new(Afm::new("afm16", 7, 4)),
         "mit16" => Box::new(Mitchell::new("mit16", 7)),
         "realm16" => Box::new(Realm::new("realm16", 7)),
-        "trunc16" => Box::new(ExactFp::new("trunc16", 7, false)),
+        // DRUM-style truncation is an approximate design, not an IEEE
+        // baseline: it gates on a zero operand (zero-dominant specials)
+        "trunc16" => Box::new(ExactFp::new("trunc16", 7, false).with_zero_identity()),
         "comp16" => Box::new(AndCompensated::new("comp16", 7)),
         _ => return None,
     })
@@ -36,6 +38,18 @@ pub fn by_name(name: &str) -> Option<Box<dyn ApproxMul>> {
 /// AMSim supports m in 1..=12; wider mantissas use direct simulation).
 pub fn lut_able(name: &str) -> bool {
     by_name(name).map(|m| m.mantissa_bits() <= 12).unwrap_or(false)
+}
+
+/// Whether a registered multiplier declares the zero identity
+/// ([`ApproxMul::zero_identity`]): `mul(±0, x) == ±0` for every `x`,
+/// NaN/inf included. This is the per-registry-entry gate for the sparse
+/// GEMM's zero-skipping drain (`MulKernel::zero_skip_ok`); entries
+/// answering `false` — the exact IEEE baselines, whose `0 × inf` must stay
+/// NaN — always take the dense path. Unknown names are conservatively
+/// `false`. The flag is audited against brute-force model behaviour in
+/// `tests/golden_mults.rs`.
+pub fn zero_identity(name: &str) -> bool {
+    by_name(name).map(|m| m.zero_identity()).unwrap_or(false)
 }
 
 #[cfg(test)]
@@ -62,5 +76,19 @@ mod tests {
         assert!(!lut_able("afm32"));
         assert!(!lut_able("fp32"));
         assert!(!lut_able("nope"));
+    }
+
+    /// The zero-identity capability splits the registry exactly along the
+    /// exact-baseline / approximate-design line (the brute-force audit of
+    /// the flag itself lives in tests/golden_mults.rs).
+    #[test]
+    fn zero_identity_splits_baselines_from_approximate_designs() {
+        for name in ["fp32", "bfloat16", "fp16"] {
+            assert!(!zero_identity(name), "{name} must stay IEEE-exact");
+        }
+        for name in ["afm32", "afm16", "mit16", "realm16", "trunc16", "comp16"] {
+            assert!(zero_identity(name), "{name} should be zero-dominant");
+        }
+        assert!(!zero_identity("nope"));
     }
 }

@@ -23,6 +23,7 @@
 
 use approxtrain::coordinator::backend::{CpuModel, MulSpec};
 use approxtrain::coordinator::data_parallel::{DpConfig, DpTrainer, TrainReplica};
+use approxtrain::coordinator::pruning::magnitude_mask;
 use approxtrain::mult::ApproxMul;
 use approxtrain::nn::cpu_lenet::Lenet300;
 use approxtrain::nn::cpu_resnet::{CpuResnet, Depth};
@@ -110,6 +111,46 @@ fn n_worker_training_is_bit_identical_to_one_worker() {
                 "{mode}: loss/acc curve diverged at workers={workers}"
             );
             assert_bits_eq(&ref_params, &params, &format!("{mode} workers={workers} params"));
+        }
+    }
+}
+
+/// Sparse fine-tuning rides the same invariant: with a pruning mask
+/// installed (`DpTrainer::set_mask`, re-applied after every optimizer
+/// step), N-worker and 1-worker training produce bit-identical curves
+/// and parameters — the mask is applied once to the post-reduction
+/// parameter vector and broadcast, after the point where replicas are
+/// already identical — and the pruned entries stay exactly +0.0 bits
+/// through every step (the precondition the zero-skipping GEMM drain's
+/// occupancy scan relies on).
+#[test]
+fn sparse_training_with_masks_is_bit_identical_across_worker_counts() {
+    let data = batches(4, 12, 888);
+    for mode in ["native", "lut:afm16"] {
+        let spec = MulSpec::parse(mode).unwrap();
+        // prune 60% of the initial weights by magnitude
+        let mask = magnitude_mask(&lenet_trainer(1, 4, &spec, 31).flat_params(), 0.6);
+        let run = |workers: usize| {
+            let mut tr = lenet_trainer(workers, 4, &spec, 31);
+            tr.set_mask(Some(mask.clone())).unwrap();
+            let out = run_curve(&mut tr, &data);
+            for (i, (&bits, &k)) in out.1.iter().zip(&mask.keep).enumerate() {
+                if !k {
+                    assert_eq!(
+                        bits,
+                        0.0f32.to_bits(),
+                        "{mode} workers={workers}: pruned param {i} revived"
+                    );
+                }
+            }
+            out
+        };
+        let (ref_curve, ref_params) = run(1);
+        assert!(ref_curve.iter().any(|&(l, _)| f32::from_bits(l) > 0.0), "{mode}: flat curve");
+        for workers in [2usize, 5] {
+            let (curve, params) = run(workers);
+            assert_eq!(curve, ref_curve, "{mode}: sparse curve diverged at workers={workers}");
+            assert_bits_eq(&ref_params, &params, &format!("{mode} sparse workers={workers}"));
         }
     }
 }

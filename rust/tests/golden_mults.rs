@@ -18,8 +18,14 @@
 //! AMSim's domain is finite operands (biased exponent fields 0..=254):
 //! Algorithm 2 has no Inf/NaN lanes, and an exp=255 operand would be
 //! treated as an ordinary huge exponent. Inf/NaN behaviour is therefore
-//! asserted against the *direct* model only (which delegates IEEE
-//! specials to hardware semantics) — see `direct_models_handle_ieee_specials`.
+//! asserted against the *direct* model only — see
+//! `direct_models_handle_ieee_specials`: models declaring the
+//! `zero_identity` capability gate a zero operand to a signed zero even
+//! against Inf/NaN, the rest delegate IEEE specials to hardware
+//! semantics. The declared flag itself is audited against brute force in
+//! `declared_zero_identity_flags_match_brute_force` — it is the
+//! machine-checked license for the zero-skipping GEMM drain
+//! (`kernels::gemm`), so a wrong flag is a silent bit-exactness bug.
 
 use approxtrain::amsim::AmSim;
 use approxtrain::kernels::{MulBackend, MulKernel, SimdLevel};
@@ -224,18 +230,100 @@ fn special_operands_and_overflow_edge() {
     }
 }
 
-/// Inf/NaN operands are outside AMSim's domain (module docs); the direct
-/// functional models delegate them to IEEE hardware semantics.
+/// Inf/NaN operands are outside AMSim's domain (module docs). With a
+/// *nonzero* partner every direct model delegates them to IEEE hardware
+/// semantics; with a zero partner the behaviour splits on the declared
+/// `zero_identity` capability — zero-dominant designs gate the product
+/// to a signed zero before the special lanes ever run, IEEE baselines
+/// keep the hardware invalid-operation NaN.
 #[test]
 fn direct_models_handle_ieee_specials() {
     for model in golden_models() {
         let name = model.name();
+        // nonzero x inf/NaN is hardware semantics on every model
         assert_eq!(model.mul(f32::INFINITY, 2.0), f32::INFINITY, "{name}");
         assert_eq!(model.mul(f32::NEG_INFINITY, 2.0), f32::NEG_INFINITY, "{name}");
         assert_eq!(model.mul(f32::INFINITY, -3.0), f32::NEG_INFINITY, "{name}");
-        assert!(model.mul(f32::INFINITY, 0.0).is_nan(), "{name}: inf*0");
         assert!(model.mul(f32::NAN, 1.5).is_nan(), "{name}: nan*x");
         assert!(model.mul(2.5, f32::NAN).is_nan(), "{name}: x*nan");
+        if model.zero_identity() {
+            // zero-dominant: the property that licenses zero-skipping
+            assert_eq!(
+                model.mul(f32::INFINITY, 0.0).to_bits(),
+                0.0f32.to_bits(),
+                "{name}: inf*0"
+            );
+            assert_eq!(
+                model.mul(f32::INFINITY, -0.0).to_bits(),
+                (-0.0f32).to_bits(),
+                "{name}: inf*-0"
+            );
+            assert_eq!(model.mul(f32::NAN, 0.0).to_bits(), 0.0f32.to_bits(), "{name}: nan*0");
+        } else {
+            assert!(model.mul(f32::INFINITY, 0.0).is_nan(), "{name}: inf*0");
+            assert!(model.mul(0.0, f32::NAN).is_nan(), "{name}: 0*nan");
+        }
+    }
+}
+
+/// Machine-checked audit of the `zero_identity` capability flag — the
+/// license for the zero-skipping GEMM drain (`kernels::gemm`). For
+/// **every** registered multiplier (not just the tabulatable ones), the
+/// declared flag must match brute force: `mul(±0, x)` and `mul(x, ±0)`
+/// over exponent/mantissa corners and the IEEE specials (signed zeros,
+/// subnormals, ±inf, NaN payloads of both signs) either *always* yield
+/// the signed zero of the IEEE product sign (flag true) or violate that
+/// somewhere (flag false — a model that satisfies the identity but does
+/// not declare it runs the dense drain for nothing, which this test also
+/// refuses to let pass silently).
+#[test]
+fn declared_zero_identity_flags_match_brute_force() {
+    let mut xs: Vec<u32> = Vec::new();
+    for exp in [0u32, 1, 2, 126, 127, 128, 253, 254, 255] {
+        for mant in [0u32, 1, MANT_MASK / 2, MANT_MASK] {
+            for sign in [0u32, 1] {
+                // exp=255 rows: mant=0 is +-inf, mant!=0 are NaN payloads
+                xs.push(bits(sign, exp, mant));
+            }
+        }
+    }
+    for name in registry::names() {
+        let model = registry::by_name(name).unwrap();
+        let declared = model.zero_identity();
+        assert_eq!(
+            declared,
+            registry::zero_identity(name),
+            "{name}: registry helper disagrees with the model"
+        );
+        let mut violation: Option<(u32, u32, u32, u32)> = None;
+        for &xb in &xs {
+            let x = f32::from_bits(xb);
+            for zb in [0u32, 1u32 << 31] {
+                let z = f32::from_bits(zb);
+                // the contract: a zero of the IEEE product (XOR) sign
+                let want = (xb ^ zb) & (1u32 << 31);
+                for (a, b) in [(z, x), (x, z)] {
+                    let got = model.mul(a, b).to_bits();
+                    if got != want && violation.is_none() {
+                        violation = Some((a.to_bits(), b.to_bits(), got, want));
+                    }
+                }
+            }
+        }
+        match (declared, violation) {
+            (true, Some((a, b, got, want))) => panic!(
+                "{name} declares zero_identity but mul({a:#010x}, {b:#010x}) = \
+                 {got:#010x}, want {want:#010x} — skipping this model's dead \
+                 panels would change bits"
+            ),
+            (false, None) => panic!(
+                "{name} satisfies the zero identity on the whole corner sweep \
+                 but does not declare it — the sparse drain falls back to dense \
+                 for nothing; declare the flag (or add the violating operand \
+                 to this sweep)"
+            ),
+            _ => {}
+        }
     }
 }
 

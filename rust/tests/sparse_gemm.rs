@@ -1,0 +1,382 @@
+//! Differential net for the zero-skipping sparse packed GEMM
+//! (`kernels::gemm`), the teeth of this crate's occupancy-bitmap drain.
+//!
+//! What is proven here, strategy by strategy:
+//!
+//! * **Bit-identity under skipping** — for every gated multiplier (LUT
+//!   kernels structurally, direct kernels by their audited
+//!   `zero_identity` flag), the tiled GEMM over structured-sparse
+//!   operands is bit-identical to the dense per-element scalar oracle at
+//!   every occupancy residue (short row-groups, short strips), sparsity
+//!   level (0 / 50 / 90 %), forced SIMD level and thread count.
+//! * **Dense fallback** — non-gated strategies (native hardware `*`)
+//!   provably run the dense drain: their `0 × inf = NaN` semantics
+//!   survive (a skipped pair would have silently produced `+0.0`), and
+//!   the skip counter never moves while the pair counter does.
+//! * **The sign-of-zero edge** — the `+0.0`-seeded accumulator premise
+//!   in the skip-safety argument (`PackA::pack_a_occ` docs) is
+//!   load-bearing: `-0.0 + 0.0` flips bits, so the suite pins that dead
+//!   output rows come out as exactly `+0.0` on both the skipped and the
+//!   dense path.
+//! * **Skipping actually happens** — a multiplier that *lies* about the
+//!   zero identity visibly changes output bits versus its own scalar
+//!   reference, and the elided-pair counters match a closed-form count
+//!   on an aligned geometry. Without these, the whole net could pass
+//!   with the skip branch dead code.
+//!
+//! The drain's pair/skip counters are process-global; every test that
+//! reads them (or whose GEMMs would advance them mid-read) serializes on
+//! a file-local mutex so the deltas are attributable.
+
+use std::sync::Mutex;
+
+use approxtrain::amsim::AmSim;
+use approxtrain::kernels::gemm::{gemm_scalar_reference, gemm_tiled_with, TileConfig};
+use approxtrain::kernels::{panel_pair_events, panel_skip_events, MulKernel};
+use approxtrain::lut::MantissaLut;
+use approxtrain::mult::{registry, ApproxMul};
+use approxtrain::util::rng::Pcg32;
+use approxtrain::util::simd;
+
+/// Serializes every GEMM-running test in this binary: the drain counters
+/// are process-global, so concurrent tests would smear each other's
+/// deltas.
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
+
+/// Tile geometries exercising the skip branch at every drain shape:
+/// the micro-kernel path, the degenerate `1 x 1` per-element path, and
+/// a wide register block.
+const CONFIGS: [TileConfig; 3] = [
+    TileConfig { mc: 8, kc: 16, nc: 8, mr: 2, nr: 4 },
+    TileConfig { mc: 8, kc: 16, nc: 8, mr: 1, nr: 1 },
+    TileConfig { mc: 16, kc: 8, nc: 16, mr: 4, nr: 8 },
+];
+
+/// Structured-sparse operand pair: whole `A` rows and whole `B` column
+/// bands (width 4) are killed by per-row / per-band coin flips at
+/// `sparsity`, alternating `+0.0` / `-0.0` fills so both dead encodings
+/// are packed and scanned.
+fn structured_sparse(
+    seed: u64,
+    m: usize,
+    k: usize,
+    n: usize,
+    sparsity: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg32::seeded(seed);
+    let mut a: Vec<f32> = (0..m * k).map(|_| rng.range(-2.0, 2.0)).collect();
+    let mut b: Vec<f32> = (0..k * n).map(|_| rng.range(-2.0, 2.0)).collect();
+    for r in 0..m {
+        if rng.range(0.0, 1.0) < sparsity {
+            a[r * k..(r + 1) * k].fill(if r % 2 == 0 { 0.0 } else { -0.0 });
+        }
+    }
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + 4).min(n);
+        if rng.range(0.0, 1.0) < sparsity {
+            for kk in 0..k {
+                for j in j0..j1 {
+                    b[kk * n + j] = if kk % 2 == 0 { -0.0 } else { 0.0 };
+                }
+            }
+        }
+        j0 = j1;
+    }
+    (a, b)
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for i in 0..got.len() {
+        assert_eq!(
+            got[i].to_bits(),
+            want[i].to_bits(),
+            "{what} idx {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The headline matrix: residue × sparsity × multiplier × SIMD × threads
+// ---------------------------------------------------------------------------
+
+/// For gated multipliers (LUT afm16 at every machine level, direct afm16
+/// and mit16) *and* the dense-fallback strategies (native at every
+/// level), the tiled GEMM over structured-sparse operands is
+/// bit-identical to the dense scalar oracle — at a residue-heavy shape
+/// (short last row-group, short last strip) and an aligned one, at
+/// sparsity 0 / 50 / 90 %, at every tile geometry in [`CONFIGS`] and at
+/// 1 and 4 threads. At 90 % sparsity the gated runs must actually have
+/// skipped pairs (otherwise this net is testing dead code).
+#[test]
+fn sparse_tiled_gemm_matches_dense_scalar_oracle_bitwise() {
+    let _g = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let afm = registry::by_name("afm16").unwrap();
+    let mit = registry::by_name("mit16").unwrap();
+    let lut = MantissaLut::generate(afm.as_ref());
+    let skips_before = panel_skip_events();
+    for &(m, k, n) in &[(13usize, 21usize, 11usize), (24, 32, 16)] {
+        for sparsity in [0.0f32, 0.5, 0.9] {
+            let (a, b) =
+                structured_sparse(9000 + (m * n) as u64 + (sparsity * 10.0) as u64, m, k, n, sparsity);
+            let mut kernels: Vec<(MulKernel, String)> = vec![
+                (MulKernel::Direct(afm.as_ref()), "direct:afm16".into()),
+                (MulKernel::Direct(mit.as_ref()), "direct:mit16".into()),
+            ];
+            for level in simd::available_levels() {
+                kernels.push((MulKernel::NativeAt(level), format!("native@{}", level.name())));
+                kernels.push((
+                    MulKernel::Lut(AmSim::with_simd(&lut, level)),
+                    format!("lut@{}", level.name()),
+                ));
+            }
+            for (mul, label) in &kernels {
+                let mut want = vec![0.0f32; m * n];
+                gemm_scalar_reference(mul, &a, &b, &mut want, m, k, n);
+                for cfg in CONFIGS {
+                    for threads in [1usize, 4] {
+                        let mut got = vec![0.0f32; m * n];
+                        gemm_tiled_with(mul, cfg, &a, &b, &mut got, m, k, n, threads);
+                        assert_bits_eq(
+                            &got,
+                            &want,
+                            &format!("{label} ({m},{k},{n}) s={sparsity} {cfg:?} t={threads}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        panel_skip_events() > skips_before,
+        "no micro-panel pair was ever skipped across the whole sparse matrix — \
+         the zero-skipping drain is dead code and this suite proved nothing"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The sign-of-zero edge the safety argument hinges on
+// ---------------------------------------------------------------------------
+
+/// The skip-safety argument (see `PackA::pack_a_occ`) rests on the
+/// accumulator never being `-0.0` when an add is elided. This test first
+/// pins the FP32 facts that make that both *necessary* and *sufficient*:
+/// adding `+0.0` to `-0.0` is NOT a bitwise no-op (so if a `-0.0`
+/// accumulator could occur, skipping would change bits), while a
+/// `+0.0`-seeded chain can never reach `-0.0` under round-to-nearest
+/// (`-0.0` only comes out of `(-0.0) + (-0.0)`; even `x + (-x)` is
+/// `+0.0`). It then pins the consequence end to end: output elements
+/// whose entire contraction is dead (including `-0.0` operands and
+/// negative-signed products) come out as exactly `+0.0` bits on the
+/// dense oracle, the skipped drain, and the never-scanned native drain
+/// alike.
+#[test]
+fn minus_zero_accumulator_is_the_load_bearing_edge() {
+    let _g = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // the FP32 premises, pinned
+    assert_ne!(
+        (-0.0f32 + 0.0f32).to_bits(),
+        (-0.0f32).to_bits(),
+        "adding +0.0 to -0.0 must flip the sign bit — otherwise this edge is moot"
+    );
+    assert_eq!((-0.0f32 + 0.0f32).to_bits(), 0.0f32.to_bits());
+    assert_eq!((-0.0f32 + -0.0f32).to_bits(), (-0.0f32).to_bits(), "-0 is reachable from -0 adds");
+    assert_eq!((0.0f32 + -0.0f32).to_bits(), 0.0f32.to_bits(), "+0-seeded chains stay +0");
+    assert_eq!((1.5f32 + -1.5f32).to_bits(), 0.0f32.to_bits(), "cancellation yields +0 under RNE");
+
+    // end to end, at mr = 2: rows 0+1 form a fully dead group (elided),
+    // row 4 is a fully dead *ragged* last group (elided at residue), and
+    // row 2 is dead inside a live group (its zeros run the dense drain) —
+    // all with both zero signs; B carries -0.0 and negatives so the dense
+    // oracle's dead-row products are themselves signed zeros
+    let (m, k, n) = (5usize, 12usize, 7usize);
+    let mut rng = Pcg32::seeded(41);
+    let mut a: Vec<f32> = (0..m * k).map(|_| rng.range(-2.0, 2.0)).collect();
+    let mut b: Vec<f32> = (0..k * n).map(|_| rng.range(-2.0, 2.0)).collect();
+    let dead_rows = [0usize, 1, 2, 4];
+    for &r in &dead_rows {
+        for (i, v) in a[r * k..(r + 1) * k].iter_mut().enumerate() {
+            *v = if i % 2 == 0 { -0.0 } else { 0.0 };
+        }
+    }
+    b[3] = -0.0;
+    b[n + 1] = -0.0;
+    let afm = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(afm.as_ref());
+    let cfg = TileConfig { mc: 4, kc: 8, nc: 4, mr: 2, nr: 2 };
+    for (mul, label) in [
+        (MulKernel::Lut(AmSim::new(&lut)), "lut"),
+        (MulKernel::Direct(afm.as_ref()), "direct"),
+        (MulKernel::Native, "native-dense"),
+    ] {
+        let mut want = vec![0.0f32; m * n];
+        gemm_scalar_reference(&mul, &a, &b, &mut want, m, k, n);
+        let mut got = vec![0.0f32; m * n];
+        gemm_tiled_with(&mul, cfg, &a, &b, &mut got, m, k, n, 1);
+        assert_bits_eq(&got, &want, label);
+        for &r in &dead_rows {
+            for j in 0..n {
+                assert_eq!(
+                    got[r * n + j].to_bits(),
+                    0.0f32.to_bits(),
+                    "{label}: dead row {r} col {j} must be exactly +0.0, got {:e}",
+                    got[r * n + j]
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense fallback is real, and skipping is real
+// ---------------------------------------------------------------------------
+
+/// The native strategy provably takes the dense drain: with a dead `A`
+/// row against a `B` strip carrying an infinity, hardware `0 × inf`
+/// produces NaN — which only survives if the pair was *not* elided — and
+/// the skip counter stays frozen while the pair counter advances. The
+/// same operands under a gated multiplier take the skip (counter moves)
+/// and still bit-match their own scalar oracle, whose zero-dominant
+/// `mul(0, inf)` is a zero: the two strategies *should* disagree with
+/// each other here, each matching its own semantics.
+#[test]
+fn native_fallback_keeps_nan_semantics_and_never_skips() {
+    let _g = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (m, k, n) = (6usize, 8usize, 5usize);
+    let mut rng = Pcg32::seeded(55);
+    let mut a: Vec<f32> = (0..m * k).map(|_| rng.range(-2.0, 2.0)).collect();
+    let mut b: Vec<f32> = (0..k * n).map(|_| rng.range(-2.0, 2.0)).collect();
+    a[..2 * k].fill(0.0); // rows 0+1: a whole dead mr=2 group
+    b[2] = f32::INFINITY; // contraction step 0, column 2
+    let cfg = TileConfig { mc: 4, kc: 8, nc: 4, mr: 2, nr: 2 };
+
+    let native = MulKernel::Native;
+    let mut want = vec![0.0f32; m * n];
+    gemm_scalar_reference(&native, &a, &b, &mut want, m, k, n);
+    assert!(want[2].is_nan(), "oracle sanity: hardware 0 * inf must be NaN");
+    let (pairs0, skips0) = (panel_pair_events(), panel_skip_events());
+    let mut got = vec![0.0f32; m * n];
+    gemm_tiled_with(&native, cfg, &a, &b, &mut got, m, k, n, 1);
+    assert!(panel_pair_events() > pairs0, "native drain considered no pairs");
+    assert_eq!(
+        panel_skip_events(),
+        skips0,
+        "native drain skipped a pair — hardware * has no zero identity"
+    );
+    assert_bits_eq(&got, &want, "native NaN semantics");
+    assert!(got[2].is_nan(), "the NaN was elided — the dense fallback is broken");
+
+    // gated twin: same operands, zero-dominant semantics, pairs elided
+    let afm = registry::by_name("afm16").unwrap();
+    let direct = MulKernel::Direct(afm.as_ref());
+    let mut want_d = vec![0.0f32; m * n];
+    gemm_scalar_reference(&direct, &a, &b, &mut want_d, m, k, n);
+    assert_eq!(want_d[2].to_bits(), 0.0f32.to_bits(), "zero-dominant 0 * inf is +0");
+    let skips1 = panel_skip_events();
+    let mut got_d = vec![0.0f32; m * n];
+    gemm_tiled_with(&direct, cfg, &a, &b, &mut got_d, m, k, n, 1);
+    assert!(panel_skip_events() > skips1, "gated drain elided nothing on a dead row");
+    assert_bits_eq(&got_d, &want_d, "gated semantics under skipping");
+}
+
+/// A multiplier that *claims* the zero identity but violates it
+/// (`mul(0, x) == 1.0`) — if the drain really elides dead pairs, the
+/// tiled result must diverge from the model's own scalar reference on
+/// the dead row (skipped: `+0.0`; dense oracle: `k * 1.0`). This is the
+/// proof that the skip branch executes at all, and the demonstration of
+/// exactly what the `tests/golden_mults.rs` flag audit protects against.
+struct LyingZeroMul;
+
+impl ApproxMul for LyingZeroMul {
+    fn name(&self) -> &str {
+        "liar8"
+    }
+    fn mantissa_bits(&self) -> u32 {
+        8
+    }
+    fn mul(&self, a: f32, b: f32) -> f32 {
+        if a == 0.0 || b == 0.0 {
+            1.0 // the lie: a zero operand does NOT dominate
+        } else {
+            a * b
+        }
+    }
+    fn mantissa_product(&self, _ma: u32, _mb: u32) -> (u32, u32) {
+        (0, 0)
+    }
+    fn zero_identity(&self) -> bool {
+        true // falsely declared — never do this outside a teeth test
+    }
+}
+
+#[test]
+fn a_lying_zero_identity_flag_visibly_changes_bits() {
+    let _g = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let liar = LyingZeroMul;
+    let (m, k, n) = (6usize, 8usize, 5usize);
+    let mut rng = Pcg32::seeded(61);
+    let mut a: Vec<f32> = (0..m * k).map(|_| rng.range(-2.0, 2.0)).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.range(-2.0, 2.0)).collect();
+    a[..2 * k].fill(0.0); // rows 0+1: a whole dead mr=2 group
+    let mul = MulKernel::Direct(&liar);
+    assert!(mul.zero_skip_ok(), "the gate must believe the declared flag");
+    let mut want = vec![0.0f32; m * n];
+    gemm_scalar_reference(&mul, &a, &b, &mut want, m, k, n);
+    assert_eq!(want[0], k as f32, "oracle sanity: the lie sums to k on the dead row");
+    let skips0 = panel_skip_events();
+    let mut got = vec![0.0f32; m * n];
+    let cfg = TileConfig { mc: 4, kc: 8, nc: 4, mr: 2, nr: 2 };
+    gemm_tiled_with(&mul, cfg, &a, &b, &mut got, m, k, n, 1);
+    assert!(panel_skip_events() > skips0, "nothing was skipped — teeth test is vacuous");
+    assert_eq!(got[0].to_bits(), 0.0f32.to_bits(), "a skipped pair leaves the +0.0 seed");
+    assert_ne!(
+        got[0].to_bits(),
+        want[0].to_bits(),
+        "tiled == scalar despite a lying flag: either nothing was skipped or \
+         the oracle took the skip too"
+    );
+    // rows outside the dead group are untouched by the lie
+    assert_bits_eq(&got[2 * n..], &want[2 * n..], "live rows under the lying flag");
+}
+
+// ---------------------------------------------------------------------------
+// Counter arithmetic on an aligned geometry
+// ---------------------------------------------------------------------------
+
+/// On a fully aligned geometry the drain counters match closed form.
+/// `m=16, k=32, n=16` under `mc=8, kc=16, nc=8, mr=2, nr=4`: 4 tiles,
+/// 2 k-blocks each, 4 row-groups × 2 strips per block ⇒ 64 pairs.
+/// Killing `B` columns 0–3 (strip 0 of the two left tiles) across all
+/// of `k` ⇒ 2 tiles × 2 k-blocks × 4 groups × 1 dead strip = 16 skips.
+#[test]
+fn drain_counters_match_closed_form_on_aligned_geometry() {
+    let _g = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (m, k, n) = (16usize, 32usize, 16usize);
+    let cfg = TileConfig { mc: 8, kc: 16, nc: 8, mr: 2, nr: 4 };
+    let mut rng = Pcg32::seeded(71);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.range(-2.0, 2.0)).collect();
+    let mut b: Vec<f32> = (0..k * n).map(|_| rng.range(-2.0, 2.0)).collect();
+    for kk in 0..k {
+        b[kk * n..kk * n + 4].fill(0.0);
+    }
+    let afm = registry::by_name("afm16").unwrap();
+    let lut = MantissaLut::generate(afm.as_ref());
+    let mul = MulKernel::Lut(AmSim::new(&lut));
+    let mut want = vec![0.0f32; m * n];
+    gemm_scalar_reference(&mul, &a, &b, &mut want, m, k, n);
+    let (pairs0, skips0) = (panel_pair_events(), panel_skip_events());
+    let mut got = vec![0.0f32; m * n];
+    gemm_tiled_with(&mul, cfg, &a, &b, &mut got, m, k, n, 1);
+    assert_eq!(panel_pair_events() - pairs0, 64, "pair count");
+    assert_eq!(panel_skip_events() - skips0, 16, "skip count");
+    assert_bits_eq(&got, &want, "aligned-geometry correctness");
+    // the dense column band is exactly +0.0 in the output
+    for i in 0..m {
+        for j in 0..4 {
+            assert_eq!(got[i * n + j].to_bits(), 0.0f32.to_bits(), "dead col ({i},{j})");
+        }
+    }
+}
