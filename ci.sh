@@ -54,7 +54,7 @@ step "cargo test --release -q with APPROXTRAIN_SIMD=scalar (portable-fallback pa
 # the two passes prove the knob reaches every dispatch site end to end
 APPROXTRAIN_SIMD=scalar cargo test --release -q || fail=1
 
-step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel edges + SIMD lanes + sparse skipping + serving + data-parallel"
+step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel edges + SIMD lanes + sparse skipping + serving + data-parallel + networked tier"
 # already part of the full release suite above, but pinned here explicitly
 # so the implicit-conv acceptance sweep, the MRxNR micro-kernel residue
 # sweep, the SIMD lane-differential net (forced-level x multiplier x
@@ -66,10 +66,14 @@ step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel edges + 
 # ≡ single-lane replies, partial-batch cycle-padding, bounded-queue
 # rejection), and the data-parallel determinism gates (N-worker loss
 # curves ≡ 1-worker, sharded-checkpoint resume, aligned grad
-# accumulation, fail-stop on replica panic, masked sparse training) can
+# accumulation, fail-stop on replica panic, masked sparse training), and
+# the networked-tier gates (loopback replies ≡ in-process serve_on_caller
+# bits, every scripted fault -> typed error, deadline/shedding/quota
+# accounting, epoch-atomic LUT hot swap, graceful-drain semantics) can
 # never silently drop out of the release-mode pass
 cargo test --release -q --test conv_grads --test batched_vs_scalar --test microtile \
-    --test simd_lanes --test sparse_gemm --test server --test data_parallel || fail=1
+    --test simd_lanes --test sparse_gemm --test server --test data_parallel \
+    --test serve_net || fail=1
 
 step "bench smoke (tiny sizes; does not touch the committed BENCH records)"
 # the gemm smoke rows include the micro-kernel tiled path (and its mr1nr1
@@ -84,6 +88,10 @@ step "bench smoke (tiny sizes; does not touch the committed BENCH records)"
 cargo bench --bench paper_benches -- gemm --smoke || fail=1
 cargo bench --bench paper_benches -- conv --smoke || fail=1
 cargo bench --bench paper_benches -- serve --smoke || fail=1
+# networked-tier smoke: the same serve sweep plus a loopback TCP pass
+# through the wire protocol / deadline / shedding path, with every
+# accepted reply bit-gated against the cycle-padded reference forward
+cargo bench --bench paper_benches -- serve --net --smoke || fail=1
 cargo bench --bench paper_benches -- train --smoke || fail=1
 
 echo

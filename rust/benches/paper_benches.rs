@@ -9,6 +9,7 @@
 //! cargo bench -- gemm --smoke # tiny CI smoke sizes (results/ only)
 //! cargo bench -- conv         # implicit vs materialized conv -> results/BENCH_conv.json
 //! cargo bench -- serve        # multi-lane serving sweep -> results/BENCH_serve.json
+//! cargo bench -- serve --net  # ...plus the networked serving tier sweep
 //! cargo bench -- train        # data-parallel training sweep -> results/BENCH_train.json
 //! cargo bench -- fig6         # one experiment
 //! cargo bench -- all --full   # full (slow) settings
@@ -67,9 +68,13 @@ fn main() -> anyhow::Result<()> {
         // Multi-lane batching server sweep over the pure-Rust executor
         // backend (lanes x offered load x strategy), every accepted reply
         // bit-exactness-gated against a single-lane reference forward.
-        // Same root-record policy as `gemm`.
+        // --net adds the loopback TCP sweep through the fault-tolerant
+        // serving tier (connections x lanes x priority mix, deadlines on
+        // the wire) under the same bit gate. Same root-record policy as
+        // `gemm`.
+        let net = args.iter().any(|a| a == "--net");
         let record_root = which == "serve" && !smoke && !quick;
-        out.push_str(&exp::bench_serve(results, quick || smoke, record_root)?);
+        out.push_str(&exp::bench_serve(results, quick || smoke, record_root, net)?);
     }
 
     if wants("train") {

@@ -303,6 +303,20 @@ impl CpuBackend {
         (0..n).map(|_| self.clone()).collect()
     }
 
+    /// Replace the multiplication strategy in place (weights untouched).
+    /// The networked tier's LUT hot-swap mutates a tenant's *template*
+    /// backend under a lock and bumps an epoch; lanes then re-clone the
+    /// whole template, so no request can ever observe a half-swapped
+    /// table (see `coordinator::net`).
+    pub fn set_mul(&mut self, mul: MulSpec) {
+        self.mul = mul;
+    }
+
+    /// The current mode string (`native` | `direct:<m>` | `lut:<m>`).
+    pub fn mul_describe(&self) -> String {
+        self.mul.describe()
+    }
+
     /// Replace the backend's weights with an externally trained (e.g.
     /// pruned and fine-tuned) flat parameter vector; the length must
     /// match the model's parameter count. Load before

@@ -879,7 +879,7 @@ pub fn bench_conv(results_dir: &Path, quick: bool, record_root: bool) -> Result<
 /// Benchmark the multi-lane batching server over the pure-Rust executor
 /// backend (`lenet300`, no artifacts needed): offered-load sweep × lanes
 /// {1, 2, 4} × simulation strategy (native / direct / LUT), emitting the
-/// `BENCH_serve.json` perf record (schema v1).
+/// `BENCH_serve.json` perf record (schema v2).
 ///
 /// Load is closed-loop: `clients` threads each submit their share of the
 /// request stream and block for the reply (or count a typed rejection —
@@ -897,7 +897,18 @@ pub fn bench_conv(results_dir: &Path, quick: bool, record_root: bool) -> Result<
 /// to be bit-identical to the same images in a full batch of themselves,
 /// with a zero-pad-must-differ teeth check. A single differing bit
 /// aborts the bench.
-pub fn bench_serve(results_dir: &Path, quick: bool, record_root: bool) -> Result<String> {
+/// With `include_net`, a second sweep drives the same workload through
+/// the networked tier ([`super::net`]) over loopback sockets —
+/// connections × lanes × a mixed-priority request stream — recording
+/// throughput, latency percentiles, shed rate, and deadline-miss rate
+/// per run (schema v2's `net_records`). The same bit-gate applies:
+/// every accepted networked reply must match the reference bits.
+pub fn bench_serve(
+    results_dir: &Path,
+    quick: bool,
+    record_root: bool,
+    include_net: bool,
+) -> Result<String> {
     use std::time::{Duration, Instant};
 
     use super::backend::{CpuBackend, InferBackend, MulSpec};
@@ -1120,12 +1131,18 @@ pub fn bench_serve(results_dir: &Path, quick: bool, record_root: bool) -> Result
         }
     }
 
+    // networked-tier sweep (schema v2): same workload over loopback
+    // TCP through coordinator::net, mixed priorities, per-run shed and
+    // deadline-miss accounting, same bit-gate
+    let (net_md, net_records) =
+        if include_net { bench_serve_net_sweep(&ds, quick)? } else { (String::new(), Vec::new()) };
+
     let thr_at = |lanes: usize| {
         lut_thr_by_lanes.iter().find(|(l, _)| *l == lanes).map(|(_, t)| *t).unwrap_or(0.0)
     };
     let headline = thr_at(4) / thr_at(1).max(1e-9);
     let record = Json::obj(vec![
-        ("schema", Json::str("approxtrain/bench_serve/v1")),
+        ("schema", Json::str("approxtrain/bench_serve/v2")),
         (
             "description",
             Json::str(
@@ -1150,6 +1167,8 @@ pub fn bench_serve(results_dir: &Path, quick: bool, record_root: bool) -> Result
         ("clients_swept", Json::arr(clients_sweep.iter().map(|&c| Json::num(c as f64)))),
         ("lut_lanes4_speedup_vs_lanes1", Json::num(headline)),
         ("records", Json::Arr(records)),
+        ("net_included", Json::Bool(include_net)),
+        ("net_records", Json::Arr(net_records)),
     ]);
     let payload = record.to_string();
     write_result(results_dir, "BENCH_serve.json", &payload)?;
@@ -1160,7 +1179,197 @@ pub fn bench_serve(results_dir: &Path, quick: bool, record_root: bool) -> Result
     md.push_str(&format!(
         "LUT serving throughput, 4 lanes vs 1 lane at {top_clients} clients: {headline:.2}x\n\n"
     ));
+    md.push_str(&net_md);
     Ok(md)
+}
+
+/// The networked half of [`bench_serve`]: a loopback TCP sweep through
+/// the fault-tolerant serving tier — `connections x lanes x strategy`
+/// with a mixed-priority request stream and per-request deadlines on the
+/// wire. Emits one record per run with throughput, server-side latency
+/// percentiles, shed rate (by the priority-aware admission limits), and
+/// deadline-miss rate.
+///
+/// **Correctness gates**: (1) every accepted reply must be bit-identical
+/// to the full-batch cycle-padded reference forward of its image —
+/// crossing a socket must never change a single logit bit; (2) the
+/// server's exact accounting must agree with the client-observed
+/// outcomes (accepted replies = `replied_ok`).
+fn bench_serve_net_sweep(
+    ds: &crate::data::Dataset,
+    quick: bool,
+) -> Result<(String, Vec<crate::util::json::Json>)> {
+    use std::time::{Duration, Instant};
+
+    use super::backend::{CpuBackend, InferBackend, MulSpec};
+    use super::net::{spawn, NetClient, NetConfig, NetRegistry, RetryPolicy, TenantSpec};
+    use super::server::{InferError, ServeConfig};
+    use super::wire::Priority;
+    use crate::util::json::Json;
+
+    const SEED: u64 = 4242;
+    let batch = 8usize;
+    let queue_depth = 16usize;
+    let lanes_sweep: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let conns_sweep: &[usize] = if quick { &[2, 8] } else { &[2, 8, 24] };
+    let modes: [&str; 2] = ["native", "lut:afm16"];
+    // NOT a multiple of `batch`: the trailing batch exercises cycle
+    // padding on every run, keeping the bit-gate honest
+    let n_req = (if quick { 45 } else { 189 }).min(ds.n);
+    let deadline = Duration::from_secs(10); // carried on the wire; ~never missed
+    let retry = RetryPolicy {
+        max_attempts: 3,
+        base_backoff: Duration::from_millis(1),
+        max_backoff: Duration::from_millis(16),
+        sleep: true,
+    };
+
+    let mut table = Table::new(
+        "BENCH_serve net tier — loopback TCP, mixed priorities, per-request deadlines",
+        &["mode", "lanes", "conns", "throughput", "p50", "p99", "shed rate", "ddl miss"],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for mode in modes {
+        let base = CpuBackend::for_model("lenet300", MulSpec::parse(mode)?, batch, SEED)?;
+        // reference bits: full-batch forwards with the lanes' cycle
+        // padding (row independence makes this canonical for every
+        // batching schedule the race produces)
+        let mut reference = base.clone();
+        let classes = reference.classes();
+        let sz = reference.image_elems();
+        let mut ref_logits: Vec<Vec<f32>> = Vec::with_capacity(n_req);
+        let mut pos = 0usize;
+        while pos < n_req {
+            let real = (n_req - pos).min(batch);
+            let mut images = Vec::with_capacity(batch * sz);
+            for i in 0..real {
+                images.extend_from_slice(ds.image(pos + i));
+            }
+            crate::data::pad_batch_by_cycling(&mut images, real, batch, sz);
+            let logits = reference.run_batch(&images)?;
+            for i in 0..real {
+                ref_logits.push(logits[i * classes..(i + 1) * classes].to_vec());
+            }
+            pos += real;
+        }
+
+        for &lanes in lanes_sweep {
+            for &conns in conns_sweep {
+                let run = format!("net {mode} lanes={lanes} conns={conns}");
+                let mut reg = NetRegistry::new();
+                reg.add("bench", base.clone(), TenantSpec { lanes, quota: 0 })?;
+                let cfg = NetConfig {
+                    serve: ServeConfig { max_wait: Duration::from_millis(3), queue_depth },
+                    ..NetConfig::default()
+                };
+                let handle = spawn("127.0.0.1:0", reg, cfg, super::faults::FaultPlan::none())?;
+                let addr = handle.addr();
+                let t0 = Instant::now();
+                // closed-loop load: `conns` persistent connections, each
+                // a synchronous client cycling the priority classes
+                let outcomes: Vec<(usize, Result<Vec<f32>, InferError>)> =
+                    std::thread::scope(|s| {
+                        let handles: Vec<_> = (0..conns)
+                            .map(|t| {
+                                s.spawn(move || {
+                                    let mut client = NetClient::connect(addr, "bench", retry)
+                                        .expect("bench client connect");
+                                    let mut out = Vec::new();
+                                    let mut i = t;
+                                    while i < n_req {
+                                        let prio = Priority::ALL[i % 3];
+                                        let r = client
+                                            .infer(ds.image(i), prio, Some(deadline))
+                                            .map(|rep| rep.logits);
+                                        out.push((i, r));
+                                        i += conns;
+                                    }
+                                    out
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .flat_map(|h| h.join().expect("bench client panicked"))
+                            .collect()
+                    });
+                let wall = t0.elapsed().as_secs_f64();
+                let report = handle.shutdown()?;
+                if !report.lane_errors.is_empty() {
+                    return Err(anyhow!("bench aborted: {run}: {:?}", report.lane_errors));
+                }
+
+                let (mut accepted, mut shed_final, mut missed) = (0u64, 0u64, 0u64);
+                for (idx, outcome) in &outcomes {
+                    match outcome {
+                        Ok(logits) => {
+                            accepted += 1;
+                            let want = &ref_logits[*idx];
+                            let same = logits.len() == want.len()
+                                && logits.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits());
+                            if !same {
+                                return Err(anyhow!(
+                                    "bench aborted: {run}: networked reply for request {idx} \
+                                     diverged from the reference bits"
+                                ));
+                            }
+                        }
+                        Err(InferError::Shed { .. }) | Err(InferError::Overloaded) => {
+                            shed_final += 1
+                        }
+                        Err(InferError::DeadlineExceeded) => missed += 1,
+                        Err(e) => return Err(anyhow!("bench aborted: {run}: {e}")),
+                    }
+                }
+                let c = &report.counts;
+                if accepted != c.replied_ok {
+                    return Err(anyhow!(
+                        "{run}: client saw {accepted} accepted replies, server counted {}",
+                        c.replied_ok
+                    ));
+                }
+                // admission attempts: accepted (which later resolves to a
+                // reply or an in-queue/post-compute expiry) + the pre-queue
+                // terminal outcomes; expired_queue/expired_reply are already
+                // inside `accepted`, so only the admission-site expiry adds
+                let offered =
+                    (c.accepted + c.shed_total() + c.overflow + c.expired_admission) as f64;
+                let shed_rate = (c.shed_total() + c.overflow) as f64 / offered.max(1.0);
+                let miss_rate = c.deadline_expired_total() as f64 / offered.max(1.0);
+                let throughput = accepted as f64 / wall.max(1e-9);
+                table.row(vec![
+                    mode.into(),
+                    lanes.to_string(),
+                    conns.to_string(),
+                    format!("{throughput:.0} req/s"),
+                    fmt_time(report.stats.latency_percentile_s(50.0)),
+                    fmt_time(report.stats.latency_percentile_s(99.0)),
+                    format!("{:.1}%", shed_rate * 100.0),
+                    format!("{:.1}%", miss_rate * 100.0),
+                ]);
+                records.push(Json::obj(vec![
+                    ("mode", Json::str(mode)),
+                    ("lanes", Json::num(lanes as f64)),
+                    ("connections", Json::num(conns as f64)),
+                    ("requests", Json::num(n_req as f64)),
+                    ("accepted", Json::num(accepted as f64)),
+                    ("shed", Json::num(c.shed_total() as f64)),
+                    ("overflow", Json::num(c.overflow as f64)),
+                    ("shed_rate", Json::num(shed_rate)),
+                    ("deadline_missed", Json::num(c.deadline_expired_total() as f64)),
+                    ("deadline_miss_rate", Json::num(miss_rate)),
+                    ("client_shed_after_retries", Json::num(shed_final as f64)),
+                    ("client_deadline_errors", Json::num(missed as f64)),
+                    ("wall_s", Json::num(wall)),
+                    ("throughput_rps", Json::num(throughput)),
+                    ("p50_ms", Json::num(report.stats.latency_percentile_s(50.0) * 1e3)),
+                    ("p99_ms", Json::num(report.stats.latency_percentile_s(99.0) * 1e3)),
+                    ("mean_fill", Json::num(report.stats.mean_fill())),
+                ]));
+            }
+        }
+    }
+    Ok((table.to_markdown(), records))
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,262 @@
+//! Deterministic fault-injection harness for the networked serving tier.
+//!
+//! Robustness claims are only worth what their tests can *force*: this
+//! module is the injection registry the `serve_net` suite scripts. A
+//! [`FaultPlan`] is shared (cheap [`Clone`], `Arc` inner) between a test
+//! and the server it spawned; the server consults it at two
+//! deterministic points —
+//!
+//! * **per lane, per batch** ([`FaultPlan::before_batch`]): an armed
+//!   *delay* sleeps the lane (modelling a slow replica — used to force
+//!   queue pressure and in-queue deadline expiry without racing the
+//!   scheduler), an armed *kill* makes the lane return an error mid-batch
+//!   after it has already popped requests (the fail-stop path must still
+//!   answer every one of them);
+//! * **per request, at admission** ([`FaultPlan::on_admission`]): an
+//!   armed admission delay burns the request's deadline budget inside the
+//!   server, forcing the admission-time deadline check.
+//!
+//! Faults are keyed on (tenant, lane) and batch *indices*, never wall
+//! time, so every scripted scenario is reproducible. Counters record what
+//! actually fired, letting tests assert the fault happened rather than
+//! silently passing when it did not.
+//!
+//! The bottom half holds client-side fault helpers: raw-socket writers
+//! that send truncated, oversized, or garbage frames — the peer
+//! misbehavior half of the injection matrix.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::wire::{self, FrameKind, WireError};
+
+type LaneKey = (String, usize);
+
+#[derive(Default)]
+struct FaultState {
+    /// (tenant, lane) → kill the lane on its batch index >= n
+    kill_after: Mutex<BTreeMap<LaneKey, u64>>,
+    /// (tenant, lane) → sleep this long before every batch
+    lane_delay: Mutex<BTreeMap<LaneKey, Duration>>,
+    /// tenant → sleep this long inside admission (burns deadline budget)
+    admission_delay: Mutex<BTreeMap<String, Duration>>,
+    kills_fired: AtomicU64,
+    delays_applied: AtomicU64,
+    admission_delays_applied: AtomicU64,
+}
+
+/// Shared, scriptable fault registry. `FaultPlan::default()` (or
+/// [`FaultPlan::none`]) injects nothing and is what production callers
+/// pass.
+#[derive(Clone, Default)]
+pub struct FaultPlan {
+    inner: Arc<FaultState>,
+}
+
+impl FaultPlan {
+    /// An empty plan: every hook is a no-op.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Arm a lane kill: the lane errors out (mid-batch, after popping
+    /// requests) on its `after_batches`-th batch (0 = the first).
+    pub fn kill_lane(&self, tenant: &str, lane: usize, after_batches: u64) {
+        self.inner
+            .kill_after
+            .lock()
+            .unwrap()
+            .insert((tenant.to_string(), lane), after_batches);
+    }
+
+    /// Arm a per-batch lane delay (a slow replica).
+    pub fn delay_lane(&self, tenant: &str, lane: usize, delay: Duration) {
+        self.inner.lane_delay.lock().unwrap().insert((tenant.to_string(), lane), delay);
+    }
+
+    /// Disarm a lane delay.
+    pub fn clear_lane_delay(&self, tenant: &str, lane: usize) {
+        self.inner.lane_delay.lock().unwrap().remove(&(tenant.to_string(), lane));
+    }
+
+    /// Arm an admission delay for a tenant: every request sleeps this
+    /// long between arrival and the admission deadline check.
+    pub fn delay_admission(&self, tenant: &str, delay: Duration) {
+        self.inner.admission_delay.lock().unwrap().insert(tenant.to_string(), delay);
+    }
+
+    /// Disarm the admission delay.
+    pub fn clear_admission_delay(&self, tenant: &str) {
+        self.inner.admission_delay.lock().unwrap().remove(tenant);
+    }
+
+    /// Server hook: called by a lane after popping a batch, before any
+    /// compute. Applies an armed delay, then an armed kill (as a typed
+    /// error the lane propagates into its fail-stop path).
+    pub(crate) fn before_batch(&self, tenant: &str, lane: usize, batch_index: u64) -> Result<()> {
+        let delay =
+            self.inner.lane_delay.lock().unwrap().get(&(tenant.to_string(), lane)).copied();
+        if let Some(d) = delay {
+            self.inner.delays_applied.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(d);
+        }
+        let kill =
+            self.inner.kill_after.lock().unwrap().get(&(tenant.to_string(), lane)).copied();
+        if let Some(after) = kill {
+            if batch_index >= after {
+                self.inner.kills_fired.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!(
+                    "injected fault: tenant {tenant:?} lane {lane} killed at batch {batch_index}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Server hook: called inside admission, after the arrival timestamp
+    /// is taken and before the deadline check.
+    pub(crate) fn on_admission(&self, tenant: &str) {
+        let delay = self.inner.admission_delay.lock().unwrap().get(tenant).copied();
+        if let Some(d) = delay {
+            self.inner.admission_delays_applied.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(d);
+        }
+    }
+
+    /// How many armed kills actually fired.
+    pub fn kills_fired(&self) -> u64 {
+        self.inner.kills_fired.load(Ordering::Relaxed)
+    }
+
+    /// How many lane-batch delays were applied.
+    pub fn delays_applied(&self) -> u64 {
+        self.inner.delays_applied.load(Ordering::Relaxed)
+    }
+
+    /// How many admission delays were applied.
+    pub fn admission_delays_applied(&self) -> u64 {
+        self.inner.admission_delays_applied.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client-side fault helpers (peer misbehavior)
+// ---------------------------------------------------------------------------
+
+/// Connect, write `bytes` raw, then close immediately without reading —
+/// a peer that dies (or lies) mid-conversation.
+pub fn send_raw_and_close(addr: SocketAddr, bytes: &[u8]) -> std::io::Result<()> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(bytes)?;
+    s.flush()?;
+    s.shutdown(Shutdown::Both)?;
+    Ok(())
+}
+
+/// Write only the first `keep` bytes of `frame` then close: a mid-frame
+/// disconnect.
+pub fn send_truncated(addr: SocketAddr, frame: &[u8], keep: usize) -> std::io::Result<()> {
+    send_raw_and_close(addr, &frame[..keep.min(frame.len())])
+}
+
+/// A frame header declaring a `declared`-byte body that never follows —
+/// probes that the server validates the length before allocating.
+pub fn oversized_header(declared: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(wire::HEADER_LEN);
+    out.extend_from_slice(&wire::MAGIC);
+    out.push(1); // request kind
+    out.extend_from_slice(&declared.to_le_bytes());
+    out
+}
+
+/// Connect, write `bytes` raw, then block for one response frame — used
+/// by tests asserting that garbage in gets a *typed* `BadRequest` frame
+/// out (followed by a close), not a hang or a panic.
+pub fn send_raw_and_read_reply(
+    addr: SocketAddr,
+    bytes: &[u8],
+) -> Result<(FrameKind, Vec<u8>), WireError> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(10)))?;
+    s.write_all(bytes)?;
+    s.flush()?;
+    let _ = s.shutdown(Shutdown::Write);
+    wire::read_frame(&mut s)
+}
+
+/// Drain and discard whatever the peer sends until EOF (bounded by the
+/// stream's read timeout); used after hostile writes where the reply
+/// content does not matter.
+pub fn drain_to_eof(s: &mut TcpStream) -> std::io::Result<usize> {
+    let mut total = 0usize;
+    let mut buf = [0u8; 4096];
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) => return Ok(total),
+            Ok(n) => total += n,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_fires_only_at_threshold_and_counts() {
+        let plan = FaultPlan::none();
+        plan.kill_lane("t0", 1, 2);
+        // other lane / other tenant untouched
+        assert!(plan.before_batch("t0", 0, 5).is_ok());
+        assert!(plan.before_batch("other", 1, 5).is_ok());
+        // armed lane survives batches 0 and 1, dies on 2
+        assert!(plan.before_batch("t0", 1, 0).is_ok());
+        assert!(plan.before_batch("t0", 1, 1).is_ok());
+        assert_eq!(plan.kills_fired(), 0);
+        let err = plan.before_batch("t0", 1, 2).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        assert_eq!(plan.kills_fired(), 1);
+    }
+
+    #[test]
+    fn delays_count_and_clear() {
+        let plan = FaultPlan::none();
+        plan.delay_lane("t0", 0, Duration::from_millis(1));
+        assert!(plan.before_batch("t0", 0, 0).is_ok());
+        assert_eq!(plan.delays_applied(), 1);
+        plan.clear_lane_delay("t0", 0);
+        assert!(plan.before_batch("t0", 0, 1).is_ok());
+        assert_eq!(plan.delays_applied(), 1, "cleared delay no longer applies");
+        plan.delay_admission("t0", Duration::from_millis(1));
+        plan.on_admission("t0");
+        plan.on_admission("other");
+        assert_eq!(plan.admission_delays_applied(), 1);
+        plan.clear_admission_delay("t0");
+        plan.on_admission("t0");
+        assert_eq!(plan.admission_delays_applied(), 1);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let plan = FaultPlan::none();
+        let other = plan.clone();
+        other.kill_lane("t", 0, 0);
+        assert!(plan.before_batch("t", 0, 0).is_err());
+        assert_eq!(plan.kills_fired(), other.kills_fired());
+    }
+
+    #[test]
+    fn oversized_header_shape() {
+        let h = oversized_header(u32::MAX);
+        assert_eq!(h.len(), wire::HEADER_LEN);
+        let hdr: [u8; wire::HEADER_LEN] = h.try_into().unwrap();
+        assert!(matches!(wire::decode_header(&hdr), Err(WireError::Oversized { .. })));
+    }
+}

@@ -11,6 +11,14 @@
 //! * [`server`] — the multi-lane batching inference server: a bounded
 //!   admission queue feeding N worker lanes, each dynamically batching
 //!   onto its own backend replica.
+//! * [`wire`] — the length-prefixed, CRC-framed binary protocol the
+//!   networked tier speaks (pure codec, no sockets).
+//! * [`net`] — the fault-tolerant TCP serving tier over the lane server:
+//!   deadlines, priority load shedding, multi-tenant registry with
+//!   epoch-guarded LUT hot-swap, graceful drain, and a retrying client.
+//! * [`faults`] — the deterministic fault-injection registry the
+//!   `serve_net` suite scripts (lane kills/delays, admission delays,
+//!   raw-socket peer-misbehavior helpers).
 //! * [`data_parallel`] — deterministic data-parallel training over the
 //!   pure-Rust executors: fixed-shard minibatch decomposition + a
 //!   fixed-order binary gradient reduction tree, so the loss curve is
@@ -21,7 +29,10 @@
 pub mod backend;
 pub mod data_parallel;
 pub mod experiments;
+pub mod faults;
+pub mod net;
 pub mod pruning;
 pub mod report;
 pub mod server;
 pub mod trainer;
+pub mod wire;

@@ -1,0 +1,1308 @@
+//! Networked serving tier: a fault-tolerant TCP front over the lane
+//! server, pure `std` (no tokio — `std::net::TcpListener` + threads).
+//!
+//! Topology per server:
+//!
+//! * one **accept** thread (non-blocking listener, poll tick);
+//! * per connection, one **reader** thread (interruptible frame reads,
+//!   admission) and one **writer** thread (serializes replies from an
+//!   mpsc so lanes never block on a slow client socket);
+//! * per tenant, a bounded **priority admission queue** and N **lane**
+//!   threads, each owning a [`CpuBackend`] replica and running the same
+//!   dynamic-batching / cycle-padding policy as the in-process
+//!   [`super::server`] lanes — which is why every accepted networked
+//!   reply is bit-identical to [`super::server::serve_on_caller`].
+//!
+//! Robustness invariants (each one is forced by `rust/tests/serve_net.rs`
+//! through the [`super::faults`] injection registry):
+//!
+//! * **Deadlines** ride the wire as relative budgets and are enforced at
+//!   admission, at queue pop, and again after compute — an expired
+//!   request gets a typed `DeadlineExceeded`, never a silent stale reply.
+//! * **Load shedding** at admission is priority-aware: `Low` is shed at
+//!   half depth, `Normal` at 3/4 depth, `High` only overflows at full
+//!   depth. Every shed is counted exactly, per class.
+//! * **Exactly-once replies**: a [`Responder`] guards every request; if
+//!   any path drops it unanswered (lane kill, drain timeout), its `Drop`
+//!   emits a typed `Stopped` frame — a waiting client can never hang.
+//! * **Fail-stop**: a lane error fails the tenant's queue; queued
+//!   requests are drained with typed errors, never silently discarded.
+//! * **LUT hot-swap behind an epoch**: [`NetHandle::swap_mul`] mutates a
+//!   tenant's template backend under its lock and bumps the epoch; lanes
+//!   re-clone the whole template when they observe a new epoch, so no
+//!   request ever runs on a half-swapped table. Replies carry the epoch
+//!   that computed them.
+//! * **Graceful drain**: shutdown stops accepting, lets lanes finish
+//!   what was admitted within a drain deadline, then fail-stops the
+//!   remainder (typed errors, exact drop accounting).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Read;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::backend::{CpuBackend, InferBackend, MulSpec};
+use super::faults::FaultPlan;
+use super::server::{InferError, ServeConfig, Stats};
+use super::wire::{self, FrameKind, Priority, RequestFrame, ResponseFrame, Status, WireError};
+
+// ---------------------------------------------------------------------------
+// Config / policy
+// ---------------------------------------------------------------------------
+
+/// Networked-tier knobs on top of the per-lane [`ServeConfig`].
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// per-lane batching window + admission queue depth
+    pub serve: ServeConfig,
+    /// graceful-drain budget at shutdown: admitted work gets this long to
+    /// finish before the remainder is fail-stopped with typed errors
+    pub drain_deadline: Duration,
+    /// reader/acceptor poll tick (stop-flag latency; not a data-path cost)
+    pub poll: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            serve: ServeConfig::default(),
+            drain_deadline: Duration::from_secs(2),
+            poll: Duration::from_millis(2),
+        }
+    }
+}
+
+/// SLO-aware admission limit: the queue occupancy at (or above) which a
+/// class is turned away. Low is shed first (half depth), Normal at 3/4,
+/// High only at the hard depth (= overflow). Monotone in priority, so
+/// under pressure capacity is always spent on the most important work.
+pub fn admission_limit(depth: usize, prio: Priority) -> usize {
+    match prio {
+        Priority::High => depth,
+        Priority::Normal => (depth * 3 / 4).max(1),
+        Priority::Low => (depth / 2).max(1),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exact failure accounting
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct NetCounters {
+    accepted: AtomicU64,
+    replied_ok: AtomicU64,
+    /// sheds by priority index (High/Normal/Low); High stays 0 by
+    /// construction (its limit is the hard depth → Overflow instead)
+    shed: [AtomicU64; 3],
+    overflow: AtomicU64,
+    expired_admission: AtomicU64,
+    expired_queue: AtomicU64,
+    expired_reply: AtomicU64,
+    quota_rejected: AtomicU64,
+    unknown_tenant: AtomicU64,
+    malformed: AtomicU64,
+    connections: AtomicU64,
+    disconnects_midframe: AtomicU64,
+    draining_rejected: AtomicU64,
+    stopped_replies: AtomicU64,
+    lut_swaps: AtomicU64,
+    drain_dropped: AtomicU64,
+}
+
+/// Plain snapshot of the server's exact failure accounting. Every
+/// admission outcome increments exactly one counter, so
+/// `accepted + shed + overflow + expired_admission + quota_rejected +
+/// unknown_tenant + draining_rejected (+ malformed)` equals the requests
+/// offered — the `serve_net` suite asserts this bookkeeping exactly.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetCounts {
+    pub accepted: u64,
+    pub replied_ok: u64,
+    pub shed: [u64; 3],
+    pub overflow: u64,
+    pub expired_admission: u64,
+    pub expired_queue: u64,
+    pub expired_reply: u64,
+    pub quota_rejected: u64,
+    pub unknown_tenant: u64,
+    pub malformed: u64,
+    pub connections: u64,
+    pub disconnects_midframe: u64,
+    pub draining_rejected: u64,
+    pub stopped_replies: u64,
+    pub lut_swaps: u64,
+    pub drain_dropped: u64,
+}
+
+impl NetCounts {
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+
+    pub fn deadline_expired_total(&self) -> u64 {
+        self.expired_admission + self.expired_queue + self.expired_reply
+    }
+}
+
+impl NetCounters {
+    fn snapshot(&self) -> NetCounts {
+        let ld = Ordering::Relaxed;
+        NetCounts {
+            accepted: self.accepted.load(ld),
+            replied_ok: self.replied_ok.load(ld),
+            shed: [self.shed[0].load(ld), self.shed[1].load(ld), self.shed[2].load(ld)],
+            overflow: self.overflow.load(ld),
+            expired_admission: self.expired_admission.load(ld),
+            expired_queue: self.expired_queue.load(ld),
+            expired_reply: self.expired_reply.load(ld),
+            quota_rejected: self.quota_rejected.load(ld),
+            unknown_tenant: self.unknown_tenant.load(ld),
+            malformed: self.malformed.load(ld),
+            connections: self.connections.load(ld),
+            disconnects_midframe: self.disconnects_midframe.load(ld),
+            draining_rejected: self.draining_rejected.load(ld),
+            stopped_replies: self.stopped_replies.load(ld),
+            lut_swaps: self.lut_swaps.load(ld),
+            drain_dropped: self.drain_dropped.load(ld),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Responder — exactly-once typed replies
+// ---------------------------------------------------------------------------
+
+/// Holds a slot in a tenant's outstanding-request quota; released on drop
+/// (i.e. when the request has been answered, whatever the outcome).
+struct QuotaGuard(Arc<AtomicUsize>);
+
+impl Drop for QuotaGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Exactly-once reply guard. Every request — admitted or rejected — owns
+/// one; `send` consumes the single reply, and dropping an unanswered
+/// responder (lane kill, drain timeout, internal error) emits a typed
+/// `Stopped` frame so no client ever hangs on a silently dropped request.
+struct Responder {
+    id: u64,
+    tx: Sender<ResponseFrame>,
+    counters: Arc<NetCounters>,
+    /// released (on drop) only after the reply is out
+    quota: Option<QuotaGuard>,
+    done: bool,
+}
+
+impl Responder {
+    fn new(id: u64, tx: Sender<ResponseFrame>, counters: Arc<NetCounters>) -> Responder {
+        Responder { id, tx, counters, quota: None, done: false }
+    }
+
+    fn send(&mut self, status: Status, epoch: u64, logits: Vec<f32>, message: String) {
+        self.done = true;
+        // a dead connection just means nobody is listening; the writer
+        // thread cleans up
+        let _ = self.tx.send(ResponseFrame { id: self.id, status, epoch, logits, message });
+        self.quota = None;
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        if !self.done {
+            self.counters.stopped_replies.fetch_add(1, Ordering::Relaxed);
+            let _ = self.tx.send(ResponseFrame {
+                id: self.id,
+                status: Status::Stopped,
+                epoch: 0,
+                logits: Vec::new(),
+                message: "server stopped before replying".into(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bounded priority admission queue
+// ---------------------------------------------------------------------------
+
+struct NetRequest {
+    image: Vec<f32>,
+    priority: Priority,
+    deadline: Option<Instant>,
+    submitted: Instant,
+    responder: Responder,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum QueueMode {
+    Open,
+    /// graceful drain: no admission, lanes finish what is queued
+    Draining,
+    /// fail-stop: no admission, queued requests already answered
+    Failed,
+}
+
+struct NqState {
+    /// one FIFO per class, popped highest-priority-first
+    lanes: [VecDeque<NetRequest>; 3],
+    mode: QueueMode,
+}
+
+/// Bounded MPMC priority queue: readers submit (shed/overflow at the
+/// class admission limits), lanes pop dynamic batches highest-priority
+/// first. Same `Condvar` topology as the in-process `AdmissionQueue`.
+struct NetQueue {
+    depth: usize,
+    state: Mutex<NqState>,
+    cv: Condvar,
+}
+
+impl NetQueue {
+    fn new(depth: usize) -> NetQueue {
+        assert!(depth > 0, "queue depth must be positive");
+        NetQueue {
+            depth,
+            state: Mutex::new(NqState {
+                lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                mode: QueueMode::Open,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Admit or turn away. On rejection the request is handed back with
+    /// the typed status so the caller can answer it (and count it).
+    fn submit(&self, req: NetRequest) -> Result<(), (NetRequest, Status)> {
+        let mut st = self.state.lock().unwrap();
+        match st.mode {
+            QueueMode::Open => {}
+            QueueMode::Draining => return Err((req, Status::Draining)),
+            QueueMode::Failed => return Err((req, Status::Stopped)),
+        }
+        let occupancy: usize = st.lanes.iter().map(|q| q.len()).sum();
+        if occupancy >= admission_limit(self.depth, req.priority) {
+            let status = if req.priority == Priority::High { Status::Overflow } else { Status::Shed };
+            return Err((req, status));
+        }
+        st.lanes[req.priority.as_u8() as usize].push_back(req);
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    fn pop_one(st: &mut NqState) -> Option<NetRequest> {
+        st.lanes.iter_mut().find_map(|q| q.pop_front())
+    }
+
+    /// Lane side: block for the first request, then fill up to `batch`
+    /// for at most `max_wait`, always taking the highest class first.
+    /// `None` when the queue is closed and drained.
+    fn pop_batch(&self, batch: usize, max_wait: Duration) -> Option<Vec<NetRequest>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(first) = Self::pop_one(&mut st) {
+                let mut pending = vec![first];
+                let deadline = Instant::now() + max_wait;
+                while pending.len() < batch {
+                    if let Some(r) = Self::pop_one(&mut st) {
+                        pending.push(r);
+                        continue;
+                    }
+                    if st.mode != QueueMode::Open {
+                        break;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, timeout) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                    st = guard;
+                    if timeout.timed_out() {
+                        while pending.len() < batch {
+                            match Self::pop_one(&mut st) {
+                                Some(r) => pending.push(r),
+                                None => break,
+                            }
+                        }
+                        break;
+                    }
+                }
+                if st.lanes.iter().any(|q| !q.is_empty()) {
+                    self.cv.notify_one();
+                }
+                return Some(pending);
+            }
+            if st.mode != QueueMode::Open {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Stop admitting; lanes drain what is queued and exit.
+    fn drain_close(&self) {
+        let mut st = self.state.lock().unwrap();
+        if st.mode == QueueMode::Open {
+            st.mode = QueueMode::Draining;
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Fail-stop: close and answer everything still queued with a typed
+    /// `Stopped` (via each responder's drop). Returns how many were
+    /// dropped unserved.
+    fn fail(&self) -> usize {
+        let mut st = self.state.lock().unwrap();
+        st.mode = QueueMode::Failed;
+        let n: usize = st.lanes.iter().map(|q| q.len()).sum();
+        for q in st.lanes.iter_mut() {
+            q.clear(); // Responder::drop sends the typed Stopped reply
+        }
+        drop(st);
+        self.cv.notify_all();
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tenant registry
+// ---------------------------------------------------------------------------
+
+/// Per-tenant serving policy.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantSpec {
+    /// lane (backend replica) count
+    pub lanes: usize,
+    /// max outstanding admitted requests (queued + in compute) for this
+    /// tenant; 0 = unlimited
+    pub quota: usize,
+}
+
+impl Default for TenantSpec {
+    fn default() -> TenantSpec {
+        TenantSpec { lanes: 1, quota: 0 }
+    }
+}
+
+/// What the server is built from: tenant name → template backend + spec.
+/// The template's weights and [`MulSpec`] define epoch 1; hot-swaps
+/// mutate the template and bump the epoch.
+#[derive(Default)]
+pub struct NetRegistry {
+    entries: Vec<(String, CpuBackend, TenantSpec)>,
+}
+
+impl NetRegistry {
+    pub fn new() -> NetRegistry {
+        NetRegistry::default()
+    }
+
+    pub fn add(&mut self, tenant: &str, backend: CpuBackend, spec: TenantSpec) -> Result<()> {
+        if tenant.is_empty() || tenant.len() > wire::MAX_TENANT_LEN {
+            bail!("tenant name must be 1..={} bytes", wire::MAX_TENANT_LEN);
+        }
+        if self.entries.iter().any(|(n, _, _)| n == tenant) {
+            bail!("tenant {tenant:?} registered twice");
+        }
+        if spec.lanes == 0 {
+            bail!("tenant {tenant:?} needs at least one lane");
+        }
+        self.entries.push((tenant.to_string(), backend, spec));
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+struct TenantModel {
+    epoch: u64,
+    backend: CpuBackend,
+}
+
+struct TenantState {
+    name: String,
+    batch: usize,
+    image_elems: usize,
+    classes: usize,
+    quota: usize,
+    outstanding: Arc<AtomicUsize>,
+    queue: NetQueue,
+    /// the swap-able template; lanes clone it under this lock
+    template: Mutex<TenantModel>,
+    /// lock-free epoch mirror lanes poll between batches
+    epoch: AtomicU64,
+}
+
+// ---------------------------------------------------------------------------
+// Lane loop
+// ---------------------------------------------------------------------------
+
+fn net_lane(
+    t: Arc<TenantState>,
+    counters: Arc<NetCounters>,
+    faults: FaultPlan,
+    lane: usize,
+    max_wait: Duration,
+) -> Result<Stats> {
+    // replica cloned from the template under its lock (epoch pinned with it)
+    let (mut epoch, mut backend) = {
+        let tm = t.template.lock().unwrap();
+        (tm.epoch, tm.backend.clone())
+    };
+    let (batch, image_elems, classes) = (t.batch, t.image_elems, t.classes);
+    let mut stats = Stats::default();
+    let mut images: Vec<f32> = Vec::with_capacity(batch * image_elems);
+    let mut batch_index: u64 = 0;
+    while let Some(pending) = t.queue.pop_batch(batch, max_wait) {
+        // in-queue deadline enforcement: an expired request is answered
+        // with the typed error and never computed
+        let now = Instant::now();
+        let mut live: Vec<NetRequest> = Vec::with_capacity(pending.len());
+        for mut r in pending {
+            if r.deadline.map_or(false, |d| now >= d) {
+                counters.expired_queue.fetch_add(1, Ordering::Relaxed);
+                r.responder.send(
+                    Status::DeadlineExceeded,
+                    0,
+                    Vec::new(),
+                    "deadline expired in queue".into(),
+                );
+            } else {
+                live.push(r);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        // scripted faults: delay models a slow lane; kill errors out here
+        // — after the pop, so the fail-stop path must answer `live` (it
+        // does: dropping them fires each Responder's typed Stopped)
+        faults.before_batch(&t.name, lane, batch_index)?;
+        batch_index += 1;
+        // hot-swap: if the template epoch moved, re-clone the whole
+        // template under its lock — a half-swapped table is unobservable
+        if t.epoch.load(Ordering::Acquire) != epoch {
+            let tm = t.template.lock().unwrap();
+            epoch = tm.epoch;
+            backend = tm.backend.clone();
+        }
+        let fill = live.len();
+        images.clear();
+        for r in &live {
+            images.extend_from_slice(&r.image);
+        }
+        crate::data::pad_batch_by_cycling(&mut images, fill, batch, image_elems);
+        let logits = backend.run_batch(&images)?;
+        if logits.len() != batch * classes {
+            bail!(
+                "{}: backend returned {} logits, expected {}",
+                backend.describe(),
+                logits.len(),
+                batch * classes
+            );
+        }
+        let now = Instant::now();
+        for (i, mut r) in live.into_iter().enumerate() {
+            if r.deadline.map_or(false, |d| now >= d) {
+                // computed, but too late: the typed error, never the
+                // stale logits
+                counters.expired_reply.fetch_add(1, Ordering::Relaxed);
+                r.responder.send(
+                    Status::DeadlineExceeded,
+                    epoch,
+                    Vec::new(),
+                    "deadline expired before reply".into(),
+                );
+                continue;
+            }
+            let latency = r.submitted.elapsed();
+            stats.record_request(latency.as_secs_f64());
+            counters.replied_ok.fetch_add(1, Ordering::Relaxed);
+            r.responder.send(
+                Status::Ok,
+                epoch,
+                logits[i * classes..(i + 1) * classes].to_vec(),
+                String::new(),
+            );
+        }
+        stats.record_batch(fill);
+    }
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+enum ReadOutcome {
+    Done,
+    /// EOF at a frame boundary — the peer closed cleanly
+    CleanClose,
+    /// EOF (or fatal io error) inside a frame — a torn peer
+    Torn,
+    /// server stopping, observed at a frame boundary
+    Stopped,
+}
+
+/// Fill `buf` from a read-timeout socket, tolerating `WouldBlock` ticks.
+/// The stop flag is honored only at a frame *boundary* (`mid_frame =
+/// false`, nothing read yet); mid-frame it grants a bounded grace so
+/// in-flight frames finish during drain, then tears.
+fn read_full(
+    s: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    mid_frame: bool,
+    poll_ticks_grace: u32,
+) -> ReadOutcome {
+    let mut filled = 0usize;
+    let mut grace = 0u32;
+    while filled < buf.len() {
+        match s.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 && !mid_frame {
+                    ReadOutcome::CleanClose
+                } else {
+                    ReadOutcome::Torn
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => {
+                if stop.load(Ordering::Relaxed) {
+                    if filled == 0 && !mid_frame {
+                        return ReadOutcome::Stopped;
+                    }
+                    grace += 1;
+                    if grace > poll_ticks_grace {
+                        return ReadOutcome::Torn;
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return ReadOutcome::Torn,
+        }
+    }
+    ReadOutcome::Done
+}
+
+fn bad_request_reply(id: u64, err: &WireError) -> ResponseFrame {
+    ResponseFrame {
+        id,
+        status: Status::BadRequest,
+        epoch: 0,
+        logits: Vec::new(),
+        message: err.to_string(),
+    }
+}
+
+/// Admission: tenant lookup → shape check → quota → deadline stamp (the
+/// fault hook can burn budget here) → priority queue submit. Every
+/// outcome is a typed reply and exactly one counter bump.
+fn admit(
+    req: RequestFrame,
+    tenants: &BTreeMap<String, Arc<TenantState>>,
+    counters: &Arc<NetCounters>,
+    faults: &FaultPlan,
+    tx: &Sender<ResponseFrame>,
+) {
+    let arrival = Instant::now();
+    let mut responder = Responder::new(req.id, tx.clone(), Arc::clone(counters));
+    let Some(t) = tenants.get(&req.tenant) else {
+        counters.unknown_tenant.fetch_add(1, Ordering::Relaxed);
+        responder.send(
+            Status::UnknownTenant,
+            0,
+            Vec::new(),
+            format!("unknown tenant {:?}", req.tenant),
+        );
+        return;
+    };
+    if req.image.len() != t.image_elems {
+        counters.malformed.fetch_add(1, Ordering::Relaxed);
+        responder.send(
+            Status::BadRequest,
+            0,
+            Vec::new(),
+            format!("image carries {} f32s, tenant expects {}", req.image.len(), t.image_elems),
+        );
+        return;
+    }
+    if t.quota > 0 {
+        let prev = t.outstanding.fetch_add(1, Ordering::AcqRel);
+        if prev >= t.quota {
+            t.outstanding.fetch_sub(1, Ordering::AcqRel);
+            counters.quota_rejected.fetch_add(1, Ordering::Relaxed);
+            responder.send(
+                Status::QuotaExceeded,
+                0,
+                Vec::new(),
+                format!("tenant {:?} at quota {}", req.tenant, t.quota),
+            );
+            return;
+        }
+        responder.quota = Some(QuotaGuard(Arc::clone(&t.outstanding)));
+    }
+    // injected admission delay burns the deadline budget server-side
+    faults.on_admission(&req.tenant);
+    let deadline = (req.deadline_ms > 0)
+        .then(|| arrival + Duration::from_millis(req.deadline_ms as u64));
+    if deadline.map_or(false, |d| Instant::now() >= d) {
+        counters.expired_admission.fetch_add(1, Ordering::Relaxed);
+        responder.send(
+            Status::DeadlineExceeded,
+            0,
+            Vec::new(),
+            "deadline expired at admission".into(),
+        );
+        return;
+    }
+    let priority = req.priority;
+    match t.queue.submit(NetRequest {
+        image: req.image,
+        priority,
+        deadline,
+        submitted: arrival,
+        responder,
+    }) {
+        Ok(()) => {
+            counters.accepted.fetch_add(1, Ordering::Relaxed);
+        }
+        Err((rejected, status)) => {
+            match status {
+                Status::Shed => {
+                    counters.shed[priority.as_u8() as usize].fetch_add(1, Ordering::Relaxed)
+                }
+                Status::Overflow => counters.overflow.fetch_add(1, Ordering::Relaxed),
+                Status::Draining => counters.draining_rejected.fetch_add(1, Ordering::Relaxed),
+                // Failed queue: counted by stopped_replies via the send
+                _ => 0,
+            };
+            let mut responder = rejected.responder;
+            let msg = match status {
+                Status::Shed => {
+                    format!("shed: {} priority over admission limit", priority.describe())
+                }
+                Status::Overflow => "admission queue full".to_string(),
+                Status::Draining => "server draining".to_string(),
+                _ => "server stopped".to_string(),
+            };
+            responder.send(status, 0, Vec::new(), msg);
+        }
+    }
+}
+
+/// One connection's reader loop: interruptible frame reads, frame-level
+/// validation (typed `BadRequest` + close on malformed bytes — a peer
+/// that breaks framing cannot be re-synchronized), admission. The writer
+/// half drains `rx` until every responder for this connection resolved.
+fn conn_loop(
+    stream: TcpStream,
+    tenants: Arc<BTreeMap<String, Arc<TenantState>>>,
+    counters: Arc<NetCounters>,
+    faults: FaultPlan,
+    stop: Arc<AtomicBool>,
+    poll: Duration,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(poll));
+    let wstream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::channel::<ResponseFrame>();
+    let writer = std::thread::spawn(move || {
+        let mut w = wstream;
+        while let Ok(resp) = rx.recv() {
+            if wire::write_frame(&mut w, FrameKind::Response, &resp.encode()).is_err() {
+                // peer gone: drain remaining replies so responders never
+                // block, then bail
+                while rx.recv().is_ok() {}
+                break;
+            }
+        }
+        let _ = w.shutdown(Shutdown::Write);
+    });
+    let mut rstream = stream;
+    // in-flight frames get drain_grace poll ticks to finish after stop
+    let drain_grace = 500u32;
+    loop {
+        let mut hdr = [0u8; wire::HEADER_LEN];
+        match read_full(&mut rstream, &mut hdr, &stop, false, drain_grace) {
+            ReadOutcome::Done => {}
+            ReadOutcome::CleanClose | ReadOutcome::Stopped => break,
+            ReadOutcome::Torn => {
+                counters.disconnects_midframe.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+        let (kind, body_len) = match wire::decode_header(&hdr) {
+            Ok(v) => v,
+            Err(e) => {
+                // oversized declared lengths land here, BEFORE any body
+                // allocation
+                counters.malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(bad_request_reply(0, &e));
+                break;
+            }
+        };
+        let mut body = vec![0u8; body_len + 4];
+        match read_full(&mut rstream, &mut body, &stop, true, drain_grace) {
+            ReadOutcome::Done => {}
+            _ => {
+                counters.disconnects_midframe.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+        let crc = body.split_off(body_len);
+        if let Err(e) = wire::verify_crc(&body, &crc) {
+            counters.malformed.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(bad_request_reply(0, &e));
+            break;
+        }
+        if kind != FrameKind::Request {
+            counters.malformed.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(bad_request_reply(0, &WireError::Malformed("expected a request frame".into())));
+            break;
+        }
+        let req = match RequestFrame::decode(&body) {
+            Ok(r) => r,
+            Err(e) => {
+                counters.malformed.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(bad_request_reply(0, &e));
+                break;
+            }
+        };
+        admit(req, &tenants, &counters, &faults, &tx);
+    }
+    // closing the read half tells well-behaved peers we are done reading
+    let _ = rstream.shutdown(Shutdown::Read);
+    drop(tx);
+    let _ = writer.join();
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Final report from [`NetHandle::shutdown`]: merged per-lane serving
+/// [`Stats`] (latency reservoir, batches, fills), the exact failure
+/// accounting, and any lane errors (injected kills land here — they are
+/// an expected outcome of the fault matrix, not a join failure).
+#[derive(Debug)]
+pub struct NetReport {
+    pub stats: Stats,
+    pub counts: NetCounts,
+    pub lane_errors: Vec<String>,
+    pub drain_timed_out: bool,
+}
+
+/// Handle to a spawned networked server.
+pub struct NetHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    tenants: Arc<BTreeMap<String, Arc<TenantState>>>,
+    counters: Arc<NetCounters>,
+    cfg: NetConfig,
+    accept: Option<JoinHandle<()>>,
+    lanes: Vec<(String, JoinHandle<Result<Stats>>)>,
+    lanes_done: Arc<AtomicUsize>,
+    live_conns: Arc<AtomicUsize>,
+}
+
+/// Spawn the networked serving tier: bind `addr` (use port 0 for an
+/// ephemeral loopback port), one queue + `spec.lanes` lane threads per
+/// registry tenant, an acceptor, and per-connection reader/writer
+/// threads. `faults` is consulted at the scripted injection points
+/// (pass [`FaultPlan::none`] outside tests).
+pub fn spawn(
+    addr: impl ToSocketAddrs,
+    registry: NetRegistry,
+    cfg: NetConfig,
+    faults: FaultPlan,
+) -> Result<NetHandle> {
+    if registry.is_empty() {
+        bail!("networked server needs at least one registered tenant");
+    }
+    // warm the shared kernel pool before any lane spawns (same policy as
+    // the in-process server: first-request latency never pays for it)
+    crate::kernels::gemm::warm_tiled();
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let mut tenants = BTreeMap::new();
+    for (name, backend, spec) in registry.entries {
+        let t = TenantState {
+            name: name.clone(),
+            batch: backend.batch(),
+            image_elems: backend.image_elems(),
+            classes: backend.classes(),
+            quota: spec.quota,
+            outstanding: Arc::new(AtomicUsize::new(0)),
+            queue: NetQueue::new(cfg.serve.queue_depth),
+            template: Mutex::new(TenantModel { epoch: 1, backend }),
+            epoch: AtomicU64::new(1),
+        };
+        let lanes = spec.lanes;
+        tenants.insert(name, (Arc::new(t), lanes));
+    }
+    let counters = Arc::new(NetCounters::default());
+    let stop = Arc::new(AtomicBool::new(false));
+    let lanes_done = Arc::new(AtomicUsize::new(0));
+    let live_conns = Arc::new(AtomicUsize::new(0));
+
+    let mut lane_joins = Vec::new();
+    for (name, (t, lanes)) in &tenants {
+        for lane in 0..*lanes {
+            let t = Arc::clone(t);
+            let counters = Arc::clone(&counters);
+            let faults = faults.clone();
+            let done = Arc::clone(&lanes_done);
+            let max_wait = cfg.serve.max_wait;
+            let join = std::thread::spawn(move || {
+                let r = net_lane(Arc::clone(&t), counters.clone(), faults, lane, max_wait);
+                if r.is_err() {
+                    // fail-stop: answer everything queued with typed
+                    // errors instead of stranding the waiting clients
+                    let dropped = t.queue.fail();
+                    counters.drain_dropped.fetch_add(dropped as u64, Ordering::Relaxed);
+                }
+                done.fetch_add(1, Ordering::Release);
+                r
+            });
+            lane_joins.push((format!("{name}[{lane}]"), join));
+        }
+    }
+
+    let tenant_map: Arc<BTreeMap<String, Arc<TenantState>>> =
+        Arc::new(tenants.into_iter().map(|(k, (t, _))| (k, t)).collect());
+    let accept = {
+        let tenants = Arc::clone(&tenant_map);
+        let counters = Arc::clone(&counters);
+        let stop = Arc::clone(&stop);
+        let live = Arc::clone(&live_conns);
+        let faults = faults.clone();
+        let poll = cfg.poll;
+        std::thread::spawn(move || loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    counters.connections.fetch_add(1, Ordering::Relaxed);
+                    live.fetch_add(1, Ordering::AcqRel);
+                    let tenants = Arc::clone(&tenants);
+                    let counters = Arc::clone(&counters);
+                    let stop = Arc::clone(&stop);
+                    let live = Arc::clone(&live);
+                    let faults = faults.clone();
+                    std::thread::spawn(move || {
+                        conn_loop(stream, tenants, counters, faults, stop, poll);
+                        live.fetch_sub(1, Ordering::AcqRel);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(poll);
+                }
+                Err(_) => break,
+            }
+        })
+    };
+
+    Ok(NetHandle {
+        addr,
+        stop,
+        tenants: tenant_map,
+        counters,
+        cfg,
+        accept: Some(accept),
+        lanes: lane_joins,
+        lanes_done,
+        live_conns,
+    })
+}
+
+impl NetHandle {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Exact failure-accounting snapshot (live; tests poll it).
+    pub fn counts(&self) -> NetCounts {
+        self.counters.snapshot()
+    }
+
+    /// Hot-swap a tenant's multiplication strategy (e.g. a new LUT)
+    /// behind its epoch: the template mutates under its lock, the epoch
+    /// bumps, and each lane re-clones the template before its next
+    /// batch. Returns the new epoch. In-flight batches finish on the
+    /// epoch they started with — no request ever sees a partial table.
+    pub fn swap_mul(&self, tenant: &str, mul: MulSpec) -> Result<u64, InferError> {
+        let t = self
+            .tenants
+            .get(tenant)
+            .ok_or_else(|| InferError::UnknownTenant(tenant.to_string()))?;
+        let mut tm = t.template.lock().unwrap();
+        tm.backend.set_mul(mul);
+        tm.epoch += 1;
+        t.epoch.store(tm.epoch, Ordering::Release);
+        self.counters.lut_swaps.fetch_add(1, Ordering::Relaxed);
+        Ok(tm.epoch)
+    }
+
+    /// Graceful shutdown: stop accepting, close the queues for drain,
+    /// give admitted work [`NetConfig::drain_deadline`] to finish, then
+    /// fail-stop whatever remains (typed errors to its clients, counted
+    /// in `drain_dropped`). Returns the merged stats + exact accounting.
+    pub fn shutdown(mut self) -> Result<NetReport> {
+        self.stop.store(true, Ordering::Release);
+        if let Some(a) = self.accept.take() {
+            a.join().map_err(|_| anyhow!("accept thread panicked"))?;
+        }
+        for t in self.tenants.values() {
+            t.queue.drain_close();
+        }
+        let lane_count = self.lanes.len();
+        let deadline = Instant::now() + self.cfg.drain_deadline;
+        while self.lanes_done.load(Ordering::Acquire) < lane_count && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let drain_timed_out = self.lanes_done.load(Ordering::Acquire) < lane_count;
+        if drain_timed_out {
+            for t in self.tenants.values() {
+                let dropped = t.queue.fail();
+                self.counters.drain_dropped.fetch_add(dropped as u64, Ordering::Relaxed);
+            }
+        }
+        let mut stats = Stats::default();
+        let mut lane_errors = Vec::new();
+        for (name, join) in self.lanes.drain(..) {
+            match join.join() {
+                Ok(Ok(s)) => stats.merge(&s),
+                Ok(Err(e)) => lane_errors.push(format!("{name}: {e:#}")),
+                Err(_) => lane_errors.push(format!("{name}: lane panicked")),
+            }
+        }
+        // connection threads exit on their next poll tick; bounded wait
+        let conn_deadline = Instant::now() + Duration::from_secs(2);
+        while self.live_conns.load(Ordering::Acquire) > 0 && Instant::now() < conn_deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let counts = self.counters.snapshot();
+        // the aggregate reject_rate covers everything turned away at
+        // admission, same meaning as the in-process server
+        stats.rejected += counts.shed_total() + counts.overflow + counts.draining_rejected;
+        Ok(NetReport { stats, counts, lane_errors, drain_timed_out })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Bounded-retry policy with exponential backoff. Jitter-free by
+/// construction ([`RetryPolicy::backoff`] is a pure function of the
+/// attempt index), so `sleep = false` gives a fully deterministic test
+/// mode — same attempt sequence, no wall-clock dependence.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// total send attempts (>= 1); 1 = never retry
+    pub max_attempts: usize,
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+    /// false = deterministic test mode: retry immediately, never sleep
+    pub sleep: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(200),
+            sleep: true,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `attempt` (0-based): `base * 2^attempt`
+    /// capped at `max_backoff`. Pure — no jitter, no clock reads.
+    pub fn backoff(&self, attempt: usize) -> Duration {
+        let factor = 1u32 << attempt.min(16) as u32;
+        self.base_backoff.saturating_mul(factor).min(self.max_backoff)
+    }
+}
+
+/// A successful networked reply.
+#[derive(Clone, Debug)]
+pub struct NetReply {
+    pub logits: Vec<f32>,
+    /// model epoch that computed the logits (hot-swaps bump it)
+    pub epoch: u64,
+    /// round-trip latency as observed by the client (includes retries)
+    pub latency: Duration,
+}
+
+/// Synchronous client over one persistent connection. Retries **only**
+/// idempotent rejections (shed/overflow — the server provably did not
+/// enqueue the request); an io failure after a request may have reached
+/// the wire is [`InferError::Ambiguous`] and is never retried, because
+/// the server may have executed it.
+pub struct NetClient {
+    stream: TcpStream,
+    tenant: String,
+    next_id: u64,
+    retry: RetryPolicy,
+}
+
+impl NetClient {
+    pub fn connect(
+        addr: impl ToSocketAddrs,
+        tenant: &str,
+        retry: RetryPolicy,
+    ) -> Result<NetClient, InferError> {
+        assert!(retry.max_attempts >= 1, "max_attempts must be >= 1");
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| InferError::Transport(format!("connect: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient { stream, tenant: tenant.to_string(), next_id: 1, retry })
+    }
+
+    /// One blocking inference call. `deadline` is the per-request budget
+    /// carried to the server (relative — no clock sync needed).
+    pub fn infer(
+        &mut self,
+        image: &[f32],
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<NetReply, InferError> {
+        let start = Instant::now();
+        let deadline_ms = deadline
+            .map(|d| d.as_millis().clamp(1, u32::MAX as u128) as u32)
+            .unwrap_or(0);
+        let mut attempt = 0usize;
+        loop {
+            let id = self.next_id;
+            self.next_id += 1;
+            let req = RequestFrame {
+                id,
+                priority,
+                deadline_ms,
+                tenant: self.tenant.clone(),
+                image: image.to_vec(),
+            };
+            if let Err(e) = wire::write_frame(&mut self.stream, FrameKind::Request, &req.encode())
+            {
+                // bytes may be on the wire — ambiguous, never retried
+                return Err(InferError::Ambiguous(format!("send: {e}")));
+            }
+            let resp = match wire::read_frame(&mut self.stream) {
+                Ok((FrameKind::Response, body)) => ResponseFrame::decode(&body)
+                    .map_err(|e| InferError::Transport(format!("bad response: {e}")))?,
+                Ok((kind, _)) => {
+                    return Err(InferError::Transport(format!("unexpected {kind:?} frame")))
+                }
+                // the request is in flight and the reply is gone —
+                // ambiguous, never retried
+                Err(e) => return Err(InferError::Ambiguous(format!("awaiting reply: {e}"))),
+            };
+            if resp.id != id {
+                return Err(InferError::Transport(format!(
+                    "response id {} for request {id}",
+                    resp.id
+                )));
+            }
+            match resp.status {
+                Status::Ok => {
+                    return Ok(NetReply {
+                        logits: resp.logits,
+                        epoch: resp.epoch,
+                        latency: start.elapsed(),
+                    })
+                }
+                s if s.idempotent_rejection() && attempt + 1 < self.retry.max_attempts => {
+                    if self.retry.sleep {
+                        std::thread::sleep(self.retry.backoff(attempt));
+                    }
+                    attempt += 1;
+                }
+                s => return Err(status_error(s, priority, &resp.message)),
+            }
+        }
+    }
+}
+
+fn status_error(status: Status, priority: Priority, message: &str) -> InferError {
+    match status {
+        Status::Ok => InferError::Transport("Ok is not an error".into()),
+        Status::Shed => InferError::Shed { priority },
+        Status::Overflow => InferError::Overloaded,
+        Status::DeadlineExceeded => InferError::DeadlineExceeded,
+        Status::UnknownTenant => InferError::UnknownTenant(message.to_string()),
+        Status::QuotaExceeded => InferError::QuotaExceeded,
+        Status::Draining => InferError::Draining,
+        Status::Stopped => InferError::Stopped,
+        Status::BadRequest => InferError::BadRequest(message.to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_limits_are_monotone_in_priority() {
+        for depth in [1, 2, 3, 4, 7, 64, 1000] {
+            let low = admission_limit(depth, Priority::Low);
+            let normal = admission_limit(depth, Priority::Normal);
+            let high = admission_limit(depth, Priority::High);
+            assert!(low <= normal && normal <= high, "depth {depth}");
+            assert_eq!(high, depth, "High only overflows at the hard depth");
+            assert!(low >= 1, "every class can make progress on an empty queue");
+        }
+        assert_eq!(admission_limit(64, Priority::Low), 32);
+        assert_eq!(admission_limit(64, Priority::Normal), 48);
+        assert_eq!(admission_limit(4, Priority::Low), 2);
+        assert_eq!(admission_limit(4, Priority::Normal), 3);
+    }
+
+    fn dummy_request(prio: Priority, counters: &Arc<NetCounters>) -> (NetRequest, mpsc::Receiver<ResponseFrame>) {
+        let (tx, rx) = mpsc::channel();
+        let req = NetRequest {
+            image: vec![prio.as_u8() as f32],
+            priority: prio,
+            deadline: None,
+            submitted: Instant::now(),
+            responder: Responder::new(prio.as_u8() as u64, tx, Arc::clone(counters)),
+        };
+        (req, rx)
+    }
+
+    #[test]
+    fn queue_sheds_by_class_and_pops_high_first() {
+        let counters = Arc::new(NetCounters::default());
+        let q = NetQueue::new(4); // limits: low 2, normal 3, high 4
+        let mut rxs = Vec::new();
+        // fill to 2 with low → third low sheds
+        for _ in 0..2 {
+            let (r, rx) = dummy_request(Priority::Low, &counters);
+            q.submit(r).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let (r, _rx) = dummy_request(Priority::Low, &counters);
+        match q.submit(r) {
+            Err((_, Status::Shed)) => {}
+            _ => panic!("expected low shed at occupancy 2"),
+        }
+        // normal still admitted at occupancy 2, shed at 3
+        let (r, rx) = dummy_request(Priority::Normal, &counters);
+        q.submit(r).map_err(|_| ()).unwrap();
+        rxs.push(rx);
+        let (r, _rx2) = dummy_request(Priority::Normal, &counters);
+        assert!(matches!(q.submit(r), Err((_, Status::Shed))));
+        // high admitted at 3, overflow at 4
+        let (r, rx) = dummy_request(Priority::High, &counters);
+        q.submit(r).map_err(|_| ()).unwrap();
+        rxs.push(rx);
+        let (r, _rx3) = dummy_request(Priority::High, &counters);
+        assert!(matches!(q.submit(r), Err((_, Status::Overflow))));
+        // pop order: the high request first, then normal, then the lows
+        let batch = q.pop_batch(4, Duration::ZERO).unwrap();
+        let prios: Vec<Priority> = batch.iter().map(|r| r.priority).collect();
+        assert_eq!(prios, vec![Priority::High, Priority::Normal, Priority::Low, Priority::Low]);
+    }
+
+    #[test]
+    fn queue_drain_and_fail_semantics() {
+        let counters = Arc::new(NetCounters::default());
+        let q = NetQueue::new(8);
+        let (r, rx_queued) = dummy_request(Priority::Normal, &counters);
+        q.submit(r).map_err(|_| ()).unwrap();
+        q.drain_close();
+        // draining: no admission, queued work still poppable
+        let (r, _rx) = dummy_request(Priority::Normal, &counters);
+        assert!(matches!(q.submit(r), Err((_, Status::Draining))));
+        let batch = q.pop_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(batch.len(), 1);
+        drop(batch);
+        assert!(q.pop_batch(4, Duration::ZERO).is_none(), "drained queue closes");
+        // the popped-and-dropped request got its typed Stopped reply
+        let resp = rx_queued.try_recv().unwrap();
+        assert_eq!(resp.status, Status::Stopped);
+        // fail(): queued requests answered Stopped via responder drop
+        let counters2 = Arc::new(NetCounters::default());
+        let q = NetQueue::new(8);
+        let (r, rx) = dummy_request(Priority::Low, &counters2);
+        q.submit(r).map_err(|_| ()).unwrap();
+        assert_eq!(q.fail(), 1);
+        assert_eq!(rx.try_recv().unwrap().status, Status::Stopped);
+        assert_eq!(counters2.stopped_replies.load(Ordering::Relaxed), 1);
+        assert!(q.pop_batch(4, Duration::ZERO).is_none());
+        assert!(matches!(q.submit(dummy_request(Priority::High, &counters2).0), Err((_, Status::Stopped))));
+    }
+
+    #[test]
+    fn responder_drop_sends_typed_stopped_exactly_once() {
+        let counters = Arc::new(NetCounters::default());
+        let (tx, rx) = mpsc::channel();
+        let mut r = Responder::new(42, tx, Arc::clone(&counters));
+        r.send(Status::Ok, 1, vec![1.0], String::new());
+        drop(r);
+        assert_eq!(rx.try_recv().unwrap().status, Status::Ok);
+        assert!(rx.try_recv().is_err(), "answered responder stays silent on drop");
+        let (tx, rx) = mpsc::channel();
+        let r = Responder::new(43, tx, Arc::clone(&counters));
+        drop(r);
+        let resp = rx.try_recv().unwrap();
+        assert_eq!((resp.id, resp.status), (43, Status::Stopped));
+        assert_eq!(counters.stopped_replies.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn backoff_doubles_capped_and_jitter_free() {
+        let p = RetryPolicy {
+            max_attempts: 8,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(35),
+            sleep: false,
+        };
+        assert_eq!(p.backoff(0), Duration::from_millis(5));
+        assert_eq!(p.backoff(1), Duration::from_millis(10));
+        assert_eq!(p.backoff(2), Duration::from_millis(20));
+        assert_eq!(p.backoff(3), Duration::from_millis(35), "capped");
+        assert_eq!(p.backoff(60), Duration::from_millis(35), "shift clamp, no overflow");
+        // jitter-free: same attempt → same duration, always
+        for a in 0..10 {
+            assert_eq!(p.backoff(a), p.backoff(a));
+        }
+    }
+
+    #[test]
+    fn registry_rejects_bad_tenants() {
+        let mut reg = NetRegistry::new();
+        let b = CpuBackend::for_model("lenet300", MulSpec::Native, 2, 1).unwrap();
+        reg.add("t0", b.clone(), TenantSpec::default()).unwrap();
+        assert!(reg.add("t0", b.clone(), TenantSpec::default()).is_err(), "duplicate");
+        assert!(reg.add("", b.clone(), TenantSpec::default()).is_err(), "empty name");
+        assert!(
+            reg.add("x", b.clone(), TenantSpec { lanes: 0, quota: 0 }).is_err(),
+            "zero lanes"
+        );
+        let long = "x".repeat(wire::MAX_TENANT_LEN + 1);
+        assert!(reg.add(&long, b, TenantSpec::default()).is_err(), "over-long name");
+    }
+}

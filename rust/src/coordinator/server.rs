@@ -33,6 +33,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::backend::InferBackend;
+use super::wire::Priority;
 use crate::nn::metrics::accuracy_from_logits;
 use crate::util::rng::Pcg32;
 use crate::util::stats as ustats;
@@ -54,7 +55,12 @@ pub struct Reply {
 }
 
 /// Typed client-side failure: the admission decision is part of the API,
-/// not an anonymous string.
+/// not an anonymous string. The in-process path uses
+/// `Rejected`/`Stopped`; the networked tier ([`super::net`]) adds the
+/// deadline/shed/tenant/transport outcomes. Of these, only
+/// [`Shed`](InferError::Shed) and [`Overloaded`](InferError::Overloaded)
+/// are idempotent rejections (the request was never enqueued) — they are
+/// the only variants [`super::net::NetClient`] will retry.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum InferError {
     /// The bounded admission queue was full — backpressure, try later.
@@ -64,6 +70,31 @@ pub enum InferError {
     },
     /// The server stopped (or failed) before replying.
     Stopped,
+    /// The request's deadline expired — at admission, in-queue, or at
+    /// reply time. A late result is never silently returned stale.
+    DeadlineExceeded,
+    /// Shed at admission under queue pressure (priority below the
+    /// surviving classes). Idempotent: safe to retry.
+    Shed {
+        /// the class the shed request carried
+        priority: Priority,
+    },
+    /// Networked admission queue at hard depth. Idempotent: safe to retry.
+    Overloaded,
+    /// The tenant is not in the server's model registry.
+    UnknownTenant(String),
+    /// The tenant's outstanding-request quota is exhausted.
+    QuotaExceeded,
+    /// Admission closed for graceful drain; in-flight work is finishing.
+    Draining,
+    /// The server rejected the frame or request contents as malformed.
+    BadRequest(String),
+    /// Transport-level failure before the request reached the server
+    /// (connect/encode) — the request was definitely not executed.
+    Transport(String),
+    /// The connection died with the request possibly in flight. NOT
+    /// retried: the server may have executed it.
+    Ambiguous(String),
 }
 
 impl std::fmt::Display for InferError {
@@ -73,6 +104,19 @@ impl std::fmt::Display for InferError {
                 write!(f, "request rejected: admission queue full (depth {queue_depth})")
             }
             InferError::Stopped => write!(f, "server stopped before replying"),
+            InferError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            InferError::Shed { priority } => {
+                write!(f, "shed at admission ({} priority under queue pressure)", priority.describe())
+            }
+            InferError::Overloaded => write!(f, "admission queue full"),
+            InferError::UnknownTenant(t) => write!(f, "unknown tenant {t:?}"),
+            InferError::QuotaExceeded => write!(f, "tenant quota exceeded"),
+            InferError::Draining => write!(f, "server draining; admission closed"),
+            InferError::BadRequest(m) => write!(f, "bad request: {m}"),
+            InferError::Transport(m) => write!(f, "transport failure: {m}"),
+            InferError::Ambiguous(m) => {
+                write!(f, "connection lost with request in flight (not retried): {m}")
+            }
         }
     }
 }
@@ -396,14 +440,14 @@ impl Default for Stats {
 }
 
 impl Stats {
-    fn record_request(&mut self, latency_s: f64) {
+    pub(crate) fn record_request(&mut self, latency_s: f64) {
         self.requests += 1;
         self.latencies.push(latency_s);
         self.latency_sum_s += latency_s;
         self.latency_max_s = self.latency_max_s.max(latency_s);
     }
 
-    fn record_batch(&mut self, fill: usize) {
+    pub(crate) fn record_batch(&mut self, fill: usize) {
         self.batches += 1;
         self.fill_sum += fill as u64;
     }

@@ -1,0 +1,593 @@
+//! Length-prefixed binary wire protocol for the networked serving tier.
+//!
+//! Layout of one frame (little endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"ATW1"
+//! 4       1     kind   (1 = request, 2 = response)
+//! 5       4     body length (u32, <= MAX_BODY — validated BEFORE any
+//!               allocation, so a hostile declared size can never OOM)
+//! 9       n     body
+//! 9+n     4     crc32 of the body
+//! ```
+//!
+//! Request body: `id u64 | priority u8 | deadline_ms u32 | tenant_len u16
+//! | tenant utf-8 | image_count u32 | image f32s`. The deadline is a
+//! **relative** time budget in milliseconds (0 = none) so client and
+//! server need no clock sync; the server stamps it against its own clock
+//! at frame arrival.
+//!
+//! Response body: `id u64 | status u8 | epoch u64 | logit_count u32 |
+//! logits f32s | msg_len u16 | msg utf-8`. `epoch` is the model epoch
+//! that computed the logits (LUT hot-swaps bump it), 0 for replies that
+//! never reached a backend.
+//!
+//! Every decode path is total: malformed bytes are a typed [`WireError`],
+//! never a panic, and all declared sizes are checked against what is
+//! actually present before anything is allocated or sliced.
+
+use std::io::{Read, Write};
+
+use crate::lut::format::crc32;
+
+/// Frame magic: "ApproxTrain Wire v1".
+pub const MAGIC: [u8; 4] = *b"ATW1";
+/// Fixed frame header size: magic + kind + body length.
+pub const HEADER_LEN: usize = 9;
+/// Hard cap on a frame body. Far above any real request (a resnet image
+/// row is ~3 KiB) but small enough that a hostile length field cannot
+/// drive an allocation anywhere near memory limits.
+pub const MAX_BODY: usize = 1 << 24;
+/// Hard cap on a tenant-name field.
+pub const MAX_TENANT_LEN: usize = 128;
+
+/// Frame discriminator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    Request,
+    Response,
+}
+
+impl FrameKind {
+    fn as_u8(self) -> u8 {
+        match self {
+            FrameKind::Request => 1,
+            FrameKind::Response => 2,
+        }
+    }
+
+    fn from_u8(b: u8) -> Option<FrameKind> {
+        match b {
+            1 => Some(FrameKind::Request),
+            2 => Some(FrameKind::Response),
+            _ => None,
+        }
+    }
+}
+
+/// Request priority class, highest first. Load shedding under queue
+/// pressure sheds `Low` before `Normal` before `High` (see
+/// `coordinator::net::admission_limit`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    High = 0,
+    Normal = 1,
+    Low = 2,
+}
+
+impl Priority {
+    /// All classes, highest first — the queue pop / shed iteration order.
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(b: u8) -> Option<Priority> {
+        match b {
+            0 => Some(Priority::High),
+            1 => Some(Priority::Normal),
+            2 => Some(Priority::Low),
+            _ => None,
+        }
+    }
+
+    pub fn describe(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
+
+/// Reply status byte. Everything except `Ok` is a typed failure; `Shed`
+/// and `Overflow` are the only **idempotent** rejections (the request was
+/// definitely not admitted), so they are the only statuses a client may
+/// retry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Ok = 0,
+    /// Shed at admission under queue pressure (below-High priority).
+    Shed = 1,
+    /// Admission queue full (High priority, or queue at hard depth).
+    Overflow = 2,
+    /// Deadline expired — at admission, in-queue, or at reply time.
+    DeadlineExceeded = 3,
+    UnknownTenant = 4,
+    QuotaExceeded = 5,
+    /// Admission closed for graceful drain.
+    Draining = 6,
+    /// Server stopped (or failed) before replying.
+    Stopped = 7,
+    /// Malformed frame or request contents.
+    BadRequest = 8,
+}
+
+impl Status {
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_u8(b: u8) -> Option<Status> {
+        match b {
+            0 => Some(Status::Ok),
+            1 => Some(Status::Shed),
+            2 => Some(Status::Overflow),
+            3 => Some(Status::DeadlineExceeded),
+            4 => Some(Status::UnknownTenant),
+            5 => Some(Status::QuotaExceeded),
+            6 => Some(Status::Draining),
+            7 => Some(Status::Stopped),
+            8 => Some(Status::BadRequest),
+            _ => None,
+        }
+    }
+
+    /// True for the statuses a client may safely resend after: the
+    /// request was rejected at admission without being enqueued, so a
+    /// retry cannot double-execute it.
+    pub fn idempotent_rejection(self) -> bool {
+        matches!(self, Status::Shed | Status::Overflow)
+    }
+}
+
+/// Typed wire failure — every malformed input maps here, never a panic.
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    BadMagic([u8; 4]),
+    BadKind(u8),
+    /// Declared body length exceeds [`MAX_BODY`]; detected from the
+    /// 9-byte header alone, before any body allocation.
+    Oversized { declared: usize, max: usize },
+    /// A declared size runs past the bytes actually present.
+    Truncated { need: usize, have: usize },
+    Crc { want: u32, got: u32 },
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire io: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            WireError::BadKind(k) => write!(f, "bad frame kind {k}"),
+            WireError::Oversized { declared, max } => {
+                write!(f, "declared body length {declared} exceeds max {max}")
+            }
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} more bytes, have {have}")
+            }
+            WireError::Crc { want, got } => {
+                write!(f, "frame body corrupt: crc {got:#x} != {want:#x}")
+            }
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame assembly / header parsing
+// ---------------------------------------------------------------------------
+
+/// Assemble a complete frame (header + body + crc) for `body`.
+pub fn frame_bytes(kind: FrameKind, body: &[u8]) -> Vec<u8> {
+    assert!(body.len() <= MAX_BODY, "frame body over MAX_BODY");
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len() + 4);
+    out.extend_from_slice(&MAGIC);
+    out.push(kind.as_u8());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    out.extend_from_slice(&crc32(body).to_le_bytes());
+    out
+}
+
+/// Parse and validate a frame header. The declared length is bounds-
+/// checked here, so callers can size the body read without ever
+/// allocating for a hostile length.
+pub fn decode_header(hdr: &[u8; HEADER_LEN]) -> Result<(FrameKind, usize), WireError> {
+    if hdr[0..4] != MAGIC {
+        return Err(WireError::BadMagic([hdr[0], hdr[1], hdr[2], hdr[3]]));
+    }
+    let kind = FrameKind::from_u8(hdr[4]).ok_or(WireError::BadKind(hdr[4]))?;
+    let len = u32::from_le_bytes(hdr[5..9].try_into().unwrap()) as usize;
+    if len > MAX_BODY {
+        return Err(WireError::Oversized { declared: len, max: MAX_BODY });
+    }
+    Ok((kind, len))
+}
+
+/// Check a body against its trailing crc bytes.
+pub fn verify_crc(body: &[u8], crc_le: &[u8]) -> Result<(), WireError> {
+    if crc_le.len() != 4 {
+        return Err(WireError::Truncated { need: 4, have: crc_le.len() });
+    }
+    let want = u32::from_le_bytes(crc_le.try_into().unwrap());
+    let got = crc32(body);
+    if want != got {
+        return Err(WireError::Crc { want, got });
+    }
+    Ok(())
+}
+
+/// Write one frame (single `write_all`, so a healthy sender never emits a
+/// torn frame).
+pub fn write_frame(w: &mut impl Write, kind: FrameKind, body: &[u8]) -> std::io::Result<()> {
+    w.write_all(&frame_bytes(kind, body))
+}
+
+/// Blocking frame read (client side and tests; the server uses its own
+/// interruptible reader over the same [`decode_header`]/[`verify_crc`]).
+pub fn read_frame(r: &mut impl Read) -> Result<(FrameKind, Vec<u8>), WireError> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr)?;
+    let (kind, len) = decode_header(&hdr)?;
+    let mut rest = vec![0u8; len + 4];
+    r.read_exact(&mut rest)?;
+    let crc = rest.split_off(len);
+    verify_crc(&rest, &crc)?;
+    Ok((kind, rest))
+}
+
+// ---------------------------------------------------------------------------
+// Body encode/decode
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor over a frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let have = self.b.len() - self.pos;
+        if have < n {
+            return Err(WireError::Truncated { need: n, have });
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// `n` f32s; the byte size is computed with checked arithmetic and
+    /// bounds-checked before the vector is allocated.
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        let bytes = n
+            .checked_mul(4)
+            .ok_or_else(|| WireError::Malformed(format!("f32 count {n} overflows")))?;
+        let raw = self.take(bytes)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Trailing bytes after a complete decode are an error — a frame is
+    /// exactly its fields, nothing smuggled after them.
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.b.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after body",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One inference request as carried on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestFrame {
+    pub id: u64,
+    pub priority: Priority,
+    /// Relative deadline budget in milliseconds; 0 = no deadline.
+    pub deadline_ms: u32,
+    pub tenant: String,
+    pub image: Vec<f32>,
+}
+
+impl RequestFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let tb = self.tenant.as_bytes();
+        assert!(tb.len() <= MAX_TENANT_LEN, "tenant name over MAX_TENANT_LEN");
+        let mut out = Vec::with_capacity(8 + 1 + 4 + 2 + tb.len() + 4 + self.image.len() * 4);
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.push(self.priority.as_u8());
+        out.extend_from_slice(&self.deadline_ms.to_le_bytes());
+        out.extend_from_slice(&(tb.len() as u16).to_le_bytes());
+        out.extend_from_slice(tb);
+        out.extend_from_slice(&(self.image.len() as u32).to_le_bytes());
+        for &v in &self.image {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(body: &[u8]) -> Result<RequestFrame, WireError> {
+        let mut c = Cur::new(body);
+        let id = c.u64()?;
+        let pb = c.u8()?;
+        let priority = Priority::from_u8(pb)
+            .ok_or_else(|| WireError::Malformed(format!("bad priority byte {pb}")))?;
+        let deadline_ms = c.u32()?;
+        let tlen = c.u16()? as usize;
+        if tlen > MAX_TENANT_LEN {
+            return Err(WireError::Malformed(format!(
+                "tenant name length {tlen} exceeds max {MAX_TENANT_LEN}"
+            )));
+        }
+        let tenant = std::str::from_utf8(c.take(tlen)?)
+            .map_err(|_| WireError::Malformed("tenant name not utf-8".into()))?
+            .to_string();
+        let n = c.u32()? as usize;
+        let image = c.f32s(n)?;
+        c.finish()?;
+        Ok(RequestFrame { id, priority, deadline_ms, tenant, image })
+    }
+}
+
+/// One reply as carried on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResponseFrame {
+    pub id: u64,
+    pub status: Status,
+    /// Model epoch that computed the logits (0 when no backend ran).
+    pub epoch: u64,
+    /// Logits for `Status::Ok`, empty otherwise.
+    pub logits: Vec<f32>,
+    /// Human-readable detail for failures, empty for `Ok`.
+    pub message: String,
+}
+
+impl ResponseFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mb = self.message.as_bytes();
+        assert!(mb.len() <= u16::MAX as usize, "response message too long");
+        let mut out = Vec::with_capacity(8 + 1 + 8 + 4 + self.logits.len() * 4 + 2 + mb.len());
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.push(self.status.as_u8());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&(self.logits.len() as u32).to_le_bytes());
+        for &v in &self.logits {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&(mb.len() as u16).to_le_bytes());
+        out.extend_from_slice(mb);
+        out
+    }
+
+    pub fn decode(body: &[u8]) -> Result<ResponseFrame, WireError> {
+        let mut c = Cur::new(body);
+        let id = c.u64()?;
+        let sb = c.u8()?;
+        let status = Status::from_u8(sb)
+            .ok_or_else(|| WireError::Malformed(format!("bad status byte {sb}")))?;
+        let epoch = c.u64()?;
+        let n = c.u32()? as usize;
+        let logits = c.f32s(n)?;
+        let mlen = c.u16()? as usize;
+        let message = std::str::from_utf8(c.take(mlen)?)
+            .map_err(|_| WireError::Malformed("message not utf-8".into()))?
+            .to_string();
+        c.finish()?;
+        Ok(ResponseFrame { id, status, epoch, logits, message })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req() -> RequestFrame {
+        RequestFrame {
+            id: 7,
+            priority: Priority::Normal,
+            deadline_ms: 250,
+            tenant: "t0".into(),
+            image: vec![0.25, -1.5, 3.0],
+        }
+    }
+
+    #[test]
+    fn request_roundtrip_via_frame() {
+        let r = req();
+        let frame = frame_bytes(FrameKind::Request, &r.encode());
+        let (kind, body) = read_frame(&mut frame.as_slice()).unwrap();
+        assert_eq!(kind, FrameKind::Request);
+        let back = RequestFrame::decode(&body).unwrap();
+        assert_eq!(back, r);
+        // f32 payload is bit-exact through the wire
+        assert_eq!(
+            back.image.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            r.image.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = ResponseFrame {
+            id: 9,
+            status: Status::Ok,
+            epoch: 3,
+            logits: vec![f32::NEG_INFINITY, 0.0, -0.0, 1.5e-40],
+            message: String::new(),
+        };
+        let back = ResponseFrame::decode(&r.encode()).unwrap();
+        assert_eq!(
+            back.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            r.logits.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(back.status, Status::Ok);
+        let e = ResponseFrame {
+            id: 10,
+            status: Status::DeadlineExceeded,
+            epoch: 0,
+            logits: vec![],
+            message: "deadline expired in queue".into(),
+        };
+        assert_eq!(ResponseFrame::decode(&e.encode()).unwrap(), e);
+    }
+
+    #[test]
+    fn bad_magic_and_kind_rejected() {
+        let mut frame = frame_bytes(FrameKind::Request, &req().encode());
+        frame[0] ^= 0xFF;
+        assert!(matches!(read_frame(&mut frame.as_slice()), Err(WireError::BadMagic(_))));
+        let mut frame = frame_bytes(FrameKind::Request, &req().encode());
+        frame[4] = 99;
+        assert!(matches!(read_frame(&mut frame.as_slice()), Err(WireError::BadKind(99))));
+    }
+
+    #[test]
+    fn oversized_declared_length_rejected_from_header_alone() {
+        // only a header exists — if the reader tried to honor the
+        // declared length it would attempt a 4 GiB read; instead the
+        // header check fires before any body allocation
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&MAGIC);
+        hdr.push(FrameKind::Request.as_u8());
+        hdr.extend_from_slice(&u32::MAX.to_le_bytes());
+        match read_frame(&mut hdr.as_slice()) {
+            Err(WireError::Oversized { declared, max }) => {
+                assert_eq!(declared, u32::MAX as usize);
+                assert_eq!(max, MAX_BODY);
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_typed() {
+        let frame = frame_bytes(FrameKind::Request, &req().encode());
+        for keep in 0..frame.len() {
+            let err = read_frame(&mut &frame[..keep]).unwrap_err();
+            match err {
+                WireError::Io(_) | WireError::Truncated { .. } => {}
+                other => panic!("truncated at {keep}: unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn crc_flip_detected() {
+        let mut frame = frame_bytes(FrameKind::Response, &ResponseFrame {
+            id: 1,
+            status: Status::Ok,
+            epoch: 1,
+            logits: vec![2.0],
+            message: String::new(),
+        }
+        .encode());
+        let n = frame.len();
+        frame[n - 6] ^= 0x01; // a body byte, keeping the length intact
+        assert!(matches!(read_frame(&mut frame.as_slice()), Err(WireError::Crc { .. })));
+    }
+
+    #[test]
+    fn malformed_bodies_are_typed_errors() {
+        // bad priority byte
+        let mut body = req().encode();
+        body[8] = 7;
+        assert!(matches!(RequestFrame::decode(&body), Err(WireError::Malformed(_))));
+        // bad status byte
+        let mut rb = ResponseFrame {
+            id: 1,
+            status: Status::Ok,
+            epoch: 0,
+            logits: vec![],
+            message: String::new(),
+        }
+        .encode();
+        rb[8] = 200;
+        assert!(matches!(ResponseFrame::decode(&rb), Err(WireError::Malformed(_))));
+        // tenant length field pointing past the end
+        let mut body = req().encode();
+        body[13] = 0xFF; // tenant_len low byte
+        assert!(RequestFrame::decode(&body).is_err());
+        // non-utf8 tenant
+        let mut body = req().encode();
+        body[15] = 0xFF;
+        assert!(matches!(RequestFrame::decode(&body), Err(WireError::Malformed(_))));
+        // trailing garbage after a complete request
+        let mut body = req().encode();
+        body.push(0);
+        assert!(matches!(RequestFrame::decode(&body), Err(WireError::Malformed(_))));
+        // declared image count larger than the remaining bytes
+        let r = req();
+        let mut body = r.encode();
+        let off = 8 + 1 + 4 + 2 + r.tenant.len();
+        body[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(RequestFrame::decode(&body).is_err());
+    }
+
+    #[test]
+    fn priority_and_status_tables_roundtrip() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::from_u8(p.as_u8()), Some(p));
+        }
+        assert_eq!(Priority::from_u8(3), None);
+        for s in [
+            Status::Ok,
+            Status::Shed,
+            Status::Overflow,
+            Status::DeadlineExceeded,
+            Status::UnknownTenant,
+            Status::QuotaExceeded,
+            Status::Draining,
+            Status::Stopped,
+            Status::BadRequest,
+        ] {
+            assert_eq!(Status::from_u8(s.as_u8()), Some(s));
+            assert_eq!(s.idempotent_rejection(), matches!(s, Status::Shed | Status::Overflow));
+        }
+        assert_eq!(Status::from_u8(9), None);
+    }
+}

@@ -50,8 +50,15 @@ pub fn parse_idx(data: &[u8]) -> Result<(Vec<usize>, &[u8]), IdxError> {
         return Err(IdxError::Shape("truncated dims".into()));
     }
     let dims: Vec<usize> = (0..ndims).map(|i| read_u32(data, 4 + 4 * i) as usize).collect();
-    let expect: usize = dims.iter().product();
-    if data.len() != header + expect {
+    // hostile dims can overflow the product (2^32-1 per dim, up to 255
+    // dims): checked math turns that into a typed error, not a panic
+    let expect: usize = dims.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d)).ok_or_else(
+        || IdxError::Shape(format!("product(dims) overflows: {dims:?}")),
+    )?;
+    let total = header
+        .checked_add(expect)
+        .ok_or_else(|| IdxError::Shape(format!("declared size overflows: {dims:?}")))?;
+    if data.len() != total {
         return Err(IdxError::Shape(format!(
             "payload {} != product(dims) {}",
             data.len() - header,
@@ -127,6 +134,40 @@ mod tests {
         let mut data = make_idx(&[2], &[1, 2]);
         data.push(99); // extra byte
         assert!(parse_idx(&data).is_err());
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_a_typed_error() {
+        let data = make_idx(&[2, 2, 2], &[0, 64, 128, 255, 1, 2, 3, 4]);
+        for keep in 0..data.len() {
+            assert!(parse_idx(&data[..keep]).is_err(), "prefix of {keep} bytes");
+        }
+    }
+
+    /// Every single-bit corruption of a valid file must yield Ok or a
+    /// typed Err — never a panic. (parse_idx only borrows the payload, so
+    /// there is no allocation for hostile dims to inflate either.)
+    #[test]
+    fn bit_flips_never_panic() {
+        let data = make_idx(&[2, 3], &[1, 2, 3, 4, 5, 6]);
+        for byte in 0..data.len() {
+            for bit in 0..8 {
+                let mut flipped = data.clone();
+                flipped[byte] ^= 1 << bit;
+                let _ = parse_idx(&flipped);
+            }
+        }
+    }
+
+    /// Declared dims whose product overflows usize get a typed error
+    /// (the unchecked product would panic in debug, wrap in release).
+    #[test]
+    fn overflowing_dims_product_rejected() {
+        let data = make_idx(&[u32::MAX, u32::MAX, u32::MAX], &[]);
+        match parse_idx(&data) {
+            Err(IdxError::Shape(msg)) => assert!(msg.contains("overflow"), "{msg}"),
+            other => panic!("expected Shape overflow error, got {other:?}"),
+        }
     }
 
     /// A label byte ≥ classes must be rejected at load time with a Shape

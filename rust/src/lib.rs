@@ -90,7 +90,9 @@
 //! data/        IDX loader + deterministic synthetic datasets
 //! runtime/     PJRT engine for the compiled artifacts (stubbed offline)
 //! coordinator/ trainer, multi-lane batching inference server over
-//!              pluggable InferBackends, deterministic data-parallel
+//!              pluggable InferBackends, the fault-tolerant networked
+//!              serving tier (wire protocol, deadlines, priority load
+//!              shedding, fault injection), deterministic data-parallel
 //!              training (fixed-order gradient reduction tree),
 //!              experiments, pruning, reports
 //! hwmodel/     Fig. 1 area/power efficiency model

@@ -24,6 +24,16 @@ use super::MantissaLut;
 
 pub const MAGIC: &[u8; 8] = b"AMLUT\x01\0\0";
 
+/// Longest multiplier name a LUT file may declare.
+pub const MAX_NAME_LEN: usize = 256;
+
+/// Largest byte size any well-formed LUT file can have (header + max name
+/// + `4 * 4^MAX_LUT_M` entries + crc). [`MantissaLut::load`] checks file
+/// metadata against this BEFORE reading, so a hostile or mislabeled path
+/// cannot force an unbounded allocation.
+pub const MAX_LUT_FILE_BYTES: u64 =
+    16 + MAX_NAME_LEN as u64 + 4 * (1u64 << (2 * super::MAX_LUT_M)) + 4;
+
 /// CRC-32 (IEEE) — implemented locally; the offline dep set has no crc crate.
 pub fn crc32(data: &[u8]) -> u32 {
     let mut crc = 0xFFFF_FFFFu32;
@@ -91,6 +101,11 @@ impl MantissaLut {
             return Err(LutIoError::BadHeader(format!("mantissa width {m}")));
         }
         let name_len = u32::from_le_bytes(data[12..16].try_into().unwrap()) as usize;
+        if name_len > MAX_NAME_LEN {
+            return Err(LutIoError::BadHeader(format!(
+                "name length {name_len} exceeds max {MAX_NAME_LEN}"
+            )));
+        }
         if data.len() < 16 + name_len {
             return Err(LutIoError::BadHeader("truncated name".into()));
         }
@@ -127,8 +142,18 @@ impl MantissaLut {
     }
 
     pub fn load(path: &Path) -> Result<MantissaLut, LutIoError> {
-        let mut data = Vec::new();
-        std::fs::File::open(path)?.read_to_end(&mut data)?;
+        let mut f = std::fs::File::open(path)?;
+        // size gate from metadata, BEFORE reading: no well-formed LUT can
+        // exceed this, so an oversized path is rejected without buffering
+        // (or even touching) its contents
+        let size = f.metadata()?.len();
+        if size > MAX_LUT_FILE_BYTES {
+            return Err(LutIoError::BadHeader(format!(
+                "file is {size} bytes, larger than any valid LUT ({MAX_LUT_FILE_BYTES})"
+            )));
+        }
+        let mut data = Vec::with_capacity(size as usize);
+        f.read_to_end(&mut data)?;
         Self::from_bytes(&data)
     }
 }
@@ -187,5 +212,55 @@ mod tests {
         let m = registry::by_name("bfloat16").unwrap();
         let bytes = MantissaLut::generate(m.as_ref()).to_bytes();
         assert!(MantissaLut::from_bytes(&bytes[..bytes.len() - 8]).is_err());
+    }
+
+    /// Truncation at every byte and every single-bit header corruption
+    /// must produce a typed error or a valid parse — never a panic.
+    #[test]
+    fn truncation_sweep_and_header_bit_flips_never_panic() {
+        let m = registry::by_name("bfloat16").unwrap();
+        let bytes = MantissaLut::generate(m.as_ref()).to_bytes();
+        for keep in 0..bytes.len() {
+            assert!(MantissaLut::from_bytes(&bytes[..keep]).is_err(), "prefix {keep}");
+        }
+        // header + name region is where hostile sizes live; payload flips
+        // are covered by the crc test
+        for byte in 0..32.min(bytes.len()) {
+            for bit in 0..8 {
+                let mut flipped = bytes.clone();
+                flipped[byte] ^= 1 << bit;
+                let _ = MantissaLut::from_bytes(&flipped);
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_name_length_rejected() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&4u32.to_le_bytes()); // m = 4 (valid)
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd name_len
+        match MantissaLut::from_bytes(&bytes) {
+            Err(LutIoError::BadHeader(msg)) => assert!(msg.contains("name length"), "{msg}"),
+            other => panic!("expected BadHeader, got {other:?}"),
+        }
+    }
+
+    /// `load` must reject a file larger than any valid LUT from its
+    /// metadata alone — a sparse file probes this without writing the
+    /// bytes (reading it would materialize them).
+    #[test]
+    fn oversized_file_rejected_before_reading() {
+        let dir = std::env::temp_dir().join("approxtrain_test_luts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("huge.lut");
+        let f = std::fs::File::create(&path).unwrap();
+        f.set_len(MAX_LUT_FILE_BYTES + 1).unwrap();
+        drop(f);
+        match MantissaLut::load(&path) {
+            Err(LutIoError::BadHeader(msg)) => assert!(msg.contains("larger"), "{msg}"),
+            other => panic!("expected size rejection, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

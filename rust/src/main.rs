@@ -71,9 +71,12 @@ fn main() -> Result<()> {
         "bench-serve" => {
             // multi-lane batching server sweep over the CPU executor
             // backend; pure CPU path, same root-record policy as the
-            // other bench commands
+            // other bench commands. --net adds the loopback TCP sweep
+            // through the fault-tolerant serving tier (deadlines,
+            // priorities, shedding) with its bit-exactness gate.
             let quick = args.has_flag("quick");
-            let out = experiments::bench_serve(&results_dir(&args), quick, !quick)?;
+            let net = args.has_flag("net");
+            let out = experiments::bench_serve(&results_dir(&args), quick, !quick, net)?;
             println!("{out}");
             Ok(())
         }
@@ -120,7 +123,8 @@ commands:
         per-SIMD-level rows — env APPROXTRAIN_SIMD=scalar|avx2|avx2fma|auto
         caps the active level for all kernels, requests above the machine clamp)
   bench-conv [--quick]                     implicit vs materialized conv (BENCH_conv.json)
-  bench-serve [--quick]                    serving sweep: lanes x load x strategy (BENCH_serve.json)
+  bench-serve [--quick] [--net]            serving sweep: lanes x load x strategy; --net adds the
+                                           networked tier (connections x lanes x priority mix)
   bench-train [--quick]                    data-parallel training sweep: workers x strategy (BENCH_train.json)
   experiment <fig1|fig6|fig10|table3|table4|table5|table6|fig11|fig12|all>
         [--quick]

@@ -52,6 +52,10 @@ impl Checkpoint {
         out
     }
 
+    /// Parse a checkpoint. Every declared length is validated against the
+    /// bytes actually present **before** any allocation, so corrupt,
+    /// truncated, or hostile inputs get a typed error — never a panic or
+    /// an attacker-sized allocation.
     pub fn from_bytes(data: &[u8]) -> Result<Checkpoint> {
         if data.len() < 12 || &data[0..8] != MAGIC {
             bail!("not a checkpoint file");
@@ -62,18 +66,20 @@ impl Checkpoint {
             bail!("checkpoint payload corrupt");
         }
         let mut pos = 0usize;
-        let rd_u32 = |pos: &mut usize| -> Result<u32> {
-            if *pos + 4 > body.len() {
-                bail!("truncated checkpoint");
+        let need = |pos: usize, n: usize, what: &str| -> Result<()> {
+            match pos.checked_add(n) {
+                Some(end) if end <= body.len() => Ok(()),
+                _ => bail!("truncated checkpoint ({what})"),
             }
+        };
+        let rd_u32 = |pos: &mut usize| -> Result<u32> {
+            need(*pos, 4, "u32 field")?;
             let v = u32::from_le_bytes(body[*pos..*pos + 4].try_into().unwrap());
             *pos += 4;
             Ok(v)
         };
         let rd_u64 = |pos: &mut usize| -> Result<u64> {
-            if *pos + 8 > body.len() {
-                bail!("truncated checkpoint");
-            }
+            need(*pos, 8, "u64 field")?;
             let v = u64::from_le_bytes(body[*pos..*pos + 8].try_into().unwrap());
             *pos += 8;
             Ok(v)
@@ -82,35 +88,54 @@ impl Checkpoint {
         let mut ckpt = Checkpoint::default();
         for _ in 0..count {
             let nlen = rd_u32(&mut pos)? as usize;
+            need(pos, nlen, "tensor name")?;
             let name = std::str::from_utf8(&body[pos..pos + nlen])
                 .context("bad tensor name")?
                 .to_string();
             pos += nlen;
             let rank = rd_u32(&mut pos)? as usize;
+            // a rank-r shape needs 8r bytes: validate before with_capacity
+            need(pos, rank.checked_mul(8).context("rank overflows")?, "shape")?;
             let mut shape = Vec::with_capacity(rank);
+            let mut elems: usize = 1;
             for _ in 0..rank {
-                shape.push(rd_u64(&mut pos)? as usize);
+                let d = rd_u64(&mut pos)? as usize;
+                elems = elems.checked_mul(d).with_context(|| format!("shape of {name} overflows"))?;
+                shape.push(d);
             }
             let n = rd_u64(&mut pos)? as usize;
-            if pos + 4 * n > body.len() {
-                bail!("truncated tensor {name}");
+            if n != elems {
+                bail!("tensor {name}: shape {shape:?} holds {elems} elements, payload declares {n}");
             }
-            let data: Vec<f32> = body[pos..pos + 4 * n]
+            let payload = n.checked_mul(4).with_context(|| format!("tensor {name} too large"))?;
+            need(pos, payload, "tensor payload")?;
+            let data: Vec<f32> = body[pos..pos + payload]
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect();
-            pos += 4 * n;
-            ckpt.tensors.insert(name, (shape, data));
+            pos += payload;
+            if ckpt.tensors.insert(name.clone(), (shape, data)).is_some() {
+                bail!("duplicate tensor {name}");
+            }
+        }
+        if pos != body.len() {
+            bail!("checkpoint has {} trailing bytes", body.len() - pos);
         }
         Ok(ckpt)
     }
 
+    /// Atomic save: write to a temp file in the destination directory,
+    /// fsync, then rename over `path` (+ best-effort directory fsync). A
+    /// crash mid-write can never leave a torn checkpoint at `path` — the
+    /// old file survives intact until the rename publishes the new one.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
         }
-        std::fs::File::create(path)?.write_all(&self.to_bytes())?;
-        Ok(())
+        write_atomic(path, &self.to_bytes())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint> {
@@ -118,8 +143,37 @@ impl Checkpoint {
         std::fs::File::open(path)
             .with_context(|| format!("opening checkpoint {}", path.display()))?
             .read_to_end(&mut data)?;
-        Self::from_bytes(&data)
+        Self::from_bytes(&data).with_context(|| format!("parsing checkpoint {}", path.display()))
     }
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory →
+/// `sync_all` → `rename` → best-effort directory fsync. On any error the
+/// temp file is removed and `path` is untouched.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let file_name = path.file_name().and_then(|n| n.to_str()).unwrap_or("file");
+    let tmp = dir.join(format!(".{file_name}.tmp.{}", std::process::id()));
+    let result = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        // data must be durable BEFORE the rename publishes the name
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
+        // make the rename itself durable where the platform allows it
+        if let Ok(d) = std::fs::File::open(&dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
 }
 
 #[cfg(test)]
@@ -154,5 +208,130 @@ mod tests {
         let path = std::env::temp_dir().join("approxtrain_ckpt_test/a.ckpt");
         c.save(&path).unwrap();
         assert_eq!(Checkpoint::load(&path).unwrap(), c);
+    }
+
+    /// Wrap a raw body in the container framing with a *valid* CRC — the
+    /// hostile-input tests must get past the checksum to reach the parser.
+    fn wrap(body: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(body.len() + 12);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&crc32(body).to_le_bytes());
+        out.extend_from_slice(body);
+        out
+    }
+
+    #[test]
+    fn truncation_at_every_byte_is_a_typed_error() {
+        let mut c = Checkpoint::default();
+        c.insert("fc1/w", &[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        c.insert("b", &[2], vec![-1.0, 0.5]);
+        let bytes = c.to_bytes();
+        for keep in 0..bytes.len() {
+            assert!(
+                Checkpoint::from_bytes(&bytes[..keep]).is_err(),
+                "prefix of {keep} bytes must be rejected"
+            );
+        }
+        assert!(Checkpoint::from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn hostile_declared_sizes_rejected_before_allocating() {
+        // name length far past the end of the body
+        let mut body = vec![];
+        body.extend_from_slice(&1u32.to_le_bytes()); // count
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // nlen
+        assert!(Checkpoint::from_bytes(&wrap(&body)).is_err());
+        // absurd rank: must fail the bounds check before with_capacity
+        let mut body = vec![];
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.push(b'w');
+        body.extend_from_slice(&u32::MAX.to_le_bytes()); // rank
+        assert!(Checkpoint::from_bytes(&wrap(&body)).is_err());
+        // element count whose byte size dwarfs the file
+        let mut body = vec![];
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.push(b'w');
+        body.extend_from_slice(&1u32.to_le_bytes()); // rank 1
+        body.extend_from_slice(&(1u64 << 40).to_le_bytes()); // dim
+        body.extend_from_slice(&(1u64 << 40).to_le_bytes()); // n
+        assert!(Checkpoint::from_bytes(&wrap(&body)).is_err());
+        // shape-product vs payload-count mismatch
+        let mut body = vec![];
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.push(b'w');
+        body.extend_from_slice(&1u32.to_le_bytes()); // rank 1
+        body.extend_from_slice(&3u64.to_le_bytes()); // shape [3]
+        body.extend_from_slice(&2u64.to_le_bytes()); // but n = 2
+        body.extend_from_slice(&[0u8; 8]); // the 2 f32s
+        assert!(Checkpoint::from_bytes(&wrap(&body)).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_and_duplicates_rejected() {
+        let mut c = Checkpoint::default();
+        c.insert("w", &[1], vec![1.0]);
+        let bytes = c.to_bytes();
+        let mut body = bytes[12..].to_vec();
+        body.push(0xAA);
+        assert!(Checkpoint::from_bytes(&wrap(&body)).is_err(), "trailing garbage");
+        // two tensors with the same name
+        let one = &bytes[12 + 4..]; // strip count, keep the tensor record
+        let mut body = vec![];
+        body.extend_from_slice(&2u32.to_le_bytes());
+        body.extend_from_slice(one);
+        body.extend_from_slice(one);
+        assert!(Checkpoint::from_bytes(&wrap(&body)).is_err(), "duplicate tensor name");
+    }
+
+    #[test]
+    fn torn_write_never_leaves_a_loadable_corpse() {
+        let dir = std::env::temp_dir().join("approxtrain_ckpt_torn");
+        let path = dir.join("model.ckpt");
+        let mut v1 = Checkpoint::default();
+        v1.insert("w", &[2], vec![1.0, 2.0]);
+        v1.save(&path).unwrap();
+        // a non-atomic writer dying mid-write would leave a prefix: the
+        // loader must reject it rather than resurrect half a model
+        let full = v2_bytes();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&path).is_err(), "torn file must not parse");
+        // the atomic path recovers: a fresh save publishes a whole file,
+        // and a stale temp corpse from a dead writer is just ignored
+        std::fs::write(dir.join(".model.ckpt.tmp.999"), b"corpse").unwrap();
+        let mut v2 = Checkpoint::default();
+        v2.insert("w", &[2], vec![3.0, 4.0]);
+        v2.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), v2);
+    }
+
+    fn v2_bytes() -> Vec<u8> {
+        let mut v2 = Checkpoint::default();
+        v2.insert("w", &[2], vec![3.0, 4.0]);
+        v2.to_bytes()
+    }
+
+    #[test]
+    fn write_atomic_failure_leaves_target_untouched() {
+        let dir = std::env::temp_dir().join("approxtrain_ckpt_atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("keep.ckpt");
+        std::fs::write(&path, b"original").unwrap();
+        // destination is a directory → rename fails → original intact
+        let blocked = dir.join("blocked.ckpt");
+        let _ = std::fs::remove_dir_all(&blocked);
+        std::fs::create_dir_all(&blocked).unwrap();
+        assert!(write_atomic(&blocked, b"new").is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), b"original");
+        // and no temp corpse survives the failure
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files must be cleaned up: {leftovers:?}");
     }
 }
