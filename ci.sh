@@ -19,6 +19,17 @@ else
     echo "rustfmt not installed; skipping format check"
 fi
 
+step "clippy (advisory)"
+if cargo clippy --version >/dev/null 2>&1; then
+    if ! cargo clippy --all-targets -- -D warnings; then
+        # advisory only, like fmt: lint drift is reported but tier-1 stays
+        # build + test + approxlint
+        echo "WARNING: clippy warnings detected"
+    fi
+else
+    echo "clippy not installed; skipping"
+fi
+
 step "test registration check (every rust/tests/*.rs declared in Cargo.toml)"
 # autotests is off (sources live under rust/), so an unregistered test
 # file would silently never run — fail loudly instead
@@ -28,6 +39,15 @@ for f in rust/tests/*.rs; do
         fail=1
     fi
 done
+
+step "approxlint (static-analysis pass: determinism, unsafe, atomics, accumulation)"
+# the in-repo lint (rust/src/lint/, docs/LINTS.md) runs before the main
+# build: R1 SAFETY comments, R2 deterministic-module bans, R3 audited
+# atomics vs rust/lint/atomics.allow, R4 accumulation-contract shapes vs
+# rust/lint/accum.allow, R5 condvar/lock discipline, R6 paired SIMD
+# gates, R7 registration/schema cross-checks. Gating, not advisory: a
+# finding fails CI.
+cargo run -q --release --bin approxlint -- . || fail=1
 
 step "cargo build --release"
 cargo build --release || fail=1
@@ -71,9 +91,11 @@ step "bit-exactness suites (release): implicit-GEMM conv + micro-kernel edges + 
 # bits, every scripted fault -> typed error, deadline/shedding/quota
 # accounting, epoch-atomic LUT hot swap, graceful-drain semantics) can
 # never silently drop out of the release-mode pass
+# (--test lint re-runs the lint teeth + the shipped-tree meta-check in
+# the same release pass)
 cargo test --release -q --test conv_grads --test batched_vs_scalar --test microtile \
     --test simd_lanes --test sparse_gemm --test server --test data_parallel \
-    --test serve_net || fail=1
+    --test serve_net --test lint || fail=1
 
 step "bench smoke (tiny sizes; does not touch the committed BENCH records)"
 # the gemm smoke rows include the micro-kernel tiled path (and its mr1nr1

@@ -44,6 +44,10 @@ pub const LANES: usize = 8;
 /// Per-lane operand decomposition (Algorithm 2 lines 7-8, 11-12):
 /// `(mantissa >> shift, biased exponent, sign bit)` for 8 packed FP32
 /// bit patterns. `shift` is the runtime `23 - m` count in a `__m128i`.
+///
+/// # Safety
+/// AVX2 must be available — reached only from the `target_feature`
+/// arms below; the intrinsics here touch no memory.
 #[inline(always)]
 unsafe fn decompose(bits: __m256i, shift: __m128i) -> (__m256i, __m256i, __m256i) {
     let mnt = _mm256_srl_epi32(_mm256_and_si256(bits, _mm256_set1_epi32(MANT_MASK as i32)), shift);
@@ -64,6 +68,11 @@ unsafe fn decompose(bits: __m256i, shift: __m128i) -> (__m256i, __m256i, __m256i
 /// Lane-for-lane this is exactly [`AmSim::mul_bits`]: the flush mask
 /// (`ea == 0 || eb == 0 || exp <= 0`) is applied *last* so it wins over
 /// the overflow blend, mirroring the scalar early-return order.
+///
+/// # Safety
+/// AVX2 must be available, and every `idx` lane must be in bounds for
+/// the LUT (`idx < 2^(2m)`, hard-asserted at panel entry) — the gather
+/// reads `lut[idx]` unchecked.
 #[inline(always)]
 unsafe fn assemble(
     lut: *const i32,
@@ -105,6 +114,14 @@ unsafe fn assemble(
 /// past the last full 8-wide chunk drain through the scalar gather in
 /// the same ascending-`kk` order (independent chains, so the column
 /// split cannot change any chain's add sequence).
+///
+/// # Safety
+/// AVX2 must be available at runtime (the detected/forced `SimdLevel`
+/// dispatch guarantees it), `lut.len() == 1 << (2 * m)` with
+/// `shift == 23 - m`, and the slices must satisfy
+/// `acc.len() >= mr * nr`, `a.len() >= mr * k_len`,
+/// `b.len() >= k_len * nr`: the unaligned loads/stores and the LUT
+/// gather are unchecked offsets inside those bounds.
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn lut_microtile_avx2(
     lut: &[u32],
@@ -162,6 +179,11 @@ pub(super) unsafe fn lut_microtile_avx2(
 /// broadcast operand decomposed once. A zero/subnormal `x` needs no
 /// special case — its zero exponent raises the flush mask in every lane,
 /// so each chain receives the same `+0.0` add the scalar path applies.
+///
+/// # Safety
+/// AVX2 must be available, `lut.len() == 1 << (2 * m)` with
+/// `shift == 23 - m`, and `row.len() >= acc.len()`: the 8-wide loads
+/// read `row[i..i + 8]` / `acc[i..i + 8]` unchecked.
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn lut_fma_row_avx2(
     lut: &[u32],
@@ -200,6 +222,11 @@ pub(super) unsafe fn lut_fma_row_avx2(
 /// assemble, all exact integer ops) is vectorized; the 8 products are
 /// spilled to a lane buffer and added strictly in ascending index order
 /// — the only order the blocking-independence contract allows.
+///
+/// # Safety
+/// AVX2 must be available, `lut.len() == 1 << (2 * m)` with
+/// `shift == 23 - m`, and `b.len() >= a.len()`: the paired 8-wide
+/// loads read both slices at the same offsets unchecked.
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn lut_dot_acc_avx2(
     lut: &[u32],
@@ -239,6 +266,11 @@ pub(super) unsafe fn lut_dot_acc_avx2(
 
 /// AVX2 arm of [`AmSim::mul_slice`]: purely elementwise, one vector of
 /// products per 8 outputs.
+///
+/// # Safety
+/// AVX2 must be available, `lut.len() == 1 << (2 * m)` with
+/// `shift == 23 - m`, and `a`, `b`, `out` must be the same length
+/// (callers assert): loads and stores are unchecked at shared offsets.
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn lut_mul_slice_avx2(
     lut: &[u32],

@@ -1,0 +1,38 @@
+//! `approxlint` — run the in-repo static-analysis pass over a source
+//! tree (default: the current directory) and exit nonzero on findings.
+//!
+//!     cargo run -q --release --bin approxlint -- [repo-root]
+//!
+//! Pure std, no build of the crate's kernels required; ci.sh runs it as
+//! the first stage, before the compile. Rules and policy:
+//! `docs/LINTS.md` and the `approxtrain::lint` module docs.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use approxtrain::lint;
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).unwrap_or_else(|| ".".to_string());
+    let findings = match lint::run_all(Path::new(&root)) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("approxlint: cannot scan `{root}`: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if findings.is_empty() {
+        println!("approxlint: clean (rules R1-R7)");
+        return ExitCode::SUCCESS;
+    }
+    let mut rule = "";
+    for f in &findings {
+        if f.rule != rule {
+            rule = f.rule;
+            println!("== {rule} ==");
+        }
+        println!("  {f}");
+    }
+    println!("approxlint: {} finding(s)", findings.len());
+    ExitCode::FAILURE
+}

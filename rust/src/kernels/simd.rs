@@ -37,6 +37,10 @@ use crate::amsim::MR_MAX;
 pub const LANES: usize = 8;
 
 /// `a * b` via plain `vmulps` — the AVX2 product op.
+///
+/// # Safety
+/// AVX2 must be available; only reachable through the
+/// `#[target_feature]` kernels below, which the runtime probe gates.
 #[inline(always)]
 unsafe fn prod_mul(a: __m256, b: __m256) -> __m256 {
     _mm256_mul_ps(a, b)
@@ -44,6 +48,11 @@ unsafe fn prod_mul(a: __m256, b: __m256) -> __m256 {
 
 /// `a * b` via `vfmadd` with a `-0.0` addend — bit-identical to
 /// `vmulps` (see module docs), exercising the FMA unit.
+///
+/// # Safety
+/// FMA must be available; only reachable through the
+/// `#[target_feature(enable = "fma")]` kernel arm, which the runtime
+/// probe gates.
 #[inline(always)]
 unsafe fn prod_fma(a: __m256, b: __m256) -> __m256 {
     _mm256_fmadd_ps(a, b, _mm256_set1_ps(-0.0))
@@ -56,6 +65,14 @@ macro_rules! define_native_kernels {
         /// hoisted across the whole `kk` loop, `A` operand broadcast per
         /// `(kk, r)`. Remainder columns drain scalar in the same
         /// ascending-`kk` order (independent chains).
+        ///
+        /// # Safety
+        /// The `$feat` CPU feature must be present at runtime (callers
+        /// dispatch through the detected/forced `SimdLevel`), and the
+        /// slices must satisfy `acc.len() >= mr * nr`,
+        /// `a.len() >= mr * k_len`, `b.len() >= k_len * nr`: every
+        /// `loadu`/`storeu` below is an unchecked pointer offset inside
+        /// those bounds (no alignment requirement).
         #[target_feature(enable = $feat)]
         pub(super) unsafe fn $microtile(
             acc: &mut [f32],
@@ -98,6 +115,11 @@ macro_rules! define_native_kernels {
 
         /// Vector arm of the native `fma_row`: lanes across the `acc[j]`
         /// chains, scalar tail.
+        ///
+        /// # Safety
+        /// The `$feat` CPU feature must be present at runtime and
+        /// `row.len() >= acc.len()`: the unaligned vector loads read
+        /// `row[i..i + 8]` for every `i + 8 <= acc.len()`.
         #[target_feature(enable = $feat)]
         pub(super) unsafe fn $fma_row(acc: &mut [f32], x: f32, row: &[f32]) {
             let n = acc.len();

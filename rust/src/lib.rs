@@ -70,7 +70,7 @@
 //! vs per-element-drain ablation, per-SIMD-level rows with the
 //! feature-detection record, plus an autotune probe sweeping
 //! `MR x NR` alongside the tile shape, and records `BENCH_gemm.json`
-//! (schema v4); `cargo bench -- conv` (or `approxtrain bench-conv`)
+//! (schema v5); `cargo bench -- conv` (or `approxtrain bench-conv`)
 //! records the implicit-vs-materialized conv comparison into
 //! `BENCH_conv.json`; methodology in `docs/BENCHMARKS.md`.
 //!
@@ -99,6 +99,10 @@
 //! util/        RNG, JSON, stats, timer, persistent thread pool, prop-test
 //!              harness, SIMD capability detection (simd::SimdLevel +
 //!              the APPROXTRAIN_SIMD knob)
+//! lint/        approxlint: the in-repo static-analysis pass (SAFETY
+//!              comments, determinism bans, audited atomics and
+//!              accumulation shapes, condvar/lock discipline, paired
+//!              SIMD gates, registration cross-checks; docs/LINTS.md)
 //! cli/         argument parsing for the `approxtrain` binary
 //! ```
 //!
@@ -125,6 +129,7 @@ pub mod data;
 pub mod hwmodel;
 pub mod kernels;
 pub mod layers;
+pub mod lint;
 pub mod lut;
 pub mod mult;
 pub mod nn;

@@ -1,0 +1,105 @@
+//! Parsers for the two checked-in allowlist files.
+//!
+//! Both formats are line-oriented: `#` comments and blank lines are
+//! skipped, fields are `|`-separated. The atomics key field is the
+//! scrubbed source line with **all whitespace removed**
+//! ([`crate::lint::lexer::normalize_line`]) — whitespace-free keys make
+//! the grammar unambiguous and let a reviewer regenerate an entry by
+//! hand, without a toolchain, straight from the diff hunk.
+
+/// One `rust/lint/atomics.allow` entry: a reviewed `Ordering::` site.
+pub struct AtomicsEntry {
+    /// Line number inside the allowlist file (for findings about it).
+    pub line: usize,
+    /// Repo-relative path of the source file.
+    pub path: String,
+    /// Whitespace-free normalized source line.
+    pub key: String,
+    /// One-line justification of the memory ordering.
+    pub why: String,
+}
+
+/// One `rust/lint/accum.allow` entry: an audited accumulator module.
+pub struct AccumEntry {
+    pub line: usize,
+    pub path: String,
+    pub why: String,
+}
+
+/// Parse `atomics.allow`. Errors carry the offending line number.
+pub fn parse_atomics(text: &str) -> Result<Vec<AtomicsEntry>, (usize, String)> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = i + 1;
+        let t = raw.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut parts = t.splitn(3, '|').map(str::trim);
+        let (path, key, why) = (parts.next(), parts.next(), parts.next());
+        match (path, key, why) {
+            (Some(p), Some(k), Some(w)) if !p.is_empty() && !k.is_empty() && !w.is_empty() => {
+                if k.chars().any(char::is_whitespace) {
+                    return Err((line, "key field must be whitespace-free".to_string()));
+                }
+                out.push(AtomicsEntry {
+                    line,
+                    path: p.to_string(),
+                    key: k.to_string(),
+                    why: w.to_string(),
+                });
+            }
+            _ => {
+                return Err((
+                    line,
+                    "expected `path | normalized-line | justification`".to_string(),
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Parse `accum.allow`.
+pub fn parse_accum(text: &str) -> Result<Vec<AccumEntry>, (usize, String)> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = i + 1;
+        let t = raw.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut parts = t.splitn(2, '|').map(str::trim);
+        match (parts.next(), parts.next()) {
+            (Some(p), Some(w)) if !p.is_empty() && !w.is_empty() => {
+                out.push(AccumEntry { line, path: p.to_string(), why: w.to_string() });
+            }
+            _ => return Err((line, "expected `path | justification`".to_string())),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomics_roundtrip_and_errors() {
+        let ok = "# header\n\nrust/src/a.rs | x.load(Ordering::Acquire); | pairs with store\n";
+        let es = parse_atomics(ok).unwrap();
+        assert_eq!(es.len(), 1);
+        assert_eq!(es[0].path, "rust/src/a.rs");
+        assert_eq!(es[0].key, "x.load(Ordering::Acquire);");
+        assert_eq!(es[0].line, 3);
+        assert!(parse_atomics("rust/src/a.rs | only-two-fields\n").is_err());
+        assert!(parse_atomics("p | has space | why\n").is_err());
+    }
+
+    #[test]
+    fn accum_roundtrip() {
+        let es = parse_accum("rust/src/kernels/gemm.rs | audited chains\n").unwrap();
+        assert_eq!(es.len(), 1);
+        assert!(parse_accum("no-pipe-line\n").is_err());
+    }
+}

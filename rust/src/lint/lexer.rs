@@ -1,0 +1,455 @@
+//! Comment/string-aware source scrubber — the foundation every
+//! `approxlint` rule stands on.
+//!
+//! [`scrub`] splits a Rust source text into two same-shape channels:
+//!
+//! * **code** — the original text with every comment, string literal,
+//!   byte/raw string and char literal replaced by spaces (newlines
+//!   preserved), so token scans can never false-positive on doc prose
+//!   or log messages;
+//! * **comments** — the inverse: only comment text survives (including
+//!   its `//`/`/*` markers), everything else is spaces. This is what
+//!   the `SAFETY:` rule reads.
+//!
+//! Both channels keep `\n` exactly where the source has it, so a line
+//! number means the same thing in the raw text and in either channel.
+//! The scrubber understands nested block comments, raw strings
+//! (`r#"…"#`, any hash depth), byte and byte-raw strings, escaped
+//! string contents, and the char-literal-vs-lifetime ambiguity
+//! (`'a'` scrubs, `'a>` and `'window:` survive as code).
+
+/// The two scrubbed channels of one source file. Same line structure as
+/// the input; see module docs.
+pub struct Scrubbed {
+    pub code: String,
+    pub comments: String,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Scrub `src` into its code and comment channels.
+pub fn scrub(src: &str) -> Scrubbed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut code = String::with_capacity(src.len());
+    let mut com = String::with_capacity(src.len());
+    // channel writers: every char lands in exactly one channel; the
+    // other gets a space (newlines land in both so lines stay aligned)
+    let keep = |code: &mut String, com: &mut String, c: char| {
+        code.push(c);
+        com.push(if c == '\n' { '\n' } else { ' ' });
+    };
+    let comment = |code: &mut String, com: &mut String, c: char| {
+        code.push(if c == '\n' { '\n' } else { ' ' });
+        com.push(c);
+    };
+    let blank = |code: &mut String, com: &mut String, c: char| {
+        let w = if c == '\n' { '\n' } else { ' ' };
+        code.push(w);
+        com.push(w);
+    };
+
+    let mut i = 0;
+    while i < n {
+        let c = cs[i];
+        // line comment (incl. /// and //!)
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            while i < n && cs[i] != '\n' {
+                comment(&mut code, &mut com, cs[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // block comment, nesting-aware
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            comment(&mut code, &mut com, cs[i]);
+            comment(&mut code, &mut com, cs[i + 1]);
+            i += 2;
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    comment(&mut code, &mut com, cs[i]);
+                    comment(&mut code, &mut com, cs[i + 1]);
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    comment(&mut code, &mut com, cs[i]);
+                    comment(&mut code, &mut com, cs[i + 1]);
+                    i += 2;
+                } else {
+                    comment(&mut code, &mut com, cs[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte string prefixes: r"…", r#"…"#, b"…", br#"…"#
+        // (only at an identifier boundary, so `carry`/`br` idents pass)
+        if (c == 'r' || c == 'b') && (i == 0 || !is_ident(cs[i - 1])) {
+            let mut j = i;
+            if cs[j] == 'b' && j + 1 < n && (cs[j + 1] == 'r' || cs[j + 1] == '"' || cs[j + 1] == '\'')
+            {
+                j += 1;
+            }
+            if j < n && cs[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while k < n && cs[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && cs[k] == '"' {
+                    // raw (byte) string from i ..= closing quote + hashes
+                    while i <= k {
+                        blank(&mut code, &mut com, cs[i]);
+                        i += 1;
+                    }
+                    loop {
+                        if i >= n {
+                            break;
+                        }
+                        if cs[i] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && i + 1 + h < n && cs[i + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                for _ in 0..=hashes {
+                                    blank(&mut code, &mut com, cs[i]);
+                                    i += 1;
+                                }
+                                break;
+                            }
+                        }
+                        blank(&mut code, &mut com, cs[i]);
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+            if j < n && (cs[j] == '"' || cs[j] == '\'') && cs[i] == 'b' {
+                // byte string b"…" or byte char b'…': blank the prefix,
+                // then fall through to the quote handling below
+                blank(&mut code, &mut com, cs[i]);
+                i = j;
+                // handled by the '"' / '\'' branches on the next pass
+                // (cs[i] is now the quote)
+            }
+        }
+        let c = cs[i];
+        // plain string literal with escapes
+        if c == '"' {
+            blank(&mut code, &mut com, c);
+            i += 1;
+            while i < n {
+                if cs[i] == '\\' && i + 1 < n {
+                    blank(&mut code, &mut com, cs[i]);
+                    blank(&mut code, &mut com, cs[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                let done = cs[i] == '"';
+                blank(&mut code, &mut com, cs[i]);
+                i += 1;
+                if done {
+                    break;
+                }
+            }
+            continue;
+        }
+        // char literal vs lifetime/label
+        if c == '\'' {
+            let escaped = i + 1 < n && cs[i + 1] == '\\';
+            let simple = i + 2 < n && cs[i + 2] == '\'' && cs[i + 1] != '\'';
+            if escaped {
+                blank(&mut code, &mut com, cs[i]);
+                i += 1;
+                while i < n {
+                    if cs[i] == '\\' && i + 1 < n {
+                        blank(&mut code, &mut com, cs[i]);
+                        blank(&mut code, &mut com, cs[i + 1]);
+                        i += 2;
+                        continue;
+                    }
+                    let done = cs[i] == '\'';
+                    blank(&mut code, &mut com, cs[i]);
+                    i += 1;
+                    if done {
+                        break;
+                    }
+                }
+                continue;
+            }
+            if simple {
+                blank(&mut code, &mut com, cs[i]);
+                blank(&mut code, &mut com, cs[i + 1]);
+                blank(&mut code, &mut com, cs[i + 2]);
+                i += 3;
+                continue;
+            }
+            // lifetime or loop label: stays code
+            keep(&mut code, &mut com, c);
+            i += 1;
+            continue;
+        }
+        keep(&mut code, &mut com, c);
+        i += 1;
+    }
+    Scrubbed { code, comments: com }
+}
+
+/// Byte offsets (into a scrubbed channel) where each line starts.
+pub fn line_offsets(s: &str) -> Vec<usize> {
+    let mut offs = vec![0usize];
+    for (i, b) in s.bytes().enumerate() {
+        if b == b'\n' {
+            offs.push(i + 1);
+        }
+    }
+    offs
+}
+
+/// 1-based line number of byte `pos` given [`line_offsets`].
+pub fn line_of(offsets: &[usize], pos: usize) -> usize {
+    match offsets.binary_search(&pos) {
+        Ok(i) => i + 1,
+        Err(i) => i, // insertion point i means line i (1-based)
+    }
+}
+
+/// All positions where `word` occurs in `hay` with no identifier
+/// character on either side.
+pub fn find_word(hay: &str, word: &str) -> Vec<usize> {
+    let hb = hay.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(word) {
+        let pos = from + rel;
+        let left_ok = pos == 0 || !is_ident_byte(hb[pos - 1]);
+        let end = pos + word.len();
+        let right_ok = end >= hb.len() || !is_ident_byte(hb[end]);
+        if left_ok && right_ok {
+            out.push(pos);
+        }
+        from = pos + 1;
+    }
+    out
+}
+
+/// All positions where `pat` occurs in `hay` (plain substring search).
+pub fn find_sub(hay: &str, pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = hay[from..].find(pat) {
+        out.push(from + rel);
+        from = from + rel + 1;
+    }
+    out
+}
+
+pub fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte position of the first non-whitespace code byte after the last
+/// statement boundary (`;`, `{` or `}`) before `pos` — the start of the
+/// statement/item containing `pos`. Comments are already spaces in the
+/// code channel, so a comment between the boundary and the statement is
+/// skipped like whitespace.
+pub fn statement_start(code: &str, pos: usize) -> usize {
+    let b = code.as_bytes();
+    let mut i = pos;
+    let mut boundary = 0usize;
+    while i > 0 {
+        i -= 1;
+        if b[i] == b';' || b[i] == b'{' || b[i] == b'}' {
+            boundary = i + 1;
+            break;
+        }
+    }
+    let mut j = boundary;
+    while j < pos && (b[j] as char).is_whitespace() {
+        j += 1;
+    }
+    j
+}
+
+/// Position of the `{` opening the innermost block that contains `pos`,
+/// or `None` at item/file level.
+pub fn enclosing_open(code: &str, pos: usize) -> Option<usize> {
+    let b = code.as_bytes();
+    let mut depth = 0i32;
+    let mut i = pos;
+    while i > 0 {
+        i -= 1;
+        match b[i] {
+            b'}' => depth += 1,
+            b'{' => {
+                if depth == 0 {
+                    return Some(i);
+                }
+                depth -= 1;
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Position of the `}` matching the `{` at `open`, or `None` if the
+/// file is unbalanced.
+pub fn matching_close(code: &str, open: usize) -> Option<usize> {
+    let b = code.as_bytes();
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < b.len() {
+        match b[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+/// First word of the statement that introduces the block opening at
+/// `open` — `"while"`, `"loop"`, `"if"`, `"fn"`, … Loop labels
+/// (`'drain: loop {`) are skipped.
+pub fn block_keyword(code: &str, open: usize) -> String {
+    let start = statement_start(code, open);
+    let b = code.as_bytes();
+    let mut i = start;
+    // skip a loop label: 'name :
+    if i < b.len() && b[i] == b'\'' {
+        i += 1;
+        while i < b.len() && is_ident_byte(b[i]) {
+            i += 1;
+        }
+        while i < b.len() && ((b[i] as char).is_whitespace() || b[i] == b':') {
+            i += 1;
+        }
+    }
+    let word_start = i;
+    while i < b.len() && is_ident_byte(b[i]) {
+        i += 1;
+    }
+    code[word_start..i].to_string()
+}
+
+/// Identifier immediately before byte `pos` (skipping whitespace and one
+/// index expression `[…]`), e.g. the receiver field of `.lock(` /
+/// `.wait(` call chains. Empty string when the receiver is not a plain
+/// identifier.
+pub fn ident_before(code: &str, pos: usize) -> String {
+    let b = code.as_bytes();
+    let mut i = pos;
+    while i > 0 && (b[i - 1] as char).is_whitespace() {
+        i -= 1;
+    }
+    if i > 0 && b[i - 1] == b']' {
+        // skip one index expression: …[li]
+        let mut depth = 0i32;
+        while i > 0 {
+            i -= 1;
+            match b[i] {
+                b']' => depth += 1,
+                b'[' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    let end = i;
+    while i > 0 && is_ident_byte(b[i - 1]) {
+        i -= 1;
+    }
+    code[i..end].to_string()
+}
+
+/// Normalization used by the allowlist formats: the scrubbed code line
+/// with every whitespace character removed (comments and string
+/// contents are already spaces, so they vanish too). Whitespace-free
+/// keys make the allowlist grammar unambiguous (` | ` can never occur
+/// inside a key) and are trivial to regenerate by hand.
+pub fn normalize_line(code_line: &str) -> String {
+    code_line.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_separates_channels() {
+        let src = "let x = 1; // SAFETY: note\nlet s = \"unsafe Ordering::SeqCst\";\n";
+        let sc = scrub(src);
+        assert!(!sc.code.contains("SAFETY"));
+        assert!(!sc.code.contains("Ordering"));
+        assert!(sc.code.contains("let x = 1;"));
+        assert!(sc.comments.contains("// SAFETY: note"));
+        assert_eq!(sc.code.matches('\n').count(), 2);
+        assert_eq!(sc.comments.matches('\n').count(), 2);
+    }
+
+    #[test]
+    fn scrub_handles_nested_and_raw() {
+        let src = "/* a /* b */ c */ fn f() {} r#\"raw \" unsafe\"# 'x' 'a: b\"esc\\\"q\" ";
+        let sc = scrub(src);
+        assert!(sc.code.contains("fn f() {}"));
+        assert!(!sc.code.contains("unsafe"));
+        assert!(!sc.code.contains("raw"));
+        assert!(!sc.code.contains("esc"));
+        // the label survives as code, the char literal does not
+        assert!(sc.code.contains("'a:"));
+        assert!(!sc.code.contains("'x'"));
+    }
+
+    #[test]
+    fn word_and_statement_helpers() {
+        let code = "fn f() { let y = 2; let x = unsafe_marker; }";
+        assert_eq!(find_word(code, "unsafe"), Vec::<usize>::new());
+        let p = find_word(code, "unsafe_marker")[0];
+        let s = statement_start(code, p);
+        assert!(code[s..].starts_with("let x"));
+        let open = enclosing_open(code, p).unwrap();
+        assert_eq!(code.as_bytes()[open], b'{');
+        assert_eq!(matching_close(code, open), Some(code.len() - 1));
+    }
+
+    #[test]
+    fn block_keyword_reads_header() {
+        let code = "fn f() { while x < 3 { y(); } 'lbl: loop { z(); } }";
+        let w_open = code.find("{ y").unwrap();
+        assert_eq!(block_keyword(code, w_open), "while");
+        let l_open = code.find("{ z").unwrap();
+        assert_eq!(block_keyword(code, l_open), "loop");
+    }
+
+    #[test]
+    fn ident_before_skips_index_and_ws() {
+        let code = "slots_ref[li].lock()";
+        let p = code.find(".lock").unwrap();
+        assert_eq!(ident_before(code, p), "slots_ref");
+        let code2 = "self.inner.kill_after\n    .lock()";
+        let p2 = code2.find(".lock").unwrap();
+        assert_eq!(ident_before(code2, p2), "kill_after");
+    }
+
+    #[test]
+    fn normalize_strips_all_whitespace() {
+        assert_eq!(normalize_line("  a . b ( 1 ,  2 ) ;  "), "a.b(1,2);");
+    }
+}

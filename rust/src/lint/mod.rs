@@ -1,0 +1,306 @@
+//! `approxlint` — the crate's in-repo static-analysis pass.
+//!
+//! Every guarantee this reproduction makes (bit-exact replay of the
+//! ascending-k single-accumulator contract, deterministic fault scripts,
+//! audited atomics, paired SIMD fallbacks) is a *source-level* property:
+//! a new call site can silently break it without failing any runtime
+//! test, because runtime tests only exercise the sites that already
+//! exist. This module encodes those contracts as seven lexical rules
+//! over the crate's own sources and runs them as the first ci.sh stage —
+//! before the build, in milliseconds, with no dependencies beyond std:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | R1 | every `unsafe` is introduced by a `SAFETY`/`# Safety` comment |
+//! | R2 | deterministic modules never touch clocks, hash maps, or env |
+//! | R3 | every atomic `Ordering::` site is in the reviewed allowlist |
+//! | R4 | FP accumulation shapes stay in the audited accumulator files |
+//! | R5 | `Condvar` waits re-check in loops; lock nesting is declared |
+//! | R6 | every `x86_64` cfg gate leaves a scalar path behind |
+//! | R7 | tests ↔ Cargo.toml ↔ ci.sh ↔ bench-schema docs agree |
+//!
+//! The scan set is `rust/src/**` plus the top level of `rust/tests/` and
+//! `examples/` — the planted-violation fixtures in
+//! `rust/tests/lint_fixtures/` are data for the lint's own test suite,
+//! not part of the tree under lint. Rules read scrubbed channels
+//! ([`lexer::scrub`]) so comments and strings can't produce findings.
+//! Policy — which modules are deterministic, which files are audited
+//! accumulators, the lock-order table — is declared in [`policy`], and
+//! the two reviewed allowlists live in `rust/lint/*.allow`. Rationale,
+//! extension guide and the normalization spec: `docs/LINTS.md`.
+
+pub mod allow;
+pub mod lexer;
+pub mod rules;
+pub mod xref;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One lint finding. Rendered as `RULE path:line message`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}:{} {}", self.rule, self.path, self.line, self.msg)
+    }
+}
+
+/// A source file prepared for linting: repo-relative path plus the two
+/// scrubbed channels and shared line offsets (code and comments have
+/// identical line structure by construction).
+pub struct SourceFile {
+    pub path: String,
+    pub code: String,
+    pub comments: String,
+    offsets: Vec<usize>,
+}
+
+impl SourceFile {
+    pub fn new(path: String, raw: &str) -> SourceFile {
+        let sc = lexer::scrub(raw);
+        let offsets = lexer::line_offsets(&sc.code);
+        SourceFile { path, code: sc.code, comments: sc.comments, offsets }
+    }
+
+    /// 1-based line number of byte `pos` in either channel.
+    pub fn line_of(&self, pos: usize) -> usize {
+        lexer::line_of(&self.offsets, pos)
+    }
+
+    /// Code-channel text of 1-based line `l` (without the newline).
+    pub fn line_code(&self, l: usize) -> &str {
+        self.slice_line(&self.code, l)
+    }
+
+    /// Comments-channel text of 1-based line `l`.
+    pub fn line_comments(&self, l: usize) -> &str {
+        self.slice_line(&self.comments, l)
+    }
+
+    fn slice_line<'a>(&self, chan: &'a str, l: usize) -> &'a str {
+        if l == 0 || l > self.offsets.len() {
+            return "";
+        }
+        let start = self.offsets[l - 1];
+        let end = self.offsets.get(l).map(|e| e - 1).unwrap_or(chan.len());
+        &chan[start..end.max(start)]
+    }
+}
+
+/// The declared policy tables: which parts of the tree each rule binds.
+/// Deliberately coarse (path prefixes, receiver-name conventions) so a
+/// reviewer can audit the tables themselves in one sitting.
+pub mod policy {
+    /// R2: modules whose behavior must be a pure function of their
+    /// inputs — the simulation core and the replay-critical coordinator
+    /// pieces (fault scripts are keyed on batch indices, never wall
+    /// time; the wire format and the reduction tree must replay).
+    pub const DETERMINISTIC_PREFIXES: &[&str] =
+        &["rust/src/kernels/", "rust/src/amsim/", "rust/src/mult/"];
+    pub const DETERMINISTIC_FILES: &[&str] = &[
+        "rust/src/coordinator/data_parallel.rs",
+        "rust/src/coordinator/faults.rs",
+        "rust/src/coordinator/wire.rs",
+    ];
+
+    pub fn deterministic_module(path: &str) -> bool {
+        DETERMINISTIC_PREFIXES.iter().any(|p| path.starts_with(p))
+            || DETERMINISTIC_FILES.contains(&path)
+    }
+
+    /// R4: where accumulation shapes are checked at all — the modules
+    /// implementing the crate's FP32 accumulator chains. Everywhere
+    /// else, `+=` is overwhelmingly integer bookkeeping; here, every
+    /// product-accumulation must sit in an `accum.allow`-audited file.
+    pub const ACCUM_SCOPE_PREFIXES: &[&str] = &["rust/src/kernels/", "rust/src/amsim/"];
+    pub const ACCUM_SCOPE_FILES: &[&str] = &["rust/src/coordinator/data_parallel.rs"];
+
+    pub fn accum_scope(path: &str) -> bool {
+        ACCUM_SCOPE_PREFIXES.iter().any(|p| path.starts_with(p))
+            || ACCUM_SCOPE_FILES.contains(&path)
+    }
+
+    /// R5: the only sanctioned nested lock acquisition,
+    /// `(file, outer receiver, inner receiver)`. `ThreadPool::wait`
+    /// holds the `done` guard while reading `panic`; the worker side
+    /// releases `panic` before touching `done`, so the order is acyclic.
+    pub const LOCK_ORDER: &[(&str, &str, &str)] =
+        &[("rust/src/util/threads.rs", "done", "panic")];
+
+    /// R6: files that are themselves `#[cfg(target_arch = "x86_64")]`
+    /// modules (gated at their `mod` declaration) — every item inside
+    /// is x86-only by construction and needs no per-item pairing.
+    pub const GATED_MODULE_FILES: &[&str] =
+        &["rust/src/kernels/simd.rs", "rust/src/amsim/simd.rs"];
+
+    /// Checked-in allowlists (repo-relative).
+    pub const ATOMICS_ALLOW: &str = "rust/lint/atomics.allow";
+    pub const ACCUM_ALLOW: &str = "rust/lint/accum.allow";
+}
+
+fn walk(dir: &Path, recursive: bool, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            if recursive {
+                walk(&p, true, out)?;
+            }
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Load the scan set under `root`: `rust/src/**/*.rs` plus the top
+/// level of `rust/tests/` and `examples/`.
+pub fn collect_files(root: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut paths = Vec::new();
+    walk(&root.join("rust/src"), true, &mut paths)?;
+    walk(&root.join("rust/tests"), false, &mut paths)?;
+    let examples = root.join("examples");
+    if examples.is_dir() {
+        walk(&examples, false, &mut paths)?;
+    }
+    let mut files = Vec::new();
+    for p in paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let raw = fs::read_to_string(&p)?;
+        files.push(SourceFile::new(rel, &raw));
+    }
+    Ok(files)
+}
+
+/// Run every rule over the tree at `root`; returns the sorted findings
+/// (empty = clean). IO errors reading the tree itself are returned as
+/// `Err`; missing/malformed allowlists are findings, not errors.
+pub fn run_all(root: &Path) -> io::Result<Vec<Finding>> {
+    let files = collect_files(root)?;
+    let mut out = Vec::new();
+
+    let mut atomic_sites: Vec<(String, usize, String)> = Vec::new(); // path, line, key
+    let mut accum_sites: Vec<(String, usize, &'static str)> = Vec::new();
+    for sf in &files {
+        rules::r1_safety(sf, &mut out);
+        rules::r2_determinism(sf, &mut out);
+        rules::r5_condvar_locks(sf, &mut out);
+        rules::r6_cfg_gates(sf, &mut out);
+        for (line, key) in rules::r3_sites(sf) {
+            atomic_sites.push((sf.path.clone(), line, key));
+        }
+        for site in rules::r4_sites(sf) {
+            accum_sites.push((sf.path.clone(), site.line, site.what));
+        }
+    }
+
+    // R3: every site allowlisted, every entry live
+    match fs::read_to_string(root.join(policy::ATOMICS_ALLOW)) {
+        Ok(text) => match allow::parse_atomics(&text) {
+            Ok(entries) => {
+                for (path, line, key) in &atomic_sites {
+                    if !entries.iter().any(|e| e.path == *path && e.key == *key) {
+                        out.push(Finding {
+                            rule: "R3",
+                            path: path.clone(),
+                            line: *line,
+                            msg: format!(
+                                "atomic ordering site not in {} (key `{key}`): add an entry \
+                                 with a one-line justification",
+                                policy::ATOMICS_ALLOW
+                            ),
+                        });
+                    }
+                }
+                for e in &entries {
+                    if !atomic_sites.iter().any(|(p, _, k)| *p == e.path && *k == e.key) {
+                        out.push(Finding {
+                            rule: "R3",
+                            path: policy::ATOMICS_ALLOW.to_string(),
+                            line: e.line,
+                            msg: format!("stale allowlist entry: no site in {} matches `{}`",
+                                e.path, e.key),
+                        });
+                    }
+                }
+            }
+            Err((line, msg)) => out.push(Finding {
+                rule: "R3",
+                path: policy::ATOMICS_ALLOW.to_string(),
+                line,
+                msg,
+            }),
+        },
+        Err(_) => out.push(Finding {
+            rule: "R3",
+            path: policy::ATOMICS_ALLOW.to_string(),
+            line: 1,
+            msg: "atomics allowlist missing".to_string(),
+        }),
+    }
+
+    // R4: every site in an audited file, every audited file live
+    match fs::read_to_string(root.join(policy::ACCUM_ALLOW)) {
+        Ok(text) => match allow::parse_accum(&text) {
+            Ok(entries) => {
+                for (path, line, what) in &accum_sites {
+                    if !entries.iter().any(|e| e.path == *path) {
+                        out.push(Finding {
+                            rule: "R4",
+                            path: path.clone(),
+                            line: *line,
+                            msg: format!(
+                                "accumulation-contract site (`{what}`) outside the audited \
+                                 accumulator files in {}",
+                                policy::ACCUM_ALLOW
+                            ),
+                        });
+                    }
+                }
+                for e in &entries {
+                    if !accum_sites.iter().any(|(p, _, _)| *p == e.path) {
+                        out.push(Finding {
+                            rule: "R4",
+                            path: policy::ACCUM_ALLOW.to_string(),
+                            line: e.line,
+                            msg: format!("stale allowlist entry: {} has no accumulation sites",
+                                e.path),
+                        });
+                    }
+                }
+            }
+            Err((line, msg)) => out.push(Finding {
+                rule: "R4",
+                path: policy::ACCUM_ALLOW.to_string(),
+                line,
+                msg,
+            }),
+        },
+        Err(_) => out.push(Finding {
+            rule: "R4",
+            path: policy::ACCUM_ALLOW.to_string(),
+            line: 1,
+            msg: "accumulation allowlist missing".to_string(),
+        }),
+    }
+
+    xref::r7_xref(root, &mut out);
+
+    out.sort_by(|a, b| {
+        (a.rule, &a.path, a.line, &a.msg).cmp(&(b.rule, &b.path, b.line, &b.msg))
+    });
+    Ok(out)
+}

@@ -1,0 +1,618 @@
+//! The per-file rule implementations R1–R6 (R7 lives in [`crate::lint::xref`]).
+//!
+//! Every rule reads the scrubbed channels of a [`SourceFile`] — never the
+//! raw text — so doc prose, log strings and commented-out code can not
+//! produce findings. The rules are deliberately lexical: they encode the
+//! repo's own conventions (documented in `docs/LINTS.md`), not general
+//! Rust semantics, which is what makes them implementable without a
+//! compiler and reviewable by hand.
+
+use crate::lint::lexer::{
+    block_keyword, enclosing_open, find_sub, find_word, ident_before, is_ident_byte,
+    matching_close, normalize_line, statement_start,
+};
+use crate::lint::{policy, Finding, SourceFile};
+
+/// `(start, end)` byte ranges of `#[cfg(test)]`-gated items (the attr
+/// through the matching close brace of the item it gates).
+pub fn test_regions(code: &str) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for pos in find_sub(code, "#[cfg(test)]") {
+        let b = code.as_bytes();
+        let mut i = pos + "#[cfg(test)]".len();
+        while i < b.len() && b[i] != b'{' {
+            i += 1;
+        }
+        if i < b.len() {
+            if let Some(close) = matching_close(code, i) {
+                out.push((pos, close));
+                continue;
+            }
+        }
+        out.push((pos, code.len()));
+    }
+    out
+}
+
+fn in_test(pos: usize, regions: &[(usize, usize)]) -> bool {
+    regions.iter().any(|&(s, e)| pos >= s && pos <= e)
+}
+
+// ---------------------------------------------------------------- R1
+
+/// R1: every `unsafe` keyword must be introduced by a comment containing
+/// `SAFETY` (line style) or `# Safety` (doc style) — either in the
+/// contiguous comment/attribute block directly above the statement that
+/// contains it, or on a comment-only line between the statement start
+/// and the `unsafe` token itself (multi-line statements).
+pub fn r1_safety(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for pos in find_word(&sf.code, "unsafe") {
+        let stmt = statement_start(&sf.code, pos);
+        let stmt_line = sf.line_of(stmt);
+        let tok_line = sf.line_of(pos);
+        let mut text = String::new();
+        // contiguous comment / attribute lines directly above the statement
+        let mut l = stmt_line;
+        while l > 1 {
+            l -= 1;
+            let code_t = sf.line_code(l).trim();
+            let com_t = sf.line_comments(l).trim();
+            if code_t.is_empty() && !com_t.is_empty() {
+                text.push_str(com_t);
+                text.push('\n');
+            } else if code_t.starts_with('#') {
+                continue; // attribute line keeps the block contiguous
+            } else {
+                break;
+            }
+        }
+        // comment lines inside the statement, up to and including the
+        // token's own line (trailing `// SAFETY:` comments count)
+        for l in stmt_line..=tok_line {
+            let com_t = sf.line_comments(l).trim();
+            if !com_t.is_empty() {
+                text.push_str(com_t);
+                text.push('\n');
+            }
+        }
+        if !(text.contains("SAFETY") || text.contains("# Safety")) {
+            out.push(Finding {
+                rule: "R1",
+                path: sf.path.clone(),
+                line: tok_line,
+                msg: "`unsafe` without an immediately preceding SAFETY comment stating the \
+                      invariant"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R2
+
+const R2_BANNED_WORDS: &[(&str, &str)] = &[
+    ("SystemTime", "wall-clock time is nondeterministic"),
+    ("Instant", "monotonic clock reads are nondeterministic"),
+    ("HashMap", "randomized iteration order breaks replay; use BTreeMap"),
+    ("HashSet", "randomized iteration order breaks replay; use BTreeSet"),
+];
+const R2_BANNED_SUBS: &[(&str, &str)] = &[
+    ("env::var", "environment reads hide run-to-run state"),
+    ("var_os", "environment reads hide run-to-run state"),
+];
+
+/// R2: determinism — the modules named in
+/// [`policy::deterministic_module`] must not touch clocks, hash-ordered
+/// collections or the environment outside `#[cfg(test)]` items.
+pub fn r2_determinism(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !policy::deterministic_module(&sf.path) {
+        return;
+    }
+    let regions = test_regions(&sf.code);
+    let mut push = |pos: usize, tok: &str, why: &str, out: &mut Vec<Finding>| {
+        out.push(Finding {
+            rule: "R2",
+            path: sf.path.clone(),
+            line: sf.line_of(pos),
+            msg: format!("`{tok}` in a deterministic module: {why}"),
+        });
+    };
+    for &(w, why) in R2_BANNED_WORDS {
+        for pos in find_word(&sf.code, w) {
+            if !in_test(pos, &regions) {
+                push(pos, w, why, out);
+            }
+        }
+    }
+    for &(s, why) in R2_BANNED_SUBS {
+        for pos in find_sub(&sf.code, s) {
+            if !in_test(pos, &regions) {
+                push(pos, s, why, out);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R3
+
+const ATOMIC_VARIANTS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// R3 site scan: every distinct line containing an
+/// `std::sync::atomic::Ordering` variant use, as
+/// `(line, whitespace-free normalized code line)`. `cmp::Ordering`
+/// variants (`Less`/`Equal`/`Greater`) never match.
+pub fn r3_sites(sf: &SourceFile) -> Vec<(usize, String)> {
+    let b = sf.code.as_bytes();
+    let mut lines = Vec::new();
+    for pos in find_sub(&sf.code, "Ordering::") {
+        if pos > 0 && is_ident_byte(b[pos - 1]) {
+            continue;
+        }
+        let rest = &sf.code[pos + "Ordering::".len()..];
+        let follows = ATOMIC_VARIANTS.iter().any(|v| {
+            rest.starts_with(v) && !rest[v.len()..].bytes().next().is_some_and(is_ident_byte)
+        });
+        if !follows {
+            continue;
+        }
+        let line = sf.line_of(pos);
+        if lines.last() != Some(&line) {
+            lines.push(line);
+        }
+    }
+    lines
+        .into_iter()
+        .map(|l| (l, normalize_line(sf.line_code(l))))
+        .collect()
+}
+
+// ---------------------------------------------------------------- R4
+
+/// One accumulation-contract-relevant site.
+pub struct AccumSite {
+    pub line: usize,
+    pub what: &'static str,
+}
+
+/// R4 site scan. Two tiers:
+///
+/// * crate-wide (any scanned file): `mul_add` / `fmadd` tokens — fused
+///   multiply-add reassociates the contract's `round(a*b)` then
+///   `acc + p` sequence, so every use must sit in an audited file;
+/// * inside the accumulation-scope modules
+///   ([`policy::accum_scope`]): `.sum(`/`.sum::<`, `.fold(`, and `+=`
+///   whose right-hand side still contains a `*` after index
+///   expressions (`[…]`) are stripped — the lexical shape of a fused
+///   or reassociated product accumulation.
+///
+/// `#[cfg(test)]` items are exempt (oracles there re-derive sums on
+/// purpose). The allowlist in `rust/lint/accum.allow` is file-granular.
+pub fn r4_sites(sf: &SourceFile) -> Vec<AccumSite> {
+    let regions = test_regions(&sf.code);
+    let mut out = Vec::new();
+    for pos in find_word(&sf.code, "mul_add") {
+        if !in_test(pos, &regions) {
+            out.push(AccumSite { line: sf.line_of(pos), what: "mul_add" });
+        }
+    }
+    for pos in find_sub(&sf.code, "fmadd") {
+        if !in_test(pos, &regions) {
+            out.push(AccumSite { line: sf.line_of(pos), what: "fmadd" });
+        }
+    }
+    if policy::accum_scope(&sf.path) {
+        let b = sf.code.as_bytes();
+        for pos in find_sub(&sf.code, ".sum") {
+            let after = pos + ".sum".len();
+            if after < b.len() && is_ident_byte(b[after]) {
+                continue;
+            }
+            if !in_test(pos, &regions) {
+                out.push(AccumSite { line: sf.line_of(pos), what: ".sum" });
+            }
+        }
+        for pos in find_sub(&sf.code, ".fold(") {
+            if !in_test(pos, &regions) {
+                out.push(AccumSite { line: sf.line_of(pos), what: ".fold" });
+            }
+        }
+        for pos in find_sub(&sf.code, "+=") {
+            if in_test(pos, &regions) {
+                continue;
+            }
+            let end = sf.code[pos..]
+                .find(';')
+                .map(|r| pos + r)
+                .unwrap_or(sf.code.len());
+            let rhs = &sf.code[pos + 2..end];
+            // strip index expressions so a[i*k+kk] does not read as a product
+            let mut depth = 0i32;
+            let mut has_star = false;
+            for ch in rhs.chars() {
+                match ch {
+                    '[' => depth += 1,
+                    ']' => depth -= 1,
+                    '*' if depth == 0 => has_star = true,
+                    _ => {}
+                }
+            }
+            if has_star {
+                out.push(AccumSite { line: sf.line_of(pos), what: "+= with product" });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- R5
+
+/// R5a: a `Condvar` wait (receiver named `cv`, the crate-wide
+/// convention) must sit directly inside a `while` or `loop` block so the
+/// predicate is re-checked against spurious wakeups.
+/// R5b: nested `.lock()` acquisitions must appear in
+/// [`policy::LOCK_ORDER`].
+pub fn r5_condvar_locks(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let code = &sf.code;
+    for pat in [".wait(", ".wait_timeout("] {
+        for pos in find_sub(code, pat) {
+            if ident_before(code, pos) != "cv" {
+                continue;
+            }
+            let ok = match enclosing_open(code, pos) {
+                Some(open) => {
+                    let kw = block_keyword(code, open);
+                    kw == "while" || kw == "loop"
+                }
+                None => false,
+            };
+            if !ok {
+                out.push(Finding {
+                    rule: "R5",
+                    path: sf.path.clone(),
+                    line: sf.line_of(pos),
+                    msg: "Condvar wait not directly inside a while/loop predicate re-check"
+                        .to_string(),
+                });
+            }
+        }
+    }
+
+    // lock sites with their guard scopes
+    struct LockSite {
+        pos: usize,
+        recv: String,
+        scope_end: usize,
+    }
+    let mut sites: Vec<LockSite> = Vec::new();
+    for pos in find_sub(code, ".lock(") {
+        let recv = ident_before(code, pos);
+        let enc_end = enclosing_open(code, pos)
+            .and_then(|o| matching_close(code, o))
+            .unwrap_or(code.len());
+        let scope_end = guard_scope_end(code, pos).unwrap_or_else(|| {
+            // temporary guard: lives to the end of its statement
+            code[pos..].find(';').map(|r| pos + r).unwrap_or(code.len()).min(enc_end)
+        });
+        sites.push(LockSite { pos, recv, scope_end: scope_end.min(enc_end) });
+    }
+    for a in &sites {
+        for b in &sites {
+            if b.pos <= a.pos || b.pos >= a.scope_end {
+                continue;
+            }
+            let allowed = policy::LOCK_ORDER
+                .iter()
+                .any(|&(p, outer, inner)| p == sf.path && outer == a.recv && inner == b.recv);
+            if !allowed {
+                out.push(Finding {
+                    rule: "R5",
+                    path: sf.path.clone(),
+                    line: sf.line_of(b.pos),
+                    msg: format!(
+                        "nested lock acquisition `{}` -> `{}` not in the declared lock-order \
+                         table",
+                        a.recv, b.recv
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// If the `.lock(` call at `pos` is the value of a `let` binding (the
+/// binding holds the guard), return where the guard's scope ends: the
+/// `drop(<binding>)` call if there is one, else the close of the
+/// enclosing block. Returns `None` for temporary guards.
+fn guard_scope_end(code: &str, pos: usize) -> Option<usize> {
+    let b = code.as_bytes();
+    let stmt = statement_start(code, pos);
+    let is_let = code[stmt..].starts_with("let")
+        && !b.get(stmt + 3).copied().is_some_and(is_ident_byte);
+    if !is_let {
+        return None;
+    }
+    // step over `.lock(...)` and any chained `.unwrap*(...)`
+    let mut i = matching_paren(code, pos + ".lock".len())? + 1;
+    loop {
+        let mut j = i;
+        while j < b.len() && (b[j] as char).is_whitespace() {
+            j += 1;
+        }
+        if code[j..].starts_with(".unwrap") {
+            let mut k = j + 1;
+            while k < b.len() && (is_ident_byte(b[k]) || b[k] == b'.') {
+                k += 1;
+            }
+            i = matching_paren(code, k)? + 1;
+        } else {
+            i = j;
+            break;
+        }
+    }
+    if i >= b.len() || b[i] != b';' {
+        return None; // chain continues: the guard is a temporary
+    }
+    // binding name: let [mut] <name>
+    let mut w = stmt + "let".len();
+    let next_word = |w: &mut usize| -> String {
+        while *w < b.len() && !is_ident_byte(b[*w]) {
+            *w += 1;
+        }
+        let s = *w;
+        while *w < b.len() && is_ident_byte(b[*w]) {
+            *w += 1;
+        }
+        code[s..*w].to_string()
+    };
+    let mut name = next_word(&mut w);
+    if name == "mut" {
+        name = next_word(&mut w);
+    }
+    let enc_end = enclosing_open(code, pos)
+        .and_then(|o| matching_close(code, o))
+        .unwrap_or(code.len())
+        .max(i);
+    for dp in find_word(&code[i..enc_end], "drop") {
+        let after = &code[i + dp + "drop".len()..enc_end];
+        let inner = after.trim_start();
+        if let Some(rest) = inner.strip_prefix('(') {
+            if rest.trim_start().strip_prefix(name.as_str()).map_or(false, |r| {
+                r.trim_start().starts_with(')')
+            }) {
+                return Some(i + dp);
+            }
+        }
+    }
+    Some(enc_end)
+}
+
+fn matching_paren(code: &str, open: usize) -> Option<usize> {
+    let b = code.as_bytes();
+    if open >= b.len() || b[open] != b'(' {
+        return None;
+    }
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < b.len() {
+        match b[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------- R6
+
+/// R6: every `#[cfg(target_arch = "x86_64")]` gate must leave a scalar
+/// path behind: a gated block/`if` must have fallthrough code after it
+/// in the enclosing block, a gated `fn` must have a
+/// `#[cfg(not(target_arch …))]` sibling of the same name, and gated
+/// `mod`/`use` items are the gate mechanism itself. Files listed in
+/// [`policy::GATED_MODULE_FILES`] are compiled only under the gate and
+/// are exempt wholesale.
+pub fn r6_cfg_gates(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if policy::GATED_MODULE_FILES.contains(&sf.path.as_str()) {
+        return;
+    }
+    let code = &sf.code;
+    // scalar siblings declared under cfg(not(target_arch ...))
+    let mut scalar_fns: Vec<String> = Vec::new();
+    for pos in find_sub(code, "#[cfg(not(target_arch") {
+        if let Some(GatedItem::Fn(name)) = classify_gated(code, pos) {
+            scalar_fns.push(name);
+        }
+    }
+    for pos in find_sub(code, "#[cfg(target_arch") {
+        let line = sf.line_of(pos);
+        let bad = |msg: String, out: &mut Vec<Finding>| {
+            out.push(Finding { rule: "R6", path: sf.path.clone(), line, msg });
+        };
+        match classify_gated(code, pos) {
+            Some(GatedItem::Block { close }) => {
+                let enc_end = enclosing_open(code, pos)
+                    .and_then(|o| matching_close(code, o))
+                    .unwrap_or(code.len());
+                let tail = &code[(close + 1).min(enc_end)..enc_end];
+                if tail.trim().is_empty() {
+                    bad(
+                        "gated block with no scalar fallthrough code after it".to_string(),
+                        out,
+                    );
+                }
+            }
+            Some(GatedItem::Fn(name)) => {
+                if !scalar_fns.contains(&name) {
+                    bad(
+                        format!(
+                            "gated fn `{name}` has no `#[cfg(not(target_arch …))]` scalar \
+                             counterpart in this file"
+                        ),
+                        out,
+                    );
+                }
+            }
+            Some(GatedItem::ModOrUse) => {}
+            None => bad(
+                "gated item is not a recognized paired shape (block/if with fallthrough, \
+                 fn with scalar sibling, mod, use)"
+                    .to_string(),
+                out,
+            ),
+        }
+    }
+}
+
+enum GatedItem {
+    Block { close: usize },
+    Fn(String),
+    ModOrUse,
+}
+
+/// Classify the item a `#[cfg(…)]` attribute at `attr_pos` gates.
+fn classify_gated(code: &str, attr_pos: usize) -> Option<GatedItem> {
+    let b = code.as_bytes();
+    // end of this attribute (strings inside are already blanked, so the
+    // first `]` closes it), then any further attributes
+    let mut i = attr_pos;
+    loop {
+        while i < b.len() && b[i] != b']' {
+            i += 1;
+        }
+        i += 1;
+        while i < b.len() && (b[i] as char).is_whitespace() {
+            i += 1;
+        }
+        if i < b.len() && b[i] == b'#' {
+            continue;
+        }
+        break;
+    }
+    if i >= b.len() {
+        return None;
+    }
+    if b[i] == b'{' {
+        return Some(GatedItem::Block { close: matching_close(code, i)? });
+    }
+    // read identifier words until a shape-deciding keyword
+    let mut saw_if = false;
+    let mut guard = 0;
+    while i < b.len() && guard < 16 {
+        guard += 1;
+        while i < b.len() && !is_ident_byte(b[i]) {
+            if b[i] == b'{' {
+                // `if cond {` — the gated item is the if's block (plus
+                // any else-chain, which shares its fallthrough check)
+                return if saw_if {
+                    let mut close = matching_close(code, i)?;
+                    loop {
+                        let rest = code[close + 1..].trim_start();
+                        if rest.starts_with("else") {
+                            let off = code.len() - rest.len() + "else".len();
+                            let mut j = off;
+                            while j < b.len() && b[j] != b'{' {
+                                j += 1;
+                            }
+                            close = matching_close(code, j)?;
+                        } else {
+                            break;
+                        }
+                    }
+                    Some(GatedItem::Block { close })
+                } else {
+                    None
+                };
+            }
+            i += 1;
+        }
+        let s = i;
+        while i < b.len() && is_ident_byte(b[i]) {
+            i += 1;
+        }
+        match &code[s..i] {
+            "if" => saw_if = true,
+            "mod" | "use" => return Some(GatedItem::ModOrUse),
+            "fn" => {
+                let mut j = i;
+                while j < b.len() && !is_ident_byte(b[j]) {
+                    j += 1;
+                }
+                let ns = j;
+                while j < b.len() && is_ident_byte(b[j]) {
+                    j += 1;
+                }
+                return Some(GatedItem::Fn(code[ns..j].to_string()));
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::SourceFile;
+
+    fn sf(src: &str) -> SourceFile {
+        SourceFile::new("rust/src/kernels/x.rs".to_string(), src)
+    }
+
+    #[test]
+    fn r1_accepts_and_rejects() {
+        let mut out = Vec::new();
+        r1_safety(
+            &sf("// SAFETY: ptr is valid for n elements\nunsafe { go() };\n"),
+            &mut out,
+        );
+        assert!(out.is_empty());
+        r1_safety(&sf("unsafe { go() };\n"), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 1);
+    }
+
+    #[test]
+    fn r3_excludes_cmp_ordering() {
+        let s = sf("a.load(Ordering::Acquire);\nx.cmp(&y) == Ordering::Less;\n");
+        let sites = r3_sites(&s);
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].0, 1);
+        assert_eq!(sites[0].1, "a.load(Ordering::Acquire);");
+    }
+
+    #[test]
+    fn r4_strips_index_brackets() {
+        let sites = r4_sites(&sf("acc += a[i * k + kk];\nacc += x * r;\n"));
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].line, 2);
+    }
+
+    #[test]
+    fn r5_wait_needs_loop() {
+        let mut out = Vec::new();
+        r5_condvar_locks(&sf("while !done { st = self.cv.wait(st).unwrap(); }\n"), &mut out);
+        assert!(out.is_empty());
+        r5_condvar_locks(&sf("if !done { st = self.cv.wait(st).unwrap(); }\n"), &mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn r5_guard_scope_sees_nesting() {
+        let src = "fn f() { let mut g = a.lock().unwrap(); let h = b.lock().unwrap(); }\n";
+        let mut out = Vec::new();
+        r5_condvar_locks(&sf(src), &mut out);
+        assert_eq!(out.len(), 1, "nested a -> b must be reported");
+        let dropped =
+            "fn f() { let mut g = a.lock().unwrap(); drop(g); let h = b.lock().unwrap(); }\n";
+        out.clear();
+        r5_condvar_locks(&sf(dropped), &mut out);
+        assert!(out.is_empty(), "drop(g) ends the guard scope");
+    }
+}

@@ -1,0 +1,187 @@
+//! R7 — registration cross-checks between artifacts that must agree but
+//! live in different files:
+//!
+//! * every `rust/tests/*.rs` suite has a `Cargo.toml` `[[test]]` entry
+//!   (the crate sets `autotests = false`, so an unregistered suite
+//!   silently never runs) — and every entry has a file;
+//! * every `--test <name>` pinned in `ci.sh` names a registered suite
+//!   (a renamed suite must not leave a stale pin behind);
+//! * the `approxtrain/bench_*/v*` schema-version strings emitted by
+//!   `rust/src/coordinator/experiments.rs` and documented in
+//!   `docs/BENCHMARKS.md` are the same set in both directions.
+
+use std::fs;
+use std::path::Path;
+
+use crate::lint::lexer::{find_sub, line_of, line_offsets};
+use crate::lint::Finding;
+
+fn missing(path: &str, out: &mut Vec<Finding>) {
+    out.push(Finding {
+        rule: "R7",
+        path: path.to_string(),
+        line: 1,
+        msg: "required file missing or unreadable".to_string(),
+    });
+}
+
+pub fn r7_xref(root: &Path, out: &mut Vec<Finding>) {
+    // -- Cargo.toml [[test]] registrations
+    let cargo = match fs::read_to_string(root.join("Cargo.toml")) {
+        Ok(t) => t,
+        Err(_) => return missing("Cargo.toml", out),
+    };
+    let mut registered: Vec<(String, usize)> = Vec::new();
+    let mut in_test_section = false;
+    for (i, raw) in cargo.lines().enumerate() {
+        let t = raw.trim();
+        if t.starts_with('[') {
+            in_test_section = t == "[[test]]";
+            continue;
+        }
+        if in_test_section && t.starts_with("name") {
+            if let Some(name) = t.split('"').nth(1) {
+                registered.push((name.to_string(), i + 1));
+            }
+        }
+    }
+
+    // -- rust/tests/*.rs suite files (top level only; fixture corpora in
+    //    subdirectories are data, not suites)
+    let tests_dir = root.join("rust/tests");
+    let mut stems: Vec<String> = Vec::new();
+    match fs::read_dir(&tests_dir) {
+        Ok(rd) => {
+            for entry in rd.flatten() {
+                let p = entry.path();
+                if p.is_file() && p.extension().is_some_and(|e| e == "rs") {
+                    if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+                        stems.push(stem.to_string());
+                    }
+                }
+            }
+        }
+        Err(_) => return missing("rust/tests", out),
+    }
+    stems.sort();
+    for stem in &stems {
+        if !registered.iter().any(|(n, _)| n == stem) {
+            out.push(Finding {
+                rule: "R7",
+                path: format!("rust/tests/{stem}.rs"),
+                line: 1,
+                msg: format!(
+                    "suite `{stem}` has no Cargo.toml [[test]] entry (autotests are off: it \
+                     would silently never run)"
+                ),
+            });
+        }
+    }
+    for (name, line) in &registered {
+        if !stems.contains(name) {
+            out.push(Finding {
+                rule: "R7",
+                path: "Cargo.toml".to_string(),
+                line: *line,
+                msg: format!("[[test]] entry `{name}` has no rust/tests/{name}.rs file"),
+            });
+        }
+    }
+
+    // -- ci.sh --test pins (shell comments stripped line-wise)
+    match fs::read_to_string(root.join("ci.sh")) {
+        Ok(ci) => {
+            for (i, raw) in ci.lines().enumerate() {
+                let code = raw.split('#').next().unwrap_or("");
+                for pos in find_sub(code, "--test ") {
+                    let rest = &code[pos + "--test ".len()..];
+                    let name: String = rest
+                        .chars()
+                        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                        .collect();
+                    if !name.is_empty() && !registered.iter().any(|(n, _)| *n == name) {
+                        out.push(Finding {
+                            rule: "R7",
+                            path: "ci.sh".to_string(),
+                            line: i + 1,
+                            msg: format!("pinned suite `{name}` is not a registered [[test]]"),
+                        });
+                    }
+                }
+            }
+        }
+        Err(_) => missing("ci.sh", out),
+    }
+
+    // -- BENCH schema versions: emitter vs methodology doc
+    let exp_path = "rust/src/coordinator/experiments.rs";
+    let doc_path = "docs/BENCHMARKS.md";
+    let exp = fs::read_to_string(root.join(exp_path));
+    let doc = fs::read_to_string(root.join(doc_path));
+    match (exp, doc) {
+        (Ok(exp), Ok(doc)) => {
+            let emitted = schema_strings(&exp);
+            let documented = schema_strings(&doc);
+            let doc_offs = line_offsets(&doc);
+            let exp_offs = line_offsets(&exp);
+            for (s, pos) in &emitted {
+                if !documented.iter().any(|(d, _)| d == s) {
+                    out.push(Finding {
+                        rule: "R7",
+                        path: exp_path.to_string(),
+                        line: line_of(&exp_offs, *pos),
+                        msg: format!("schema `{s}` is emitted but not documented in {doc_path}"),
+                    });
+                }
+            }
+            for (s, pos) in &documented {
+                if !emitted.iter().any(|(e, _)| e == s) {
+                    out.push(Finding {
+                        rule: "R7",
+                        path: doc_path.to_string(),
+                        line: line_of(&doc_offs, *pos),
+                        msg: format!("schema `{s}` is documented but never emitted by {exp_path}"),
+                    });
+                }
+            }
+        }
+        (exp, doc) => {
+            if exp.is_err() {
+                missing(exp_path, out);
+            }
+            if doc.is_err() {
+                missing(doc_path, out);
+            }
+        }
+    }
+}
+
+/// Distinct `approxtrain/bench_*/v*`-style schema tokens in `text`, with
+/// the byte position of their first occurrence.
+fn schema_strings(text: &str) -> Vec<(String, usize)> {
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for pos in find_sub(text, "approxtrain/bench_") {
+        let token: String = text[pos..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || matches!(c, '/' | '_'))
+            .collect();
+        if !out.iter().any(|(t, _)| *t == token) {
+            out.push((token, pos));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_tokens_terminate_and_dedupe() {
+        let s = "w(\"approxtrain/bench_gemm/v5\") and `approxtrain/bench_gemm/v5` plus \
+                 \"approxtrain/bench_serve/v2\"";
+        let toks = schema_strings(s);
+        let names: Vec<&str> = toks.iter().map(|(t, _)| t.as_str()).collect();
+        assert_eq!(names, ["approxtrain/bench_gemm/v5", "approxtrain/bench_serve/v2"]);
+    }
+}

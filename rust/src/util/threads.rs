@@ -31,9 +31,14 @@ pub fn available_threads() -> usize {
 #[derive(Clone, Copy)]
 pub struct SendMutPtr(pub *mut f32);
 
-// SAFETY: raw pointers carry no aliasing guarantees by themselves; the
-// kernels only ever write through disjoint offsets per chunk.
+// SAFETY: moving the wrapper between threads moves only the pointer value;
+// a raw pointer carries no aliasing claim by itself, and every kernel hands
+// each worker a disjoint output range, so no two threads dereference
+// overlapping targets.
 unsafe impl Send for SendMutPtr {}
+// SAFETY: sharing `&SendMutPtr` is sound for the same reason — the pointer
+// is `Copy`, and all concurrent writes through copies land on disjoint
+// per-chunk offsets (the `run_chunks` contract).
 unsafe impl Sync for SendMutPtr {}
 
 /// One fan-out/fan-in unit of work: a borrowed closure plus an atomic

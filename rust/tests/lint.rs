@@ -1,0 +1,128 @@
+//! Teeth tests for the `approxlint` pass (`rust/src/lint/`).
+//!
+//! Both directions for every rule: each planted fixture under
+//! `lint_fixtures/` trips exactly its rule when linted under the policy
+//! scope the test assigns it, the clean fixture trips nothing under the
+//! strictest scope, and — the meta-check — the shipped tree itself
+//! lints clean, allowlists included. The fixtures are `include_str!`
+//! data, never compiled: `collect_files` only walks the top level of
+//! `rust/tests/`, so the lint never scans its own corpus.
+
+use std::path::Path;
+
+use approxtrain::lint::{self, rules, xref, Finding, SourceFile};
+
+/// Lint `src` as if it lived at `path`, running the per-file rules that
+/// push findings directly (R1/R2/R5/R6).
+fn lint_as(path: &str, src: &str) -> Vec<Finding> {
+    let sf = SourceFile::new(path.to_string(), src);
+    let mut out = Vec::new();
+    rules::r1_safety(&sf, &mut out);
+    rules::r2_determinism(&sf, &mut out);
+    rules::r5_condvar_locks(&sf, &mut out);
+    rules::r6_cfg_gates(&sf, &mut out);
+    out
+}
+
+#[test]
+fn r1_fixture_missing_safety_comment() {
+    let src = include_str!("lint_fixtures/r1_unsafe_no_safety.rs");
+    let out = lint_as("rust/src/kernels/fx.rs", src);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert_eq!(out[0].rule, "R1");
+}
+
+#[test]
+fn r2_fixture_fires_only_in_deterministic_scope() {
+    let src = include_str!("lint_fixtures/r2_wall_clock.rs");
+    let out = lint_as("rust/src/kernels/fx.rs", src);
+    // 2x Instant + 3x HashMap outside tests; the #[cfg(test)] mod is exempt
+    assert_eq!(out.len(), 5, "{out:?}");
+    assert!(out.iter().all(|f| f.rule == "R2"), "{out:?}");
+    assert!(
+        lint_as("rust/src/util/fx.rs", src).is_empty(),
+        "R2 must not fire outside the declared deterministic modules"
+    );
+}
+
+#[test]
+fn r3_fixture_site_and_normalized_key() {
+    let src = include_str!("lint_fixtures/r3_atomics.rs");
+    let sf = SourceFile::new("rust/src/util/fx.rs".to_string(), src);
+    let sites = rules::r3_sites(&sf);
+    assert_eq!(sites.len(), 1, "{sites:?}");
+    assert_eq!(sites[0].1, "c.fetch_add(1,Ordering::SeqCst)");
+}
+
+#[test]
+fn r4_fixture_scope_and_shapes() {
+    let src = include_str!("lint_fixtures/r4_accum.rs");
+    let in_scope = SourceFile::new("rust/src/kernels/fx.rs".to_string(), src);
+    let mut whats: Vec<&str> = rules::r4_sites(&in_scope).iter().map(|s| s.what).collect();
+    whats.sort();
+    assert_eq!(whats, ["+= with product", ".sum", "mul_add"]);
+    let out_of_scope = SourceFile::new("rust/src/util/fx.rs".to_string(), src);
+    let whats: Vec<&str> = rules::r4_sites(&out_of_scope).iter().map(|s| s.what).collect();
+    assert_eq!(whats, ["mul_add"], "only the fused-op tier is crate-wide");
+}
+
+#[test]
+fn r5_fixture_wait_and_nesting() {
+    let src = include_str!("lint_fixtures/r5_condvar_locks.rs");
+    let out = lint_as("rust/src/coordinator/fx.rs", src);
+    assert_eq!(out.len(), 2, "{out:?}");
+    assert!(out.iter().all(|f| f.rule == "R5"), "{out:?}");
+    assert!(out.iter().any(|f| f.msg.contains("while/loop")), "{out:?}");
+    assert!(out.iter().any(|f| f.msg.contains("`state` -> `other`")), "{out:?}");
+}
+
+#[test]
+fn r6_fixture_unpaired_gates() {
+    let src = include_str!("lint_fixtures/r6_unpaired_gate.rs");
+    let out = lint_as("rust/src/kernels/fx.rs", src);
+    assert_eq!(out.len(), 2, "{out:?}");
+    assert!(out.iter().all(|f| f.rule == "R6"), "{out:?}");
+    assert!(out.iter().any(|f| f.msg.contains("no scalar fallthrough")), "{out:?}");
+    assert!(out.iter().any(|f| f.msg.contains("`fast_only`")), "{out:?}");
+    // files compiled only under the gate are exempt wholesale
+    assert!(lint_as("rust/src/kernels/simd.rs", src).is_empty());
+}
+
+#[test]
+fn clean_fixture_under_strictest_scope() {
+    let src = include_str!("lint_fixtures/clean.rs");
+    let out = lint_as("rust/src/kernels/fx.rs", src);
+    assert!(out.is_empty(), "{out:?}");
+    let sf = SourceFile::new("rust/src/kernels/fx.rs".to_string(), src);
+    assert!(rules::r3_sites(&sf).is_empty(), "cmp::Ordering is not an atomic site");
+    assert!(rules::r4_sites(&sf).is_empty(), "bracket-internal products are not accumulation");
+}
+
+#[test]
+fn r7_fixture_tree_cross_checks() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/lint_fixtures/r7_tree");
+    let mut out = Vec::new();
+    xref::r7_xref(&root, &mut out);
+    assert_eq!(out.len(), 5, "{out:#?}");
+    assert!(out.iter().all(|f| f.rule == "R7"), "{out:?}");
+    assert!(out.iter().any(|f| f.msg.contains("`ghost`")), "{out:?}");
+    assert!(out.iter().any(|f| f.msg.contains("`real_suite`")), "{out:?}");
+    assert!(out.iter().any(|f| f.msg.contains("`stale_pin`")), "{out:?}");
+    assert!(out.iter().any(|f| f.msg.contains("bench_gemm/v9")), "{out:?}");
+    assert!(out.iter().any(|f| f.msg.contains("bench_phantom/v1")), "{out:?}");
+}
+
+/// The meta-check: the tree this repo ships — sources, allowlists,
+/// registrations, schema docs — must lint clean. This is the same run
+/// the `approxlint` ci.sh stage performs before the build.
+#[test]
+fn shipped_tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = lint::run_all(root).expect("lint tree walk");
+    let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        findings.is_empty(),
+        "approxlint findings on the shipped tree:\n{}",
+        rendered.join("\n")
+    );
+}

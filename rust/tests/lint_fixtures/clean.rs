@@ -1,0 +1,52 @@
+//! Negative fixture: every accepted shape, linted under the strictest
+//! virtual path (deterministic + accumulation scope). Zero findings.
+
+use std::cmp::Ordering;
+use std::sync::{Condvar, Mutex};
+
+pub fn compare(a: u32, b: u32) -> bool {
+    // `cmp::Ordering` variants must not register as atomic sites
+    a.cmp(&b) == Ordering::Less
+}
+
+pub fn index_product(acc: &mut [f32], a: &[f32], i: usize, k: usize, kk: usize) {
+    // stars confined to index brackets are not product accumulation
+    acc[0] += a[i * k + kk];
+}
+
+pub fn read_first(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees `p` points to at least one element.
+    unsafe { *p }
+}
+
+pub struct W {
+    cv: Condvar,
+    state: Mutex<bool>,
+}
+
+impl W {
+    pub fn wait_ready(&self) {
+        let mut st = self.state.lock().unwrap();
+        while !*st {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+pub fn gated(x: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        x[0] += 1.0;
+    }
+    x[0] += 0.0;
+}
+
+#[cfg(target_arch = "x86_64")]
+pub fn arch_fn(x: f32) -> f32 {
+    x + 1.0
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn arch_fn(x: f32) -> f32 {
+    x + 1.0
+}

@@ -1,0 +1,8 @@
+//! Planted R1 violation: an `unsafe` block whose preceding comment does
+//! not state a SAFETY invariant. Fixture data for `rust/tests/lint.rs`
+//! — never compiled, never scanned by approxlint itself.
+
+pub fn deref(p: *const f32) -> f32 {
+    // reads the pointer
+    unsafe { *p }
+}

@@ -1,0 +1,23 @@
+//! Planted R2 violations: clock reads and hash-ordered collections.
+//! The lint test assigns this file a deterministic-module virtual path;
+//! the `#[cfg(test)]` module at the bottom must stay exempt.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn stamp() -> u128 {
+    let t0 = Instant::now();
+    let mut m: HashMap<u32, u32> = HashMap::new();
+    m.insert(1, 2);
+    t0.elapsed().as_nanos() + m.len() as u128
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+
+    #[test]
+    fn clocks_are_fine_in_tests() {
+        let _ = Instant::now();
+    }
+}

@@ -1,0 +1,8 @@
+//! Planted R3 site: an atomic `Ordering::` use. The lint test asserts
+//! the site scan finds exactly this line with its whitespace-free key.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(c: &AtomicUsize) -> usize {
+    c.fetch_add(1, Ordering::SeqCst)
+}

@@ -1,0 +1,19 @@
+//! Planted R4 violations: all three accumulation shapes. The lint test
+//! lints this under an accumulation-scope virtual path (all three fire)
+//! and under an out-of-scope path (only the crate-wide `mul_add` fires).
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+pub fn total(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}
+
+pub fn fused(a: f32, b: f32, c: f32) -> f32 {
+    a.mul_add(b, c)
+}

@@ -1,0 +1,28 @@
+//! Planted R5 violations: an `if`-guarded Condvar wait (no spurious-
+//! wakeup re-check) and a nested lock pair absent from the declared
+//! lock-order table.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct Q {
+    cv: Condvar,
+    state: Mutex<bool>,
+    other: Mutex<u32>,
+}
+
+impl Q {
+    pub fn bad_wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        if !*st {
+            st = self.cv.wait(st).unwrap();
+        }
+        *st = false;
+    }
+
+    pub fn bad_nesting(&self) -> u32 {
+        let st = self.state.lock().unwrap();
+        let v = *self.other.lock().unwrap();
+        drop(st);
+        v
+    }
+}

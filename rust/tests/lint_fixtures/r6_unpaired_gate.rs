@@ -1,0 +1,14 @@
+//! Planted R6 violations: a gated block with no scalar fallthrough and
+//! a gated fn with no `#[cfg(not(target_arch …))]` sibling.
+
+pub fn caller(x: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        x[0] += 1.0;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub fn fast_only(x: f32) -> f32 {
+    x + 1.0
+}

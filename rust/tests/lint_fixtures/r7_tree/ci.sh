@@ -1,0 +1,5 @@
+#!/usr/bin/env bash
+# Planted R7 fixture: the first pin names a suite that is not
+# registered; the second is registered and must not be reported.
+cargo test --release --test stale_pin
+cargo test --release --test ghost # registered: no finding

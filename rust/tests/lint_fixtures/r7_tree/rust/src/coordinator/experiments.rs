@@ -1,0 +1,3 @@
+// Planted R7 fixture emitter: one schema matched by the doc, one not.
+pub const SCHEMA_OK: &str = "approxtrain/bench_gemm/v5";
+pub const SCHEMA_UNDOCUMENTED: &str = "approxtrain/bench_gemm/v9";

@@ -1,0 +1,3 @@
+// Planted R7 fixture: a suite file with no [[test]] registration.
+#[test]
+fn exists() {}
